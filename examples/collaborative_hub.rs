@@ -1,0 +1,129 @@
+//! The collaborative story (paper §III): why sharing runtime data helps,
+//! and how the hub defends itself.
+//!
+//! Act 1 — cold start: a new user with *no* local runtime data gets
+//!   accurate predictions from the first execution, because the hub's
+//!   global corpus covers their context (the paper's core promise).
+//! Act 2 — the validation gate (§III-C-b): honest contributions are
+//!   accepted, fabricated ones are rejected, and prediction quality is
+//!   unharmed afterwards.
+//!
+//! Run with:  cargo run --release --example collaborative_hub
+
+use std::sync::Arc;
+
+use c3o::cloud::Catalog;
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::models::{C3oPredictor, TrainData};
+use c3o::runtime::{Engine, FitBackend, NativeBackend};
+use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::util::prng::Pcg;
+use c3o::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let backend: Arc<dyn FitBackend> = match Engine::load_default() {
+        Ok(e) => Arc::new(e),
+        Err(_) => Arc::new(NativeBackend::new()),
+    };
+    let catalog = Catalog::aws_like();
+
+    // Hub with the shared K-Means corpus.
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::KMeans, "standard Spark K-Means");
+    repo.maintainer_machine = Some("m5.xlarge".into());
+    repo.data = generate_job(JobKind::KMeans, &GeneratorConfig::default(), &catalog)?;
+    state.insert(repo);
+    let server =
+        HubServer::start("127.0.0.1:0", state, catalog.clone(), ValidationPolicy::default())?;
+    let mut client = HubClient::connect(&server.addr.to_string())?;
+
+    // ---------- Act 1: cold start ----------
+    // The new user runs K-Means with k=8 — a context they have NO history
+    // for. Their "local" alternative is the little data they have from a
+    // different context (k=3).
+    let model = WorkloadModel::default();
+    let mt = catalog.get("m5.xlarge")?;
+    let mut rng = Pcg::seed(0xC01D);
+
+    let mut local_only = Dataset::new(JobKind::KMeans);
+    for _ in 0..8 {
+        let s = rng.range(2, 13) as u32;
+        let input = JobInput::new(JobKind::KMeans, rng.range_f64(10.0, 20.0), vec![3.0, 0.001]);
+        local_only.push(model.observe(mt, s, &input, &mut rng))?;
+    }
+
+    let global = client.get_repo(JobKind::KMeans)?.data.for_machine("m5.xlarge");
+
+    // Ground truth for the user's actual workload (k=8).
+    let mut test_rows = Vec::new();
+    let mut test_y = Vec::new();
+    for _ in 0..40 {
+        let s = rng.range(2, 13) as u32;
+        let d = rng.range_f64(10.0, 20.0);
+        let input = JobInput::new(JobKind::KMeans, d, vec![8.0, 0.001]);
+        test_rows.push(vec![s as f64, d, 8.0, 0.001]);
+        test_y.push(model.median_of_five(mt, s, &input, &mut rng));
+    }
+    let test_x = c3o::linalg::Matrix::from_rows(&test_rows)?;
+
+    let score = |train: &Dataset| -> anyhow::Result<(String, f64)> {
+        let data = TrainData::from_dataset(train)?;
+        let mut p = C3oPredictor::new(backend.clone());
+        let report = p.fit(&data)?;
+        let preds = (0..test_x.rows())
+            .map(|i| p.predict_one(test_x.row(i)))
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        Ok((report.chosen, stats::mape(&preds, &test_y)))
+    };
+
+    let (m_local, mape_local) = score(&local_only)?;
+    let (m_global, mape_global) = score(&global)?;
+    println!("=== Act 1: cold start on an unseen context (k=8) ===");
+    println!("  local-only ({} pts, k=3 history): {m_local:<4} MAPE {mape_local:.2}%", local_only.len());
+    println!("  hub global ({} pts, all contexts): {m_global:<4} MAPE {mape_global:.2}%", global.len());
+    println!(
+        "  collaboration gain: {:.1}x lower error\n",
+        mape_local / mape_global.max(1e-9)
+    );
+
+    // ---------- Act 2: the validation gate ----------
+    println!("=== Act 2: contribution validation (§III-C-b) ===");
+    // Honest contributor.
+    let mut honest = Dataset::new(JobKind::KMeans);
+    for _ in 0..10 {
+        let s = rng.range(2, 13) as u32;
+        let input = JobInput::new(JobKind::KMeans, rng.range_f64(10.0, 20.0), vec![6.0, 0.001]);
+        honest.push(model.observe(mt, s, &input, &mut rng))?;
+    }
+    let (ok, reason) = client.submit_runs(&honest)?;
+    println!("  honest user (10 runs, k=6)    : {} — {reason}", if ok { "ACCEPTED" } else { "REJECTED" });
+
+    // Saboteur: fabricated runtimes.
+    let mut poison = Dataset::new(JobKind::KMeans);
+    for _ in 0..25 {
+        poison.push(RunRecord {
+            machine_type: "m5.xlarge".into(),
+            scale_out: rng.range(2, 13) as u32,
+            data_size_gb: rng.range_f64(10.0, 20.0),
+            context: vec![5.0, 0.001],
+            runtime_s: 1.0, // "my cluster is magic"
+        })?;
+    }
+    let (ok, reason) = client.submit_runs(&poison)?;
+    println!("  saboteur (25 fabricated runs) : {} — {reason}", if ok { "ACCEPTED" } else { "REJECTED" });
+
+    // Prediction quality after the attack attempt.
+    let after = client.get_repo(JobKind::KMeans)?.data.for_machine("m5.xlarge");
+    let (_, mape_after) = score(&after)?;
+    println!(
+        "  global MAPE after the episode : {mape_after:.2}% (before: {mape_global:.2}%)"
+    );
+    let (acc, rej, _) = client.stats()?;
+    println!("  hub counters                  : {acc} accepted, {rej} rejected");
+
+    server.shutdown();
+    anyhow::ensure!(mape_global < mape_local, "collaboration must help the cold-start user");
+    anyhow::ensure!(mape_after < mape_global * 2.0, "gate failed to protect accuracy");
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! End-to-end driver (DESIGN.md experiment E7): the complete C3O system on
+//! a realistic multi-user workload, proving all layers compose —
+//!
+//!   Pallas/JAX artifacts → PJRT engine → models → configurator → hub →
+//!   simulated cloud → feedback loop.
+//!
+//! Scenario: a hub is seeded with the full 930-experiment shared corpus
+//! (Table I). Twelve users arrive with their own jobs (sizes, parameters
+//! and deadlines drawn from realistic ranges), follow the Fig. 4 workflow
+//! (fetch → configure → execute → contribute), and the run reports the
+//! paper's headline metrics: prediction MAPE against live executions,
+//! deadline hit rate vs the requested confidence, total cost, and hub
+//! growth. Recorded in EXPERIMENTS.md §E7.
+//!
+//! Run with:  cargo run --release --example e2e_c3o
+
+use std::sync::Arc;
+
+use c3o::cloud::{Catalog, CloudProvider, ClusterConfig};
+use c3o::configurator::{configure, UserGoals};
+use c3o::data::JobKind;
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::runtime::{Engine, FitBackend, NativeBackend};
+use c3o::sim::{generate_all, Executor, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::util::prng::Pcg;
+use c3o::util::stats;
+
+const CONFIDENCE: f64 = 0.9;
+
+fn user_job(rng: &mut Pcg) -> (JobKind, JobInput) {
+    let job = *rng.choose(&JobKind::ALL);
+    let input = match job {
+        JobKind::Sort => JobInput::new(job, rng.range_f64(10.0, 20.0), vec![]),
+        JobKind::Grep => JobInput::new(
+            job,
+            rng.range_f64(10.0, 20.0),
+            vec![*rng.choose(&[0.001, 0.01, 0.1])],
+        ),
+        JobKind::Sgd => JobInput::new(
+            job,
+            rng.range_f64(10.0, 30.0),
+            vec![*rng.choose(&[10.0, 25.0, 50.0]), *rng.choose(&[10.0, 50.0, 100.0])],
+        ),
+        JobKind::KMeans => JobInput::new(
+            job,
+            rng.range_f64(10.0, 20.0),
+            vec![rng.range(3, 10) as f64, 0.001],
+        ),
+        JobKind::PageRank => JobInput::new(
+            job,
+            rng.range_f64(0.13, 0.44),
+            vec![*rng.choose(&[0.05, 0.1, 0.2]), *rng.choose(&[0.01, 0.001, 0.0001])],
+        ),
+    };
+    (job, input)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let backend: Arc<dyn FitBackend> = match Engine::load_default() {
+        Ok(e) => {
+            println!("[e2e] PJRT engine: {}", e.artifact_dir().display());
+            Arc::new(e)
+        }
+        Err(e) => {
+            println!("[e2e] native backend ({e:#})");
+            Arc::new(NativeBackend::new())
+        }
+    };
+
+    // --- Stand up the hub with the full shared corpus.
+    let catalog = Catalog::aws_like();
+    let state = Arc::new(HubState::new());
+    for ds in generate_all(&GeneratorConfig::default(), &catalog)? {
+        let mut repo = Repository::new(ds.job, &format!("standard Spark {}", ds.job));
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        repo.data = ds;
+        state.insert(repo);
+    }
+    let server = HubServer::start(
+        "127.0.0.1:0",
+        state,
+        catalog.clone(),
+        ValidationPolicy::default(),
+    )?;
+    println!("[e2e] hub listening on {}", server.addr);
+
+    // --- The cloud.
+    let provider = CloudProvider::new(Catalog::aws_like());
+    let executor = Executor::new(&provider, WorkloadModel::default(), 0xE7E2E);
+
+    // --- Users.
+    let mut rng = Pcg::seed(0x05E12);
+    let mut pct_errors = Vec::new();
+    let mut deadline_total = 0usize;
+    let mut deadline_hits = 0usize;
+    let mut contributions_accepted = 0usize;
+
+    for user in 0..16 {
+        let mut client = HubClient::connect(&server.addr.to_string())?;
+        let (job, input) = user_job(&mut rng);
+
+        // Fig. 4 step 1-2: fetch the repository.
+        let repo = client.get_repo(job)?;
+
+        // Step 3: goals. Deadline from a feasibility-aware draw.
+        let model = WorkloadModel::default();
+        let mt = catalog.get("m5.xlarge")?;
+        let t_fast = model.mean_runtime(mt, 12, &input);
+        let t_slow = model.mean_runtime(mt, 2, &input);
+        let deadline = t_fast + rng.range_f64(0.5, 1.1) * (t_slow - t_fast);
+        let goals = UserGoals { deadline_s: Some(deadline), confidence: CONFIDENCE };
+
+        // Step 4-5: configure.
+        let choice = match configure(
+            &catalog,
+            &repo.data,
+            repo.maintainer_machine.as_deref(),
+            &input,
+            &goals,
+            backend.clone(),
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("[user {user:>2}] {job}: infeasible deadline ({e:#}); skipping");
+                continue;
+            }
+        };
+
+        // Execute on the (simulated) public cloud.
+        let report = executor.run(
+            &ClusterConfig {
+                machine_type: choice.machine_type.clone(),
+                scale_out: choice.scale_out,
+            },
+            &input,
+            Some(deadline),
+        )?;
+        let err =
+            (choice.predicted_runtime_s - report.record.runtime_s) / report.record.runtime_s;
+        pct_errors.push(err.abs() * 100.0);
+        deadline_total += 1;
+        if report.deadline_met == Some(true) {
+            deadline_hits += 1;
+        }
+
+        // Step 6: contribute the observation back.
+        let mut contrib = c3o::data::Dataset::new(job);
+        contrib.push(report.record.clone())?;
+        let (accepted, _) = client.submit_runs(&contrib)?;
+        if accepted {
+            contributions_accepted += 1;
+        }
+
+        println!(
+            "[user {user:>2}] {job:<9} {:>5.1} GB -> {} x{:<2} pred {:>6.0}s actual {:>6.0}s ({:>+5.1}%) cost ${:.3} deadline {}",
+            input.data_size_gb,
+            choice.machine_type,
+            choice.scale_out,
+            choice.predicted_runtime_s,
+            report.record.runtime_s,
+            err * 100.0,
+            report.cost_usd,
+            if report.deadline_met == Some(true) { "HIT" } else { "MISS" },
+        );
+    }
+
+    // --- Headline report.
+    let mut client = HubClient::connect(&server.addr.to_string())?;
+    let (acc, rej, _) = client.stats()?;
+    println!("\n=== E7 end-to-end report ===");
+    println!("users served            : {deadline_total}");
+    println!(
+        "live prediction MAPE    : {:.2}% (median {:.2}%)",
+        stats::mean(&pct_errors),
+        stats::median(&pct_errors)
+    );
+    println!(
+        "deadline hit rate       : {}/{} = {:.0}% (requested confidence {:.0}%)",
+        deadline_hits,
+        deadline_total,
+        100.0 * deadline_hits as f64 / deadline_total.max(1) as f64,
+        100.0 * CONFIDENCE
+    );
+    println!("hub contributions       : {contributions_accepted} submitted-accepted ({acc} acc / {rej} rej total)");
+    println!("total cloud spend       : ${:.2}", provider.total_cost_usd());
+    println!("leaked clusters         : {}", provider.active_clusters());
+    println!("wall clock              : {:.1}s", t0.elapsed().as_secs_f64());
+
+    server.shutdown();
+    anyhow::ensure!(provider.active_clusters() == 0, "cluster leak!");
+    anyhow::ensure!(deadline_total >= 8, "too few feasible users");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT export: lower the L2 estimator graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes:
+    artifacts/ols_batch.hlo.txt
+    artifacts/nnls_batch.hlo.txt
+    artifacts/predict_grid.hlo.txt
+    artifacts/MANIFEST.tsv         (name, sha256, shapes) — the Rust runtime
+                                   refuses to load artifacts whose manifest
+                                   does not match its compiled-in contract.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    for fn, name, specs in model.entry_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        shapes = ";".join(
+            f"{s.dtype}{list(s.shape)}".replace(" ", "") for s in specs
+        )
+        manifest_rows.append((name, digest, shapes))
+        print(f"wrote {path} ({len(text)} chars, sha256 {digest[:12]})")
+
+    with open(os.path.join(out_dir, "MANIFEST.tsv"), "w") as f:
+        f.write(f"# N={model.N}\tF={model.F}\tB={model.B}\tQ={model.Q}\n")
+        for name, digest, shapes in manifest_rows:
+            f.write(f"{name}\t{digest}\t{shapes}\n")
+    print(f"wrote {os.path.join(out_dir, 'MANIFEST.tsv')}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with a single-file --out target (Makefile sentinel).
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    export_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

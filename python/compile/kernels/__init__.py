@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the C3O batched cross-validation hot path.
+
+Exports:
+    masked_gram      -- G[b] = X^T diag(w_b) X + lam*I,  c[b] = X^T diag(w_b) y
+    batched_predict  -- P[b] = X @ theta[b]
+    ref              -- pure-jnp oracles (correctness ground truth)
+"""
+
+from .gram import masked_gram
+from .bmm import batched_predict
+from . import ref
+
+__all__ = ["masked_gram", "batched_predict", "ref"]

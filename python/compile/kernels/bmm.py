@@ -1,0 +1,64 @@
+"""Batched-prediction Pallas kernel (L1).
+
+    P[b] = Xq @ theta[b]          (B, Q)
+
+Used twice in the C3O runtime predictor:
+  * inside cross-validation, to score every mask's model on the full
+    training set in one launch (the held-out entries are picked out by the
+    Rust side), and
+  * in the configurator's scale-out sweep, where Xq is the feature matrix of
+    every candidate scale-out and theta is the fitted model batch.
+
+Grid iterates over B-tiles; Xq is replicated in VMEM, theta streamed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 8  # masks per grid step (see gram.py)
+
+
+def _predict_kernel(xq_ref, th_ref, p_ref):
+    """xq_ref: (Q, F), th_ref: (BT, F), p_ref: (BT, Q)."""
+    xq = xq_ref[...]                    # (Q, F)
+    th = th_ref[...]                    # (BT, F)
+    # (BT, F) @ (F, Q) on the MXU, f32 accumulation.
+    p_ref[...] = jnp.dot(th, xq.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_predict(xq, theta, *, interpret=True):
+    """P[b] = Xq @ theta[b].
+
+    Args:
+      xq:    (Q, F) f32 query design matrix.
+      theta: (B, F) f32 fitted parameter batch.
+
+    Returns:
+      (B, Q) f32 predictions.
+    """
+    q, f = xq.shape
+    b = theta.shape[0]
+    # Pad the batch to a BT multiple; padded thetas are zero and their
+    # rows are sliced away below.
+    pad = (-b) % BT
+    if pad:
+        theta = jnp.concatenate([theta, jnp.zeros((pad, f), theta.dtype)], axis=0)
+    bp = b + pad
+
+    grid = (bp // BT,)
+    out = pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, f), lambda i: (0, 0)),    # Xq: replicated
+            pl.BlockSpec((BT, f), lambda i: (i, 0)),   # theta: streamed
+        ],
+        out_specs=pl.BlockSpec((BT, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, q), jnp.float32),
+        interpret=interpret,
+    )(xq, theta)
+    return out[:b]

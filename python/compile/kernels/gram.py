@@ -1,0 +1,110 @@
+"""Masked-Gram Pallas kernel (L1).
+
+Computes, for a batch of B cross-validation masks at once:
+
+    G[b] = X^T @ diag(w_b) @ X + lam * I        (B, F, F)
+    c[b] = X^T @ (w_b * y)                      (B, F)
+
+This is the normal-equation assembly behind every OLS/NNLS fit in the C3O
+runtime predictor.  Leave-one-out cross-validation over N training points
+means N fits that differ only in one mask entry; batching them turns the
+model-selection phase (which the paper reports at 10-30 s) into a single
+device launch.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"): the grid iterates over
+B-tiles; X (N x F) stays resident in VMEM across the whole grid (it does not
+depend on b), each grid step streams one (BT, N) tile of W from HBM, and the
+contraction (F, N) @ (N, F) lands on the MXU with f32 accumulation.  Under
+``interpret=True`` (CPU PJRT) the same schedule runs as numpy — structure,
+not wallclock, is what we optimize here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes (must match python/compile/model.py and the Rust
+# runtime engine's padding contract in rust/src/runtime/shapes.rs).
+N = 128  # max training points per fit
+F = 8    # max feature columns
+B = 128  # max simultaneous CV masks
+
+# B-tile: how many masks one grid step processes. Swept 8/16/32 in the
+# §Perf pass (EXPERIMENTS.md): 16 minimizes per-step dispatch overhead
+# under interpret mode while keeping the W tile at 16*128*4 = 8 KiB —
+# comfortably VMEM-resident on a real TPU as well.
+BT = 16
+
+
+def _gram_kernel(x_ref, y_ref, w_ref, lam_ref, g_ref, c_ref):
+    """One grid step: BT masks.
+
+    x_ref: (N, F) VMEM     w_ref: (BT, N) VMEM     y_ref: (N, 1) VMEM
+    g_ref: (BT, F, F)      c_ref: (BT, F)          lam_ref: (1, 1) SMEM-like
+    """
+    x = x_ref[...]                      # (N, F)
+    y = y_ref[...][:, 0]                # (N,)
+    w = w_ref[...]                      # (BT, N)
+    lam = lam_ref[0, 0]
+
+    # Weighted design: (BT, N, F) = w[b, n] * x[n, f].  The contraction
+    # below is einsum('bnf,ng->bfg') -> one MXU pass per b-tile.
+    xw = w[:, :, None] * x[None, :, :]              # (BT, N, F)
+    g = jnp.einsum("bnf,ng->bfg", xw, x,
+                   preferred_element_type=jnp.float32)  # (BT, F, F)
+    eye = jnp.eye(x.shape[1], dtype=jnp.float32)
+    g_ref[...] = g + lam * eye[None, :, :]
+
+    wy = w * y[None, :]                              # (BT, N)
+    c_ref[...] = jnp.einsum("bn,nf->bf", wy, x,
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_gram(x, y, w, lam, *, interpret=True):
+    """Batched masked Gram matrices via Pallas.
+
+    Args:
+      x:   (N, F) f32 design matrix (shared across masks).
+      y:   (N,)   f32 targets.
+      w:   (B, N) f32 mask/sample weights (0/1 for CV, arbitrary >= 0 ok).
+      lam: scalar f32 ridge term added to the diagonal.
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (G, c): (B, F, F) and (B, F).
+    """
+    n, f = x.shape
+    b = w.shape[0]
+    # Pad the mask batch to a BT multiple (zero masks yield lam*I, sliced
+    # away below), so callers are free to pass any B.
+    pad = (-b) % BT
+    if pad:
+        w = jnp.concatenate([w, jnp.zeros((pad, n), w.dtype)], axis=0)
+    bp = b + pad
+    y2 = y.reshape(n, 1)
+    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+
+    grid = (bp // BT,)
+    g, c = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, f), lambda i: (0, 0)),     # X: replicated
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),     # y: replicated
+            pl.BlockSpec((BT, n), lambda i: (i, 0)),    # W: streamed by tile
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # lam
+        ],
+        out_specs=[
+            pl.BlockSpec((BT, f, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BT, f), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, f, f), jnp.float32),
+            jax.ShapeDtypeStruct((bp, f), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y2, w, lam2)
+    return g[:b], c[:b]

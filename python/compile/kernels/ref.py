@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels and L2 models.
+
+Everything here is the "obviously correct" formulation; pytest asserts the
+Pallas kernels and the lowered HLO modules match these to within f32
+tolerance.  The Rust native backend (rust/src/linalg) is additionally
+cross-checked against the artifacts in rust/tests/runtime_parity.rs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_gram_ref(x, y, w, lam):
+    """G[b] = X^T diag(w_b) X + lam I ; c[b] = X^T (w_b * y)."""
+    xw = w[:, :, None] * x[None, :, :]                  # (B, N, F)
+    g = jnp.einsum("bnf,ng->bfg", xw, x)                # (B, F, F)
+    g = g + lam * jnp.eye(x.shape[1], dtype=x.dtype)[None]
+    c = jnp.einsum("bn,nf->bf", w * y[None, :], x)      # (B, F)
+    return g, c
+
+
+def batched_predict_ref(xq, theta):
+    """P[b] = Xq @ theta[b]."""
+    return jnp.einsum("qf,bf->bq", xq, theta)
+
+
+def ols_batch_ref(x, y, w, lam):
+    """Reference batched ridge OLS via numpy's exact solver (f64)."""
+    x64 = np.asarray(x, np.float64)
+    y64 = np.asarray(y, np.float64)
+    w64 = np.asarray(w, np.float64)
+    b, f = w64.shape[0], x64.shape[1]
+    thetas = np.zeros((b, f))
+    for i in range(b):
+        xw = x64 * w64[i][:, None]
+        g = xw.T @ x64 + lam * np.eye(f)
+        c = xw.T @ y64
+        thetas[i] = np.linalg.solve(g, c)
+    preds = thetas @ x64.T                              # (B, N)
+    return thetas, preds
+
+
+def nnls_batch_ref(x, y, w, lam):
+    """Reference batched NNLS via scipy-free active projection (f64).
+
+    Projected gradient with exact Lipschitz step, run to tight tolerance —
+    the same algorithm as the L2 module but in f64 and until convergence,
+    so it is a valid oracle for the K-iteration f32 version.
+    """
+    x64 = np.asarray(x, np.float64)
+    y64 = np.asarray(y, np.float64)
+    w64 = np.asarray(w, np.float64)
+    b, f = w64.shape[0], x64.shape[1]
+    thetas = np.zeros((b, f))
+    for i in range(b):
+        xw = x64 * w64[i][:, None]
+        g = xw.T @ x64 + lam * np.eye(f)
+        c = xw.T @ y64
+        lip = np.linalg.eigvalsh(g).max()
+        step = 1.0 / max(lip, 1e-12)
+        th = np.zeros(f)
+        for _ in range(20000):
+            grad = g @ th - c
+            nxt = np.maximum(th - step * grad, 0.0)
+            if np.max(np.abs(nxt - th)) < 1e-12:
+                th = nxt
+                break
+            th = nxt
+        thetas[i] = th
+    preds = thetas @ x64.T
+    return thetas, preds

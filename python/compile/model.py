@@ -1,0 +1,173 @@
+"""L2: the C3O batched estimator graphs (JAX), calling the L1 kernels.
+
+Three entry points, each lowered to its own HLO module by aot.py:
+
+  ols_batch(X, y, W, lam)  -> (theta[B,F], preds[B,N])
+      Batched ridge ordinary least squares.  Backbone of the BOM (linear
+      IBM, polynomial SSM) and of every cross-validation split fit.
+
+  nnls_batch(X, y, W, lam) -> (theta[B,F], preds[B,N])
+      Batched non-negative least squares (projected gradient, fixed K
+      iterations with exact Lipschitz step).  Backbone of the Ernest
+      baseline, whose parameters are constrained theta >= 0.
+
+  predict_grid(theta, Xq)  -> preds[B,Q]
+      Configurator scale-out sweep: score B fitted models on Q candidate
+      configurations in one launch.
+
+Design constraints (see DESIGN.md §3):
+  * no LAPACK custom-calls — the xla_extension 0.5.1 CPU client can only run
+    plain HLO, so the linear solve is a hand-written Gauss-Jordan with
+    partial pivoting expressed with lax primitives;
+  * fixed shapes (N=128, F=8, B=128, Q=64) — the Rust runtime pads;
+  * Pallas kernels run with interpret=True so the lowered HLO contains no
+    Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import masked_gram, batched_predict
+
+# AOT shape contract — keep in sync with rust/src/runtime/shapes.rs.
+N = 128  # max training rows
+F = 8    # max features
+B = 128  # max CV masks per launch
+Q = 64   # max query rows (configurator grid)
+
+# 500 FISTA iterations reach the f32 accuracy floor on this problem class
+# (measured: relative prediction error ~1e-2 at 400, 800 and 1500 iters —
+# conditioning-bound, not iteration-bound). See EXPERIMENTS.md §Perf.
+NNLS_ITERS = 500
+RIDGE_DEFAULT = 1e-6
+
+
+def gauss_jordan_solve(g, c):
+    """Solve g @ theta = c for a batch of small SPD-ish systems.
+
+    g: (B, F, F), c: (B, F) -> (B, F).
+
+    Gauss-Jordan elimination with partial pivoting, expressed with
+    lax.fori_loop + batched gathers so it lowers to plain HLO (no LAPACK).
+    F is tiny (<= 8) so the O(F^3) loop is negligible next to the Gram
+    assembly.
+    """
+    b, f, _ = g.shape
+    aug = jnp.concatenate([g, c[:, :, None]], axis=2)  # (B, F, F+1)
+
+    def body(k, aug):
+        col = aug[:, :, k]                              # (B, F)
+        # Partial pivot: among rows >= k pick the largest |col| entry.
+        row_idx = jnp.arange(f)
+        masked = jnp.where(row_idx[None, :] >= k, jnp.abs(col), -jnp.inf)
+        piv = jnp.argmax(masked, axis=1)                # (B,)
+
+        # Swap row k and row piv per batch element.
+        bidx = jnp.arange(b)
+        row_k = aug[bidx, k, :]                         # (B, F+1)
+        row_p = aug[bidx, piv, :]                       # (B, F+1)
+        aug = aug.at[bidx, k, :].set(row_p)
+        aug = aug.at[bidx, piv, :].set(row_k)
+
+        # Normalize pivot row, eliminate everywhere else.
+        pivval = aug[:, k, k][:, None]                  # (B, 1)
+        safe = jnp.where(jnp.abs(pivval) < 1e-30, 1e-30, pivval)
+        prow = aug[:, k, :] / safe                      # (B, F+1)
+        aug = aug.at[:, k, :].set(prow)
+        factors = aug[:, :, k]                          # (B, F)
+        factors = factors.at[:, k].set(0.0)
+        aug = aug - factors[:, :, None] * prow[:, None, :]
+        return aug
+
+    aug = lax.fori_loop(0, f, body, aug)
+    return aug[:, :, f]
+
+
+def ols_batch(x, y, w, lam):
+    """Batched ridge OLS.  x:(N,F) y:(N,) w:(B,N) lam:() -> (B,F),(B,N)."""
+    g, c = masked_gram(x, y, w, lam)          # L1 Pallas kernel
+    theta = gauss_jordan_solve(g, c)
+    preds = batched_predict(x, theta)         # L1 Pallas kernel
+    return theta, preds
+
+
+def nnls_batch(x, y, w, lam):
+    """Batched NNLS via FISTA (accelerated projected gradient).
+
+    theta_{t+1} = max(0, v_t - (1/L_b)(G_b v_t - c_b)) with Nesterov
+    momentum on v; L_b = lambda_max(G_b) from 30 power iterations.
+    Accelerated convergence matters here: the fixed iteration budget must
+    reach the active-set solution the Rust native backend computes exactly
+    (rust/tests/runtime_parity.rs asserts agreement).
+    """
+    g, c = masked_gram(x, y, w, lam)          # (B,F,F), (B,F)
+    b, f = c.shape
+
+    # Power iteration for the per-batch spectral norm (G is PSD).
+    v0 = jnp.ones((b, f), jnp.float32) / jnp.sqrt(jnp.float32(f))
+
+    def pow_body(_, v):
+        gv = jnp.einsum("bij,bj->bi", g, v)
+        nrm = jnp.linalg.norm(gv, axis=1, keepdims=True)
+        return gv / jnp.maximum(nrm, 1e-30)
+
+    v = lax.fori_loop(0, 30, pow_body, v0)
+    gv = jnp.einsum("bij,bj->bi", g, v)
+    lip = jnp.einsum("bi,bi->b", v, gv)              # Rayleigh quotient
+    step = (1.0 / jnp.maximum(lip, 1e-12))[:, None]  # (B,1)
+
+    zeros = jnp.zeros((b, f), jnp.float32)
+
+    def fista_body(_, carry):
+        theta, vel, t = carry
+        grad = jnp.einsum("bij,bj->bi", g, vel) - c
+        theta_new = jnp.maximum(vel - step * grad, 0.0)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        vel_new = theta_new + ((t - 1.0) / t_new) * (theta_new - theta)
+        return theta_new, vel_new, t_new
+
+    theta, _, _ = lax.fori_loop(
+        0, NNLS_ITERS, fista_body, (zeros, zeros, jnp.float32(1.0))
+    )
+    # Momentum can leave vel slightly infeasible; theta itself is feasible.
+    preds = batched_predict(x, theta)
+    return theta, preds
+
+
+def predict_grid(theta, xq):
+    """Configurator sweep: theta:(B,F), xq:(Q,F) -> (B,Q)."""
+    return batched_predict(xq, theta)
+
+
+# ---------------------------------------------------------------------------
+# Entry points with the canonical AOT shapes, used by aot.py and pytest.
+# Each returns a tuple (lowered with return_tuple=True) — the Rust side
+# unwraps with to_tuple{1,2}().
+
+def ols_entry(x, y, w, lam):
+    theta, preds = ols_batch(x, y, w, lam)
+    return theta, preds
+
+
+def nnls_entry(x, y, w, lam):
+    theta, preds = nnls_batch(x, y, w, lam)
+    return theta, preds
+
+
+def predict_entry(theta, xq):
+    return (predict_grid(theta, xq),)
+
+
+def entry_specs():
+    """(fn, name, arg ShapeDtypeStructs) for every AOT module."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return [
+        (ols_entry, "ols_batch",
+         (s((N, F), f32), s((N,), f32), s((B, N), f32), s((), f32))),
+        (nnls_entry, "nnls_batch",
+         (s((N, F), f32), s((N,), f32), s((B, N), f32), s((), f32))),
+        (predict_entry, "predict_grid",
+         (s((B, F), f32), s((Q, F), f32))),
+    ]

@@ -1,0 +1,65 @@
+"""AOT export sanity: HLO text artifacts are parseable, stable, manifest-true."""
+
+import hashlib
+import os
+import subprocess
+import sys
+
+import pytest
+
+import jax
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_hlo_module():
+    fn, name, specs = model.entry_specs()[2]  # predict_grid: fastest
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # No Mosaic/TPU custom-calls may appear (CPU PJRT cannot run them).
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_export_is_deterministic(tmp_path):
+    aot.export_all(str(tmp_path))
+    first = {p: open(tmp_path / p).read() for p in os.listdir(tmp_path)}
+    aot.export_all(str(tmp_path))
+    second = {p: open(tmp_path / p).read() for p in os.listdir(tmp_path)}
+    assert first == second
+
+
+def test_export_writes_all_modules(tmp_path):
+    aot.export_all(str(tmp_path))
+    names = {f"{name}.hlo.txt" for _, name, _ in model.entry_specs()}
+    names.add("MANIFEST.tsv")
+    assert set(os.listdir(tmp_path)) == names
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts/ not built")
+def test_checked_in_manifest_matches_artifacts():
+    manifest = os.path.join(ART, "MANIFEST.tsv")
+    if not os.path.exists(manifest):
+        pytest.skip("no MANIFEST.tsv")
+    with open(manifest) as f:
+        lines = [l.rstrip("\n") for l in f if not l.startswith("#")]
+    for line in lines:
+        name, digest, _shapes = line.split("\t")
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == digest, name
+
+
+def test_module_cli_runs(tmp_path):
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, env=env,
+    )
+    assert r.returncode == 0, r.stderr
+    assert (tmp_path / "MANIFEST.tsv").exists()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernels vs pure-jnp/numpy oracles.
+
+The CORE correctness signal for the compile path: every kernel is swept over
+shapes, mask densities and conditioning regimes and compared against ref.py.
+(hypothesis is not available in this image; the sweeps below are seeded
+parametrized equivalents covering the same axes: N, F, B, density, scale.)
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import masked_gram, batched_predict, ref
+from compile.kernels.gram import BT
+
+
+def make_case(seed, n, f, b, density, scale):
+    rng = np.random.default_rng(seed)
+    x = (scale * rng.normal(size=(n, f))).astype(np.float32)
+    y = (scale * rng.normal(size=(n,))).astype(np.float32)
+    w = (rng.random((b, n)) < density).astype(np.float32)
+    # Guarantee at least F active rows per mask so Gram systems are sane.
+    for i in range(b):
+        idx = rng.choice(n, size=min(f + 2, n), replace=False)
+        w[i, idx] = 1.0
+    return x, y, w
+
+
+SWEEP = [
+    # (seed, n, f, b, density, scale, lam)
+    (0, 64, 8, 64, 0.7, 1.0, 1e-6),
+    (1, 64, 8, 64, 0.3, 1.0, 1e-3),
+    (2, 64, 4, 64, 0.9, 10.0, 1e-6),
+    (3, 32, 8, 32, 0.5, 0.1, 1e-4),
+    (4, 16, 2, 8, 1.0, 1.0, 0.0),
+    (5, 64, 8, 8, 0.6, 100.0, 1e-2),
+    (6, 48, 6, 16, 0.4, 1.0, 1e-6),
+    (7, 64, 1, 64, 0.8, 1.0, 1e-6),
+]
+
+
+@pytest.mark.parametrize("seed,n,f,b,density,scale,lam", SWEEP)
+def test_masked_gram_matches_ref(seed, n, f, b, density, scale, lam):
+    x, y, w = make_case(seed, n, f, b, density, scale)
+    g, c = masked_gram(jnp.array(x), jnp.array(y), jnp.array(w), lam)
+    g_ref, c_ref = ref.masked_gram_ref(
+        jnp.array(x), jnp.array(y), jnp.array(w), lam
+    )
+    np.testing.assert_allclose(np.array(g), np.array(g_ref),
+                               rtol=1e-5, atol=1e-4 * scale * scale)
+    np.testing.assert_allclose(np.array(c), np.array(c_ref),
+                               rtol=1e-5, atol=1e-4 * scale * scale)
+
+
+@pytest.mark.parametrize("seed,n,f,b,density,scale,lam", SWEEP)
+def test_batched_predict_matches_ref(seed, n, f, b, density, scale, lam):
+    rng = np.random.default_rng(seed + 100)
+    xq = (scale * rng.normal(size=(n, f))).astype(np.float32)
+    theta = rng.normal(size=(b, f)).astype(np.float32)
+    p = batched_predict(jnp.array(xq), jnp.array(theta))
+    p_ref = ref.batched_predict_ref(jnp.array(xq), jnp.array(theta))
+    np.testing.assert_allclose(np.array(p), np.array(p_ref),
+                               rtol=1e-5, atol=1e-4 * scale)
+
+
+def test_gram_identity_mask_is_plain_gram():
+    """w == all-ones reduces to X^T X + lam I exactly."""
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(32, 4)).astype(np.float32)
+    y = rng.normal(size=(32,)).astype(np.float32)
+    w = np.ones((BT, 32), np.float32)
+    g, c = masked_gram(jnp.array(x), jnp.array(y), jnp.array(w), 0.5)
+    expect_g = x.T @ x + 0.5 * np.eye(4, dtype=np.float32)
+    expect_c = x.T @ y
+    for i in range(BT):
+        np.testing.assert_allclose(np.array(g[i]), expect_g, rtol=1e-5,
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.array(c[i]), expect_c, rtol=1e-5,
+                                   atol=1e-4)
+
+
+def test_gram_zero_mask_gives_ridge_only():
+    """w == 0 leaves exactly lam*I and zero c."""
+    rng = np.random.default_rng(43)
+    x = rng.normal(size=(16, 4)).astype(np.float32)
+    y = rng.normal(size=(16,)).astype(np.float32)
+    w = np.zeros((BT, 16), np.float32)
+    g, c = masked_gram(jnp.array(x), jnp.array(y), jnp.array(w), 2.0)
+    for i in range(BT):
+        np.testing.assert_allclose(np.array(g[i]), 2.0 * np.eye(4),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.array(c[i]), np.zeros(4), atol=1e-6)
+
+
+def test_gram_mask_linearity():
+    """Gram is linear in w: G(w1+w2) - lam I == (G(w1)-lam I)+(G(w2)-lam I)."""
+    rng = np.random.default_rng(44)
+    x = rng.normal(size=(24, 3)).astype(np.float32)
+    y = rng.normal(size=(24,)).astype(np.float32)
+    w1 = rng.random((BT, 24)).astype(np.float32)
+    w2 = rng.random((BT, 24)).astype(np.float32)
+    lam = 1.0
+    g1, c1 = masked_gram(jnp.array(x), jnp.array(y), jnp.array(w1), lam)
+    g2, c2 = masked_gram(jnp.array(x), jnp.array(y), jnp.array(w2), lam)
+    g12, c12 = masked_gram(jnp.array(x), jnp.array(y),
+                           jnp.array(w1 + w2), lam)
+    np.testing.assert_allclose(np.array(g12) + lam * np.eye(3),
+                               np.array(g1) + np.array(g2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.array(c12), np.array(c1) + np.array(c2),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_predict_zero_theta_zero_output():
+    xq = np.ones((8, 4), np.float32)
+    theta = np.zeros((BT, 4), np.float32)
+    p = batched_predict(jnp.array(xq), jnp.array(theta))
+    np.testing.assert_array_equal(np.array(p), np.zeros((BT, 8)))

@@ -1,0 +1,126 @@
+"""L2 estimator graphs vs f64 numpy oracles + algebraic invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def loocv_case(seed, n_active, f_active, noise=0.01):
+    """A padded C3O-style problem: n_active real rows, LOO masks."""
+    rng = np.random.default_rng(seed)
+    N, F, B = model.N, model.F, model.B
+    x = np.zeros((N, F), np.float32)
+    y = np.zeros((N,), np.float32)
+    xa = np.abs(rng.normal(size=(n_active, f_active))) + 0.1
+    beta = np.abs(rng.normal(size=f_active)) + 0.1
+    ya = xa @ beta + noise * rng.normal(size=n_active)
+    x[:n_active, :f_active] = xa
+    y[:n_active] = ya
+    w = np.zeros((B, N), np.float32)
+    for i in range(min(B, n_active)):
+        w[i, :n_active] = 1.0
+        w[i, i] = 0.0                      # leave one out
+    # Remaining masks: full data (used as "fit on everything" slot).
+    for i in range(min(B, n_active), B):
+        w[i, :n_active] = 1.0
+    return x, y, w
+
+
+@pytest.mark.parametrize("seed,n_active,f_active", [
+    (0, 20, 4), (1, 40, 8), (2, 64, 3), (3, 10, 2), (4, 30, 6),
+])
+def test_ols_batch_matches_f64_solver(seed, n_active, f_active):
+    x, y, w = loocv_case(seed, n_active, f_active)
+    lam = np.float32(1e-5)
+    th, pr = model.ols_batch(jnp.array(x), jnp.array(y), jnp.array(w), lam)
+    th_ref, pr_ref = ref.ols_batch_ref(x, y, w, float(lam))
+    np.testing.assert_allclose(np.array(th), th_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.array(pr), pr_ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("seed,n_active,f_active", [
+    (10, 20, 4), (11, 40, 6), (12, 64, 8),
+])
+def test_nnls_batch_matches_f64_pgd(seed, n_active, f_active):
+    x, y, w = loocv_case(seed, n_active, f_active)
+    lam = np.float32(1e-4)
+    th, _ = model.nnls_batch(jnp.array(x), jnp.array(y), jnp.array(w), lam)
+    th_ref, _ = ref.nnls_batch_ref(x, y, w, float(lam))
+    assert (np.array(th) >= 0).all()
+    np.testing.assert_allclose(np.array(th), th_ref, rtol=5e-3, atol=5e-3)
+
+
+def test_nnls_recovers_nonnegative_truth():
+    """On a well-posed nonneg problem NNLS == OLS == truth."""
+    rng = np.random.default_rng(7)
+    N, F, B = model.N, model.F, model.B
+    x = np.abs(rng.normal(size=(N, F))).astype(np.float32) + 0.1
+    beta = np.array([1.0, 0.5, 2.0, 0.0, 0.3, 0.0, 1.5, 0.2], np.float32)
+    y = (x @ beta).astype(np.float32)
+    w = np.ones((B, N), np.float32)
+    th, _ = model.nnls_batch(jnp.array(x), jnp.array(y), jnp.array(w),
+                             np.float32(1e-6))
+    np.testing.assert_allclose(np.array(th[0]), beta, rtol=1e-2, atol=1e-2)
+
+
+def test_gauss_jordan_vs_numpy_solve():
+    rng = np.random.default_rng(8)
+    g = rng.normal(size=(16, 8, 8))
+    g = (g @ np.transpose(g, (0, 2, 1)) +
+         0.1 * np.eye(8)[None]).astype(np.float32)
+    c = rng.normal(size=(16, 8)).astype(np.float32)
+    th = model.gauss_jordan_solve(jnp.array(g), jnp.array(c))
+    expect = np.stack([np.linalg.solve(g[i].astype(np.float64),
+                                       c[i].astype(np.float64))
+                       for i in range(16)])
+    np.testing.assert_allclose(np.array(th), expect, rtol=1e-3, atol=1e-3)
+
+
+def test_gauss_jordan_needs_pivoting():
+    """A system whose natural order has a zero leading pivot."""
+    g = np.array([[[0.0, 1.0], [1.0, 0.0]]], np.float32)
+    c = np.array([[2.0, 3.0]], np.float32)
+    th = model.gauss_jordan_solve(jnp.array(g), jnp.array(c))
+    np.testing.assert_allclose(np.array(th[0]), [3.0, 2.0], atol=1e-5)
+
+
+def test_predict_grid_matches_einsum():
+    rng = np.random.default_rng(9)
+    theta = rng.normal(size=(model.B, model.F)).astype(np.float32)
+    xq = rng.normal(size=(model.Q, model.F)).astype(np.float32)
+    p = model.predict_grid(jnp.array(theta), jnp.array(xq))
+    np.testing.assert_allclose(np.array(p),
+                               np.einsum("qf,bf->bq", xq, theta),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_loo_residuals_are_honest():
+    """LOO prediction for the held-out row differs from in-sample fit.
+
+    Guards against a classic masking bug: if the mask were ignored the
+    held-out residual would be (near) the in-sample residual.
+    """
+    x, y, w = loocv_case(21, 30, 4, noise=0.2)
+    lam = np.float32(1e-6)
+    th, pr = model.ols_batch(jnp.array(x), jnp.array(y), jnp.array(w), lam)
+    pr = np.array(pr)
+    # In-sample fit: mask index 30+ trains on all 30 rows.
+    insample = pr[30 + 1]
+    loo = np.array([pr[i, i] for i in range(30)])
+    ins = np.array([insample[i] for i in range(30)])
+    # LOO residuals must be strictly larger on average (they are honest).
+    resid_loo = np.abs(loo - y[:30])
+    resid_ins = np.abs(ins - y[:30])
+    assert resid_loo.mean() > resid_ins.mean()
+
+
+def test_entry_specs_shapes_consistent():
+    for fn, name, specs in model.entry_specs():
+        out = jax.eval_shape(fn, *specs)
+        assert isinstance(out, tuple)
+        for o in out:
+            assert o.dtype == jnp.float32

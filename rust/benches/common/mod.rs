@@ -1,0 +1,49 @@
+//! Shared helpers for the bench binaries.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use c3o::runtime::{Engine, FitBackend, NativeBackend};
+
+/// Splits per evaluation cell: the paper uses 300; override with
+/// C3O_SPLITS for quick runs.
+pub fn splits() -> usize {
+    std::env::var("C3O_SPLITS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300)
+}
+
+/// results/ directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).expect("mkdir results/");
+    dir
+}
+
+/// Write a CSV file under results/.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let path = results_dir().join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text).expect("write csv");
+    println!("[bench] wrote {}", path.display());
+}
+
+/// The production backend if artifacts exist, else native (announced).
+pub fn backend() -> Arc<dyn FitBackend> {
+    match Engine::load_default() {
+        Ok(e) => {
+            println!("[bench] backend: pjrt ({})", e.artifact_dir().display());
+            Arc::new(e)
+        }
+        Err(e) => {
+            println!("[bench] backend: native ({e:#})");
+            Arc::new(NativeBackend::new())
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! E5 — the §IV-B scale-out selection rule, measured empirically.
+//!
+//! For a sweep of confidence levels the configurator picks scale-outs for
+//! fresh jobs; each choice is then executed many times on the simulator
+//! and the observed deadline-hit rate is compared with the requested
+//! confidence (the operational guarantee of the erf formula). Also benches
+//! configure() latency — the interactive path a user waits on.
+
+mod common;
+
+use std::sync::Arc;
+
+use c3o::bench::bench;
+use c3o::cloud::Catalog;
+use c3o::configurator::{configure, UserGoals};
+use c3o::data::JobKind;
+use c3o::eval::TARGET_MACHINE;
+use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::util::prng::Pcg;
+
+fn main() {
+    let backend = common::backend();
+    let catalog = Catalog::aws_like();
+    let shared = generate_job(JobKind::Grep, &GeneratorConfig::default(), &catalog)
+        .expect("gen");
+    let model = WorkloadModel::default();
+    let mt = catalog.get(TARGET_MACHINE).expect("mt");
+
+    println!("== E5: erf-confidence scale-out selection ==\n");
+    println!(
+        "{:<12} {:>10} {:>14} {:>14} {:>12}",
+        "confidence", "jobs", "mean scale", "hit rate", "target"
+    );
+
+    let mut csv = Vec::new();
+    let mut rng = Pcg::seed(0xE5);
+    let mut failures = Vec::new();
+    for &c in &[0.5, 0.7, 0.8, 0.9, 0.95] {
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        let mut scale_sum = 0u64;
+        for _ in 0..25 {
+            let d = rng.range_f64(10.0, 20.0);
+            let ratio = *rng.choose(&[0.001, 0.01, 0.1]);
+            let input = JobInput::new(JobKind::Grep, d, vec![ratio]);
+            let t_fast = model.mean_runtime(mt, 12, &input);
+            let t_slow = model.mean_runtime(mt, 2, &input);
+            let deadline = t_fast + rng.range_f64(0.35, 0.9) * (t_slow - t_fast);
+            let goals = UserGoals { deadline_s: Some(deadline), confidence: c };
+            let choice = match configure(
+                &catalog,
+                &shared,
+                Some(TARGET_MACHINE),
+                &input,
+                &goals,
+                backend.clone(),
+            ) {
+                Ok(ch) => ch,
+                Err(_) => continue,
+            };
+            scale_sum += choice.scale_out as u64;
+            // 40 executions of the chosen configuration.
+            for _ in 0..40 {
+                let t = model.sample_runtime(mt, choice.scale_out, &input, &mut rng);
+                total += 1;
+                if t <= deadline {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / total.max(1) as f64;
+        let njobs = total / 40;
+        println!(
+            "{c:<12} {njobs:>10} {:>14.2} {:>13.1}% {:>11.0}%",
+            scale_sum as f64 / njobs.max(1) as f64,
+            rate * 100.0,
+            c * 100.0
+        );
+        csv.push(format!("{c},{njobs},{rate:.4}"));
+        // The §IV-B guarantee, with finite-sample slack.
+        if rate < c - 0.08 {
+            failures.push(format!("confidence {c}: hit rate {rate:.2} too low"));
+        }
+    }
+    common::write_csv("configurator.csv", "confidence,jobs,hit_rate", &csv);
+
+    // --- configure() latency (interactive path).
+    println!("\nconfigure() latency (fit + sweep, Grep n={}):", shared.for_machine(TARGET_MACHINE).len());
+    let input = JobInput::new(JobKind::Grep, 15.0, vec![0.01]);
+    let goals = UserGoals { deadline_s: Some(600.0), confidence: 0.95 };
+    let r = bench("configure/grep", 1, 10, || {
+        configure(&catalog, &shared, Some(TARGET_MACHINE), &input, &goals, backend.clone())
+            .unwrap()
+    });
+    println!("  {}", r.per_iter_display());
+
+    if failures.is_empty() {
+        println!("\nall confidence checks passed");
+    } else {
+        for f in &failures {
+            println!("  MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

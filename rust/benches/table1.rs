@@ -1,0 +1,66 @@
+//! E1 — Table I: the shared runtime-data census, plus generation timing.
+//!
+//! Regenerates the paper's dataset overview (jobs, dataset counts, input
+//! sizes, parameters, feature counts) from the workload simulator and
+//! benches corpus generation itself.
+
+mod common;
+
+use c3o::bench::{bench, TablePrinter};
+use c3o::cloud::Catalog;
+use c3o::data::JobKind;
+use c3o::sim::{generate_all, generate_job, GeneratorConfig};
+
+fn main() {
+    let catalog = Catalog::aws_like();
+    let cfg = GeneratorConfig::default();
+    let datasets = generate_all(&cfg, &catalog).expect("generate");
+
+    println!("\nTable I: Overview of Runtime Data for Model Evaluation\n");
+    let p = TablePrinter::new(vec![10, 8, 16, 14, 12]);
+    println!("{}", p.row(&["job".into(), "runs".into(), "input sizes".into(), "scale-outs".into(), "#features".into()]));
+    println!("{}", p.sep());
+    let mut csv = Vec::new();
+    for ds in &datasets {
+        let sizes: Vec<f64> = ds.records.iter().map(|r| r.data_size_gb).collect();
+        let lo = sizes.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = sizes.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let so = ds.scale_outs();
+        let row = [
+            ds.job.to_string(),
+            ds.len().to_string(),
+            if hi < 1.0 {
+                format!("{:.0}-{:.0} MB", lo * 1000.0, hi * 1000.0)
+            } else {
+                format!("{lo:.0}-{hi:.0} GB")
+            },
+            format!("{}-{}", so.first().unwrap(), so.last().unwrap()),
+            format!("3+{}", ds.job.context_features()),
+        ];
+        println!("{}", p.row(&row.to_vec()));
+        csv.push(row.join(","));
+    }
+    let total: usize = datasets.iter().map(|d| d.len()).sum();
+    println!("{}", p.sep());
+    println!("total unique experiments: {total} (paper: 930)\n");
+    assert_eq!(total, 930);
+
+    // Paper-check: per-job census.
+    for ds in &datasets {
+        assert_eq!(ds.len(), ds.job.experiment_count(), "{}", ds.job);
+    }
+    common::write_csv("table1.csv", "job,runs,input_sizes,scale_outs,features", &csv);
+
+    // Generation benches (each experiment = 5 simulated executions).
+    println!("generation timing:");
+    for job in [JobKind::Sort, JobKind::PageRank] {
+        let r = bench(&format!("generate_job({job})"), 1, 5, || {
+            generate_job(job, &cfg, &catalog).unwrap()
+        });
+        println!("  {}", r.per_iter_display());
+    }
+    let r = bench("generate_all(930 experiments x5 reps)", 1, 3, || {
+        generate_all(&cfg, &catalog).unwrap()
+    });
+    println!("  {}", r.per_iter_display());
+}

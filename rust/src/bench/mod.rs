@@ -1,0 +1,139 @@
+//! Micro-bench harness (criterion substitute; the offline crate cache has
+//! no `criterion` — see DESIGN.md §2).
+//!
+//! Provides warmup + timed iterations with mean/σ/min/max reporting and a
+//! tabular writer used by the `benches/` binaries to print the paper's
+//! tables next to the timing numbers.
+
+use std::time::Instant;
+
+use crate::util::stats::Online;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter_display(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s < 1e-6 {
+                format!("{:.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{:.3} s", s)
+            }
+        }
+        format!(
+            "{:<44} {:>10}/iter  (±{} over {} iters, min {}, max {})",
+            self.name,
+            fmt(self.mean_s),
+            fmt(self.std_s),
+            self.iters,
+            fmt(self.min_s),
+            fmt(self.max_s),
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut acc = Online::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        acc.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: acc.mean(),
+        std_s: acc.std_dev(),
+        min_s: acc.min(),
+        max_s: acc.max(),
+    }
+}
+
+/// Time a single invocation (for expensive end-to-end passes).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(widths: Vec<usize>) -> Self {
+        TablePrinter { widths }
+    }
+
+    pub fn row(&self, cells: &[String]) -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            line.push_str(&format!("{:<w$}", c, w = w));
+        }
+        line
+    }
+
+    pub fn sep(&self) -> String {
+        "-".repeat(self.widths.iter().sum::<usize>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let r = bench("noop-ish", 2, 10, || (0..1000).sum::<usize>());
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_s: 0.0021,
+            std_s: 1e-4,
+            min_s: 0.002,
+            max_s: 0.0022,
+        };
+        let s = r.per_iter_display();
+        assert!(s.contains("ms"), "{s}");
+    }
+
+    #[test]
+    fn table_printer_pads() {
+        let t = TablePrinter::new(vec![8, 8]);
+        let line = t.row(&["ab".into(), "cd".into()]);
+        assert!(line.starts_with("ab      cd"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Machine-type catalog with EMR-like offerings.
+//!
+//! Coefficients are relative to a baseline "1.0" general-purpose node; the
+//! workload simulator composes them into runtimes, so what matters is their
+//! *ratios* (compute-heavy types run CPU-bound jobs faster, memory types
+//! move the spill cliff, I/O types speed up scans), mirroring how machine
+//! type choice behaves in the paper's data.
+
+use anyhow::bail;
+
+/// One virtual machine offering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineType {
+    /// Provider name, e.g. "m5.xlarge".
+    pub name: String,
+    pub vcpus: u32,
+    pub memory_gb: f64,
+    /// Relative CPU throughput per vcpu (baseline 1.0).
+    pub cpu_factor: f64,
+    /// Relative disk+network scan bandwidth (baseline 1.0).
+    pub io_factor: f64,
+    /// On-demand price per node-hour, USD.
+    pub price_per_hour: f64,
+    /// Marketing family: general | compute | memory | storage.
+    pub family: &'static str,
+}
+
+impl MachineType {
+    /// Price per node-second.
+    pub fn price_per_second(&self) -> f64 {
+        self.price_per_hour / 3600.0
+    }
+}
+
+/// The catalog the configurator iterates over.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    types: Vec<MachineType>,
+    /// Cluster provisioning delay (paper: "seven or more minutes" on EMR).
+    pub provisioning_delay_s: f64,
+    /// Scale-outs offered to the configurator.
+    pub scale_outs: Vec<u32>,
+}
+
+impl Catalog {
+    /// The default EMR-like catalog used across the evaluation.
+    pub fn aws_like() -> Catalog {
+        let t = |name: &str, vcpus, memory_gb, cpu, io, price, family| MachineType {
+            name: name.to_string(),
+            vcpus,
+            memory_gb,
+            cpu_factor: cpu,
+            io_factor: io,
+            price_per_hour: price,
+            family,
+        };
+        Catalog {
+            types: vec![
+                t("m5.xlarge", 4, 16.0, 1.00, 1.00, 0.192, "general"),
+                t("m5.2xlarge", 8, 32.0, 1.00, 1.15, 0.384, "general"),
+                t("c5.xlarge", 4, 8.0, 1.45, 1.00, 0.170, "compute"),
+                t("c5.2xlarge", 8, 16.0, 1.45, 1.15, 0.340, "compute"),
+                t("r5.xlarge", 4, 32.0, 1.00, 1.00, 0.252, "memory"),
+                t("r5.2xlarge", 8, 64.0, 1.00, 1.15, 0.504, "memory"),
+                t("i3.xlarge", 4, 30.5, 0.95, 2.10, 0.312, "storage"),
+            ],
+            provisioning_delay_s: 7.0 * 60.0,
+            scale_outs: (2..=12).collect(),
+        }
+    }
+
+    pub fn types(&self) -> &[MachineType] {
+        &self.types
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&MachineType> {
+        match self.types.iter().find(|t| t.name == name) {
+            Some(t) => Ok(t),
+            None => bail!("unknown machine type: {name}"),
+        }
+    }
+
+    /// General-purpose types — the §IV-A fallback when maintainers have not
+    /// designated a machine type yet.
+    pub fn general_purpose(&self) -> Vec<&MachineType> {
+        self.types.iter().filter(|t| t.family == "general").collect()
+    }
+
+    /// Job cost for a (type, scale-out, runtime) triple: the paper's
+    /// "operating cost x execution time x scale-out".
+    pub fn job_cost(&self, mt: &MachineType, scale_out: u32, runtime_s: f64) -> f64 {
+        mt.price_per_second() * scale_out as f64 * runtime_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_all_families() {
+        let c = Catalog::aws_like();
+        for fam in ["general", "compute", "memory", "storage"] {
+            assert!(c.types().iter().any(|t| t.family == fam), "{fam}");
+        }
+    }
+
+    #[test]
+    fn lookup_and_missing() {
+        let c = Catalog::aws_like();
+        assert_eq!(c.get("m5.xlarge").unwrap().vcpus, 4);
+        assert!(c.get("z9.mega").is_err());
+    }
+
+    #[test]
+    fn provisioning_delay_at_least_seven_minutes() {
+        // Paper §I: EMR provisioning delays of seven or more minutes.
+        assert!(Catalog::aws_like().provisioning_delay_s >= 7.0 * 60.0);
+    }
+
+    #[test]
+    fn price_scales_with_size_within_family() {
+        let c = Catalog::aws_like();
+        assert!(
+            c.get("m5.2xlarge").unwrap().price_per_hour
+                > c.get("m5.xlarge").unwrap().price_per_hour
+        );
+    }
+
+    #[test]
+    fn job_cost_formula() {
+        let c = Catalog::aws_like();
+        let mt = c.get("m5.xlarge").unwrap();
+        // 10 nodes, 1 hour => 10 * hourly price.
+        let cost = c.job_cost(mt, 10, 3600.0);
+        assert!((cost - 1.92).abs() < 1e-9);
+    }
+
+    #[test]
+    fn general_purpose_fallback_nonempty() {
+        assert!(!Catalog::aws_like().general_purpose().is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Cluster lifecycle against the simulated provider: reserve → run → tear
+//! down, with per-node-second billing and provisioning delay. This is the
+//! §II-C "co-located analytics cluster" whose lifecycle C3O streamlines.
+
+use std::sync::Mutex;
+
+use anyhow::bail;
+
+use super::catalog::{Catalog, MachineType};
+
+/// A requested cluster shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub machine_type: String,
+    pub scale_out: u32,
+}
+
+/// A provisioned cluster (simulated). Dropping it without `tear_down` is a
+/// bug the provider surfaces via `leaked_clusters`.
+#[derive(Debug)]
+pub struct ClusterLease {
+    pub id: u64,
+    pub config: ClusterConfig,
+    pub provisioned_after_s: f64,
+}
+
+/// Simulated public-cloud provider: hands out leases and accumulates cost.
+#[derive(Debug)]
+pub struct CloudProvider {
+    catalog: Catalog,
+    state: Mutex<ProviderState>,
+}
+
+#[derive(Debug, Default)]
+struct ProviderState {
+    next_id: u64,
+    active: Vec<u64>,
+    total_cost_usd: f64,
+    total_cluster_seconds: f64,
+    leaked: u64,
+}
+
+impl CloudProvider {
+    pub fn new(catalog: Catalog) -> Self {
+        CloudProvider { catalog, state: Mutex::new(ProviderState::default()) }
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// Reserve a cluster. Fails on unknown machine type or zero nodes.
+    pub fn provision(&self, config: &ClusterConfig) -> crate::Result<ClusterLease> {
+        if config.scale_out == 0 {
+            bail!("cannot provision a 0-node cluster");
+        }
+        self.catalog.get(&config.machine_type)?; // validate
+        let mut st = self.state.lock().unwrap();
+        st.next_id += 1;
+        let id = st.next_id;
+        st.active.push(id);
+        Ok(ClusterLease {
+            id,
+            config: config.clone(),
+            provisioned_after_s: self.catalog.provisioning_delay_s,
+        })
+    }
+
+    /// Tear down after a run of `runtime_s`; returns the billed cost.
+    /// Billing covers runtime plus the provisioning delay (EMR bills from
+    /// cluster start, not job start).
+    pub fn tear_down(&self, lease: ClusterLease, runtime_s: f64) -> crate::Result<f64> {
+        let mt: &MachineType = self.catalog.get(&lease.config.machine_type)?;
+        let billed_s = runtime_s + lease.provisioned_after_s;
+        let cost = mt.price_per_second() * lease.config.scale_out as f64 * billed_s;
+        let mut st = self.state.lock().unwrap();
+        match st.active.iter().position(|&id| id == lease.id) {
+            Some(pos) => {
+                st.active.swap_remove(pos);
+            }
+            None => bail!("double tear-down of cluster {}", lease.id),
+        }
+        st.total_cost_usd += cost;
+        st.total_cluster_seconds += billed_s * lease.config.scale_out as f64;
+        Ok(cost)
+    }
+
+    /// Record a leaked lease (used by tests/failure injection).
+    pub fn report_leak(&self) {
+        self.state.lock().unwrap().leaked += 1;
+    }
+
+    pub fn active_clusters(&self) -> usize {
+        self.state.lock().unwrap().active.len()
+    }
+
+    pub fn total_cost_usd(&self) -> f64 {
+        self.state.lock().unwrap().total_cost_usd
+    }
+
+    pub fn total_cluster_seconds(&self) -> f64 {
+        self.state.lock().unwrap().total_cluster_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn provider() -> CloudProvider {
+        CloudProvider::new(Catalog::aws_like())
+    }
+
+    #[test]
+    fn provision_and_teardown_bills_cost() {
+        let p = provider();
+        let lease = p
+            .provision(&ClusterConfig { machine_type: "m5.xlarge".into(), scale_out: 4 })
+            .unwrap();
+        assert_eq!(p.active_clusters(), 1);
+        let cost = p.tear_down(lease, 3600.0).unwrap();
+        // 4 nodes x (3600 + 420) s x 0.192/3600 $/s
+        let expect = 4.0 * (3600.0 + 420.0) * 0.192 / 3600.0;
+        assert!((cost - expect).abs() < 1e-9, "cost={cost}");
+        assert_eq!(p.active_clusters(), 0);
+        assert!((p.total_cost_usd() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unknown_type_and_zero_nodes() {
+        let p = provider();
+        assert!(p
+            .provision(&ClusterConfig { machine_type: "nope".into(), scale_out: 2 })
+            .is_err());
+        assert!(p
+            .provision(&ClusterConfig { machine_type: "m5.xlarge".into(), scale_out: 0 })
+            .is_err());
+    }
+
+    #[test]
+    fn double_teardown_rejected() {
+        let p = provider();
+        let cfg = ClusterConfig { machine_type: "c5.xlarge".into(), scale_out: 2 };
+        let lease = p.provision(&cfg).unwrap();
+        let fake = ClusterLease { id: lease.id, config: cfg, provisioned_after_s: 0.0 };
+        p.tear_down(lease, 10.0).unwrap();
+        assert!(p.tear_down(fake, 10.0).is_err());
+    }
+
+    #[test]
+    fn concurrent_provisioning_is_safe() {
+        let p = std::sync::Arc::new(provider());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let lease = p
+                        .provision(&ClusterConfig {
+                            machine_type: "m5.xlarge".into(),
+                            scale_out: 2,
+                        })
+                        .unwrap();
+                    p.tear_down(lease, 60.0).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.active_clusters(), 0);
+        // 8 threads x 50 runs, cost strictly positive and consistent.
+        let one = 2.0 * (60.0 + 420.0) * 0.192 / 3600.0;
+        assert!((p.total_cost_usd() - 400.0 * one).abs() < 1e-6);
+    }
+}

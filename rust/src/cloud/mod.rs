@@ -1,0 +1,12 @@
+//! Public-cloud substrate: machine-type catalog, pricing, provisioning.
+//!
+//! Stands in for the AWS/EMR environment of the paper (§II-C): the
+//! configurator consults the catalog for candidate machine types and
+//! prices; the execution simulator charges per node-second and imposes the
+//! multi-minute provisioning delay the paper's introduction calls out.
+
+pub mod catalog;
+pub mod cluster;
+
+pub use catalog::{Catalog, MachineType};
+pub use cluster::{ClusterConfig, ClusterLease, CloudProvider};

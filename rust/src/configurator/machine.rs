@@ -1,0 +1,115 @@
+//! Machine-type selection (paper §IV-A).
+//!
+//! The maintainer of a C3O repository designates a suitable machine type
+//! from test runs; users adopt it and only tune the scale-out. When no
+//! designation exists, the fallback "preferably chooses a general-purpose
+//! machine for which there is runtime data available".
+
+use crate::cloud::Catalog;
+use crate::data::Dataset;
+
+/// Pick the machine type per §IV-A.
+pub fn select_machine_type(
+    catalog: &Catalog,
+    shared: &Dataset,
+    maintainer_type: Option<&str>,
+) -> crate::Result<String> {
+    let available = shared.machine_types();
+    anyhow::ensure!(!available.is_empty(), "no runtime data at all");
+
+    if let Some(mt) = maintainer_type {
+        catalog.get(mt)?; // must exist in the catalog
+        anyhow::ensure!(
+            available.iter().any(|a| a == mt),
+            "maintainer designated {mt} but the shared dataset has no runs on it"
+        );
+        return Ok(mt.to_string());
+    }
+
+    // Fallback: general-purpose types with data, most data first.
+    let mut best: Option<(usize, String)> = None;
+    for t in catalog.general_purpose() {
+        let n = shared.for_machine(&t.name).len();
+        if n > 0 && best.as_ref().map_or(true, |(bn, _)| n > *bn) {
+            best = Some((n, t.name.clone()));
+        }
+    }
+    if let Some((_, name)) = best {
+        return Ok(name);
+    }
+    // Last resort: any type with the most data.
+    let name = available
+        .into_iter()
+        .max_by_key(|mt| shared.for_machine(mt).len())
+        .expect("non-empty");
+    Ok(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{JobKind, RunRecord};
+
+    fn ds_with(machines: &[(&str, usize)]) -> Dataset {
+        let mut ds = Dataset::new(JobKind::Sort);
+        for (mt, count) in machines {
+            for i in 0..*count {
+                ds.push(RunRecord {
+                    machine_type: mt.to_string(),
+                    scale_out: 2 + (i as u32 % 6),
+                    data_size_gb: 10.0 + i as f64,
+                    context: vec![],
+                    runtime_s: 100.0 + i as f64,
+                })
+                .unwrap();
+            }
+        }
+        ds
+    }
+
+    #[test]
+    fn maintainer_designation_wins() {
+        let catalog = Catalog::aws_like();
+        let ds = ds_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
+        let mt = select_machine_type(&catalog, &ds, Some("m5.xlarge")).unwrap();
+        assert_eq!(mt, "m5.xlarge");
+    }
+
+    #[test]
+    fn maintainer_designation_requires_data() {
+        let catalog = Catalog::aws_like();
+        let ds = ds_with(&[("c5.xlarge", 5)]);
+        assert!(select_machine_type(&catalog, &ds, Some("m5.xlarge")).is_err());
+    }
+
+    #[test]
+    fn maintainer_designation_must_be_in_catalog() {
+        let catalog = Catalog::aws_like();
+        let ds = ds_with(&[("weird.type", 5)]);
+        assert!(select_machine_type(&catalog, &ds, Some("weird.type")).is_err());
+    }
+
+    #[test]
+    fn fallback_prefers_general_purpose_with_data() {
+        let catalog = Catalog::aws_like();
+        // c5 has more data, but m5 (general) has data too => m5 wins.
+        let ds = ds_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
+        let mt = select_machine_type(&catalog, &ds, None).unwrap();
+        assert_eq!(mt, "m5.xlarge");
+    }
+
+    #[test]
+    fn fallback_uses_any_type_when_no_general_data() {
+        let catalog = Catalog::aws_like();
+        let ds = ds_with(&[("c5.xlarge", 3), ("r5.xlarge", 9)]);
+        let mt = select_machine_type(&catalog, &ds, None).unwrap();
+        assert_eq!(mt, "r5.xlarge");
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let catalog = Catalog::aws_like();
+        let ds = Dataset::new(JobKind::Sort);
+        assert!(select_machine_type(&catalog, &ds, None).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Cluster configurator (paper §IV): choose a machine type, then the
+//! smallest scale-out that meets the user's deadline with the requested
+//! confidence, avoiding expected hardware bottlenecks.
+//!
+//! Scale-out rule (§IV-B), with (μ, σ) from the chosen model's CV
+//! residuals and c the confidence:
+//!
+//! ```text
+//! ŝ = min { s ∈ S | t_s + μ + Φ⁻¹(c)·σ ≤ t_max }
+//! ```
+//!
+//! where `Φ⁻¹(c) = erf⁻¹(2c−1)·√2` (≈ 1.64485 at c = 0.95).
+
+pub mod machine;
+pub mod scaleout;
+
+pub use machine::select_machine_type;
+pub use scaleout::{select_scale_out, ConfigChoice, ScaleOutOption, UserGoals};
+
+use std::sync::Arc;
+
+use crate::cloud::Catalog;
+use crate::data::Dataset;
+use crate::models::{C3oPredictor, TrainData};
+use crate::runtime::FitBackend;
+use crate::sim::JobInput;
+
+/// End-to-end configuration: machine type (§IV-A) then scale-out (§IV-B).
+///
+/// `shared` is the job's shared runtime dataset (possibly spanning several
+/// machine types); `maintainer_type` is the repo maintainer's designated
+/// machine type, if any.
+pub fn configure(
+    catalog: &Catalog,
+    shared: &Dataset,
+    maintainer_type: Option<&str>,
+    input: &JobInput,
+    goals: &UserGoals,
+    backend: Arc<dyn FitBackend>,
+) -> crate::Result<ConfigChoice> {
+    let machine = select_machine_type(catalog, shared, maintainer_type)?;
+    let view = shared.for_machine(&machine);
+    anyhow::ensure!(
+        view.len() >= 4,
+        "not enough runtime data for machine type {machine}"
+    );
+    let data = TrainData::from_dataset(&view)?;
+    let mut predictor = C3oPredictor::new(backend);
+    let report = predictor.fit(&data)?;
+    let (mu, sigma) = (report.chosen_score.resid_mean, report.chosen_score.resid_std);
+
+    select_scale_out(catalog, &machine, &predictor, input, goals, mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::sim::{generate_job, GeneratorConfig};
+    use crate::data::JobKind;
+
+    #[test]
+    fn end_to_end_configure_returns_valid_choice() {
+        let catalog = Catalog::aws_like();
+        let ds = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let choice = configure(
+            &catalog,
+            &ds,
+            Some("m5.xlarge"),
+            &input,
+            &goals,
+            Arc::new(NativeBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(choice.machine_type, "m5.xlarge");
+        assert!(catalog.scale_outs.contains(&choice.scale_out));
+        assert!(choice.predicted_runtime_s > 0.0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Scale-out selection (paper §IV-B): the erf-confidence admission rule,
+//! bottleneck exclusion, and the runtime/cost pair view.
+
+use crate::cloud::Catalog;
+use crate::models::C3oPredictor;
+use crate::sim::JobInput;
+use crate::util::erf::confidence_multiplier;
+
+/// What the user wants (Fig. 4 step 3).
+#[derive(Debug, Clone)]
+pub struct UserGoals {
+    /// Maximum allowed runtime t_max, if the job has a deadline.
+    pub deadline_s: Option<f64>,
+    /// Confidence c that the deadline is met (paper default 0.95).
+    pub confidence: f64,
+}
+
+impl Default for UserGoals {
+    fn default() -> Self {
+        UserGoals { deadline_s: None, confidence: 0.95 }
+    }
+}
+
+/// One candidate scale-out with its predictions — the §IV-B "pairs of
+/// estimated runtimes and resulting prices" shown when runtime and cost
+/// are of equal concern.
+#[derive(Debug, Clone)]
+pub struct ScaleOutOption {
+    pub scale_out: u32,
+    pub predicted_runtime_s: f64,
+    /// Upper confidence bound: t_s + μ + Φ⁻¹(c)·σ.
+    pub runtime_ucb_s: f64,
+    pub cost_usd: f64,
+    /// Expected memory bottleneck at this scale-out.
+    pub bottleneck: bool,
+    /// Meets the deadline at the requested confidence (None: no deadline).
+    pub admissible: Option<bool>,
+}
+
+/// The configurator's decision.
+#[derive(Debug, Clone)]
+pub struct ConfigChoice {
+    pub machine_type: String,
+    pub scale_out: u32,
+    pub predicted_runtime_s: f64,
+    pub runtime_ucb_s: f64,
+    pub est_cost_usd: f64,
+    /// All evaluated options (for the §IV-B runtime/cost plot).
+    pub options: Vec<ScaleOutOption>,
+}
+
+/// Memory-bottleneck heuristic (§IV-B): for iterative jobs, flag
+/// scale-outs whose total usable memory cannot hold the working set.
+/// Mirrors the simulator's spill model conservatively (the configurator
+/// only sees dataset size, not the exact expansion factor).
+fn expect_bottleneck(
+    catalog: &Catalog,
+    machine_type: &str,
+    scale_out: u32,
+    input: &JobInput,
+) -> bool {
+    if !input.job.is_iterative() {
+        return false;
+    }
+    let mt = match catalog.get(machine_type) {
+        Ok(mt) => mt,
+        Err(_) => return false,
+    };
+    // Conservative working-set estimate: 1.25x the dataset (PageRank's
+    // graph expansion is handled through its context feature by the
+    // *predictor*; the exclusion rule is a guard rail, not the model).
+    let working = 1.25 * input.data_size_gb;
+    let usable = 0.55 * mt.memory_gb * scale_out as f64;
+    working > usable
+}
+
+/// Choose the §IV-B scale-out.
+///
+/// With a deadline: the smallest admissible scale-out, skipping expected
+/// bottlenecks "unless there is no valid other option". Without a
+/// deadline: the cheapest non-bottlenecked option.
+pub fn select_scale_out(
+    catalog: &Catalog,
+    machine_type: &str,
+    predictor: &C3oPredictor,
+    input: &JobInput,
+    goals: &UserGoals,
+    resid_mu: f64,
+    resid_sigma: f64,
+) -> crate::Result<ConfigChoice> {
+    anyhow::ensure!(
+        goals.confidence > 0.0 && goals.confidence < 1.0,
+        "confidence must be in (0,1)"
+    );
+    let mt = catalog.get(machine_type)?;
+    let mult = confidence_multiplier(goals.confidence);
+
+    let mut options = Vec::with_capacity(catalog.scale_outs.len());
+    for &s in &catalog.scale_outs {
+        let mut features = vec![s as f64, input.data_size_gb];
+        features.extend_from_slice(&input.context);
+        let t = predictor.predict_one(&features)?.max(0.0);
+        let ucb = t + resid_mu + mult * resid_sigma;
+        let bottleneck = expect_bottleneck(catalog, machine_type, s, input);
+        options.push(ScaleOutOption {
+            scale_out: s,
+            predicted_runtime_s: t,
+            runtime_ucb_s: ucb,
+            cost_usd: catalog.job_cost(mt, s, t),
+            bottleneck,
+            admissible: goals.deadline_s.map(|d| ucb <= d),
+        });
+    }
+
+    let pick = |opts: &[ScaleOutOption]| -> Option<u32> {
+        match goals.deadline_s {
+            Some(_) => opts
+                .iter()
+                .filter(|o| o.admissible == Some(true))
+                .map(|o| o.scale_out)
+                .min(),
+            None => opts
+                .iter()
+                .min_by(|a, b| a.cost_usd.partial_cmp(&b.cost_usd).unwrap())
+                .map(|o| o.scale_out),
+        }
+    };
+
+    // First pass excludes bottlenecked scale-outs; §IV-B allows them only
+    // when nothing else is valid.
+    let clean: Vec<ScaleOutOption> =
+        options.iter().filter(|o| !o.bottleneck).cloned().collect();
+    let chosen = pick(&clean)
+        .or_else(|| pick(&options))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no scale-out in {:?} meets the deadline {:?} at confidence {}",
+                catalog.scale_outs,
+                goals.deadline_s,
+                goals.confidence
+            )
+        })?;
+
+    let opt = options.iter().find(|o| o.scale_out == chosen).unwrap().clone();
+    Ok(ConfigChoice {
+        machine_type: machine_type.to_string(),
+        scale_out: opt.scale_out,
+        predicted_runtime_s: opt.predicted_runtime_s,
+        runtime_ucb_s: opt.runtime_ucb_s,
+        est_cost_usd: opt.cost_usd,
+        options,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::JobKind;
+    use crate::linalg::Matrix;
+    use crate::models::TrainData;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Pcg;
+    use std::sync::Arc;
+
+    /// Predictor trained on a clean 1/s world.
+    fn trained_predictor() -> C3oPredictor {
+        let mut rng = Pcg::seed(11);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..80 {
+            let s = rng.range(2, 13) as f64;
+            let d = rng.range_f64(10.0, 30.0);
+            rows.push(vec![s, d]);
+            y.push(40.0 + 60.0 * d / s + 2.0 * s);
+        }
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+        let mut p = C3oPredictor::new(Arc::new(NativeBackend::new()));
+        p.fit(&data).unwrap();
+        p
+    }
+
+    fn sort_input(d: f64) -> JobInput {
+        JobInput::new(JobKind::Sort, d, vec![])
+    }
+
+    #[test]
+    fn picks_minimum_admissible_scaleout() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let goals = UserGoals { deadline_s: Some(320.0), confidence: 0.95 };
+        let c = select_scale_out(&catalog, "m5.xlarge", &p, &sort_input(20.0), &goals, 0.0, 5.0)
+            .unwrap();
+        // Every admissible option must be >= the chosen one.
+        for o in &c.options {
+            if o.admissible == Some(true) {
+                assert!(o.scale_out >= c.scale_out);
+            }
+        }
+        assert!(c.runtime_ucb_s <= 320.0);
+    }
+
+    #[test]
+    fn higher_confidence_never_lowers_scaleout() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let mut prev = 0u32;
+        for &c in &[0.5, 0.8, 0.9, 0.95, 0.99] {
+            let goals = UserGoals { deadline_s: Some(330.0), confidence: c };
+            let choice = select_scale_out(
+                &catalog, "m5.xlarge", &p, &sort_input(20.0), &goals, 0.0, 30.0,
+            )
+            .unwrap();
+            assert!(choice.scale_out >= prev, "c={c}: {} < {prev}", choice.scale_out);
+            prev = choice.scale_out;
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_errors() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let goals = UserGoals { deadline_s: Some(1.0), confidence: 0.95 };
+        assert!(select_scale_out(
+            &catalog, "m5.xlarge", &p, &sort_input(20.0), &goals, 0.0, 5.0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn no_deadline_picks_cheapest() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        let c = select_scale_out(&catalog, "m5.xlarge", &p, &sort_input(20.0), &goals, 0.0, 5.0)
+            .unwrap();
+        let min_cost = c
+            .options
+            .iter()
+            .filter(|o| !o.bottleneck)
+            .map(|o| o.cost_usd)
+            .fold(f64::INFINITY, f64::min);
+        assert!((c.est_cost_usd - min_cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bottlenecked_scaleouts_skipped_for_iterative_jobs() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        // K-Means 30 GB on c5.xlarge (8 GB): working 37.5 GB needs
+        // 37.5/(0.55*8) ≈ 8.5 ⇒ s <= 8 is bottlenecked.
+        let input = JobInput::new(JobKind::KMeans, 30.0, vec![5.0, 0.001]);
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        let c = select_scale_out(&catalog, "c5.xlarge", &p, &input, &goals, 0.0, 5.0).unwrap();
+        assert!(c.scale_out >= 9, "chose bottlenecked {}", c.scale_out);
+        let opt9 = c.options.iter().find(|o| o.scale_out == 9).unwrap();
+        assert!(!opt9.bottleneck);
+        let opt8 = c.options.iter().find(|o| o.scale_out == 8).unwrap();
+        assert!(opt8.bottleneck);
+    }
+
+    #[test]
+    fn bottleneck_allowed_when_no_alternative() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        // 60 GB on c5.xlarge: bottlenecked at every catalog scale-out.
+        let input = JobInput::new(JobKind::KMeans, 60.0, vec![5.0, 0.001]);
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        let c = select_scale_out(&catalog, "c5.xlarge", &p, &input, &goals, 0.0, 5.0).unwrap();
+        assert!(c.options.iter().all(|o| o.bottleneck));
+        // Still returns the cheapest rather than erroring.
+        assert!(catalog.scale_outs.contains(&c.scale_out));
+    }
+
+    #[test]
+    fn ucb_uses_paper_multiplier() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let goals = UserGoals { deadline_s: Some(1e9), confidence: 0.95 };
+        let c = select_scale_out(&catalog, "m5.xlarge", &p, &sort_input(15.0), &goals, 2.0, 10.0)
+            .unwrap();
+        for o in &c.options {
+            let expect = o.predicted_runtime_s + 2.0 + 1.6448536269514722 * 10.0;
+            assert!((o.runtime_ucb_s - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn invalid_confidence_rejected() {
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        for bad in [0.0, 1.0, -0.5, 1.5] {
+            let goals = UserGoals { deadline_s: None, confidence: bad };
+            assert!(select_scale_out(
+                &catalog, "m5.xlarge", &p, &sort_input(15.0), &goals, 0.0, 5.0
+            )
+            .is_err());
+        }
+    }
+}

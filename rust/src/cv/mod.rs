@@ -1,0 +1,148 @@
+//! Cross-validation: split generation and scoring (paper §V-C, §VI-C).
+
+use crate::models::{RuntimeModel, TrainData};
+use crate::util::prng::Pcg;
+use crate::util::stats;
+
+/// Residual summary of a cross-validated model — feeds both dynamic model
+/// selection (§V-C) and the configurator's Gaussian error model (§IV-B).
+#[derive(Debug, Clone)]
+pub struct CvScore {
+    /// Mean absolute percentage error over held-out points.
+    pub mape: f64,
+    /// Mean of signed residuals (pred − actual), seconds: the paper's μ.
+    pub resid_mean: f64,
+    /// Std-dev of signed residuals, seconds: the paper's σ.
+    pub resid_std: f64,
+    /// Number of held-out evaluations.
+    pub n: usize,
+}
+
+/// Leave-one-out CV of `model` over `data` (retrains per split unless the
+/// model overrides `loo_predictions` with a batched path).
+///
+/// The model selection phase the paper caps at 10–30 s; E4 benches this.
+pub fn loo_score(model: &dyn RuntimeModel, data: &TrainData) -> crate::Result<CvScore> {
+    let preds = model.loo_predictions(data)?;
+    Ok(score_from_preds(&preds, &data.y))
+}
+
+/// K-fold CV (used when the training set outgrows the LOO budget, §VI-C:
+/// "the model selection phase needs to be capped").
+pub fn kfold_score(
+    model: &dyn RuntimeModel,
+    data: &TrainData,
+    k: usize,
+    seed: u64,
+) -> crate::Result<CvScore> {
+    let n = data.len();
+    anyhow::ensure!(k >= 2 && n >= k, "kfold: need 2 <= k <= n");
+    let mut order: Vec<usize> = (0..n).collect();
+    Pcg::new(seed, 0xF0).shuffle(&mut order);
+
+    let mut preds = vec![0.0; n];
+    let mut scratch = model.clone_unfitted();
+    for fold in 0..k {
+        let test: Vec<usize> =
+            order.iter().copied().skip(fold).step_by(k).collect();
+        let train: Vec<usize> =
+            order.iter().copied().filter(|i| !test.contains(i)).collect();
+        scratch.fit(&data.subset(&train))?;
+        for &i in &test {
+            preds[i] = scratch.predict_one(data.x.row(i))?;
+        }
+    }
+    Ok(score_from_preds(&preds, &data.y))
+}
+
+/// Score pre-computed held-out predictions.
+pub fn score_from_preds(preds: &[f64], actual: &[f64]) -> CvScore {
+    let resid: Vec<f64> =
+        preds.iter().zip(actual).map(|(p, a)| p - a).collect();
+    CvScore {
+        mape: stats::mape(preds, actual),
+        resid_mean: stats::mean(&resid),
+        resid_std: stats::std_dev(&resid),
+        n: preds.len(),
+    }
+}
+
+/// One train/test index split of `n` records with `n_train` training
+/// points, drawn uniformly (the paper's 300-splits protocol).
+pub fn train_test_split(n: usize, n_train: usize, rng: &mut Pcg) -> (Vec<usize>, Vec<usize>) {
+    assert!(n_train < n, "need at least one test point");
+    let idx = rng.sample_indices(n, n);
+    let train = idx[..n_train].to_vec();
+    let test = idx[n_train..].to_vec();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::models::{Gbm, GbmParams};
+
+    fn linear_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range(2, 13) as f64, rng.range_f64(10.0, 30.0)])
+            .collect();
+        let y = rows.iter().map(|r| 5.0 + 2.0 * r[1] + 30.0 / r[0]).collect();
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    #[test]
+    fn loo_score_reasonable_for_gbm() {
+        let data = linear_world(40, 1);
+        let mut m = Gbm::new(GbmParams { n_estimators: 60, ..Default::default() });
+        m.fit(&data).unwrap();
+        let s = loo_score(&m, &data).unwrap();
+        assert_eq!(s.n, 40);
+        assert!(s.mape < 20.0, "mape={}", s.mape);
+        assert!(s.resid_std > 0.0);
+    }
+
+    #[test]
+    fn kfold_covers_every_point_once() {
+        let data = linear_world(23, 2);
+        let m = Gbm::with_defaults();
+        let s = kfold_score(&m, &data, 5, 7).unwrap();
+        assert_eq!(s.n, 23);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = Pcg::seed(3);
+        let (train, test) = train_test_split(20, 6, &mut rng);
+        assert_eq!(train.len(), 6);
+        assert_eq!(test.len(), 14);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn perfect_predictions_zero_error() {
+        let s = score_from_preds(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(s.mape, 0.0);
+        assert_eq!(s.resid_mean, 0.0);
+        assert_eq!(s.resid_std, 0.0);
+    }
+
+    #[test]
+    fn biased_predictions_have_nonzero_mu() {
+        // Constant +10s over-prediction: mu = 10, sigma = 0.
+        let s = score_from_preds(&[110.0, 210.0], &[100.0, 200.0]);
+        assert!((s.resid_mean - 10.0).abs() < 1e-12);
+        assert!(s.resid_std < 1e-12);
+    }
+
+    #[test]
+    fn kfold_rejects_bad_k() {
+        let data = linear_world(5, 4);
+        let m = Gbm::with_defaults();
+        assert!(kfold_score(&m, &data, 1, 0).is_err());
+        assert!(kfold_score(&m, &data, 6, 0).is_err());
+    }
+}

@@ -1,0 +1,296 @@
+//! Run records and datasets: the shared runtime data of the paper.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::JobKind;
+use crate::util::tsv::Table;
+
+/// One executed (job, configuration, inputs) observation.
+///
+/// `context` holds the job-specific features in the order of
+/// [`JobKind::context_feature_names`]; `data_size_gb` is the paper's
+/// "dataset size / problem size" shared feature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub machine_type: String,
+    pub scale_out: u32,
+    pub data_size_gb: f64,
+    pub context: Vec<f64>,
+    pub runtime_s: f64,
+}
+
+impl RunRecord {
+    /// The full feature vector `[scale_out, data_size, context...]` used by
+    /// the runtime models (machine type is held fixed per training set,
+    /// paper §VI-C).
+    pub fn features(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(2 + self.context.len());
+        v.push(self.scale_out as f64);
+        v.push(self.data_size_gb);
+        v.extend_from_slice(&self.context);
+        v
+    }
+}
+
+/// A job's shared runtime dataset (the contents of a C3O repository's data
+/// directory).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub job: JobKind,
+    pub records: Vec<RunRecord>,
+}
+
+impl Dataset {
+    pub fn new(job: JobKind) -> Dataset {
+        Dataset { job, records: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Push with schema validation.
+    pub fn push(&mut self, rec: RunRecord) -> crate::Result<()> {
+        self.validate_record(&rec)?;
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Schema check: context arity, positive runtime, sane scale-out.
+    pub fn validate_record(&self, rec: &RunRecord) -> crate::Result<()> {
+        if rec.context.len() != self.job.context_features() {
+            bail!(
+                "{}: expected {} context features, got {}",
+                self.job,
+                self.job.context_features(),
+                rec.context.len()
+            );
+        }
+        if !(rec.runtime_s.is_finite() && rec.runtime_s > 0.0) {
+            bail!("runtime must be finite positive, got {}", rec.runtime_s);
+        }
+        if rec.scale_out == 0 {
+            bail!("scale-out must be >= 1");
+        }
+        if !(rec.data_size_gb.is_finite() && rec.data_size_gb > 0.0) {
+            bail!("data size must be finite positive");
+        }
+        if rec.context.iter().any(|c| !c.is_finite()) {
+            bail!("context features must be finite");
+        }
+        Ok(())
+    }
+
+    /// Restrict to one machine type (the models only learn from the target
+    /// type, §VI-C).
+    pub fn for_machine(&self, machine_type: &str) -> Dataset {
+        Dataset {
+            job: self.job,
+            records: self
+                .records
+                .iter()
+                .filter(|r| r.machine_type == machine_type)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Machine types present, sorted.
+    pub fn machine_types(&self) -> Vec<String> {
+        let set: BTreeSet<String> =
+            self.records.iter().map(|r| r.machine_type.clone()).collect();
+        set.into_iter().collect()
+    }
+
+    /// Distinct context vectors present, sorted lexicographically — each is
+    /// one "execution context" in the paper's sense. A *local* training
+    /// dataset is all records sharing one of these.
+    pub fn contexts(&self) -> Vec<Vec<f64>> {
+        let mut ctxs: Vec<Vec<f64>> = Vec::new();
+        for r in &self.records {
+            if !ctxs.iter().any(|c| c == &r.context) {
+                ctxs.push(r.context.clone());
+            }
+        }
+        ctxs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ctxs
+    }
+
+    /// Records belonging to one context (a single-user "local" view).
+    pub fn local_view(&self, context: &[f64]) -> Dataset {
+        Dataset {
+            job: self.job,
+            records: self
+                .records
+                .iter()
+                .filter(|r| r.context == context)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// TSV header for this job: paper layout — machine type and instance
+    /// count first, context features at the end, runtime last.
+    pub fn header(job: JobKind) -> Vec<String> {
+        let mut h = vec![
+            "machine_type".to_string(),
+            "instance_count".to_string(),
+            "data_size_gb".to_string(),
+        ];
+        h.extend(job.context_feature_names().iter().map(|s| s.to_string()));
+        h.push("gross_runtime_s".to_string());
+        h
+    }
+
+    pub fn to_table(&self) -> crate::Result<Table> {
+        let mut t = Table::new(Self::header(self.job));
+        for r in &self.records {
+            let mut row = vec![
+                r.machine_type.clone(),
+                r.scale_out.to_string(),
+                format!("{}", r.data_size_gb),
+            ];
+            row.extend(r.context.iter().map(|c| format!("{c}")));
+            row.push(format!("{}", r.runtime_s));
+            t.push_row(row)?;
+        }
+        Ok(t)
+    }
+
+    pub fn from_table(job: JobKind, t: &Table) -> crate::Result<Dataset> {
+        let expect = Self::header(job);
+        if t.header != expect {
+            bail!(
+                "{job}: header mismatch\n  expected {expect:?}\n  got      {:?}",
+                t.header
+            );
+        }
+        let nctx = job.context_features();
+        let mut ds = Dataset::new(job);
+        for (i, row) in t.rows.iter().enumerate() {
+            let rec = RunRecord {
+                machine_type: row[0].clone(),
+                scale_out: row[1]
+                    .parse()
+                    .with_context(|| format!("row {i}: instance_count"))?,
+                data_size_gb: row[2]
+                    .parse()
+                    .with_context(|| format!("row {i}: data_size_gb"))?,
+                context: (0..nctx)
+                    .map(|k| row[3 + k].parse::<f64>())
+                    .collect::<Result<_, _>>()
+                    .with_context(|| format!("row {i}: context"))?,
+                runtime_s: row[3 + nctx]
+                    .parse()
+                    .with_context(|| format!("row {i}: runtime"))?,
+            };
+            ds.push(rec).with_context(|| format!("row {i}"))?;
+        }
+        Ok(ds)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        self.to_table()?.write(path)
+    }
+
+    pub fn load(job: JobKind, path: &Path) -> crate::Result<Dataset> {
+        Dataset::from_table(job, &Table::read(path)?)
+    }
+
+    /// Scale-outs present, sorted ascending.
+    pub fn scale_outs(&self) -> Vec<u32> {
+        let set: BTreeSet<u32> = self.records.iter().map(|r| r.scale_out).collect();
+        set.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(m: &str, s: u32, d: f64, ctx: Vec<f64>, t: f64) -> RunRecord {
+        RunRecord {
+            machine_type: m.into(),
+            scale_out: s,
+            data_size_gb: d,
+            context: ctx,
+            runtime_s: t,
+        }
+    }
+
+    #[test]
+    fn push_validates_context_arity() {
+        let mut ds = Dataset::new(JobKind::KMeans);
+        assert!(ds.push(rec("m5", 4, 10.0, vec![5.0], 100.0)).is_err());
+        assert!(ds.push(rec("m5", 4, 10.0, vec![5.0, 0.001], 100.0)).is_ok());
+    }
+
+    #[test]
+    fn push_rejects_bad_values() {
+        let mut ds = Dataset::new(JobKind::Sort);
+        assert!(ds.push(rec("m5", 0, 10.0, vec![], 100.0)).is_err());
+        assert!(ds.push(rec("m5", 4, -1.0, vec![], 100.0)).is_err());
+        assert!(ds.push(rec("m5", 4, 10.0, vec![], 0.0)).is_err());
+        assert!(ds.push(rec("m5", 4, 10.0, vec![], f64::NAN)).is_err());
+    }
+
+    #[test]
+    fn tsv_round_trip() {
+        let mut ds = Dataset::new(JobKind::Grep);
+        ds.push(rec("m5.xlarge", 4, 12.5, vec![0.01], 321.5)).unwrap();
+        ds.push(rec("c5.xlarge", 8, 20.0, vec![0.10], 123.0)).unwrap();
+        let t = ds.to_table().unwrap();
+        let back = Dataset::from_table(JobKind::Grep, &t).unwrap();
+        assert_eq!(back.records, ds.records);
+    }
+
+    #[test]
+    fn header_layout_matches_paper() {
+        // §VI-A: machine type and instance count first, context last.
+        let h = Dataset::header(JobKind::PageRank);
+        assert_eq!(h[0], "machine_type");
+        assert_eq!(h[1], "instance_count");
+        assert_eq!(h[h.len() - 1], "gross_runtime_s");
+        assert!(h.contains(&"page_ratio".to_string()));
+    }
+
+    #[test]
+    fn local_view_filters_context() {
+        let mut ds = Dataset::new(JobKind::KMeans);
+        ds.push(rec("m5", 2, 10.0, vec![3.0, 0.001], 50.0)).unwrap();
+        ds.push(rec("m5", 4, 10.0, vec![3.0, 0.001], 30.0)).unwrap();
+        ds.push(rec("m5", 2, 10.0, vec![9.0, 0.001], 90.0)).unwrap();
+        let ctxs = ds.contexts();
+        assert_eq!(ctxs.len(), 2);
+        assert_eq!(ds.local_view(&[3.0, 0.001]).len(), 2);
+        assert_eq!(ds.local_view(&[9.0, 0.001]).len(), 1);
+    }
+
+    #[test]
+    fn machine_filter() {
+        let mut ds = Dataset::new(JobKind::Sort);
+        ds.push(rec("m5", 2, 10.0, vec![], 10.0)).unwrap();
+        ds.push(rec("c5", 2, 10.0, vec![], 12.0)).unwrap();
+        assert_eq!(ds.for_machine("m5").len(), 1);
+        assert_eq!(ds.machine_types(), vec!["c5", "m5"]);
+    }
+
+    #[test]
+    fn features_layout() {
+        let r = rec("m5", 6, 15.0, vec![0.5], 1.0);
+        assert_eq!(r.features(), vec![6.0, 15.0, 0.5]);
+    }
+
+    #[test]
+    fn header_mismatch_rejected() {
+        let t = Table::parse("a\tb\n1\t2\n").unwrap();
+        assert!(Dataset::from_table(JobKind::Sort, &t).is_err());
+    }
+}

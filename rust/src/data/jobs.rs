@@ -1,0 +1,137 @@
+//! The five evaluation jobs of the paper (Table I).
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::bail;
+
+/// The five Spark jobs from the paper's evaluation dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum JobKind {
+    /// Sort lines of random characters. Features: 3+0.
+    Sort,
+    /// Grep for a keyword. Features: 3+1 (keyword-line ratio).
+    Grep,
+    /// SGD linear regression. Features: 3+2 (iterations, feature count).
+    Sgd,
+    /// K-Means clustering. Features: 3+2 (k, convergence criterion).
+    KMeans,
+    /// PageRank. Features: 3+2 (unique-page ratio, convergence criterion).
+    PageRank,
+}
+
+impl JobKind {
+    /// All jobs, in the paper's Table I order.
+    pub const ALL: [JobKind; 5] = [
+        JobKind::Sort,
+        JobKind::Grep,
+        JobKind::Sgd,
+        JobKind::KMeans,
+        JobKind::PageRank,
+    ];
+
+    /// Number of job-specific context features (the "+k" in Table I).
+    pub fn context_features(self) -> usize {
+        match self {
+            JobKind::Sort => 0,
+            JobKind::Grep => 1,
+            JobKind::Sgd | JobKind::KMeans | JobKind::PageRank => 2,
+        }
+    }
+
+    /// Names of context feature columns (order fixed; used in TSV headers).
+    pub fn context_feature_names(self) -> &'static [&'static str] {
+        match self {
+            JobKind::Sort => &[],
+            JobKind::Grep => &["keyword_ratio"],
+            JobKind::Sgd => &["iterations", "features"],
+            JobKind::KMeans => &["k", "convergence"],
+            JobKind::PageRank => &["page_ratio", "convergence"],
+        }
+    }
+
+    /// Unique experiment count in the paper's dataset (Table I, "Jobs").
+    pub fn experiment_count(self) -> usize {
+        match self {
+            JobKind::Sort => 126,
+            JobKind::Grep => 162,
+            JobKind::Sgd => 180,
+            JobKind::KMeans => 180,
+            JobKind::PageRank => 282,
+        }
+    }
+
+    /// Does this job iterate over the dataset (making it memory-cliff
+    /// sensitive, §IV-B)?
+    pub fn is_iterative(self) -> bool {
+        matches!(self, JobKind::Sgd | JobKind::KMeans | JobKind::PageRank)
+    }
+}
+
+impl fmt::Display for JobKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            JobKind::Sort => "sort",
+            JobKind::Grep => "grep",
+            JobKind::Sgd => "sgd",
+            JobKind::KMeans => "kmeans",
+            JobKind::PageRank => "pagerank",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for JobKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sort" => JobKind::Sort,
+            "grep" => JobKind::Grep,
+            "sgd" | "sgdlr" => JobKind::Sgd,
+            "kmeans" | "k-means" => JobKind::KMeans,
+            "pagerank" | "page-rank" => JobKind::PageRank,
+            other => bail!("unknown job kind: {other}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_totals_930() {
+        let total: usize = JobKind::ALL.iter().map(|j| j.experiment_count()).sum();
+        assert_eq!(total, 930, "paper: 930 unique runtime experiments");
+    }
+
+    #[test]
+    fn feature_counts_match_table1() {
+        assert_eq!(JobKind::Sort.context_features(), 0);
+        assert_eq!(JobKind::Grep.context_features(), 1);
+        assert_eq!(JobKind::Sgd.context_features(), 2);
+        assert_eq!(JobKind::KMeans.context_features(), 2);
+        assert_eq!(JobKind::PageRank.context_features(), 2);
+    }
+
+    #[test]
+    fn names_align_with_counts() {
+        for j in JobKind::ALL {
+            assert_eq!(j.context_feature_names().len(), j.context_features());
+        }
+    }
+
+    #[test]
+    fn round_trip_display_parse() {
+        for j in JobKind::ALL {
+            assert_eq!(j.to_string().parse::<JobKind>().unwrap(), j);
+        }
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!("SGDLR".parse::<JobKind>().unwrap(), JobKind::Sgd);
+        assert_eq!("K-Means".parse::<JobKind>().unwrap(), JobKind::KMeans);
+        assert!("mapreduce".parse::<JobKind>().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime-data schema, TSV codec and local/global context handling.
+//!
+//! A **run record** is one executed (job, cluster configuration, inputs)
+//! tuple with its observed runtime — the unit of collaboration in C3O.
+//! Following the paper (§VI-A) the on-disk layout is TSV: machine type and
+//! instance count first, then the dataset/problem size, then job-specific
+//! context features, then the runtime.
+
+pub mod dataset;
+pub mod jobs;
+
+pub use dataset::{Dataset, RunRecord};
+pub use jobs::JobKind;

@@ -1,0 +1,40 @@
+//! Evaluation harnesses reproducing the paper's §VI experiments.
+//!
+//! * [`table2`] — runtime prediction accuracy, local vs global training
+//!   data (paper Table II).
+//! * [`fig5`] — accuracy vs training-data availability (paper Fig. 5).
+//!
+//! Both are driven by the `benches/` binaries and the `c3o eval` CLI; the
+//! split protocol follows §VI-C: 300 uniformly drawn train-test splits per
+//! cell, mean of the per-split MAPEs.
+
+pub mod fig5;
+pub mod table2;
+
+pub use fig5::{run_fig5, Fig5Config, Fig5Result};
+pub use table2::{run_table2, Scenario, Table2Cell, Table2Config, Table2Result};
+
+use std::sync::Arc;
+
+use crate::models::{Bom, C3oPredictor, Ernest, Gbm, GbmParams, Ogb, RuntimeModel};
+use crate::runtime::FitBackend;
+
+/// Model names in the paper's Table II row order.
+pub const MODEL_ORDER: [&str; 5] = ["Ernest", "GBM", "BOM", "OGB", "C3O"];
+
+/// Instantiate the evaluated models (Ernest baseline + the three
+/// constituents + the C3O selector), all unfitted.
+pub fn make_models(backend: &Arc<dyn FitBackend>) -> Vec<Box<dyn RuntimeModel>> {
+    vec![
+        Box::new(Ernest::new(backend.clone())),
+        Box::new(Gbm::new(GbmParams::default())),
+        Box::new(Bom::new(backend.clone())),
+        Box::new(Ogb::with_defaults()),
+        Box::new(C3oPredictor::new(backend.clone())),
+    ]
+}
+
+/// The machine type the evaluation fixes per §VI-C ("the models only
+/// learned from training data that was generated on the target machine
+/// type").
+pub const TARGET_MACHINE: &str = "m5.xlarge";

@@ -1,0 +1,282 @@
+//! Table II: prediction accuracy with local-only vs globally shared
+//! training data.
+//!
+//! Protocol (§VI-C-a): for every (job, model, scenario) cell, 300
+//! train-test splits drawn uniformly; *local* splits restrict training
+//! data to a single execution context (chosen uniformly among the job's
+//! contexts), *global* splits draw from all contexts. Reported number is
+//! the mean of per-split MAPEs. Sort has no context features, so its
+//! local and global columns coincide (one shared column in the paper).
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, JobKind};
+use crate::models::TrainData;
+use crate::runtime::FitBackend;
+use crate::util::par::par_map;
+use crate::util::prng::Pcg;
+use crate::util::stats;
+
+use super::{make_models, MODEL_ORDER};
+
+/// Which training-data pool a split draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Single-user: one execution context only.
+    Local,
+    /// Collaborative: all contexts (§VI-C-a "global").
+    Global,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Table2Config {
+    /// Train-test splits per cell (paper: 300).
+    pub splits: usize,
+    /// Training fraction of the pool per split.
+    pub train_frac: f64,
+    pub seed: u64,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        Table2Config { splits: 300, train_frac: 0.8, seed: 0x7AB1E2, threads: 0 }
+    }
+}
+
+/// One cell of Table II.
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub job: JobKind,
+    pub model: String,
+    pub scenario: Scenario,
+    /// Mean over splits of per-split MAPE (%).
+    pub mape: f64,
+    /// Std over splits (not in the paper's table; useful for CI).
+    pub mape_std: f64,
+    pub splits: usize,
+}
+
+/// Full harness output.
+#[derive(Debug, Clone)]
+pub struct Table2Result {
+    pub cells: Vec<Table2Cell>,
+}
+
+impl Table2Result {
+    pub fn get(&self, job: JobKind, model: &str, scenario: Scenario) -> Option<&Table2Cell> {
+        self.cells
+            .iter()
+            .find(|c| c.job == job && c.model == model && c.scenario == scenario)
+    }
+}
+
+/// Evaluate one job's dataset (already restricted to the target machine
+/// type) for one scenario; returns per-model mean MAPE over splits.
+pub fn eval_job_scenario(
+    ds: &Dataset,
+    scenario: Scenario,
+    cfg: &Table2Config,
+    backend: &Arc<dyn FitBackend>,
+) -> crate::Result<Vec<Table2Cell>> {
+    anyhow::ensure!(!ds.is_empty(), "empty dataset for {}", ds.job);
+    // Local scenario: only contexts dense enough to train on (a real
+    // single user would have at least a handful of past runs).
+    let contexts: Vec<Vec<f64>> = ds
+        .contexts()
+        .into_iter()
+        .filter(|c| ds.local_view(c).len() >= 6)
+        .collect();
+    anyhow::ensure!(
+        scenario == Scenario::Global || !contexts.is_empty(),
+        "{}: no context has >= 6 records for the local scenario",
+        ds.job
+    );
+
+    // Per-split evaluation: returns MAPE per model (MODEL_ORDER order).
+    let split_ids: Vec<usize> = (0..cfg.splits).collect();
+    let per_split: Vec<crate::Result<Vec<f64>>> = par_map(&split_ids, cfg.threads, |_, &sid| {
+        let mut rng = Pcg::new(cfg.seed ^ (ds.job as u64) << 32, sid as u64);
+        // Choose the pool.
+        let pool: Dataset = match scenario {
+            Scenario::Global => ds.clone(),
+            Scenario::Local => {
+                let ctx = &contexts[rng.below(contexts.len().max(1))];
+                ds.local_view(ctx)
+            }
+        };
+        let n = pool.len();
+        anyhow::ensure!(n >= 6, "pool too small ({n}) for {}", ds.job);
+        let n_train = ((n as f64 * cfg.train_frac).round() as usize).clamp(4, n - 1);
+        let (train_idx, test_idx) = crate::cv::train_test_split(n, n_train, &mut rng);
+
+        let all = TrainData::from_dataset(&pool)?;
+        let train = all.subset(&train_idx);
+        let test = all.subset(&test_idx);
+
+        let mut out = Vec::with_capacity(MODEL_ORDER.len());
+        for mut model in make_models(backend) {
+            let mape = match model.fit(&train) {
+                Ok(()) => {
+                    let preds = model.predict(&test.x)?;
+                    stats::mape(&preds, &test.y)
+                }
+                // A model that cannot fit this split (e.g. BOM-degenerate
+                // local pools) is excluded from that split's average.
+                Err(e) => {
+                    if std::env::var_os("C3O_EVAL_DEBUG").is_some() {
+                        eprintln!("[eval] split {sid}: {} fit failed: {e:#}", model.name());
+                    }
+                    f64::NAN
+                }
+            };
+            out.push(mape);
+        }
+        Ok(out)
+    });
+
+    // Aggregate.
+    let mut cells = Vec::new();
+    for (mi, name) in MODEL_ORDER.iter().enumerate() {
+        let vals: Vec<f64> = per_split
+            .iter()
+            .filter_map(|r| r.as_ref().ok())
+            .map(|v| v[mi])
+            .filter(|v| v.is_finite())
+            .collect();
+        if vals.len() < cfg.splits / 2 {
+            let first_err = per_split
+                .iter()
+                .find_map(|r| r.as_ref().err())
+                .map(|e| format!("{e:#}"))
+                .unwrap_or_else(|| "NaN scores".into());
+            anyhow::bail!(
+                "{}/{}: too many failed splits for {name} (first error: {first_err})",
+                vals.len(),
+                cfg.splits
+            );
+        }
+        cells.push(Table2Cell {
+            job: ds.job,
+            model: name.to_string(),
+            scenario,
+            mape: stats::mean(&vals),
+            mape_std: stats::std_dev(&vals),
+            splits: vals.len(),
+        });
+    }
+    Ok(cells)
+}
+
+/// Run the full Table II over the given per-job datasets (already
+/// machine-filtered).
+pub fn run_table2(
+    datasets: &[Dataset],
+    cfg: &Table2Config,
+    backend: &Arc<dyn FitBackend>,
+) -> crate::Result<Table2Result> {
+    let mut cells = Vec::new();
+    for ds in datasets {
+        let scenarios: &[Scenario] = if ds.job.context_features() == 0 {
+            // Sort: local == global (single column in the paper).
+            &[Scenario::Global]
+        } else {
+            &[Scenario::Local, Scenario::Global]
+        };
+        for &sc in scenarios {
+            cells.extend(eval_job_scenario(ds, sc, cfg, backend)?);
+        }
+    }
+    Ok(Table2Result { cells })
+}
+
+/// Render the result in the paper's layout.
+pub fn render(result: &Table2Result) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(
+        s,
+        "Table II: Runtime Prediction Accuracy (MAPE %), local vs global training data"
+    )
+    .unwrap();
+    for job in JobKind::ALL {
+        let any = result.cells.iter().any(|c| c.job == job);
+        if !any {
+            continue;
+        }
+        writeln!(s, "\n  {job}").unwrap();
+        writeln!(s, "    {:<8} {:>8} {:>8}", "model", "local", "global").unwrap();
+        for model in MODEL_ORDER {
+            let l = result.get(job, model, Scenario::Local);
+            let g = result.get(job, model, Scenario::Global);
+            let fmt = |c: Option<&Table2Cell>| match c {
+                Some(c) => format!("{:.2}%", c.mape),
+                None => "—".to_string(),
+            };
+            writeln!(s, "    {:<8} {:>8} {:>8}", model, fmt(l), fmt(g)).unwrap();
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::runtime::NativeBackend;
+    use crate::sim::{generate_job, GeneratorConfig};
+
+    fn quick_cfg() -> Table2Config {
+        Table2Config { splits: 12, threads: 0, ..Default::default() }
+    }
+
+    fn machine_ds(job: JobKind) -> Dataset {
+        let ds =
+            generate_job(job, &GeneratorConfig::default(), &Catalog::aws_like()).unwrap();
+        ds.for_machine(super::super::TARGET_MACHINE)
+    }
+
+    #[test]
+    fn produces_all_models_for_grep() {
+        let ds = machine_ds(JobKind::Grep);
+        let backend: Arc<dyn crate::runtime::FitBackend> = Arc::new(NativeBackend::new());
+        let cells = eval_job_scenario(&ds, Scenario::Global, &quick_cfg(), &backend).unwrap();
+        assert_eq!(cells.len(), 5);
+        for c in &cells {
+            assert!(c.mape.is_finite() && c.mape >= 0.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn sort_gets_single_scenario() {
+        let ds = machine_ds(JobKind::Sort);
+        let backend: Arc<dyn crate::runtime::FitBackend> = Arc::new(NativeBackend::new());
+        let result = run_table2(std::slice::from_ref(&ds), &quick_cfg(), &backend).unwrap();
+        assert!(result.get(JobKind::Sort, "GBM", Scenario::Global).is_some());
+        assert!(result.get(JobKind::Sort, "GBM", Scenario::Local).is_none());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = machine_ds(JobKind::Sort);
+        let backend: Arc<dyn crate::runtime::FitBackend> = Arc::new(NativeBackend::new());
+        let a = eval_job_scenario(&ds, Scenario::Global, &quick_cfg(), &backend).unwrap();
+        let b = eval_job_scenario(&ds, Scenario::Global, &quick_cfg(), &backend).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mape, y.mape);
+        }
+    }
+
+    #[test]
+    fn render_contains_headline_models() {
+        let ds = machine_ds(JobKind::Sort);
+        let backend: Arc<dyn crate::runtime::FitBackend> = Arc::new(NativeBackend::new());
+        let result = run_table2(std::slice::from_ref(&ds), &quick_cfg(), &backend).unwrap();
+        let text = render(&result);
+        for m in MODEL_ORDER {
+            assert!(text.contains(m), "{text}");
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Hub client: the user-side half of the Fig. 4 workflow.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+use crate::data::{Dataset, JobKind};
+use crate::util::json::Json;
+use crate::util::tsv::Table;
+
+/// Listing entry returned by `list_repos`.
+#[derive(Debug, Clone)]
+pub struct RepoInfo {
+    pub job: JobKind,
+    pub description: String,
+    pub records: usize,
+    pub maintainer_machine: Option<String>,
+}
+
+/// Fetched repository (Fig. 4 step 2: job + runtime data + metadata).
+#[derive(Debug, Clone)]
+pub struct FetchedRepo {
+    pub job: JobKind,
+    pub description: String,
+    pub maintainer_machine: Option<String>,
+    pub data: Dataset,
+}
+
+/// Blocking hub client over one TCP connection.
+pub struct HubClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HubClient {
+    pub fn connect(addr: &str) -> crate::Result<HubClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to hub at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(HubClient { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn call(&mut self, req: Json) -> crate::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("hub closed the connection");
+        }
+        let reply = Json::parse(line.trim())?;
+        if reply.get("ok").and_then(|j| j.as_bool()) != Some(true) {
+            let msg = reply
+                .get("error")
+                .and_then(|j| j.as_str())
+                .unwrap_or("unknown hub error");
+            anyhow::bail!("hub error: {msg}");
+        }
+        Ok(reply)
+    }
+
+    /// Fig. 4 step 1: browse available jobs.
+    pub fn list_repos(&mut self) -> crate::Result<Vec<RepoInfo>> {
+        let reply = self.call(Json::obj(vec![("op", Json::Str("list_repos".into()))]))?;
+        let mut out = Vec::new();
+        for item in reply.get("repos").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+            out.push(RepoInfo {
+                job: item
+                    .get("job")
+                    .and_then(|j| j.as_str())
+                    .context("repo missing job")?
+                    .parse()?,
+                description: item
+                    .get("description")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                records: item
+                    .get("records")
+                    .and_then(|j| j.as_u64())
+                    .unwrap_or(0) as usize,
+                maintainer_machine: item
+                    .get("maintainer_machine")
+                    .and_then(|j| j.as_str())
+                    .map(|s| s.to_string()),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Fig. 4 step 2: download job + associated runtime data.
+    pub fn get_repo(&mut self, job: JobKind) -> crate::Result<FetchedRepo> {
+        let reply = self.call(Json::obj(vec![
+            ("op", Json::Str("get_repo".into())),
+            ("job", Json::Str(job.to_string())),
+        ]))?;
+        let tsv = reply
+            .get("data_tsv")
+            .and_then(|j| j.as_str())
+            .context("reply missing data_tsv")?;
+        let data = Dataset::from_table(job, &Table::parse(tsv)?)?;
+        Ok(FetchedRepo {
+            job,
+            description: reply
+                .get("description")
+                .and_then(|j| j.as_str())
+                .unwrap_or("")
+                .to_string(),
+            maintainer_machine: reply
+                .get("maintainer_machine")
+                .and_then(|j| j.as_str())
+                .map(|s| s.to_string()),
+            data,
+        })
+    }
+
+    /// Fig. 4 step 6: contribute newly generated runtime data.
+    /// Returns (accepted, reason).
+    pub fn submit_runs(&mut self, data: &Dataset) -> crate::Result<(bool, String)> {
+        let reply = self.call(Json::obj(vec![
+            ("op", Json::Str("submit_runs".into())),
+            ("job", Json::Str(data.job.to_string())),
+            ("data_tsv", Json::Str(data.to_table()?.to_text()?)),
+        ]))?;
+        Ok((
+            reply.get("accepted").and_then(|j| j.as_bool()).unwrap_or(false),
+            reply
+                .get("reason")
+                .and_then(|j| j.as_str())
+                .unwrap_or("")
+                .to_string(),
+        ))
+    }
+
+    /// Hub stats: (accepted, rejected, repos).
+    pub fn stats(&mut self) -> crate::Result<(u64, u64, u64)> {
+        let reply = self.call(Json::obj(vec![("op", Json::Str("stats".into()))]))?;
+        Ok((
+            reply.get("accepted").and_then(|j| j.as_u64()).unwrap_or(0),
+            reply.get("rejected").and_then(|j| j.as_u64()).unwrap_or(0),
+            reply.get("repos").and_then(|j| j.as_u64()).unwrap_or(0),
+        ))
+    }
+
+    /// Ask the server to stop accepting connections.
+    pub fn shutdown(&mut self) -> crate::Result<()> {
+        self.call(Json::obj(vec![("op", Json::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,25 @@
+//! C3O Hub (paper §III): the collaborative side of the system.
+//!
+//! The hub hosts *repositories* — one per common dataflow job — each
+//! bundling the job's metadata (the algorithm, the maintainer's designated
+//! machine type) with the shared runtime data contributed by users, exactly
+//! like the paper's code-plus-runtime-data repositories.
+//!
+//! * [`repo`] — repository state and on-disk layout (TSV, §VI-A).
+//! * [`validate`] — the §III-C-b contribution gate: retrain with the new
+//!   data and reject it if held-out prediction error degrades.
+//! * [`server`] / [`client`] — newline-delimited-JSON protocol over TCP
+//!   (threaded; the offline crate cache has no tokio, see DESIGN.md §2).
+//!
+//! Protocol ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
+//! `stats`, `shutdown`.
+
+pub mod client;
+pub mod repo;
+pub mod server;
+pub mod validate;
+
+pub use client::HubClient;
+pub use repo::{HubState, Repository};
+pub use server::HubServer;
+pub use validate::{validate_contribution, ValidationPolicy, Verdict};

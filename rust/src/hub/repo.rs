@@ -1,0 +1,198 @@
+//! Hub repositories: job metadata + shared runtime data.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::RwLock;
+
+use anyhow::Context;
+
+use crate::data::{Dataset, JobKind};
+
+/// One C3O repository (paper Fig. 4, step 1-2): a common job, its
+/// maintainer-designated machine type, and the shared runtime data.
+#[derive(Debug, Clone)]
+pub struct Repository {
+    pub job: JobKind,
+    /// Maintainer's machine-type designation (§IV-A), if made.
+    pub maintainer_machine: Option<String>,
+    /// Short human description shown in hub listings.
+    pub description: String,
+    pub data: Dataset,
+}
+
+impl Repository {
+    pub fn new(job: JobKind, description: &str) -> Self {
+        Repository {
+            job,
+            maintainer_machine: None,
+            description: description.to_string(),
+            data: Dataset::new(job),
+        }
+    }
+}
+
+/// Shared hub state: job → repository, behind a RwLock (reads dominate).
+#[derive(Debug, Default)]
+pub struct HubState {
+    repos: RwLock<BTreeMap<JobKind, Repository>>,
+    accepted: RwLock<u64>,
+    rejected: RwLock<u64>,
+    /// Serializes the validate-then-commit sequence of submissions.
+    /// Without it two concurrent contributions both validate against the
+    /// same snapshot and the second commit silently drops the first's
+    /// records (lost update) — caught by
+    /// `hub_e2e::concurrent_clients_consistent_state`.
+    submit_lock: std::sync::Mutex<()>,
+}
+
+impl HubState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, repo: Repository) {
+        self.repos.write().unwrap().insert(repo.job, repo);
+    }
+
+    pub fn jobs(&self) -> Vec<JobKind> {
+        self.repos.read().unwrap().keys().copied().collect()
+    }
+
+    pub fn get(&self, job: JobKind) -> Option<Repository> {
+        self.repos.read().unwrap().get(&job).cloned()
+    }
+
+    /// Replace a repo's dataset (post-validation commit).
+    pub fn commit_data(&self, job: JobKind, data: Dataset) -> crate::Result<()> {
+        let mut repos = self.repos.write().unwrap();
+        let repo = repos
+            .get_mut(&job)
+            .with_context(|| format!("no repository for {job}"))?;
+        repo.data = data;
+        *self.accepted.write().unwrap() += 1;
+        Ok(())
+    }
+
+    pub fn note_rejection(&self) {
+        *self.rejected.write().unwrap() += 1;
+    }
+
+    /// Atomic submission: validate `contribution` against the *current*
+    /// dataset and merge it in one critical section (§III-C-b gate).
+    pub fn submit(
+        &self,
+        contribution: crate::data::Dataset,
+        policy: &super::validate::ValidationPolicy,
+    ) -> crate::Result<super::validate::Verdict> {
+        let _guard = self.submit_lock.lock().unwrap();
+        let existing = self
+            .get(contribution.job)
+            .with_context(|| format!("no repository for {}", contribution.job))?
+            .data;
+        let verdict = super::validate::validate_contribution(&existing, &contribution, policy)?;
+        if verdict.accepted {
+            let mut merged = existing;
+            for rec in contribution.records {
+                merged.push(rec)?;
+            }
+            self.commit_data(contribution.job, merged)?;
+        } else {
+            self.note_rejection();
+        }
+        Ok(verdict)
+    }
+
+    pub fn counters(&self) -> (u64, u64) {
+        (*self.accepted.read().unwrap(), *self.rejected.read().unwrap())
+    }
+
+    /// Persist all repositories as TSV files under `dir`.
+    pub fn save(&self, dir: &Path) -> crate::Result<()> {
+        for (job, repo) in self.repos.read().unwrap().iter() {
+            repo.data.save(&dir.join(format!("{job}.tsv")))?;
+        }
+        Ok(())
+    }
+
+    /// Load repositories from TSV files under `dir` (missing files skipped).
+    pub fn load(&self, dir: &Path) -> crate::Result<usize> {
+        let mut loaded = 0;
+        for job in JobKind::ALL {
+            let path = dir.join(format!("{job}.tsv"));
+            if path.exists() {
+                let data = Dataset::load(job, &path)?;
+                let mut repos = self.repos.write().unwrap();
+                let repo = repos
+                    .entry(job)
+                    .or_insert_with(|| Repository::new(job, "loaded from disk"));
+                repo.data = data;
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::RunRecord;
+
+    fn rec(s: u32) -> RunRecord {
+        RunRecord {
+            machine_type: "m5.xlarge".into(),
+            scale_out: s,
+            data_size_gb: 10.0,
+            context: vec![],
+            runtime_s: 100.0 / s as f64,
+        }
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let hub = HubState::new();
+        let mut repo = Repository::new(JobKind::Sort, "sort lines");
+        repo.data.push(rec(2)).unwrap();
+        hub.insert(repo);
+        assert_eq!(hub.jobs(), vec![JobKind::Sort]);
+        assert_eq!(hub.get(JobKind::Sort).unwrap().data.len(), 1);
+        assert!(hub.get(JobKind::Grep).is_none());
+    }
+
+    #[test]
+    fn commit_updates_and_counts() {
+        let hub = HubState::new();
+        hub.insert(Repository::new(JobKind::Sort, ""));
+        let mut ds = Dataset::new(JobKind::Sort);
+        ds.push(rec(4)).unwrap();
+        hub.commit_data(JobKind::Sort, ds).unwrap();
+        assert_eq!(hub.get(JobKind::Sort).unwrap().data.len(), 1);
+        assert_eq!(hub.counters(), (1, 0));
+        hub.note_rejection();
+        assert_eq!(hub.counters(), (1, 1));
+    }
+
+    #[test]
+    fn commit_to_missing_repo_fails() {
+        let hub = HubState::new();
+        assert!(hub.commit_data(JobKind::Grep, Dataset::new(JobKind::Grep)).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("c3o_hub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hub = HubState::new();
+        let mut repo = Repository::new(JobKind::Sort, "");
+        repo.data.push(rec(2)).unwrap();
+        repo.data.push(rec(4)).unwrap();
+        hub.insert(repo);
+        hub.save(&dir).unwrap();
+
+        let hub2 = HubState::new();
+        let loaded = hub2.load(&dir).unwrap();
+        assert_eq!(loaded, 1);
+        assert_eq!(hub2.get(JobKind::Sort).unwrap().data.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

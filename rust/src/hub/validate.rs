@@ -1,0 +1,308 @@
+//! Contribution validation (paper §III-C-b).
+//!
+//! "A possible solution … is to retrain the prediction models while
+//! incorporating the new training data and then evaluating the runtime
+//! predictor accuracy on a test dataset consisting of previously existing
+//! datapoints. Should the evaluation exhibit a significant increase in
+//! prediction errors, then the new runtime data contribution will be
+//! rejected."
+//!
+//! Concretely: the existing data is split (deterministically per repo
+//! size) into train/holdout; a reference model fitted on `train` scores a
+//! baseline MAPE on `holdout`; a candidate model fitted on
+//! `train ∪ contribution` is scored on the *same* holdout. The
+//! contribution is accepted iff the candidate error does not exceed
+//! `baseline × tolerance` (+ an absolute slack for noise at tiny sizes).
+
+use crate::data::Dataset;
+use crate::models::{Gbm, GbmParams, RuntimeModel, TrainData};
+use crate::util::prng::Pcg;
+use crate::util::stats;
+
+/// Validation knobs.
+#[derive(Debug, Clone)]
+pub struct ValidationPolicy {
+    /// Accept iff candidate MAPE <= baseline MAPE * tolerance + slack.
+    pub tolerance: f64,
+    /// Absolute slack in MAPE percentage points.
+    pub slack_pp: f64,
+    /// Holdout fraction of the existing data.
+    pub holdout_frac: f64,
+    /// Below this many existing records, schema-validate only (there is
+    /// nothing meaningful to retrain against yet).
+    pub min_existing: usize,
+    pub seed: u64,
+}
+
+impl Default for ValidationPolicy {
+    fn default() -> Self {
+        ValidationPolicy {
+            tolerance: 1.25,
+            slack_pp: 1.0,
+            holdout_frac: 0.3,
+            min_existing: 12,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// The gate's decision, with its evidence.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub accepted: bool,
+    pub reason: String,
+    pub baseline_mape: Option<f64>,
+    pub candidate_mape: Option<f64>,
+}
+
+/// Validate `contribution` against `existing` (same job).
+///
+/// Runtime models are per-machine-type (§VI-C), so the retrain-eval runs
+/// once per machine type the contribution touches; the contribution is
+/// accepted iff **every** touched slice passes. A slice whose existing
+/// data is below `min_existing` bootstrap-accepts (nothing meaningful to
+/// retrain against yet).
+pub fn validate_contribution(
+    existing: &Dataset,
+    contribution: &Dataset,
+    policy: &ValidationPolicy,
+) -> crate::Result<Verdict> {
+    anyhow::ensure!(existing.job == contribution.job, "job mismatch");
+    if contribution.is_empty() {
+        return Ok(Verdict {
+            accepted: false,
+            reason: "empty contribution".into(),
+            baseline_mape: None,
+            candidate_mape: None,
+        });
+    }
+    // Schema re-validation (defense in depth — the wire layer parses, but
+    // the gate must hold even for locally constructed datasets).
+    for rec in &contribution.records {
+        if let Err(e) = contribution.validate_record(rec) {
+            return Ok(Verdict {
+                accepted: false,
+                reason: format!("schema violation: {e}"),
+                baseline_mape: None,
+                candidate_mape: None,
+            });
+        }
+    }
+
+    let mut worst: Option<(f64, f64)> = None; // (baseline, candidate) of worst slice
+    let mut bootstrap_only = true;
+    for mt in contribution.machine_types() {
+        let slice_existing = existing.for_machine(&mt);
+        let slice_contrib = contribution.for_machine(&mt);
+        if slice_existing.len() < policy.min_existing {
+            continue; // bootstrap slice
+        }
+        bootstrap_only = false;
+        let (baseline, candidate) =
+            retrain_eval(&slice_existing, &slice_contrib, policy)?;
+        let limit = baseline * policy.tolerance + policy.slack_pp;
+        if candidate > limit {
+            return Ok(Verdict {
+                accepted: false,
+                reason: format!(
+                    "prediction error degraded on {mt}: {candidate:.2}% > {limit:.2}% (baseline {baseline:.2}%)"
+                ),
+                baseline_mape: Some(baseline),
+                candidate_mape: Some(candidate),
+            });
+        }
+        if worst.map_or(true, |(_, c)| candidate - baseline > c) {
+            worst = Some((baseline, candidate));
+        }
+    }
+
+    if bootstrap_only {
+        return Ok(Verdict {
+            accepted: true,
+            reason: format!(
+                "bootstrap: fewer than {} existing records on the touched machine types",
+                policy.min_existing
+            ),
+            baseline_mape: None,
+            candidate_mape: None,
+        });
+    }
+    let (baseline, candidate) = worst.expect("non-bootstrap path has a slice");
+    Ok(Verdict {
+        accepted: true,
+        reason: format!(
+            "retrain-eval ok: {candidate:.2}% <= {:.2}% (baseline {baseline:.2}%)",
+            baseline * policy.tolerance + policy.slack_pp
+        ),
+        baseline_mape: Some(baseline),
+        candidate_mape: Some(candidate),
+    })
+}
+
+/// One slice's retrain-eval: returns (baseline MAPE, candidate MAPE) on a
+/// deterministic holdout of the existing data.
+fn retrain_eval(
+    existing: &Dataset,
+    contribution: &Dataset,
+    policy: &ValidationPolicy,
+) -> crate::Result<(f64, f64)> {
+    let n = existing.len();
+    let holdout_n = ((n as f64 * policy.holdout_frac).round() as usize).clamp(3, n - 6);
+    let mut rng = Pcg::new(policy.seed ^ n as u64, 0xDA7A);
+    let idx = rng.sample_indices(n, n);
+    let (holdout_idx, train_idx) = idx.split_at(holdout_n);
+
+    let all = TrainData::from_dataset(existing)?;
+    let train = all.subset(train_idx);
+    let holdout = all.subset(holdout_idx);
+
+    // Candidate training set: train ∪ contribution.
+    let contrib = TrainData::from_dataset(contribution)?;
+    let mut cand_rows: Vec<Vec<f64>> =
+        (0..train.len()).map(|i| train.x.row(i).to_vec()).collect();
+    cand_rows.extend((0..contrib.len()).map(|i| contrib.x.row(i).to_vec()));
+    let mut cand_y = train.y.clone();
+    cand_y.extend_from_slice(&contrib.y);
+    let cand = TrainData::new(crate::linalg::Matrix::from_rows(&cand_rows)?, cand_y)?;
+
+    let params = GbmParams { n_estimators: 60, ..Default::default() };
+    let mut base_model = Gbm::new(params);
+    base_model.fit(&train)?;
+    let baseline = stats::mape(&base_model.predict(&holdout.x)?, &holdout.y);
+
+    let mut cand_model = Gbm::new(params);
+    cand_model.fit(&cand)?;
+    let candidate = stats::mape(&cand_model.predict(&holdout.x)?, &holdout.y);
+    Ok((baseline, candidate))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::data::{JobKind, RunRecord};
+    use crate::sim::{generate_job, GeneratorConfig};
+    use crate::util::prng::Pcg;
+
+    fn base_dataset() -> Dataset {
+        generate_job(JobKind::Sort, &GeneratorConfig::default(), &Catalog::aws_like())
+            .unwrap()
+            .for_machine("m5.xlarge")
+    }
+
+    /// Honest new observations from the same workload model.
+    fn honest_contribution(n: usize, seed: u64) -> Dataset {
+        let catalog = Catalog::aws_like();
+        let model = crate::sim::WorkloadModel::default();
+        let mt = catalog.get("m5.xlarge").unwrap();
+        let mut rng = Pcg::seed(seed);
+        let mut ds = Dataset::new(JobKind::Sort);
+        for _ in 0..n {
+            let s = rng.range(2, 13) as u32;
+            let d = rng.range_f64(10.0, 20.0);
+            let input = crate::sim::JobInput::new(JobKind::Sort, d, vec![]);
+            ds.push(model.observe(mt, s, &input, &mut rng)).unwrap();
+        }
+        ds
+    }
+
+    #[test]
+    fn honest_data_accepted() {
+        let existing = base_dataset();
+        let contrib = honest_contribution(10, 1);
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(v.accepted, "{}", v.reason);
+    }
+
+    #[test]
+    fn fabricated_data_rejected() {
+        let existing = base_dataset();
+        // Malicious: absurd runtimes (1000x) poison the model.
+        let mut contrib = Dataset::new(JobKind::Sort);
+        let mut rng = Pcg::seed(2);
+        for _ in 0..25 {
+            let s = rng.range(2, 13) as u32;
+            contrib
+                .push(RunRecord {
+                    machine_type: "m5.xlarge".into(),
+                    scale_out: s,
+                    data_size_gb: rng.range_f64(10.0, 20.0),
+                    context: vec![],
+                    runtime_s: 1e6 + rng.f64() * 1e5,
+                })
+                .unwrap();
+        }
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted, "{}", v.reason);
+        assert!(v.candidate_mape.unwrap() > v.baseline_mape.unwrap());
+    }
+
+    #[test]
+    fn corrupted_schema_rejected() {
+        let existing = base_dataset();
+        let mut contrib = Dataset::new(JobKind::Sort);
+        // Bypass push-validation to emulate wire corruption.
+        contrib.records.push(RunRecord {
+            machine_type: "m5.xlarge".into(),
+            scale_out: 4,
+            data_size_gb: 15.0,
+            context: vec![],
+            runtime_s: f64::NAN,
+        });
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("schema"), "{}", v.reason);
+    }
+
+    #[test]
+    fn empty_contribution_rejected() {
+        let existing = base_dataset();
+        let v = validate_contribution(
+            &existing,
+            &Dataset::new(JobKind::Sort),
+            &ValidationPolicy::default(),
+        )
+        .unwrap();
+        assert!(!v.accepted);
+    }
+
+    #[test]
+    fn bootstrap_accepts_when_repo_is_young() {
+        let mut existing = Dataset::new(JobKind::Sort);
+        for r in base_dataset().records.into_iter().take(5) {
+            existing.push(r).unwrap();
+        }
+        let contrib = honest_contribution(5, 3);
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(v.accepted);
+        assert!(v.reason.contains("bootstrap"));
+    }
+
+    #[test]
+    fn job_mismatch_is_an_error() {
+        let existing = base_dataset();
+        let contrib = Dataset::new(JobKind::Grep);
+        assert!(
+            validate_contribution(&existing, &contrib, &ValidationPolicy::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn subtly_biased_data_small_amounts_tolerated() {
+        // A 10% optimistic bias on a handful of points shouldn't trip the
+        // gate (the paper wants to catch corruption/fabrication, not
+        // honest variance).
+        let existing = base_dataset();
+        let mut contrib = honest_contribution(5, 4);
+        for r in &mut contrib.records {
+            r.runtime_s *= 0.9;
+        }
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(v.accepted, "{}", v.reason);
+    }
+}

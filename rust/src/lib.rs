@@ -1,0 +1,37 @@
+//! # C3O — Collaborative Cluster Configuration Optimization
+//!
+//! Rust + JAX + Pallas reproduction of *"C3O: Collaborative Cluster
+//! Configuration Optimization for Distributed Data Processing in Public
+//! Clouds"* (Will et al., IEEE IC2E 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): masked-Gram and
+//!   batched-predict, the normal-equation hot spot behind cross-validation.
+//! * **L2** — JAX estimator graphs (`python/compile/model.py`): batched
+//!   ridge-OLS, batched NNLS, configurator prediction sweep; AOT-lowered to
+//!   HLO text in `artifacts/`.
+//! * **L3** — this crate: the C3O system itself. Runtime-data simulator
+//!   (standing in for the paper's 930 Amazon-EMR Spark runs), the runtime
+//!   predictor with dynamic model selection, the erf-confidence cluster
+//!   configurator, and the collaborative C3O Hub with contribution
+//!   validation. Python never runs on the request path: the [`runtime`]
+//!   module executes the AOT artifacts through PJRT.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index.
+
+pub mod bench;
+pub mod cloud;
+pub mod configurator;
+pub mod cv;
+pub mod data;
+pub mod eval;
+pub mod hub;
+pub mod linalg;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

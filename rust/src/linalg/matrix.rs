@@ -1,0 +1,256 @@
+//! Row-major dense f64 matrix.
+
+use std::fmt;
+
+use anyhow::bail;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (n x n).
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> crate::Result<Matrix> {
+        if data.len() != rows * cols {
+            bail!("matrix {}x{} needs {} elems, got {}", rows, cols, rows * cols, data.len());
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from nested rows.
+    pub fn from_rows(rows: &[Vec<f64>]) -> crate::Result<Matrix> {
+        if rows.is_empty() {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            if r.len() != cols {
+                bail!("ragged rows: {} vs {}", r.len(), cols);
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Matrix { rows: rows.len(), cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * rhs`.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        // ikj loop order: streams rhs rows, vector-friendly.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = rhs.row(k);
+                let orow = out.row_mut(i);
+                for (o, &r) in orow.iter_mut().zip(rrow) {
+                    *o += a * r;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Gram matrix with per-row weights: `X^T diag(w) X + lam I`.
+    pub fn weighted_gram(&self, w: &[f64], lam: f64) -> Matrix {
+        assert_eq!(w.len(), self.rows);
+        let f = self.cols;
+        let mut g = Matrix::zeros(f, f);
+        for (n, &wn) in w.iter().enumerate() {
+            if wn == 0.0 {
+                continue;
+            }
+            let row = self.row(n);
+            for a in 0..f {
+                let wa = wn * row[a];
+                let grow = g.row_mut(a);
+                for b in 0..f {
+                    grow[b] += wa * row[b];
+                }
+            }
+        }
+        for i in 0..f {
+            g[(i, i)] += lam;
+        }
+        g
+    }
+
+    /// `X^T (w .* y)`.
+    pub fn weighted_xty(&self, w: &[f64], y: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.rows);
+        assert_eq!(y.len(), self.rows);
+        let mut c = vec![0.0; self.cols];
+        for n in 0..self.rows {
+            let wy = w[n] * y[n];
+            if wy == 0.0 {
+                continue;
+            }
+            for (ci, &xi) in c.iter_mut().zip(self.row(n)) {
+                *ci += wy * xi;
+            }
+        }
+        c
+    }
+
+    /// Max |a - b| over entries; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            writeln!(f, "  {:?}", self.row(i))?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ... ({} more rows)", self.rows - 8)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]).unwrap();
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]).unwrap();
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn weighted_gram_matches_explicit() {
+        let x = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+        ])
+        .unwrap();
+        let w = vec![1.0, 0.0, 2.0];
+        let g = x.weighted_gram(&w, 0.5);
+        // X^T diag(w) X = [[1*1+2*25, 1*2+2*30],[., 4+2*36]]
+        assert_eq!(g[(0, 0)], 51.0 + 0.5);
+        assert_eq!(g[(0, 1)], 62.0);
+        assert_eq!(g[(1, 0)], 62.0);
+        assert_eq!(g[(1, 1)], 76.0 + 0.5);
+    }
+
+    #[test]
+    fn weighted_xty_matches_explicit() {
+        let x = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]).unwrap();
+        let c = x.weighted_xty(&[2.0, 3.0], &[10.0, 20.0]);
+        assert_eq!(c, vec![20.0, 60.0]);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let i = Matrix::eye(3);
+        assert_eq!(i.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense linear algebra for the native backend and feature engineering.
+//!
+//! Everything here operates on small matrices (the paper's feature spaces
+//! are <= 8 columns); clarity and numerical robustness beat asymptotics.
+
+pub mod matrix;
+pub mod solve;
+
+pub use matrix::Matrix;
+pub use solve::{cholesky_solve, gauss_jordan_solve, nnls, ols_ridge};

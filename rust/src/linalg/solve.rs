@@ -1,0 +1,336 @@
+//! Small dense solvers: Gauss-Jordan (partial pivot), Cholesky, ridge OLS
+//! and projected-gradient NNLS — the native mirror of the L2 JAX graphs.
+
+use anyhow::bail;
+
+use super::Matrix;
+
+/// Solve `A x = b` by Gauss-Jordan elimination with partial pivoting.
+/// Mirrors `python/compile/model.py::gauss_jordan_solve` exactly (same
+/// pivoting rule) so native and artifact paths agree to f32 tolerance.
+pub fn gauss_jordan_solve(a: &Matrix, b: &[f64]) -> crate::Result<Vec<f64>> {
+    let n = a.rows();
+    if a.cols() != n || b.len() != n {
+        bail!("gauss_jordan_solve: shape mismatch");
+    }
+    // Augmented system.
+    let mut aug = Matrix::zeros(n, n + 1);
+    for i in 0..n {
+        for j in 0..n {
+            aug[(i, j)] = a[(i, j)];
+        }
+        aug[(i, n)] = b[i];
+    }
+    for k in 0..n {
+        // Partial pivot among rows >= k.
+        let mut piv = k;
+        let mut best = aug[(k, k)].abs();
+        for r in (k + 1)..n {
+            let v = aug[(r, k)].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            bail!("singular system at pivot {k}");
+        }
+        if piv != k {
+            for j in 0..=n {
+                let tmp = aug[(k, j)];
+                aug[(k, j)] = aug[(piv, j)];
+                aug[(piv, j)] = tmp;
+            }
+        }
+        let pv = aug[(k, k)];
+        for j in 0..=n {
+            aug[(k, j)] /= pv;
+        }
+        for r in 0..n {
+            if r == k {
+                continue;
+            }
+            let f = aug[(r, k)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..=n {
+                aug[(r, j)] -= f * aug[(k, j)];
+            }
+        }
+    }
+    Ok((0..n).map(|i| aug[(i, n)]).collect())
+}
+
+/// Cholesky solve for SPD systems (used where we know G ≻ 0; faster and
+/// better conditioned than GJ for the Gram systems).
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> crate::Result<Vec<f64>> {
+    let n = a.rows();
+    if a.cols() != n || b.len() != n {
+        bail!("cholesky_solve: shape mismatch");
+    }
+    // Lower-triangular factor.
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at {i}");
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    // Forward then backward substitution.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    Ok(x)
+}
+
+/// Ridge OLS: `theta = (X^T diag(w) X + lam I)^{-1} X^T diag(w) y`.
+///
+/// `w` is a per-row sample weight (1/0 for CV masks). Falls back from
+/// Cholesky to Gauss-Jordan if the Gram matrix is numerically semidefinite.
+pub fn ols_ridge(x: &Matrix, y: &[f64], w: &[f64], lam: f64) -> crate::Result<Vec<f64>> {
+    let g = x.weighted_gram(w, lam);
+    let c = x.weighted_xty(w, y);
+    cholesky_solve(&g, &c).or_else(|_| gauss_jordan_solve(&g, &c))
+}
+
+/// Non-negative least squares via the fast active-set method of Bro & de
+/// Jong (fNNLS, a normal-equation reformulation of Lawson-Hanson).
+///
+/// Exact (up to solver tolerance) — the native oracle for the L2 JAX
+/// projected-gradient version, which approximates the same minimizer in a
+/// fixed iteration budget.
+pub fn nnls(x: &Matrix, y: &[f64], w: &[f64], lam: f64) -> crate::Result<Vec<f64>> {
+    let g = x.weighted_gram(w, lam);
+    let c = x.weighted_xty(w, y);
+    let f = g.rows();
+    let tol = 1e-10 * (1.0 + c.iter().fold(0.0f64, |a, b| a.max(b.abs())));
+
+    let mut passive = vec![false; f];
+    let mut theta = vec![0.0; f];
+
+    // Solve the passive subsystem G[P,P] z = c[P].
+    let solve_passive = |passive: &[bool], g: &Matrix, c: &[f64]| -> crate::Result<Vec<f64>> {
+        let idx: Vec<usize> =
+            (0..f).filter(|&i| passive[i]).collect();
+        let k = idx.len();
+        let mut gs = Matrix::zeros(k, k);
+        let mut cs = vec![0.0; k];
+        for (a, &i) in idx.iter().enumerate() {
+            cs[a] = c[i];
+            for (b, &j) in idx.iter().enumerate() {
+                gs[(a, b)] = g[(i, j)];
+            }
+        }
+        let z = cholesky_solve(&gs, &cs).or_else(|_| gauss_jordan_solve(&gs, &cs))?;
+        let mut full = vec![0.0; f];
+        for (a, &i) in idx.iter().enumerate() {
+            full[i] = z[a];
+        }
+        Ok(full)
+    };
+
+    for _outer in 0..(3 * f + 10) {
+        // Gradient of the active (zero) coordinates.
+        let gt = g.matvec(&theta);
+        let grad: Vec<f64> = c.iter().zip(&gt).map(|(ci, gi)| ci - gi).collect();
+        let cand = (0..f)
+            .filter(|&i| !passive[i] && grad[i] > tol)
+            .max_by(|&a, &b| grad[a].partial_cmp(&grad[b]).unwrap());
+        let Some(j) = cand else { break };
+        passive[j] = true;
+
+        // Inner loop: restore feasibility of the passive set.
+        for _inner in 0..(3 * f + 10) {
+            let z = solve_passive(&passive, &g, &c)?;
+            let neg: Vec<usize> = (0..f)
+                .filter(|&i| passive[i] && z[i] <= tol)
+                .collect();
+            if neg.is_empty() {
+                theta = z;
+                break;
+            }
+            // Step as far toward z as feasibility allows, drop hit bounds.
+            let alpha = neg
+                .iter()
+                .map(|&i| theta[i] / (theta[i] - z[i]))
+                .fold(f64::INFINITY, f64::min)
+                .clamp(0.0, 1.0);
+            for i in 0..f {
+                if passive[i] {
+                    theta[i] += alpha * (z[i] - theta[i]);
+                    if theta[i] <= tol {
+                        theta[i] = 0.0;
+                        passive[i] = false;
+                    }
+                }
+            }
+        }
+    }
+    Ok(theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+    use crate::util::proptest::forall_res;
+
+    fn random_spd(rng: &mut Pcg, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+            }
+        }
+        let mut g = a.t().matmul(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn gj_known_system() {
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]).unwrap();
+        let x = gauss_jordan_solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gj_requires_pivoting() {
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]).unwrap();
+        let x = gauss_jordan_solve(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn gj_rejects_singular() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]).unwrap();
+        assert!(gauss_jordan_solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn cholesky_matches_gj_property() {
+        forall_res(
+            "cholesky == gauss-jordan on SPD",
+            50,
+            |rng| {
+                let n = rng.range(1, 8);
+                let g = random_spd(rng, n);
+                let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (g, b)
+            },
+            |(g, b)| {
+                let x1 = cholesky_solve(g, b)?;
+                let x2 = gauss_jordan_solve(g, b)?;
+                for (a, c) in x1.iter().zip(&x2) {
+                    anyhow::ensure!((a - c).abs() < 1e-8, "{a} vs {c}");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap();
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn ols_recovers_exact_linear_model() {
+        let mut rng = Pcg::seed(3);
+        let n = 40;
+        let beta = [2.0, -1.5, 0.25];
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let r: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            y.push(r.iter().zip(&beta).map(|(a, b)| a * b).sum());
+            rows.push(r);
+        }
+        let x = Matrix::from_rows(&rows).unwrap();
+        let w = vec![1.0; n];
+        let theta = ols_ridge(&x, &y, &w, 1e-10).unwrap();
+        for (t, b) in theta.iter().zip(&beta) {
+            assert!((t - b).abs() < 1e-6, "{theta:?}");
+        }
+    }
+
+    #[test]
+    fn ols_respects_mask() {
+        // Two populations; masking selects which one is fit.
+        let x = Matrix::from_rows(&[vec![1.0], vec![1.0], vec![1.0], vec![1.0]]).unwrap();
+        let y = [1.0, 1.0, 5.0, 5.0];
+        let t_lo = ols_ridge(&x, &y, &[1.0, 1.0, 0.0, 0.0], 0.0).unwrap();
+        let t_hi = ols_ridge(&x, &y, &[0.0, 0.0, 1.0, 1.0], 0.0).unwrap();
+        assert!((t_lo[0] - 1.0).abs() < 1e-12);
+        assert!((t_hi[0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnls_clamps_negative_coefficients() {
+        // y = -2*x: unconstrained OLS gives -2; NNLS must give 0.
+        let mut rng = Pcg::seed(5);
+        let rows: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.f64() + 0.1]).collect();
+        let y: Vec<f64> = rows.iter().map(|r| -2.0 * r[0]).collect();
+        let x = Matrix::from_rows(&rows).unwrap();
+        let theta = nnls(&x, &y, &vec![1.0; 30], 1e-8).unwrap();
+        assert!(theta[0].abs() < 1e-9, "{theta:?}");
+    }
+
+    #[test]
+    fn nnls_matches_ols_when_truth_nonneg() {
+        forall_res(
+            "nnls == ols for nonneg truth",
+            30,
+            |rng| {
+                let n = rng.range(10, 40);
+                let f = rng.range(1, 5);
+                let beta: Vec<f64> = (0..f).map(|_| rng.f64() * 2.0 + 0.05).collect();
+                let rows: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..f).map(|_| rng.f64() + 0.05).collect())
+                    .collect();
+                let y: Vec<f64> = rows
+                    .iter()
+                    .map(|r| r.iter().zip(&beta).map(|(a, b)| a * b).sum())
+                    .collect();
+                (rows, y, beta)
+            },
+            |(rows, y, beta)| {
+                let x = Matrix::from_rows(rows).unwrap();
+                let w = vec![1.0; rows.len()];
+                let theta = nnls(&x, y, &w, 1e-10)?;
+                for (t, b) in theta.iter().zip(beta) {
+                    anyhow::ensure!((t - b).abs() < 1e-4, "{theta:?} vs {beta:?}");
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,235 @@
+//! `c3o` — CLI for the C3O system.
+//!
+//! Subcommands:
+//!   generate   — produce the 930-experiment shared runtime corpus (Table I)
+//!   eval       — run the Table II / Fig. 5 harnesses
+//!   serve      — run a C3O Hub
+//!   configure  — pick a cluster configuration for a job (Fig. 4 workflow)
+//!
+//! Examples:
+//!   c3o generate --out data/
+//!   c3o eval table2 --splits 300
+//!   c3o serve --addr 127.0.0.1:7033 --data data/
+//!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
+//!       --deadline 900 --confidence 0.95 --data data/
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use c3o::cloud::Catalog;
+use c3o::configurator::{configure, UserGoals};
+use c3o::data::{Dataset, JobKind};
+use c3o::eval::{self, Fig5Config, Table2Config};
+use c3o::hub::{HubServer, HubState, Repository, ValidationPolicy};
+use c3o::runtime::{Engine, FitBackend, NativeBackend};
+use c3o::sim::{generate_all, GeneratorConfig, JobInput};
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+/// Pick the fit backend: PJRT artifacts when available, native otherwise.
+fn backend(flags: &BTreeMap<String, String>) -> Arc<dyn FitBackend> {
+    if flags.get("backend").map(|s| s.as_str()) == Some("native") {
+        return Arc::new(NativeBackend::new());
+    }
+    match Engine::load_default() {
+        Ok(e) => {
+            eprintln!("[c3o] PJRT engine loaded from {}", e.artifact_dir().display());
+            Arc::new(e)
+        }
+        Err(e) => {
+            eprintln!("[c3o] PJRT artifacts unavailable ({e:#}); using native backend");
+            Arc::new(NativeBackend::new())
+        }
+    }
+}
+
+fn load_datasets(dir: &PathBuf) -> anyhow::Result<Vec<Dataset>> {
+    let mut out = Vec::new();
+    for job in JobKind::ALL {
+        let path = dir.join(format!("{job}.tsv"));
+        anyhow::ensure!(path.exists(), "missing {} — run `c3o generate` first", path.display());
+        out.push(Dataset::load(job, &path)?);
+    }
+    Ok(out)
+}
+
+fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let out: PathBuf = flags.get("out").cloned().unwrap_or_else(|| "data".into()).into();
+    let seed = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0xC30);
+    let cfg = GeneratorConfig { seed, ..Default::default() };
+    let catalog = Catalog::aws_like();
+    let datasets = generate_all(&cfg, &catalog)?;
+    std::fs::create_dir_all(&out)?;
+    println!("Table I census (930 unique experiments, median of 5 repetitions):");
+    for ds in &datasets {
+        ds.save(&out.join(format!("{}.tsv", ds.job)))?;
+        println!(
+            "  {:<9} {:>4} experiments, {} machine types, scale-outs {:?}",
+            ds.job.to_string(),
+            ds.len(),
+            ds.machine_types().len(),
+            ds.scale_outs()
+        );
+    }
+    println!("wrote TSVs to {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("table2");
+    let flags = parse_flags(args);
+    let backend = backend(&flags);
+    let catalog = Catalog::aws_like();
+    let raw: Vec<Dataset> = match flags.get("data") {
+        Some(dir) => load_datasets(&PathBuf::from(dir))?,
+        None => generate_all(&GeneratorConfig::default(), &catalog)?,
+    };
+    let datasets: Vec<Dataset> =
+        raw.into_iter().map(|d| d.for_machine(eval::TARGET_MACHINE)).collect();
+    match which {
+        "table2" => {
+            let splits = flags.get("splits").map(|s| s.parse()).transpose()?.unwrap_or(300);
+            let cfg = Table2Config { splits, ..Default::default() };
+            let result = eval::run_table2(&datasets, &cfg, &backend)?;
+            println!("{}", eval::table2::render(&result));
+        }
+        "fig5" => {
+            let splits = flags.get("splits").map(|s| s.parse()).transpose()?.unwrap_or(300);
+            let cfg = Fig5Config { splits, ..Default::default() };
+            for ds in &datasets {
+                let r = eval::run_fig5(ds, &cfg, &backend)?;
+                println!("{}", eval::fig5::render(&r));
+            }
+        }
+        other => anyhow::bail!("unknown eval target: {other} (table2|fig5)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7033".into());
+    let state = Arc::new(HubState::new());
+    for job in JobKind::ALL {
+        let mut repo = Repository::new(job, &format!("standard Spark {job} implementation"));
+        repo.maintainer_machine = Some(eval::TARGET_MACHINE.to_string());
+        state.insert(repo);
+    }
+    if let Some(dir) = flags.get("data") {
+        let n = state.load(&PathBuf::from(dir))?;
+        eprintln!("[c3o] loaded {n} repositories from {dir}");
+    }
+    let server = HubServer::start(&addr, state, Catalog::aws_like(), ValidationPolicy::default())?;
+    println!("C3O Hub listening on {}", server.addr);
+    println!("ops: list_repos | get_repo | submit_runs | catalog | stats | shutdown");
+    // Serve until stdin closes (or forever under a service manager).
+    let mut buf = String::new();
+    let _ = std::io::stdin().read_line(&mut buf);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let job: JobKind = flags
+        .get("job")
+        .ok_or_else(|| anyhow::anyhow!("--job required"))?
+        .parse()?;
+    let size: f64 = flags
+        .get("size")
+        .ok_or_else(|| anyhow::anyhow!("--size required (GB)"))?
+        .parse()?;
+    let ctx: Vec<f64> = match flags.get("ctx") {
+        Some(s) if !s.is_empty() => s
+            .split(',')
+            .map(|p| p.parse::<f64>())
+            .collect::<Result<_, _>>()?,
+        _ => vec![],
+    };
+    let goals = UserGoals {
+        deadline_s: flags.get("deadline").map(|s| s.parse()).transpose()?,
+        confidence: flags.get("confidence").map(|s| s.parse()).transpose()?.unwrap_or(0.95),
+    };
+
+    let catalog = Catalog::aws_like();
+    let shared = match flags.get("data") {
+        Some(dir) => Dataset::load(job, &PathBuf::from(dir).join(format!("{job}.tsv")))?,
+        None => {
+            eprintln!("[c3o] no --data dir; generating the shared corpus in-memory");
+            c3o::sim::generate_job(job, &GeneratorConfig::default(), &catalog)?
+        }
+    };
+    let backend = backend(flags);
+    let input = JobInput::new(job, size, ctx);
+    let choice = configure(
+        &catalog,
+        &shared,
+        flags.get("machine").map(|s| s.as_str()).or(Some(eval::TARGET_MACHINE)),
+        &input,
+        &goals,
+        backend,
+    )?;
+
+    println!("chosen configuration for {job} ({size} GB):");
+    println!("  machine type : {}", choice.machine_type);
+    println!("  scale-out    : {} nodes", choice.scale_out);
+    println!("  est. runtime : {:.0} s (UCB {:.0} s)", choice.predicted_runtime_s, choice.runtime_ucb_s);
+    println!("  est. cost    : ${:.3}", choice.est_cost_usd);
+    println!("\n  runtime/cost pairs per scale-out (§IV-B):");
+    for o in &choice.options {
+        println!(
+            "    s={:<3} t={:>7.0}s ucb={:>7.0}s cost=${:<8.3}{}{}",
+            o.scale_out,
+            o.predicted_runtime_s,
+            o.runtime_ucb_s,
+            o.cost_usd,
+            if o.bottleneck { "  [memory bottleneck]" } else { "" },
+            match o.admissible {
+                Some(true) => "  [admissible]",
+                Some(false) => "",
+                None => "",
+            }
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    let flags = parse_flags(&rest);
+    let result = match cmd {
+        "generate" => cmd_generate(&flags),
+        "eval" => cmd_eval(&rest),
+        "serve" => cmd_serve(&flags),
+        "configure" => cmd_configure(&flags),
+        _ => {
+            eprintln!(
+                "usage: c3o <generate|eval|serve|configure> [flags]\n\
+                 see rust/src/main.rs header for examples"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Basic Optimistic Model (paper §V-B).
+//!
+//! The optimistic approach assumes runtime-influencing factors are pairwise
+//! independent and decomposes the predictor into:
+//!
+//! * **SSM** (scale-out-to-speedup model) — a third-degree polynomial in
+//!   the scale-out, fitted on the largest group of training points that
+//!   share every feature *except* the scale-out;
+//! * **IBM** (inputs-behavior model) — linear regression over the
+//!   non-scale-out features, fitted on all points after the SSM projects
+//!   them onto scale-out 1.
+//!
+//! Prediction = IBM(inputs) × SSM-speedup(scale-out).
+//!
+//! Both stages are ridge-OLS fits executed through the [`FitBackend`]
+//! (batched on the PJRT artifacts in production). The §VI-C-b failure mode
+//! — no group with ≥ 2 shared-context points makes the polynomial SSM
+//! "gravely incorrect" — is reproduced faithfully: we then fit the SSM on
+//! the whole mixed-context set, which is exactly the bad behaviour Fig. 5
+//! shows below ~10 training points.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+use crate::runtime::FitBackend;
+
+use super::features::{context_key, ibm_features, poly3_features};
+use super::{RuntimeModel, TrainData};
+
+const LAM: f64 = 1e-6;
+/// Speedup floor: poly-3 extrapolations can cross zero; predictions stay
+/// finite (but can be *very* wrong, matching the paper's observation).
+const SPEEDUP_FLOOR: f64 = 0.02;
+
+/// Shared SSM machinery for the optimistic models (BOM and OGB).
+pub(crate) fn largest_scaleout_group(data: &TrainData) -> Vec<usize> {
+    let mut groups: HashMap<Vec<u64>, Vec<usize>> = HashMap::new();
+    for i in 0..data.len() {
+        // Bit-exact grouping key (grid data ⇒ exact equality is right).
+        let key: Vec<u64> =
+            context_key(data.x.row(i)).iter().map(|f| f.to_bits()).collect();
+        groups.entry(key).or_default().push(i);
+    }
+    let mut best: Vec<usize> = Vec::new();
+    // Deterministic tie-break: lexicographically smallest index list among
+    // maximal groups.
+    let mut all: Vec<Vec<usize>> = groups.into_values().collect();
+    all.sort();
+    for g in all {
+        if g.len() > best.len() {
+            best = g;
+        }
+    }
+    best
+}
+
+/// Pooled SSM training points: every group of rows sharing all
+/// non-scale-out features contributes its runtimes *normalized by the
+/// group mean*, so groups at different runtime scales describe one common
+/// scale-out-to-speedup shape.
+///
+/// This generalizes the paper's "points that share the same values for
+/// every feature except the scale-out": with sparse shared-context data a
+/// single group starves the SSM (the paper's own BOM failure mode below
+/// ~10 points); pooling normalized groups uses all usable evidence while
+/// preserving the optimistic-decomposition semantics. Falls back to the
+/// unnormalized full dataset when no group has >= 2 points — which
+/// reproduces the paper's "gravely incorrect" small-data behaviour.
+pub(crate) fn pooled_ssm_points(data: &TrainData) -> Vec<(f64, f64)> {
+    let mut groups: HashMap<Vec<u64>, Vec<usize>> = HashMap::new();
+    for i in 0..data.len() {
+        let key: Vec<u64> =
+            context_key(data.x.row(i)).iter().map(|f| f.to_bits()).collect();
+        groups.entry(key).or_default().push(i);
+    }
+    let mut pts = Vec::new();
+    let mut all: Vec<Vec<usize>> = groups.into_values().collect();
+    all.sort();
+    for g in &all {
+        if g.len() < 2 {
+            continue;
+        }
+        let mean = g.iter().map(|&i| data.y[i]).sum::<f64>() / g.len() as f64;
+        if mean <= 0.0 {
+            continue;
+        }
+        for &i in g {
+            pts.push((data.x.row(i)[0], data.y[i] / mean));
+        }
+    }
+    if pts.is_empty() {
+        // Degenerate: every context unique. Fit on raw runtimes — wrong
+        // in general, exactly as the paper observes for tiny datasets.
+        for i in 0..data.len() {
+            pts.push((data.x.row(i)[0], data.y[i]));
+        }
+    }
+    pts
+}
+
+/// Basic Optimistic Model.
+pub struct Bom {
+    backend: Arc<dyn FitBackend>,
+    /// Poly-3 coefficients of the SSM: runtime-vs-scale-out shape.
+    ssm: Option<Vec<f64>>,
+    /// IBM linear coefficients over `[1, d, ctx...]`.
+    ibm: Option<Vec<f64>>,
+}
+
+impl Bom {
+    pub fn new(backend: Arc<dyn FitBackend>) -> Self {
+        Bom { backend, ssm: None, ibm: None }
+    }
+
+    /// SSM-predicted runtime shape at scale-out `s` (unnormalized).
+    fn ssm_value(&self, s: f64) -> f64 {
+        let c = self.ssm.as_ref().expect("fitted");
+        poly3_features(s).iter().zip(c).map(|(a, b)| a * b).sum()
+    }
+
+    /// Speedup factor relative to scale-out 1, floored for stability.
+    fn speedup(&self, s: f64) -> f64 {
+        let base = self.ssm_value(1.0);
+        if base.abs() < 1e-9 {
+            return SPEEDUP_FLOOR;
+        }
+        (self.ssm_value(s) / base).max(SPEEDUP_FLOOR)
+    }
+}
+
+impl RuntimeModel for Bom {
+    fn name(&self) -> &'static str {
+        "BOM"
+    }
+
+    fn fit(&mut self, data: &TrainData) -> crate::Result<()> {
+        anyhow::ensure!(data.len() >= 2, "BOM needs >= 2 training points");
+
+        // --- SSM: poly-3 normalized-runtime vs scale-out on the pooled
+        // shared-context groups.
+        let pts = pooled_ssm_points(data);
+        let ssm_rows: Vec<Vec<f64>> =
+            pts.iter().map(|&(s, _)| poly3_features(s)).collect();
+        let ssm_y: Vec<f64> = pts.iter().map(|&(_, t)| t).collect();
+        let ssm_x = Matrix::from_rows(&ssm_rows)?;
+        let ones = Matrix::from_vec(1, pts.len(), vec![1.0; pts.len()])?;
+        let (theta, _) = self.backend.ols_batch(&ssm_x, &ssm_y, &ones, LAM)?;
+        self.ssm = Some(theta.row(0).to_vec());
+
+        // --- Project all points onto scale-out 1 and fit the IBM.
+        let ibm_rows: Vec<Vec<f64>> =
+            (0..data.len()).map(|i| ibm_features(data.x.row(i))).collect();
+        let t1: Vec<f64> = (0..data.len())
+            .map(|i| data.y[i] / self.speedup(data.x.row(i)[0]))
+            .collect();
+        let ibm_x = Matrix::from_rows(&ibm_rows)?;
+        let ones = Matrix::from_vec(1, data.len(), vec![1.0; data.len()])?;
+        let (theta, _) = self.backend.ols_batch(&ibm_x, &t1, &ones, LAM)?;
+        self.ibm = Some(theta.row(0).to_vec());
+        Ok(())
+    }
+
+    fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        let ibm = self.ibm.as_ref().ok_or_else(|| anyhow::anyhow!("BOM not fitted"))?;
+        let base: f64 =
+            ibm_features(features).iter().zip(ibm).map(|(a, b)| a * b).sum();
+        Ok(base * self.speedup(features[0]))
+    }
+
+    fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+        Box::new(Bom::new(self.backend.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Pcg;
+    use crate::util::stats::mape;
+
+    fn bom() -> Bom {
+        Bom::new(Arc::new(NativeBackend::new()))
+    }
+
+    /// World obeying the optimistic assumption exactly:
+    /// t(s, d, k) = g(s) * h(d, k) with h linear.
+    fn separable_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        // Ensure one dense shared-context group for the SSM: fix (d, k) =
+        // (20, 5) for a third of the points.
+        for i in 0..n {
+            let s = rng.range(2, 13) as f64;
+            let (d, k) = if i % 3 == 0 {
+                (20.0, 5.0)
+            } else {
+                (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64)
+            };
+            rows.push(vec![s, d, k]);
+            let g = 1.0 / s + 0.02 * s; // speedup shape with overhead upturn
+            let h = 10.0 + 4.0 * d + 9.0 * k;
+            y.push(g * h);
+        }
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    #[test]
+    fn fits_separable_world_well() {
+        let data = separable_world(90, 1);
+        let mut m = bom();
+        m.fit(&data).unwrap();
+        let preds = m.predict(&data.x).unwrap();
+        let err = mape(&preds, &data.y);
+        assert!(err < 8.0, "in-sample MAPE {err}%");
+    }
+
+    #[test]
+    fn speedup_normalized_at_one() {
+        let data = separable_world(60, 2);
+        let mut m = bom();
+        m.fit(&data).unwrap();
+        assert!((m.speedup(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn largest_group_found() {
+        let data = separable_world(90, 3);
+        let g = largest_scaleout_group(&data);
+        // A third of the points share (20, 5).
+        assert!(g.len() >= 90 / 3, "group size {}", g.len());
+        for &i in &g {
+            assert_eq!(&data.x.row(i)[1..], &[20.0, 5.0]);
+        }
+    }
+
+    #[test]
+    fn degrades_without_shared_context_group() {
+        // Every point a unique context: the SSM trains on mixed contexts —
+        // the paper's observed BOM failure mode. The model must still
+        // produce finite output but with large errors.
+        let mut rng = Pcg::seed(4);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..12 {
+            let s = (2 + i % 6) as f64;
+            let d = 10.0 + i as f64 * 1.7;
+            let k = 3.0 + (i as f64) * 0.61; // all distinct
+            rows.push(vec![s, d, k]);
+            y.push((1.0 / s + 0.02 * s) * (10.0 + 4.0 * d + 9.0 * k) * (1.0 + 0.02 * rng.normal()));
+        }
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+        let mut m = bom();
+        m.fit(&data).unwrap();
+        let preds = m.predict(&data.x).unwrap();
+        for p in &preds {
+            assert!(p.is_finite());
+        }
+    }
+
+    #[test]
+    fn prediction_positive_even_at_extrapolated_scaleout() {
+        let data = separable_world(60, 5);
+        let mut m = bom();
+        m.fit(&data).unwrap();
+        // Far outside the 2..12 training range: poly-3 may go negative;
+        // the floor keeps predictions positive.
+        let p = m.predict_one(&[40.0, 20.0, 5.0]).unwrap();
+        assert!(p > 0.0, "p={p}");
+    }
+
+    #[test]
+    fn unfitted_errors() {
+        assert!(bom().predict_one(&[2.0, 10.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn captures_context_effect_unlike_ernest() {
+        let data = separable_world(90, 6);
+        let mut m = bom();
+        m.fit(&data).unwrap();
+        let lo = m.predict_one(&[6.0, 20.0, 3.0]).unwrap();
+        let hi = m.predict_one(&[6.0, 20.0, 9.0]).unwrap();
+        assert!(hi > lo * 1.2, "k effect must show: lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,298 @@
+//! The C3O predictor (paper §V-C): dynamic model selection.
+//!
+//! Candidates are the system's constituent models — GBM, BOM, OGB (plus
+//! any maintainer-supplied custom models registered through
+//! [`C3oPredictor::add_candidate`]). On every (re)fit the predictor
+//! cross-validates all candidates on the current training data, picks the
+//! one with the lowest held-out MAPE, refits it on everything, and records
+//! the residual distribution (μ, σ) the configurator's confidence rule
+//! needs.
+//!
+//! LOO is used up to [`C3oPredictor::loo_cap`] training points, k-fold
+//! beyond — the §VI-C "cap the model selection phase" provision.
+
+use std::sync::Arc;
+
+use crate::cv::{self, CvScore};
+use crate::runtime::FitBackend;
+
+use super::bom::Bom;
+use super::gbm::{Gbm, GbmParams};
+use super::ogb::Ogb;
+use super::{RuntimeModel, TrainData};
+
+/// Outcome of one model-selection pass.
+#[derive(Debug, Clone)]
+pub struct SelectionReport {
+    /// Candidate name → CV score, in candidate order.
+    pub scores: Vec<(String, CvScore)>,
+    /// Winner name.
+    pub chosen: String,
+    /// Winner's CV score (μ, σ feed the configurator).
+    pub chosen_score: CvScore,
+}
+
+/// The C3O runtime predictor.
+pub struct C3oPredictor {
+    candidates: Vec<Box<dyn RuntimeModel>>,
+    fitted: Option<Box<dyn RuntimeModel>>,
+    report: Option<SelectionReport>,
+    /// Above this size, selection switches from LOO to k-fold.
+    pub loo_cap: usize,
+    pub kfold_k: usize,
+    seed: u64,
+}
+
+impl C3oPredictor {
+    /// Default candidate set (paper §V): GBM, BOM, OGB.
+    pub fn new(backend: Arc<dyn FitBackend>) -> Self {
+        let candidates: Vec<Box<dyn RuntimeModel>> = vec![
+            Box::new(Gbm::new(GbmParams::default())),
+            Box::new(Bom::new(backend.clone())),
+            Box::new(Ogb::with_defaults()),
+        ];
+        C3oPredictor { candidates, fitted: None, report: None, loo_cap: 120, kfold_k: 10, seed: 0xC30 }
+    }
+
+    /// Register a maintainer-supplied custom model (§III-C-c: custom models
+    /// share the common model API — [`RuntimeModel`]).
+    pub fn add_candidate(&mut self, model: Box<dyn RuntimeModel>) {
+        self.candidates.push(model);
+    }
+
+    pub fn candidate_names(&self) -> Vec<&'static str> {
+        self.candidates.iter().map(|c| c.name()).collect()
+    }
+
+    /// Cross-validate one candidate under the size-capped policy.
+    fn cv_one(&self, m: &dyn RuntimeModel, data: &TrainData) -> crate::Result<CvScore> {
+        if data.len() <= self.loo_cap {
+            cv::loo_score(m, data)
+        } else {
+            cv::kfold_score(m, data, self.kfold_k, self.seed)
+        }
+    }
+
+    /// Fit = select (CV all candidates) + refit the winner on all data.
+    pub fn fit(&mut self, data: &TrainData) -> crate::Result<SelectionReport> {
+        anyhow::ensure!(data.len() >= 3, "C3O needs >= 3 training points");
+        let mut scores = Vec::with_capacity(self.candidates.len());
+        for c in &self.candidates {
+            let mut scratch = c.clone_unfitted();
+            // Candidates must be fitted once before LOO default paths that
+            // clone; fit errors for a candidate disqualify it rather than
+            // abort selection (a custom model may need more data).
+            let score = match scratch.fit(data) {
+                Ok(()) => self.cv_one(scratch.as_ref(), data),
+                Err(e) => Err(e),
+            };
+            match score {
+                Ok(s) => scores.push((c.name().to_string(), s)),
+                Err(_) => scores.push((
+                    c.name().to_string(),
+                    CvScore { mape: f64::INFINITY, resid_mean: 0.0, resid_std: f64::INFINITY, n: 0 },
+                )),
+            }
+        }
+        let (best_idx, _) = scores
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.1.mape.partial_cmp(&b.1.mape).unwrap())
+            .expect("non-empty candidates");
+        anyhow::ensure!(
+            scores[best_idx].1.mape.is_finite(),
+            "no candidate model could be cross-validated"
+        );
+
+        let mut winner = self.candidates[best_idx].clone_unfitted();
+        winner.fit(data)?;
+        let report = SelectionReport {
+            chosen: scores[best_idx].0.clone(),
+            chosen_score: scores[best_idx].1.clone(),
+            scores,
+        };
+        self.fitted = Some(winner);
+        self.report = Some(report.clone());
+        Ok(report)
+    }
+
+    /// Predict a runtime for `[scale_out, data_size, ctx...]`.
+    pub fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        self.fitted
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("C3O predictor not fitted"))?
+            .predict_one(features)
+    }
+
+    /// The last selection report (None before the first fit).
+    pub fn report(&self) -> Option<&SelectionReport> {
+        self.report.as_ref()
+    }
+
+    /// Residual distribution of the chosen model: (μ, σ) for §IV-B.
+    pub fn error_distribution(&self) -> Option<(f64, f64)> {
+        self.report.as_ref().map(|r| (r.chosen_score.resid_mean, r.chosen_score.resid_std))
+    }
+}
+
+impl RuntimeModel for C3oPredictor {
+    fn name(&self) -> &'static str {
+        "C3O"
+    }
+
+    fn fit(&mut self, data: &TrainData) -> crate::Result<()> {
+        C3oPredictor::fit(self, data).map(|_| ())
+    }
+
+    fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        C3oPredictor::predict_one(self, features)
+    }
+
+    fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+        Box::new(C3oPredictor {
+            candidates: self.candidates.iter().map(|c| c.clone_unfitted()).collect(),
+            fitted: None,
+            report: None,
+            loo_cap: self.loo_cap,
+            kfold_k: self.kfold_k,
+            seed: self.seed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Pcg;
+
+    fn predictor() -> C3oPredictor {
+        C3oPredictor::new(Arc::new(NativeBackend::new()))
+    }
+
+    fn separable_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let s = rng.range(2, 13) as f64;
+            let (d, k) = if i % 3 == 0 {
+                (20.0, 5.0)
+            } else {
+                (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64)
+            };
+            rows.push(vec![s, d, k]);
+            y.push((1.0 / s + 0.02 * s) * (10.0 + 4.0 * d + 9.0 * k)
+                * (1.0 + 0.02 * rng.normal()));
+        }
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    #[test]
+    fn selects_and_predicts() {
+        let data = separable_world(60, 1);
+        let mut p = predictor();
+        let report = p.fit(&data).unwrap();
+        assert_eq!(report.scores.len(), 3);
+        assert!(["GBM", "BOM", "OGB"].contains(&report.chosen.as_str()));
+        let pred = p.predict_one(&[6.0, 20.0, 5.0]).unwrap();
+        assert!(pred > 0.0);
+    }
+
+    #[test]
+    fn chosen_has_lowest_cv_mape() {
+        let data = separable_world(50, 2);
+        let mut p = predictor();
+        let report = p.fit(&data).unwrap();
+        let min = report
+            .scores
+            .iter()
+            .map(|(_, s)| s.mape)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(report.chosen_score.mape, min);
+    }
+
+    #[test]
+    fn error_distribution_available_after_fit() {
+        let data = separable_world(40, 3);
+        let mut p = predictor();
+        assert!(p.error_distribution().is_none());
+        p.fit(&data).unwrap();
+        let (_, sigma) = p.error_distribution().unwrap();
+        assert!(sigma >= 0.0);
+    }
+
+    #[test]
+    fn custom_candidate_can_win() {
+        // An oracle model that knows the world exactly must be selected.
+        struct Oracle;
+        impl RuntimeModel for Oracle {
+            fn name(&self) -> &'static str {
+                "Oracle"
+            }
+            fn fit(&mut self, _d: &TrainData) -> crate::Result<()> {
+                Ok(())
+            }
+            fn predict_one(&self, f: &[f64]) -> crate::Result<f64> {
+                Ok((1.0 / f[0] + 0.02 * f[0]) * (10.0 + 4.0 * f[1] + 9.0 * f[2]))
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(Oracle)
+            }
+        }
+        let data = separable_world(40, 4);
+        let mut p = predictor();
+        p.add_candidate(Box::new(Oracle));
+        let report = p.fit(&data).unwrap();
+        assert_eq!(report.chosen, "Oracle");
+    }
+
+    #[test]
+    fn failing_candidate_disqualified_not_fatal() {
+        struct Broken;
+        impl RuntimeModel for Broken {
+            fn name(&self) -> &'static str {
+                "Broken"
+            }
+            fn fit(&mut self, _d: &TrainData) -> crate::Result<()> {
+                anyhow::bail!("nope")
+            }
+            fn predict_one(&self, _f: &[f64]) -> crate::Result<f64> {
+                anyhow::bail!("nope")
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(Broken)
+            }
+        }
+        let data = separable_world(40, 5);
+        let mut p = predictor();
+        p.add_candidate(Box::new(Broken));
+        let report = p.fit(&data).unwrap();
+        assert_ne!(report.chosen, "Broken");
+    }
+
+    #[test]
+    fn too_little_data_rejected() {
+        let data = separable_world(2, 6);
+        assert!(predictor().fit(&data).is_err());
+    }
+
+    #[test]
+    fn works_at_fig5_minimum_of_three_points() {
+        // Fig. 5's smallest training size is 3; selection must not crash.
+        let data = separable_world(3, 8);
+        let mut p = predictor();
+        p.fit(&data).unwrap();
+        assert!(p.predict_one(&[6.0, 20.0, 5.0]).unwrap().is_finite());
+    }
+
+    #[test]
+    fn kfold_used_above_cap() {
+        let data = separable_world(140, 7);
+        let mut p = predictor();
+        p.loo_cap = 100;
+        let report = p.fit(&data).unwrap();
+        assert!(report.chosen_score.n == 140);
+    }
+}

@@ -1,0 +1,161 @@
+//! Ernest baseline (Venkataraman et al., NSDI'16), as used in the paper's
+//! Table II: NNLS over the parametric scale-out features
+//! `[1, d/s, log2 s, s]`, ignoring every context feature.
+//!
+//! Leave-one-out CV is a single batched `nnls_batch` launch on the
+//! [`FitBackend`] (one mask per held-out row) — the E4 hot path.
+
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+use crate::runtime::FitBackend;
+
+use super::features::{ernest_design, ernest_features};
+use super::{RuntimeModel, TrainData};
+
+const LAM: f64 = 1e-6;
+
+/// Ernest runtime model.
+pub struct Ernest {
+    backend: Arc<dyn FitBackend>,
+    theta: Option<Vec<f64>>,
+}
+
+impl Ernest {
+    pub fn new(backend: Arc<dyn FitBackend>) -> Self {
+        Ernest { backend, theta: None }
+    }
+}
+
+impl RuntimeModel for Ernest {
+    fn name(&self) -> &'static str {
+        "Ernest"
+    }
+
+    fn fit(&mut self, data: &TrainData) -> crate::Result<()> {
+        anyhow::ensure!(data.len() >= 2, "Ernest needs >= 2 training points");
+        let design = ernest_design(&data.x);
+        let w = Matrix::from_vec(1, data.len(), vec![1.0; data.len()])?;
+        let (theta, _) = self.backend.nnls_batch(&design, &data.y, &w, LAM)?;
+        self.theta = Some(theta.row(0).to_vec());
+        Ok(())
+    }
+
+    fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        let theta = self.theta.as_ref().ok_or_else(|| anyhow::anyhow!("Ernest not fitted"))?;
+        let f = ernest_features(features);
+        Ok(f.iter().zip(theta).map(|(a, b)| a * b).sum())
+    }
+
+    fn loo_predictions(&self, data: &TrainData) -> crate::Result<Vec<f64>> {
+        let n = data.len();
+        anyhow::ensure!(n >= 3, "LOO needs >= 3 points");
+        let design = ernest_design(&data.x);
+        // Mask row i leaves point i out.
+        let mut w = Matrix::from_vec(n, n, vec![1.0; n * n])?;
+        for i in 0..n {
+            w[(i, i)] = 0.0;
+        }
+        let (_, preds) = self.backend.nnls_batch(&design, &data.y, &w, LAM)?;
+        Ok((0..n).map(|i| preds[(i, i)]).collect())
+    }
+
+    fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+        Box::new(Ernest::new(self.backend.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Pcg;
+
+    fn ernest() -> Ernest {
+        Ernest::new(Arc::new(NativeBackend::new()))
+    }
+
+    /// Synthetic job following Ernest's own model form.
+    fn ernest_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let s = rng.range(2, 13) as f64;
+            let d = rng.range_f64(10.0, 30.0);
+            rows.push(vec![s, d]);
+            y.push(20.0 + 3.0 * d / s + 5.0 * s.log2() + 0.8 * s);
+        }
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    #[test]
+    fn recovers_its_own_model_form() {
+        let data = ernest_world(40, 1);
+        let mut m = ernest();
+        m.fit(&data).unwrap();
+        for i in 0..data.len() {
+            let p = m.predict_one(data.x.row(i)).unwrap();
+            assert!((p / data.y[i] - 1.0).abs() < 0.02, "{p} vs {}", data.y[i]);
+        }
+    }
+
+    #[test]
+    fn ignores_context_features() {
+        let mut data = ernest_world(30, 2);
+        // Append a context column that strongly drives y — Ernest can't see it.
+        let rows: Vec<Vec<f64>> = (0..data.len())
+            .map(|i| {
+                let mut r = data.x.row(i).to_vec();
+                r.push(if i % 2 == 0 { 0.0 } else { 100.0 });
+                r
+            })
+            .collect();
+        data.x = Matrix::from_rows(&rows).unwrap();
+        let mut m = ernest();
+        m.fit(&data).unwrap();
+        let mut a = data.x.row(0).to_vec();
+        let mut b = a.clone();
+        a[2] = 0.0;
+        b[2] = 1000.0;
+        assert_eq!(m.predict_one(&a).unwrap(), m.predict_one(&b).unwrap());
+    }
+
+    #[test]
+    fn loo_matches_naive_loop() {
+        let data = ernest_world(12, 3);
+        let m = ernest();
+        let fast = m.loo_predictions(&data).unwrap();
+        // Naive: refit without row i.
+        let mut slow = Vec::new();
+        for i in 0..data.len() {
+            let idx: Vec<usize> = (0..data.len()).filter(|&j| j != i).collect();
+            let mut scratch = ernest();
+            scratch.fit(&data.subset(&idx)).unwrap();
+            slow.push(scratch.predict_one(data.x.row(i)).unwrap());
+        }
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((f - s).abs() < 1e-5, "{f} vs {s}");
+        }
+    }
+
+    #[test]
+    fn unfitted_predict_errors() {
+        assert!(ernest().predict_one(&[4.0, 10.0]).is_err());
+    }
+
+    #[test]
+    fn coefficients_nonnegative() {
+        // Decreasing runtimes with size would need negative theta; NNLS
+        // clamps to zero instead of extrapolating nonsense.
+        let rows = vec![vec![2.0, 10.0], vec![4.0, 20.0], vec![8.0, 30.0]];
+        let y = vec![100.0, 50.0, 25.0];
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+        let mut m = ernest();
+        m.fit(&data).unwrap();
+        for i in 2..8 {
+            let p = m.predict_one(&[i as f64, 20.0]).unwrap();
+            assert!(p >= 0.0);
+        }
+    }
+}

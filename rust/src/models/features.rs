@@ -1,0 +1,119 @@
+//! Feature engineering shared by the parametric models.
+
+use crate::linalg::Matrix;
+
+/// Column normalizers for the Ernest basis: keep every feature O(1) so
+/// the f32 Gram on the PJRT artifact path stays well conditioned. NNLS is
+/// invariant under positive diagonal feature scaling (theta rescales by
+/// the same positive factors), so semantics are unchanged.
+const ERNEST_SCALE: [f64; 4] = [1.0, 16.0, 4.0, 16.0];
+
+/// Ernest's feature map (Venkataraman et al., NSDI'16) for a row
+/// `[scale_out s, data_size d, ...]`:  `[1, d/s, log2(s), s]`,
+/// column-normalized by [`ERNEST_SCALE`].
+///
+/// Context columns are deliberately dropped — Ernest "was not built to
+/// consider any features other than the dataset size and the scale-out"
+/// (paper §VI-C-a), which is exactly why it degrades on global data.
+pub fn ernest_features(row: &[f64]) -> Vec<f64> {
+    let s = row[0].max(1.0);
+    let d = row[1];
+    vec![
+        1.0,
+        d / s / ERNEST_SCALE[1],
+        s.log2() / ERNEST_SCALE[2],
+        s / ERNEST_SCALE[3],
+    ]
+}
+
+/// Apply [`ernest_features`] to every row.
+pub fn ernest_design(x: &Matrix) -> Matrix {
+    let rows: Vec<Vec<f64>> =
+        (0..x.rows()).map(|i| ernest_features(x.row(i))).collect();
+    Matrix::from_rows(&rows).expect("uniform arity")
+}
+
+/// Scale-out normalizer for the polynomial basis. Raw `s^3` up to 12^3
+/// squares into a Gram condition number beyond f32 on the PJRT artifact
+/// path; `t = s / S_NORM` keeps the basis in [0, 1]-ish territory. The
+/// SSM's speedup is a *ratio* of basis evaluations, so the normalization
+/// cancels semantically.
+pub const S_NORM: f64 = 16.0;
+
+/// Third-degree polynomial basis in the (normalized) scale-out for the
+/// BOM's SSM: `[1, t, t^2, t^3]` with `t = s / S_NORM`.
+pub fn poly3_features(s: f64) -> Vec<f64> {
+    let t = s / S_NORM;
+    vec![1.0, t, t * t, t * t * t]
+}
+
+/// IBM design row for the BOM: intercept + every non-scale-out feature:
+/// `[1, d, ctx...]`.
+pub fn ibm_features(row: &[f64]) -> Vec<f64> {
+    let mut v = Vec::with_capacity(row.len());
+    v.push(1.0);
+    v.extend_from_slice(&row[1..]);
+    v
+}
+
+/// Non-scale-out part of a row (used for SSM grouping).
+pub fn context_key(row: &[f64]) -> Vec<f64> {
+    row[1..].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ernest_map_matches_nsdi_form() {
+        // Normalized NSDI basis [1, d/s, log2 s, s] / ERNEST_SCALE.
+        let f = ernest_features(&[4.0, 20.0, 0.5]);
+        assert_eq!(f, vec![1.0, 5.0 / 16.0, 2.0 / 4.0, 4.0 / 16.0]);
+    }
+
+    #[test]
+    fn ernest_features_bounded_for_f32_gram() {
+        for s in 2..=12 {
+            for d in [10.0, 20.0, 30.0] {
+                for v in ernest_features(&[s as f64, d]) {
+                    assert!(v.abs() <= 1.0 + 1e-12, "s={s} d={d}: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ernest_ignores_context() {
+        let a = ernest_features(&[4.0, 20.0, 0.5]);
+        let b = ernest_features(&[4.0, 20.0, 99.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn poly3_basis() {
+        let t = 2.0 / S_NORM;
+        assert_eq!(poly3_features(2.0), vec![1.0, t, t * t, t * t * t]);
+    }
+
+    #[test]
+    fn poly3_basis_bounded_for_f32_gram() {
+        // All basis entries stay <= 1 for catalog scale-outs (2..=12), so
+        // the f32 Gram on the artifact path stays well conditioned.
+        for s in 1..=16 {
+            for v in poly3_features(s as f64) {
+                assert!(v.abs() <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ibm_keeps_all_but_scaleout() {
+        assert_eq!(ibm_features(&[8.0, 15.0, 3.0, 0.1]), vec![1.0, 15.0, 3.0, 0.1]);
+    }
+
+    #[test]
+    fn context_key_drops_scaleout_only() {
+        assert_eq!(context_key(&[8.0, 15.0, 3.0]), vec![15.0, 3.0]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Runtime-prediction models (paper §V).
+//!
+//! * [`ernest`] — the Ernest baseline (NNLS over `[1, d/s, log s, s]`).
+//! * [`gbm`] — gradient-boosted regression trees (the paper's strong
+//!   general model for collaborative/global data).
+//! * [`bom`] — Basic Optimistic Model: poly-3 scale-out-to-speedup model
+//!   (SSM) recombined with a linear inputs-behavior model (IBM).
+//! * [`ogb`] — Optimistic Gradient Boosting: GBM for both SSM and IBM.
+//! * [`c3o`] — the C3O predictor: dynamic selection among the constituent
+//!   models via cross-validation (§V-C).
+//!
+//! All models consume a [`TrainData`] whose feature layout is
+//! `[scale_out, data_size, context...]` (machine type is fixed per
+//! training set, §VI-C) and predict gross runtimes in seconds.
+
+pub mod bom;
+pub mod c3o;
+pub mod ernest;
+pub mod features;
+pub mod gbm;
+pub mod ogb;
+pub mod tree;
+
+pub use bom::Bom;
+pub use c3o::{C3oPredictor, SelectionReport};
+pub use ernest::Ernest;
+pub use gbm::{Gbm, GbmParams};
+pub use ogb::Ogb;
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+
+/// A training view: feature rows `[scale_out, data_size, ctx...]` + target
+/// runtimes (seconds).
+#[derive(Debug, Clone)]
+pub struct TrainData {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+impl TrainData {
+    pub fn new(x: Matrix, y: Vec<f64>) -> crate::Result<Self> {
+        anyhow::ensure!(x.rows() == y.len(), "x rows {} != y len {}", x.rows(), y.len());
+        Ok(TrainData { x, y })
+    }
+
+    /// Build from a dataset (one machine type's records).
+    pub fn from_dataset(ds: &Dataset) -> crate::Result<Self> {
+        let rows: Vec<Vec<f64>> = ds.records.iter().map(|r| r.features()).collect();
+        let y = ds.records.iter().map(|r| r.runtime_s).collect();
+        TrainData::new(Matrix::from_rows(&rows)?, y)
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Select a subset of rows by index.
+    pub fn subset(&self, idx: &[usize]) -> Self {
+        let rows: Vec<Vec<f64>> = idx.iter().map(|&i| self.x.row(i).to_vec()).collect();
+        let y = idx.iter().map(|&i| self.y[i]).collect();
+        TrainData { x: Matrix::from_rows(&rows).unwrap(), y }
+    }
+}
+
+/// A runtime model. Implementations must be deterministic given their
+/// construction-time seed.
+pub trait RuntimeModel: Send {
+    /// Short name as it appears in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Fit on training data. May be called repeatedly (refits from scratch).
+    fn fit(&mut self, data: &TrainData) -> crate::Result<()>;
+
+    /// Predict one feature row `[scale_out, data_size, ctx...]`.
+    fn predict_one(&self, features: &[f64]) -> crate::Result<f64>;
+
+    /// Predict a batch (default: row loop; backends may override).
+    fn predict(&self, x: &Matrix) -> crate::Result<Vec<f64>> {
+        (0..x.rows()).map(|i| self.predict_one(x.row(i))).collect()
+    }
+
+    /// Leave-one-out predictions over `data`: element i is the prediction
+    /// for row i by a model fitted on all rows except i.
+    ///
+    /// Default: N refits. Parametric models override this with a batched
+    /// single-launch implementation on the PJRT artifacts (the E4 hot
+    /// path).
+    fn loo_predictions(&self, data: &TrainData) -> crate::Result<Vec<f64>> {
+        let n = data.len();
+        let mut out = Vec::with_capacity(n);
+        let mut scratch = self.clone_unfitted();
+        for i in 0..n {
+            let idx: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+            let sub = data.subset(&idx);
+            scratch.fit(&sub)?;
+            out.push(scratch.predict_one(data.x.row(i))?);
+        }
+        Ok(out)
+    }
+
+    /// Fresh unfitted clone (same hyper-parameters/backend).
+    fn clone_unfitted(&self) -> Box<dyn RuntimeModel>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{JobKind, RunRecord};
+
+    #[test]
+    fn train_data_from_dataset() {
+        let mut ds = Dataset::new(JobKind::Grep);
+        ds.push(RunRecord {
+            machine_type: "m5".into(),
+            scale_out: 4,
+            data_size_gb: 10.0,
+            context: vec![0.01],
+            runtime_s: 120.0,
+        })
+        .unwrap();
+        let td = TrainData::from_dataset(&ds).unwrap();
+        assert_eq!(td.x.row(0), &[4.0, 10.0, 0.01]);
+        assert_eq!(td.y, vec![120.0]);
+    }
+
+    #[test]
+    fn subset_selects_rows() {
+        let x = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]).unwrap();
+        let td = TrainData::new(x, vec![10.0, 20.0, 30.0]).unwrap();
+        let sub = td.subset(&[2, 0]);
+        assert_eq!(sub.y, vec![30.0, 10.0]);
+        assert_eq!(sub.x.row(0), &[3.0]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let x = Matrix::zeros(2, 1);
+        assert!(TrainData::new(x, vec![1.0]).is_err());
+    }
+}

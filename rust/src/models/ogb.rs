@@ -1,0 +1,170 @@
+//! Optimistic Gradient Boosting (paper §V-B): the optimistic SSM × IBM
+//! decomposition with gradient boosting for *both* submodels.
+//!
+//! The SSM-GBM learns runtime-vs-scale-out on the largest shared-context
+//! group; projections and recombination are identical to the BOM, but both
+//! stages are non-parametric, which keeps the local-data accuracy of the
+//! optimistic approach while tolerating mild non-linearity in the inputs
+//! behaviour.
+
+use std::collections::HashMap;
+
+use crate::linalg::Matrix;
+
+use super::bom::largest_scaleout_group;
+use super::features::ibm_features;
+use super::gbm::{Gbm, GbmParams};
+use super::{RuntimeModel, TrainData};
+
+const SPEEDUP_FLOOR: f64 = 0.02;
+
+/// Optimistic Gradient Boosting model.
+pub struct Ogb {
+    params: GbmParams,
+    ssm: Option<Gbm>,
+    ibm: Option<Gbm>,
+    /// SSM prediction at scale-out 1 (normalization constant).
+    ssm_base: f64,
+}
+
+impl Ogb {
+    pub fn new(params: GbmParams) -> Self {
+        Ogb { params, ssm: None, ibm: None, ssm_base: 1.0 }
+    }
+
+    pub fn with_defaults() -> Self {
+        // Fewer, shallower stages than the plain GBM: each submodel sees a
+        // low-dimensional problem.
+        Ogb::new(GbmParams { n_estimators: 80, max_depth: 2, ..Default::default() })
+    }
+
+    fn speedup(&self, s: f64) -> f64 {
+        let ssm = self.ssm.as_ref().expect("fitted");
+        let v = ssm.predict_one(&[s]).expect("ssm fitted");
+        if self.ssm_base.abs() < 1e-9 {
+            return SPEEDUP_FLOOR;
+        }
+        (v / self.ssm_base).max(SPEEDUP_FLOOR)
+    }
+}
+
+impl RuntimeModel for Ogb {
+    fn name(&self) -> &'static str {
+        "OGB"
+    }
+
+    fn fit(&mut self, data: &TrainData) -> crate::Result<()> {
+        anyhow::ensure!(data.len() >= 2, "OGB needs >= 2 training points");
+
+        // --- SSM-GBM on the pooled normalized shared-context groups.
+        let pts = super::bom::pooled_ssm_points(data);
+        let ssm_rows: Vec<Vec<f64>> = pts.iter().map(|&(s, _)| vec![s]).collect();
+        let ssm_y: Vec<f64> = pts.iter().map(|&(_, t)| t).collect();
+        let mut ssm = Gbm::new(self.params);
+        ssm.fit(&TrainData::new(Matrix::from_rows(&ssm_rows)?, ssm_y)?)?;
+        self.ssm_base = ssm.predict_one(&[1.0])?;
+        self.ssm = Some(ssm);
+
+        // --- Project to scale-out 1, fit IBM-GBM on non-scale-out features.
+        let ibm_rows: Vec<Vec<f64>> = (0..data.len())
+            .map(|i| ibm_features(data.x.row(i))[1..].to_vec()) // drop the 1-intercept
+            .collect();
+        let t1: Vec<f64> = (0..data.len())
+            .map(|i| data.y[i] / self.speedup(data.x.row(i)[0]))
+            .collect();
+        let mut ibm = Gbm::new(self.params);
+        ibm.fit(&TrainData::new(Matrix::from_rows(&ibm_rows)?, t1)?)?;
+        self.ibm = Some(ibm);
+        Ok(())
+    }
+
+    fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        let ibm = self.ibm.as_ref().ok_or_else(|| anyhow::anyhow!("OGB not fitted"))?;
+        let base = ibm.predict_one(&ibm_features(features)[1..])?;
+        Ok(base * self.speedup(features[0]))
+    }
+
+    fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+        Box::new(Ogb::new(self.params))
+    }
+}
+
+/// Group count diagnostic (used by tests and the eval harness to
+/// characterize training sets).
+pub fn context_group_count(data: &TrainData) -> usize {
+    let mut set: HashMap<Vec<u64>, ()> = HashMap::new();
+    for i in 0..data.len() {
+        let key: Vec<u64> = data.x.row(i)[1..].iter().map(|f| f.to_bits()).collect();
+        set.insert(key, ());
+    }
+    set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+    use crate::util::stats::mape;
+
+    fn separable_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let s = rng.range(2, 13) as f64;
+            let (d, k) = if i % 3 == 0 {
+                (20.0, 5.0)
+            } else {
+                (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64)
+            };
+            rows.push(vec![s, d, k]);
+            let g = 1.0 / s + 0.02 * s;
+            // Mildly non-linear inputs behaviour (GBM-friendly).
+            let h = 10.0 + 4.0 * d + 9.0 * k + 0.15 * d * k;
+            y.push(g * h);
+        }
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    #[test]
+    fn fits_separable_nonlinear_world() {
+        let data = separable_world(150, 1);
+        let mut m = Ogb::with_defaults();
+        m.fit(&data).unwrap();
+        let err = mape(&m.predict(&data.x).unwrap(), &data.y);
+        assert!(err < 8.0, "in-sample MAPE {err}%");
+    }
+
+    #[test]
+    fn interpolates_new_scaleout_within_range() {
+        let data = separable_world(150, 2);
+        let mut m = Ogb::with_defaults();
+        m.fit(&data).unwrap();
+        // Known context at an interior scale-out.
+        let truth = (1.0 / 7.0 + 0.02 * 7.0) * (10.0 + 4.0 * 20.0 + 9.0 * 5.0 + 0.15 * 20.0 * 5.0);
+        let p = m.predict_one(&[7.0, 20.0, 5.0]).unwrap();
+        assert!((p / truth - 1.0).abs() < 0.25, "p={p} truth={truth}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = separable_world(100, 3);
+        let mut a = Ogb::with_defaults();
+        let mut b = Ogb::with_defaults();
+        a.fit(&data).unwrap();
+        b.fit(&data).unwrap();
+        let q = [5.0, 18.0, 6.0];
+        assert_eq!(a.predict_one(&q).unwrap(), b.predict_one(&q).unwrap());
+    }
+
+    #[test]
+    fn context_group_count_counts() {
+        let data = separable_world(90, 4);
+        assert!(context_group_count(&data) > 10);
+    }
+
+    #[test]
+    fn unfitted_errors() {
+        assert!(Ogb::with_defaults().predict_one(&[2.0, 10.0, 3.0]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Regression trees: the weak learner inside [`super::gbm`].
+//!
+//! Exact greedy splitting, depth- and leaf-size-limited, squared-error
+//! criterion — the same algorithm as scikit-learn's
+//! `DecisionTreeRegressor` used by the paper's prototype.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): feature orders are sorted **once per
+//! tree** and maintained through splits by stable partition, so finding a
+//! node's best split is O(f·n) instead of O(f·n·log n) — this is the L3
+//! hot loop (GBM LOO = n refits × 100 trees) behind the paper's
+//! model-selection phase.
+
+use crate::linalg::Matrix;
+
+/// Tree growth parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 3, min_samples_leaf: 1 }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A fitted regression tree (arena-allocated nodes).
+#[derive(Debug, Clone)]
+pub struct RegressionTree {
+    nodes: Vec<Node>,
+}
+
+impl RegressionTree {
+    /// Fit on rows `idx` of `(x, y)`.
+    pub fn fit(x: &Matrix, y: &[f64], idx: &[usize], params: TreeParams) -> Self {
+        Self::fit_presorted(x, y, Self::sort_features(x, idx), params)
+    }
+
+    /// Per-feature sorted index orders for `idx` — reusable across trees
+    /// fitted on the same rows (gradient boosting refits 100 trees on
+    /// identical x; hoisting the sort is a §Perf win, see gbm.rs).
+    pub fn sort_features(x: &Matrix, idx: &[usize]) -> Vec<Vec<usize>> {
+        (0..x.cols())
+            .map(|feat| {
+                let mut v = idx.to_vec();
+                v.sort_by(|&a, &b| {
+                    x[(a, feat)].partial_cmp(&x[(b, feat)]).unwrap()
+                });
+                v
+            })
+            .collect()
+    }
+
+    /// Fit from precomputed [`RegressionTree::sort_features`] orders.
+    pub fn fit_presorted(
+        x: &Matrix,
+        y: &[f64],
+        sorted: Vec<Vec<usize>>,
+        params: TreeParams,
+    ) -> Self {
+        assert!(!sorted.is_empty() && !sorted[0].is_empty(), "empty training set");
+        let mut tree = RegressionTree { nodes: Vec::new() };
+        tree.grow(x, y, sorted, 0, params);
+        tree
+    }
+
+    fn grow(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        sorted: Vec<Vec<usize>>,
+        depth: usize,
+        params: TreeParams,
+    ) -> usize {
+        let n = sorted[0].len();
+        let mean = sorted[0].iter().map(|&i| y[i]).sum::<f64>() / n as f64;
+        if depth >= params.max_depth || n < 2 * params.min_samples_leaf {
+            self.nodes.push(Node::Leaf { value: mean });
+            return self.nodes.len() - 1;
+        }
+        match best_split(x, y, &sorted, params.min_samples_leaf) {
+            None => {
+                self.nodes.push(Node::Leaf { value: mean });
+                self.nodes.len() - 1
+            }
+            Some((feature, threshold)) => {
+                // Stable partition of every feature order by the split
+                // condition — preserves sortedness on both sides.
+                let f = sorted.len();
+                let mut left_sorted = Vec::with_capacity(f);
+                let mut right_sorted = Vec::with_capacity(f);
+                for order in &sorted {
+                    let mut l = Vec::with_capacity(n);
+                    let mut r = Vec::with_capacity(n);
+                    for &i in order {
+                        if x[(i, feature)] <= threshold {
+                            l.push(i);
+                        } else {
+                            r.push(i);
+                        }
+                    }
+                    left_sorted.push(l);
+                    right_sorted.push(r);
+                }
+                drop(sorted);
+                debug_assert!(
+                    !left_sorted[0].is_empty() && !right_sorted[0].is_empty()
+                );
+                // Reserve our slot before children so the root is node 0.
+                self.nodes.push(Node::Leaf { value: mean }); // placeholder
+                let slot = self.nodes.len() - 1;
+                let left = self.grow(x, y, left_sorted, depth + 1, params);
+                let right = self.grow(x, y, right_sorted, depth + 1, params);
+                self.nodes[slot] = Node::Split { feature, threshold, left, right };
+                slot
+            }
+        }
+    }
+
+    /// Predict one feature row.
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Find the (feature, threshold) minimizing total SSE over the presorted
+/// feature orders; None if no valid split exists (constant features or
+/// leaf-size limits).
+fn best_split(
+    x: &Matrix,
+    y: &[f64],
+    sorted: &[Vec<usize>],
+    min_leaf: usize,
+) -> Option<(usize, f64)> {
+    let n = sorted[0].len();
+    let total_sum: f64 = sorted[0].iter().map(|&i| y[i]).sum();
+    let mut best: Option<(f64, usize, f64)> = None; // (score, feat, thr)
+
+    for (feat, order) in sorted.iter().enumerate() {
+        // Prefix sums over the sorted order.
+        let mut left_sum = 0.0;
+        for k in 0..n - 1 {
+            let i = order[k];
+            left_sum += y[i];
+            let xv = x[(i, feat)];
+            let xn = x[(order[k + 1], feat)];
+            if xn <= xv {
+                continue; // tie: not a valid cut point
+            }
+            let nl = k + 1;
+            let nr = n - nl;
+            if nl < min_leaf || nr < min_leaf {
+                continue;
+            }
+            // Maximizing sum_l^2/n_l + sum_r^2/n_r minimizes SSE.
+            let right_sum = total_sum - left_sum;
+            let score = left_sum * left_sum / nl as f64
+                + right_sum * right_sum / nr as f64;
+            if best.map_or(true, |(b, _, _)| score > b + 1e-12) {
+                best = Some((score, feat, 0.5 * (xv + xn)));
+            }
+        }
+    }
+    best.map(|(_, f, t)| (f, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn xy(rows: &[Vec<f64>], y: &[f64]) -> (Matrix, Vec<f64>) {
+        (Matrix::from_rows(rows).unwrap(), y.to_vec())
+    }
+
+    #[test]
+    fn single_point_is_leaf() {
+        let (x, y) = xy(&[vec![1.0]], &[5.0]);
+        let t = RegressionTree::fit(&x, &y, &[0], TreeParams::default());
+        assert_eq!(t.predict_one(&[99.0]), 5.0);
+        assert_eq!(t.node_count(), 1);
+    }
+
+    #[test]
+    fn perfect_split_on_step_function() {
+        let (x, y) = xy(
+            &[vec![1.0], vec![2.0], vec![10.0], vec![11.0]],
+            &[0.0, 0.0, 100.0, 100.0],
+        );
+        let t = RegressionTree::fit(&x, &y, &[0, 1, 2, 3], TreeParams::default());
+        assert_eq!(t.predict_one(&[1.5]), 0.0);
+        assert_eq!(t.predict_one(&[10.5]), 100.0);
+    }
+
+    #[test]
+    fn constant_target_stays_leaf() {
+        let (x, y) = xy(&[vec![1.0], vec![2.0], vec![3.0]], &[7.0, 7.0, 7.0]);
+        let t = RegressionTree::fit(&x, &y, &[0, 1, 2], TreeParams::default());
+        assert_eq!(t.predict_one(&[2.0]), 7.0);
+    }
+
+    #[test]
+    fn constant_feature_cannot_split() {
+        let (x, y) = xy(&[vec![5.0], vec![5.0], vec![5.0]], &[1.0, 2.0, 3.0]);
+        let t = RegressionTree::fit(&x, &y, &[0, 1, 2], TreeParams::default());
+        assert_eq!(t.node_count(), 1);
+        assert!((t.predict_one(&[5.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let (x, y) = xy(
+            &[vec![1.0], vec![2.0], vec![3.0], vec![4.0]],
+            &[0.0, 0.0, 0.0, 100.0],
+        );
+        let t = RegressionTree::fit(
+            &x,
+            &y,
+            &[0, 1, 2, 3],
+            TreeParams { max_depth: 5, min_samples_leaf: 2 },
+        );
+        // The only valid split is 2|2: {1,2} vs {3,4}.
+        assert!((t.predict_one(&[1.0]) - 0.0).abs() < 1e-12);
+        assert!((t.predict_one(&[4.0]) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn picks_most_informative_feature() {
+        // Feature 1 is pure noise; feature 0 determines y.
+        let mut rng = Pcg::seed(5);
+        let rows: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![if i < 25 { 0.0 } else { 1.0 }, rng.f64()])
+            .collect();
+        let y: Vec<f64> = (0..50).map(|i| if i < 25 { 1.0 } else { 9.0 }).collect();
+        let (x, y) = xy(&rows, &y);
+        let idx: Vec<usize> = (0..50).collect();
+        let t = RegressionTree::fit(
+            &x,
+            &y,
+            &idx,
+            TreeParams { max_depth: 1, min_samples_leaf: 1 },
+        );
+        assert!((t.predict_one(&[0.0, 0.5]) - 1.0).abs() < 1e-9);
+        assert!((t.predict_one(&[1.0, 0.5]) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deep_tree_fits_training_data_exactly() {
+        let mut rng = Pcg::seed(6);
+        let rows: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = (0..30).map(|_| rng.f64() * 10.0).collect();
+        let (x, y) = xy(&rows, &y);
+        let idx: Vec<usize> = (0..30).collect();
+        let t = RegressionTree::fit(
+            &x,
+            &y,
+            &idx,
+            TreeParams { max_depth: 30, min_samples_leaf: 1 },
+        );
+        for i in 0..30 {
+            assert!((t.predict_one(x.row(i)) - y[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn duplicate_rows_handled() {
+        // Ties everywhere: splits must only occur between distinct values.
+        let (x, y) = xy(
+            &[vec![1.0], vec![1.0], vec![1.0], vec![2.0], vec![2.0]],
+            &[3.0, 3.0, 3.0, 9.0, 9.0],
+        );
+        let t = RegressionTree::fit(
+            &x,
+            &y,
+            &[0, 1, 2, 3, 4],
+            TreeParams::default(),
+        );
+        assert!((t.predict_one(&[1.0]) - 3.0).abs() < 1e-12);
+        assert!((t.predict_one(&[2.0]) - 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,423 @@
+//! PJRT engine: compile the AOT HLO-text artifacts once, execute them on
+//! the request path with shape padding.
+//!
+//! The artifacts are lowered with fixed shapes (`shapes::{N, F, B, Q}`);
+//! the engine pads every call up to those and slices the outputs back
+//! down. Padded mask rows are all-zero (their fits collapse to `θ = 0`
+//! under the ridge term) and padded feature columns only multiply zeros,
+//! so padding is semantically inert — `rust/tests/runtime_parity.rs`
+//! checks this against the native backend.
+//!
+//! Threading: PJRT handles (`PjRtLoadedExecutable`, `PjRtClient`) hold
+//! `Rc`s and are neither `Send` nor `Sync`; the engine therefore owns them
+//! on a dedicated worker thread and implements [`FitBackend`] by message
+//! passing. This also naturally serializes launches on the single CPU
+//! device, which is the right execution model (one launch covers a whole
+//! CV batch, so the queue is not a bottleneck — E4 measures this).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context};
+
+use crate::linalg::Matrix;
+
+use super::shapes::{B, F, N, Q};
+use super::FitBackend;
+
+/// Ridge floor on the artifact path: guarantees padded (all-zero) systems
+/// stay non-singular in f32.
+const MIN_LAM: f64 = 1e-4;
+
+enum Request {
+    Fit {
+        module: FitModule,
+        x: Matrix,
+        y: Vec<f64>,
+        w: Matrix,
+        lam: f64,
+        reply: mpsc::Sender<crate::Result<(Matrix, Matrix)>>,
+    },
+    Predict {
+        theta: Matrix,
+        xq: Matrix,
+        reply: mpsc::Sender<crate::Result<Matrix>>,
+    },
+    Stop,
+}
+
+#[derive(Clone, Copy)]
+enum FitModule {
+    Ols,
+    Nnls,
+}
+
+/// The production fit backend: executes the AOT artifacts via PJRT CPU.
+///
+/// Problems exceeding the artifact shapes fall back to the native solver
+/// (counted in [`Engine::fallbacks`]) instead of failing — the artifacts
+/// cover the whole Table-I corpus, but user-supplied datasets may be
+/// arbitrarily large.
+pub struct Engine {
+    sender: Mutex<mpsc::Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    dir: PathBuf,
+    native: super::NativeBackend,
+    fallbacks: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> crate::Result<Engine> {
+        Self::verify_manifest(dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let dir_owned = dir.to_path_buf();
+        let worker = std::thread::Builder::new()
+            .name("c3o-pjrt".into())
+            .spawn(move || worker_loop(dir_owned, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .context("PJRT worker died during startup")??;
+        Ok(Engine {
+            sender: Mutex::new(tx),
+            worker: Some(worker),
+            dir: dir.to_path_buf(),
+            native: super::NativeBackend::new(),
+            fallbacks: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// How many calls were served by the native fallback because they
+    /// exceeded the artifact shapes.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn fits_artifacts(x: &Matrix, w: &Matrix) -> bool {
+        x.rows() <= N && x.cols() <= F && w.rows() <= B
+    }
+
+    /// Load from the conventional location, walking up from CWD (so tests,
+    /// examples and benches all find `artifacts/` regardless of harness
+    /// working directory).
+    pub fn load_default() -> crate::Result<Engine> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("MANIFEST.tsv").exists() {
+                return Engine::load(&cand);
+            }
+            if !dir.pop() {
+                bail!(
+                    "artifacts/MANIFEST.tsv not found above {}; run `make artifacts`",
+                    std::env::current_dir()?.display()
+                );
+            }
+        }
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn request_fit(
+        &self,
+        module: FitModule,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.sender
+            .lock()
+            .unwrap()
+            .send(Request::Fit {
+                module,
+                x: x.clone(),
+                y: y.to_vec(),
+                w: w.clone(),
+                lam,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("PJRT worker gone"))?;
+        reply_rx.recv().context("PJRT worker dropped reply")?
+    }
+
+    /// Check the aot.py manifest against the compiled-in shape contract.
+    fn verify_manifest(dir: &Path) -> crate::Result<()> {
+        let path = dir.join("MANIFEST.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        // First line: "# N=..\tF=..\tB=..\tQ=..".
+        let header = text.lines().next().context("empty manifest")?;
+        let mut seen = std::collections::BTreeMap::new();
+        for part in header.trim_start_matches('#').split_whitespace() {
+            if let Some((k, v)) = part.split_once('=') {
+                seen.insert(k.to_string(), v.parse::<usize>()?);
+            }
+        }
+        for (key, expect) in [("N", N), ("F", F), ("B", B), ("Q", Q)] {
+            match seen.get(key) {
+                Some(&v) if v == expect => {}
+                Some(&v) => {
+                    bail!("manifest {key}={v} != compiled-in {expect}; re-run make artifacts")
+                }
+                None => bail!("manifest missing {key}"),
+            }
+        }
+        // Body: every listed module file must exist. The manifest body is
+        // header-less (name, sha256, shapes per line), so iterate raw
+        // lines rather than going through the headered Table parser.
+        let mut modules = 0usize;
+        for line in text.lines().skip(1) {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let name = line.split('\t').next().unwrap_or("");
+            let f = dir.join(format!("{name}.hlo.txt"));
+            if !f.exists() {
+                bail!("manifest lists {} but file is missing", f.display());
+            }
+            modules += 1;
+        }
+        anyhow::ensure!(modules >= 3, "manifest lists only {modules} modules");
+        Ok(())
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.sender.lock().unwrap().send(Request::Stop);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl FitBackend for Engine {
+    fn ols_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        if !Self::fits_artifacts(x, w) {
+            self.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // Match the artifact path's ridge floor so both paths solve
+            // the same problem.
+            return self.native.ols_batch(x, y, w, lam.max(MIN_LAM));
+        }
+        self.request_fit(FitModule::Ols, x, y, w, lam)
+    }
+
+    fn nnls_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        if !Self::fits_artifacts(x, w) {
+            self.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return self.native.nnls_batch(x, y, w, lam.max(MIN_LAM));
+        }
+        self.request_fit(FitModule::Nnls, x, y, w, lam)
+    }
+
+    fn predict_grid(&self, theta: &Matrix, xq: &Matrix) -> crate::Result<Matrix> {
+        if theta.rows() > B || theta.cols() > F || xq.rows() > Q {
+            self.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return self.native.predict_grid(theta, xq);
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.sender
+            .lock()
+            .unwrap()
+            .send(Request::Predict { theta: theta.clone(), xq: xq.clone(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("PJRT worker gone"))?;
+        reply_rx.recv().context("PJRT worker dropped reply")?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: owns the non-Send PJRT handles.
+
+struct Modules {
+    ols: xla::PjRtLoadedExecutable,
+    nnls: xla::PjRtLoadedExecutable,
+    predict: xla::PjRtLoadedExecutable,
+}
+
+fn worker_loop(dir: PathBuf, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()>>) {
+    let modules = match compile_modules(&dir) {
+        Ok(m) => {
+            let _ = ready.send(Ok(()));
+            m
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Stop => break,
+            Request::Fit { module, x, y, w, lam, reply } => {
+                let exe = match module {
+                    FitModule::Ols => &modules.ols,
+                    FitModule::Nnls => &modules.nnls,
+                };
+                let _ = reply.send(run_fit(exe, &x, &y, &w, lam));
+            }
+            Request::Predict { theta, xq, reply } => {
+                let _ = reply.send(run_predict(&modules.predict, &theta, &xq));
+            }
+        }
+    }
+}
+
+fn compile_modules(dir: &Path) -> crate::Result<Modules> {
+    let client =
+        xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+    let compile = |name: &str| -> crate::Result<xla::PjRtLoadedExecutable> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))
+    };
+    Ok(Modules {
+        ols: compile("ols_batch")?,
+        nnls: compile("nnls_batch")?,
+        predict: compile("predict_grid")?,
+    })
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Pad `x` (n×f), `y` (n), `w` (b×n) to the artifact shapes.
+fn pad_inputs(
+    x: &Matrix,
+    y: &[f64],
+    w: &Matrix,
+) -> crate::Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize, usize, usize)> {
+    let (n, f, b) = (x.rows(), x.cols(), w.rows());
+    if n > N || f > F || b > B {
+        bail!("problem ({n}x{f}, {b} masks) exceeds artifact shapes ({N}x{F}, {B})");
+    }
+    anyhow::ensure!(w.cols() == n && y.len() == n, "shape mismatch");
+    let mut xp = vec![0f32; N * F];
+    for i in 0..n {
+        for j in 0..f {
+            xp[i * F + j] = x[(i, j)] as f32;
+        }
+    }
+    let mut yp = vec![0f32; N];
+    for i in 0..n {
+        yp[i] = y[i] as f32;
+    }
+    let mut wp = vec![0f32; B * N];
+    for bi in 0..b {
+        for j in 0..n {
+            wp[bi * N + j] = w[(bi, j)] as f32;
+        }
+    }
+    Ok((xp, yp, wp, n, f, b))
+}
+
+fn run_fit(
+    exe: &xla::PjRtLoadedExecutable,
+    x: &Matrix,
+    y: &[f64],
+    w: &Matrix,
+    lam: f64,
+) -> crate::Result<(Matrix, Matrix)> {
+    let (xp, yp, wp, n, f, b) = pad_inputs(x, y, w)?;
+    let lx = literal_f32(&xp, &[N as i64, F as i64])?;
+    let ly = literal_f32(&yp, &[N as i64])?;
+    let lw = literal_f32(&wp, &[B as i64, N as i64])?;
+    let ll = xla::Literal::scalar(lam.max(MIN_LAM) as f32);
+    let result = exe
+        .execute::<xla::Literal>(&[lx, ly, lw, ll])
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let (t_lit, p_lit) =
+        result.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+    let t_raw = t_lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let p_raw = p_lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    anyhow::ensure!(t_raw.len() == B * F && p_raw.len() == B * N, "bad output size");
+
+    let mut theta = Matrix::zeros(b, f);
+    for bi in 0..b {
+        for j in 0..f {
+            theta[(bi, j)] = t_raw[bi * F + j] as f64;
+        }
+    }
+    let mut preds = Matrix::zeros(b, n);
+    for bi in 0..b {
+        for j in 0..n {
+            preds[(bi, j)] = p_raw[bi * N + j] as f64;
+        }
+    }
+    Ok((theta, preds))
+}
+
+fn run_predict(
+    exe: &xla::PjRtLoadedExecutable,
+    theta: &Matrix,
+    xq: &Matrix,
+) -> crate::Result<Matrix> {
+    let (b, f, q) = (theta.rows(), theta.cols(), xq.rows());
+    if b > B || f > F || q > Q {
+        bail!("predict_grid ({b}x{f}, {q} queries) exceeds artifact shapes");
+    }
+    anyhow::ensure!(xq.cols() == f, "feature arity mismatch");
+    let mut tp = vec![0f32; B * F];
+    for bi in 0..b {
+        for j in 0..f {
+            tp[bi * F + j] = theta[(bi, j)] as f32;
+        }
+    }
+    let mut qp = vec![0f32; Q * F];
+    for i in 0..q {
+        for j in 0..f {
+            qp[i * F + j] = xq[(i, j)] as f32;
+        }
+    }
+    let lt = literal_f32(&tp, &[B as i64, F as i64])?;
+    let lq = literal_f32(&qp, &[Q as i64, F as i64])?;
+    let result = exe
+        .execute::<xla::Literal>(&[lt, lq])
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let p_lit = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let raw = p_lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    anyhow::ensure!(raw.len() == B * Q, "bad output size");
+    let mut out = Matrix::zeros(b, q);
+    for bi in 0..b {
+        for j in 0..q {
+            out[(bi, j)] = raw[bi * Q + j] as f64;
+        }
+    }
+    Ok(out)
+}

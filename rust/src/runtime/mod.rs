@@ -1,0 +1,55 @@
+//! PJRT runtime: load the AOT artifacts and execute them on the hot path.
+//!
+//! `python/compile/aot.py` lowers the L2 estimator graphs once to HLO text;
+//! this module compiles them on the PJRT CPU client at startup and exposes
+//! typed, padded entry points. Python never runs here.
+//!
+//! Start-up flow (`Engine::load`):
+//!   1. read + verify `artifacts/MANIFEST.tsv` against [`shapes`],
+//!   2. `HloModuleProto::from_text_file` each module (HLO *text* is the
+//!      interchange format — serialized jax protos carry 64-bit ids that
+//!      xla_extension 0.5.1 rejects),
+//!   3. compile to `PjRtLoadedExecutable`s held for the process lifetime.
+
+pub mod engine;
+pub mod native;
+pub mod shapes;
+
+pub use engine::Engine;
+pub use native::NativeBackend;
+
+use crate::linalg::Matrix;
+
+/// A batched fit over masked subsets of one design matrix.
+///
+/// Implemented both by the PJRT [`Engine`] (AOT artifacts, the production
+/// hot path) and by [`NativeBackend`] (pure Rust, used in tests and as a
+/// fallback when `artifacts/` is absent). `rust/tests/runtime_parity.rs`
+/// asserts the two agree.
+pub trait FitBackend: Send + Sync {
+    /// Ridge OLS: for every mask row `w[b]`, solve
+    /// `(X^T diag(w_b) X + lam I) theta_b = X^T diag(w_b) y` and return
+    /// `(theta, preds)` where `preds[b] = X theta_b`.
+    fn ols_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)>;
+
+    /// Non-negative least squares, same shapes as [`FitBackend::ols_batch`].
+    fn nnls_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)>;
+
+    /// Prediction sweep: `preds[b] = Xq theta_b`.
+    fn predict_grid(&self, theta: &Matrix, xq: &Matrix) -> crate::Result<Matrix>;
+
+    /// Human-readable backend name (for logs and bench labels).
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,149 @@
+//! Pure-Rust implementation of [`FitBackend`].
+//!
+//! Mirrors the L2 JAX graphs exactly (same estimators, same masking
+//! semantics); used when `artifacts/` is absent, in unit tests, and as the
+//! ground truth for `rust/tests/runtime_parity.rs`.
+
+use crate::linalg::{nnls, ols_ridge, Matrix};
+
+use super::FitBackend;
+
+/// Native (non-PJRT) fit backend.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+
+    fn batch(
+        x: &Matrix,
+        w: &Matrix,
+        fit_one: impl Fn(&[f64]) -> crate::Result<Vec<f64>>,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        let b = w.rows();
+        let f = x.cols();
+        let n = x.rows();
+        let mut theta = Matrix::zeros(b, f);
+        let mut preds = Matrix::zeros(b, n);
+        for bi in 0..b {
+            let th = fit_one(w.row(bi))?;
+            theta.row_mut(bi).copy_from_slice(&th);
+            let p = x.matvec(&th);
+            preds.row_mut(bi).copy_from_slice(&p);
+        }
+        Ok((theta, preds))
+    }
+}
+
+impl FitBackend for NativeBackend {
+    fn ols_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        anyhow::ensure!(x.rows() == y.len() && w.cols() == x.rows(), "shape mismatch");
+        Self::batch(x, w, |wrow| ols_ridge(x, y, wrow, lam))
+    }
+
+    fn nnls_batch(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        w: &Matrix,
+        lam: f64,
+    ) -> crate::Result<(Matrix, Matrix)> {
+        anyhow::ensure!(x.rows() == y.len() && w.cols() == x.rows(), "shape mismatch");
+        Self::batch(x, w, |wrow| nnls(x, y, wrow, lam))
+    }
+
+    fn predict_grid(&self, theta: &Matrix, xq: &Matrix) -> crate::Result<Matrix> {
+        anyhow::ensure!(theta.cols() == xq.cols(), "feature arity mismatch");
+        let b = theta.rows();
+        let q = xq.rows();
+        let mut out = Matrix::zeros(b, q);
+        for bi in 0..b {
+            let p = xq.matvec(theta.row(bi));
+            out.row_mut(bi).copy_from_slice(&p);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn toy() -> (Matrix, Vec<f64>, Matrix) {
+        let mut rng = Pcg::seed(2);
+        let n = 20;
+        let f = 3;
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..f).map(|_| rng.f64() + 0.1).collect()).collect();
+        let beta = [1.0, 2.0, 0.5];
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().zip(&beta).map(|(a, b)| a * b).sum())
+            .collect();
+        let x = Matrix::from_rows(&rows).unwrap();
+        let mut w = Matrix::zeros(4, n);
+        for bi in 0..4 {
+            for j in 0..n {
+                w[(bi, j)] = if (j + bi) % 5 == 0 { 0.0 } else { 1.0 };
+            }
+        }
+        (x, y, w)
+    }
+
+    #[test]
+    fn ols_batch_recovers_truth_per_mask() {
+        let (x, y, w) = toy();
+        let nb = NativeBackend::new();
+        let (theta, preds) = nb.ols_batch(&x, &y, &w, 1e-10).unwrap();
+        for bi in 0..theta.rows() {
+            assert!((theta[(bi, 0)] - 1.0).abs() < 1e-6);
+            assert!((theta[(bi, 1)] - 2.0).abs() < 1e-6);
+            assert!((theta[(bi, 2)] - 0.5).abs() < 1e-6);
+        }
+        // preds = X theta.
+        for j in 0..x.rows() {
+            assert!((preds[(0, j)] - y[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nnls_batch_nonnegative() {
+        let (x, y, w) = toy();
+        let nb = NativeBackend::new();
+        let (theta, _) = nb.nnls_batch(&x, &y, &w, 1e-8).unwrap();
+        for v in theta.data() {
+            assert!(*v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn predict_grid_matches_matvec() {
+        let nb = NativeBackend::new();
+        let theta = Matrix::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]).unwrap();
+        let xq = Matrix::from_rows(&[vec![3.0, 4.0], vec![1.0, 0.0]]).unwrap();
+        let p = nb.predict_grid(&theta, &xq).unwrap();
+        assert_eq!(p.row(0), &[11.0, 1.0]);
+        assert_eq!(p.row(1), &[4.0, 0.0]);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let nb = NativeBackend::new();
+        let x = Matrix::zeros(3, 2);
+        let w = Matrix::zeros(1, 4);
+        assert!(nb.ols_batch(&x, &[1.0, 1.0, 1.0], &w, 0.0).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! AOT shape contract — MUST match `python/compile/model.py`.
+//!
+//! The artifacts are lowered with fixed shapes; the engine pads inputs up to
+//! these and slices outputs back down. `MANIFEST.tsv` written by `aot.py`
+//! carries the same constants; [`crate::runtime::Engine::load`] verifies
+//! them before compiling anything.
+
+/// Max training rows per fit (PageRank's per-machine slice is 94, the
+/// largest in the Table-I corpus; 128 leaves headroom).
+pub const N: usize = 128;
+/// Max feature columns (including intercept column if the model uses one).
+pub const F: usize = 8;
+/// Max simultaneous cross-validation masks per launch.
+pub const B: usize = 128;
+/// Max query rows in the configurator prediction sweep.
+pub const Q: usize = 64;
+
+/// Artifact module names (basenames under `artifacts/`).
+pub const MODULES: [&str; 3] = ["ols_batch", "nnls_batch", "predict_grid"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b_covers_loo_of_n() {
+        // Leave-one-out over N rows requires at least N masks.
+        assert!(B >= N);
+    }
+
+    #[test]
+    fn module_names_are_unique() {
+        let mut names = MODULES.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), MODULES.len());
+    }
+}

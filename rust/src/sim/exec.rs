@@ -1,0 +1,107 @@
+//! End-to-end execution simulator: provisions a cluster from the provider,
+//! "runs" the job (samples a runtime from the workload model), tears the
+//! cluster down, and reports the observation. This is step 5-6 of the
+//! paper's Fig. 4 workflow and the substrate for `examples/e2e_c3o.rs`.
+
+use std::sync::Mutex;
+
+use crate::cloud::{CloudProvider, ClusterConfig};
+use crate::data::RunRecord;
+use crate::util::prng::Pcg;
+
+use super::jobs::{JobInput, WorkloadModel};
+
+/// Outcome of one simulated execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionReport {
+    pub record: RunRecord,
+    pub cost_usd: f64,
+    /// Wall-clock including provisioning delay.
+    pub wallclock_s: f64,
+    pub deadline_met: Option<bool>,
+}
+
+/// Executes jobs against the simulated provider.
+pub struct Executor<'a> {
+    provider: &'a CloudProvider,
+    model: WorkloadModel,
+    rng: Mutex<Pcg>,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(provider: &'a CloudProvider, model: WorkloadModel, seed: u64) -> Self {
+        Executor { provider, model, rng: Mutex::new(Pcg::new(seed, 0xE1)) }
+    }
+
+    /// Provision, run, tear down. `deadline_s` (if given) is judged against
+    /// the *job* runtime, matching the paper's t_max semantics.
+    pub fn run(
+        &self,
+        config: &ClusterConfig,
+        input: &JobInput,
+        deadline_s: Option<f64>,
+    ) -> crate::Result<ExecutionReport> {
+        let lease = self.provider.provision(config)?;
+        let mt = self.provider.catalog().get(&config.machine_type)?.clone();
+        let runtime_s = {
+            let mut rng = self.rng.lock().unwrap();
+            self.model.sample_runtime(&mt, config.scale_out, input, &mut rng)
+        };
+        let wallclock_s = runtime_s + lease.provisioned_after_s;
+        let cost_usd = self.provider.tear_down(lease, runtime_s)?;
+        Ok(ExecutionReport {
+            record: RunRecord {
+                machine_type: config.machine_type.clone(),
+                scale_out: config.scale_out,
+                data_size_gb: input.data_size_gb,
+                context: input.context.clone(),
+                runtime_s,
+            },
+            cost_usd,
+            wallclock_s,
+            deadline_met: deadline_s.map(|d| runtime_s <= d),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::data::JobKind;
+
+    #[test]
+    fn run_produces_consistent_report() {
+        let provider = CloudProvider::new(Catalog::aws_like());
+        let exec = Executor::new(&provider, WorkloadModel::default(), 7);
+        let cfg = ClusterConfig { machine_type: "m5.xlarge".into(), scale_out: 4 };
+        let input = JobInput::new(JobKind::Sort, 12.0, vec![]);
+        let rep = exec.run(&cfg, &input, Some(1e6)).unwrap();
+        assert_eq!(rep.record.scale_out, 4);
+        assert!(rep.record.runtime_s > 0.0);
+        assert!(rep.wallclock_s > rep.record.runtime_s);
+        assert!(rep.cost_usd > 0.0);
+        assert_eq!(rep.deadline_met, Some(true));
+        assert_eq!(provider.active_clusters(), 0);
+    }
+
+    #[test]
+    fn missed_deadline_reported() {
+        let provider = CloudProvider::new(Catalog::aws_like());
+        let exec = Executor::new(&provider, WorkloadModel::default(), 7);
+        let cfg = ClusterConfig { machine_type: "m5.xlarge".into(), scale_out: 2 };
+        let input = JobInput::new(JobKind::Sort, 20.0, vec![]);
+        let rep = exec.run(&cfg, &input, Some(1.0)).unwrap();
+        assert_eq!(rep.deadline_met, Some(false));
+    }
+
+    #[test]
+    fn unknown_machine_type_fails_without_leak() {
+        let provider = CloudProvider::new(Catalog::aws_like());
+        let exec = Executor::new(&provider, WorkloadModel::default(), 7);
+        let cfg = ClusterConfig { machine_type: "bogus".into(), scale_out: 2 };
+        let input = JobInput::new(JobKind::Sort, 10.0, vec![]);
+        assert!(exec.run(&cfg, &input, None).is_err());
+        assert_eq!(provider.active_clusters(), 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Dataset generator: reproduces the paper's Table-I census exactly.
+//!
+//! For each job a parameter grid (machine type × scale-out × size ×
+//! context) is laid out, then deterministically subsampled to the paper's
+//! unique-experiment count (Sort 126, Grep 162, SGD 180, K-Means 180,
+//! PageRank 282 — 930 total). Every experiment is executed five times and
+//! the median runtime recorded, mirroring §VI-B.
+
+use crate::cloud::Catalog;
+use crate::data::{Dataset, JobKind};
+use crate::util::prng::Pcg;
+
+use super::jobs::{JobInput, WorkloadModel};
+
+/// Generator knobs.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    pub model: WorkloadModel,
+    /// Machine types included in the shared dataset.
+    pub machine_types: Vec<String>,
+    /// Scale-outs included.
+    pub scale_outs: Vec<u32>,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            seed: 0xC30,
+            model: WorkloadModel::default(),
+            // Two machine types: the Table-I census divided by more types
+            // starves the per-machine-type training pools the §VI-C
+            // protocol (and any real C3O deployment) depends on.
+            machine_types: vec!["m5.xlarge".into(), "c5.xlarge".into()],
+            scale_outs: (2..=12).collect(),
+        }
+    }
+}
+
+/// Job-specific grid axes: (sizes, context combinations).
+fn grid_axes(job: JobKind) -> (Vec<f64>, Vec<Vec<f64>>) {
+    match job {
+        // Table I: Sort 10-20 GB, no parameters.
+        JobKind::Sort => {
+            let sizes = vec![10.0, 12.0, 14.0, 16.0, 18.0, 20.0];
+            (sizes, vec![vec![]])
+        }
+        // Grep 10-20 GB, keyword "Computer"; hidden context = fraction of
+        // lines containing the keyword.
+        JobKind::Grep => {
+            let sizes = vec![10.0, 12.0, 14.0, 16.0, 18.0, 20.0];
+            let ratios = vec![0.001, 0.01, 0.1];
+            (sizes, ratios.into_iter().map(|r| vec![r]).collect())
+        }
+        // SGD 10-30 GB, max iterations 1-100; second context feature is
+        // the labeled-point dimensionality. Six context combinations keep
+        // the per-(machine, context) pools dense enough for the paper's
+        // local-training scenario (§VI-C-a).
+        JobKind::Sgd => {
+            let sizes = vec![10.0, 15.0, 20.0, 25.0, 30.0];
+            let mut ctx = Vec::new();
+            for &it in &[1.0, 25.0, 100.0] {
+                for &nf in &[10.0, 100.0] {
+                    ctx.push(vec![it, nf]);
+                }
+            }
+            (sizes, ctx)
+        }
+        // K-Means 10-20 GB, 3-9 clusters, convergence 0.001.
+        JobKind::KMeans => {
+            let sizes = vec![10.0, 12.0, 14.0, 16.0, 18.0, 20.0];
+            let ctx = (3..=9).map(|k| vec![k as f64, 0.001]).collect();
+            (sizes, ctx)
+        }
+        // PageRank 130-440 MB edge lists, convergence 0.01-0.0001; hidden
+        // context = unique-page ratio.
+        JobKind::PageRank => {
+            let sizes = vec![0.13, 0.21, 0.29, 0.36, 0.44];
+            let mut ctx = Vec::new();
+            for &pr in &[0.05, 0.1, 0.2] {
+                for &cv in &[0.01, 0.001, 0.0001] {
+                    ctx.push(vec![pr, cv]);
+                }
+            }
+            (sizes, ctx)
+        }
+    }
+}
+
+/// Generate the shared dataset for one job, sized per Table I.
+pub fn generate_job(job: JobKind, cfg: &GeneratorConfig, catalog: &Catalog) -> crate::Result<Dataset> {
+    let (sizes, contexts) = grid_axes(job);
+    // Full grid.
+    let mut grid = Vec::new();
+    for mt in &cfg.machine_types {
+        for &s in &cfg.scale_outs {
+            for &d in &sizes {
+                for ctx in &contexts {
+                    grid.push((mt.clone(), s, d, ctx.clone()));
+                }
+            }
+        }
+    }
+    let target = job.experiment_count();
+    anyhow::ensure!(
+        grid.len() >= target,
+        "{job}: grid {} < census {target}",
+        grid.len()
+    );
+
+    // Deterministic subsample to the paper's census. Stratified by
+    // (machine type, context) so every *local* training pool — one
+    // machine, one context, per §VI-C — keeps enough scale-out/size
+    // coverage.
+    let mut rng = Pcg::new(cfg.seed, job as u64 + 1);
+    let cells = cfg.machine_types.len() * contexts.len();
+    let per_cell = target / cells;
+    let mut chosen: Vec<(String, u32, f64, Vec<f64>)> = Vec::with_capacity(target);
+    for mt in &cfg.machine_types {
+        for ctx in &contexts {
+            let mut pool: Vec<_> = grid
+                .iter()
+                .filter(|g| &g.0 == mt && &g.3 == ctx)
+                .cloned()
+                .collect();
+            rng.shuffle(&mut pool);
+            chosen.extend(pool.into_iter().take(per_cell));
+        }
+    }
+    // Top up to the exact census from the remaining grid.
+    if chosen.len() < target {
+        let mut rest: Vec<_> =
+            grid.iter().filter(|g| !chosen.contains(g)).cloned().collect();
+        rng.shuffle(&mut rest);
+        chosen.extend(rest.into_iter().take(target - chosen.len()));
+    }
+    chosen.truncate(target);
+
+    let mut ds = Dataset::new(job);
+    for (mt_name, s, d, ctx) in chosen {
+        let mt = catalog.get(&mt_name)?;
+        let input = JobInput::new(job, d, ctx);
+        ds.push(cfg.model.observe(mt, s, &input, &mut rng))?;
+    }
+    Ok(ds)
+}
+
+/// Generate all five job datasets (the full 930-experiment corpus).
+pub fn generate_all(cfg: &GeneratorConfig, catalog: &Catalog) -> crate::Result<Vec<Dataset>> {
+    JobKind::ALL.iter().map(|&j| generate_job(j, cfg, catalog)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(job: JobKind) -> Dataset {
+        let cfg = GeneratorConfig::default();
+        generate_job(job, &cfg, &Catalog::aws_like()).unwrap()
+    }
+
+    #[test]
+    fn census_matches_table1() {
+        for job in JobKind::ALL {
+            assert_eq!(gen(job).len(), job.experiment_count(), "{job}");
+        }
+    }
+
+    #[test]
+    fn total_is_930() {
+        let cfg = GeneratorConfig::default();
+        let all = generate_all(&cfg, &Catalog::aws_like()).unwrap();
+        let total: usize = all.iter().map(|d| d.len()).sum();
+        assert_eq!(total, 930);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = gen(JobKind::KMeans);
+        let b = gen(JobKind::KMeans);
+        assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let cfg_a = GeneratorConfig::default();
+        let cfg_b = GeneratorConfig { seed: 99, ..GeneratorConfig::default() };
+        let cat = Catalog::aws_like();
+        let a = generate_job(JobKind::Sort, &cfg_a, &cat).unwrap();
+        let b = generate_job(JobKind::Sort, &cfg_b, &cat).unwrap();
+        assert_ne!(a.records, b.records);
+    }
+
+    #[test]
+    fn every_context_has_scaleout_coverage() {
+        // Local training (paper §VI-C-a) needs per-context variation in
+        // scale-out and size; each context must keep >= 6 records spanning
+        // >= 3 distinct scale-outs.
+        for job in [JobKind::Grep, JobKind::KMeans, JobKind::PageRank] {
+            let ds = gen(job);
+            for ctx in ds.contexts() {
+                let local = ds.local_view(&ctx);
+                assert!(local.len() >= 6, "{job} ctx {ctx:?}: {}", local.len());
+                assert!(
+                    local.scale_outs().len() >= 3,
+                    "{job} ctx {ctx:?}: scale-outs {:?}",
+                    local.scale_outs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_within_table1_ranges() {
+        let ds = gen(JobKind::Sgd);
+        for r in &ds.records {
+            assert!((10.0..=30.0).contains(&r.data_size_gb));
+        }
+        let ds = gen(JobKind::PageRank);
+        for r in &ds.records {
+            assert!((0.13..=0.44).contains(&r.data_size_gb));
+        }
+    }
+
+    #[test]
+    fn runtimes_positive_and_finite() {
+        for job in JobKind::ALL {
+            for r in &gen(job).records {
+                assert!(r.runtime_s.is_finite() && r.runtime_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn covers_all_machine_types() {
+        let ds = gen(JobKind::Sort);
+        assert_eq!(ds.machine_types().len(), 2);
+    }
+}

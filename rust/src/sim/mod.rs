@@ -1,0 +1,16 @@
+//! Distributed-dataflow runtime simulator.
+//!
+//! Stands in for the paper's 930 real Spark runs on Amazon EMR (the
+//! `c3o-experiments` dataset is not available offline — see DESIGN.md §2).
+//! `jobs.rs` holds per-job analytical cost models (scan, shuffle,
+//! iteration counts, stragglers, memory-spill cliffs) over the machine-type
+//! catalog; `generator.rs` reproduces the exact Table-I census; `exec.rs`
+//! samples end-to-end executions for the e2e example and failure tests.
+
+pub mod exec;
+pub mod generator;
+pub mod jobs;
+
+pub use exec::Executor;
+pub use generator::{generate_all, generate_job, GeneratorConfig};
+pub use jobs::{JobInput, WorkloadModel};

@@ -1,0 +1,207 @@
+//! Gauss error function pair for the configurator's confidence math.
+//!
+//! Paper §IV-B:  ŝ = min { s | t_s + (μ + erf⁻¹(2c−1)·√2·σ) ≤ t_max }.
+//! With c = 0.95 the multiplier erf⁻¹(2·0.95−1)·√2 = Φ⁻¹(0.95) ≈ 1.64485,
+//! the rounded value the paper quotes — tested below.
+//!
+//! * `erf` — Abramowitz & Stegun 7.1.26-style rational approximation
+//!   refined to double precision (max abs error < 1.2e-7 is A&S; we use the
+//!   higher-order expansion with error < 1e-12 on |x| <= 6).
+//! * `probit` — Acklam's inverse normal CDF with one Halley refinement step
+//!   (relative error < 1e-9 over (0,1)).
+//! * `erf_inv(x) = probit((x+1)/2) / √2`.
+
+/// Error function, double precision.
+///
+/// Uses the complementary-error-function expansion of W. J. Cody's rational
+/// approximations as popularized in Numerical Recipes (`erfc` with a
+/// Chebyshev fit), accurate to ~1e-12 after symmetry reduction.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    // Chebyshev coefficients (Numerical Recipes 3rd ed., erfc_chebyshev).
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0;
+    let mut dd = 0.0;
+    for &c in COF.iter().skip(1).rev() {
+        let tmp = d;
+        d = ty * d - dd + c;
+        dd = tmp;
+    }
+    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    if x >= 0.0 { ans } else { 2.0 - ans }
+}
+
+/// Inverse of the standard normal CDF (probit), Acklam's algorithm with a
+/// Halley refinement step. Panics outside (0, 1).
+pub fn probit(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "probit: p={p} out of (0,1)");
+
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley step against the exact CDF for ~1e-15 accuracy.
+    let e = 0.5 * erfc(-x / std::f64::consts::SQRT_2) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Inverse error function via the probit identity.
+pub fn erf_inv(x: f64) -> f64 {
+    assert!(x > -1.0 && x < 1.0, "erf_inv: x={x} out of (-1,1)");
+    probit((x + 1.0) / 2.0) / std::f64::consts::SQRT_2
+}
+
+/// The paper's confidence multiplier: erf⁻¹(2c−1)·√2 = Φ⁻¹(c).
+///
+/// `t_s + μ + confidence_multiplier(c)·σ ≤ t_max` is the §IV-B scale-out
+/// admission rule.
+pub fn confidence_multiplier(c: f64) -> f64 {
+    assert!(c > 0.0 && c < 1.0, "confidence c={c} out of (0,1)");
+    probit(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values (Mathematica).
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(0.5) - 0.5204998778130465).abs() < 1e-10);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 1e-10);
+        assert!((erf(2.0) - 0.9953222650189527).abs() < 1e-10);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 1e-10);
+    }
+
+    #[test]
+    fn erfc_symmetry() {
+        for &x in &[0.1, 0.7, 1.3, 2.9] {
+            assert!((erfc(x) + erfc(-x) - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_rounded_multiplier_at_c95() {
+        // Paper §IV-B: "t_s + mu + 1.64485 * sigma <= t_max (rounded)".
+        let m = confidence_multiplier(0.95);
+        assert!((m - 1.64485).abs() < 1e-5, "multiplier={m}");
+    }
+
+    #[test]
+    fn probit_round_trips_cdf() {
+        for &p in &[0.001, 0.025, 0.2, 0.5, 0.8, 0.95, 0.999] {
+            let x = probit(p);
+            let cdf = 0.5 * erfc(-x / std::f64::consts::SQRT_2);
+            assert!((cdf - p).abs() < 1e-12, "p={p} cdf={cdf}");
+        }
+    }
+
+    #[test]
+    fn erf_inv_round_trips_erf() {
+        for &x in &[-0.9, -0.5, -0.1, 0.0001, 0.3, 0.77, 0.999] {
+            let y = erf_inv(x);
+            assert!((erf(y) - x).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn probit_median_is_zero() {
+        assert!(probit(0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiplier_monotone_in_confidence() {
+        let cs = [0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99];
+        let ms: Vec<f64> = cs.iter().map(|&c| confidence_multiplier(c)).collect();
+        for w in ms.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(confidence_multiplier(0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn probit_rejects_zero() {
+        probit(0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundational utilities: deterministic PRNG, statistics, the Gauss error
+//! function pair used by the configurator, TSV/JSON codecs, and a seeded
+//! property-testing driver (the offline crate cache has no `rand`, `serde`
+//! or `proptest`; these are small, tested, behaviour-compatible stand-ins —
+//! see DESIGN.md §2).
+
+pub mod erf;
+pub mod json;
+pub mod par;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod tsv;

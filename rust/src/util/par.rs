@@ -1,0 +1,92 @@
+//! Scoped-thread parallel map (no rayon in the offline cache).
+//!
+//! Work-steals over an atomic index so uneven item costs balance out;
+//! results land in order. Used by the evaluation harness (300 CV splits
+//! per Table-II cell) and the hub's validation pipeline.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Parallel map with `threads` workers (0 ⇒ available parallelism).
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(n);
+
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i, &items[i]);
+                *out[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, 4, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(par_map(&items, 1, |_, &x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        assert!(par_map(&items, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn index_argument_matches_position() {
+        let items = vec![10, 20, 30];
+        let out = par_map(&items, 2, |i, &x| (i, x));
+        assert_eq!(out, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(&items, 8, |_, &x| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            x
+        });
+        assert_eq!(out, items);
+    }
+}

@@ -1,0 +1,158 @@
+//! TSV codec. The paper (§VI-A) organizes runtime data as TSV with the
+//! machine type and instance count first and job-specific context features
+//! at the end; `crate::data` uses this module for the on-disk format.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// A parsed TSV table: one header row and data rows of equal arity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: Vec<String>) -> Self {
+        Table { header, rows: Vec::new() }
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) -> crate::Result<()> {
+        if row.len() != self.header.len() {
+            bail!(
+                "row arity {} != header arity {}",
+                row.len(),
+                self.header.len()
+            );
+        }
+        self.rows.push(row);
+        Ok(())
+    }
+
+    /// Parse TSV text. Lines starting with '#' are comments; blank lines
+    /// are skipped. The first non-comment line is the header.
+    pub fn parse(text: &str) -> crate::Result<Table> {
+        let mut header: Option<Vec<String>> = None;
+        let mut rows = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end_matches('\r');
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<String> =
+                line.split('\t').map(|s| s.to_string()).collect();
+            match &header {
+                None => header = Some(fields),
+                Some(h) => {
+                    if fields.len() != h.len() {
+                        bail!(
+                            "line {}: arity {} != header arity {}",
+                            lineno + 1,
+                            fields.len(),
+                            h.len()
+                        );
+                    }
+                    rows.push(fields);
+                }
+            }
+        }
+        let header = header.context("empty TSV: no header")?;
+        Ok(Table { header, rows })
+    }
+
+    /// Serialize back to TSV text (tab-free fields enforced).
+    pub fn to_text(&self) -> crate::Result<String> {
+        let mut out = String::new();
+        for field in self.header.iter().chain(self.rows.iter().flatten()) {
+            if field.contains('\t') || field.contains('\n') {
+                bail!("TSV field contains tab/newline: {field:?}");
+            }
+        }
+        out.push_str(&self.header.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        Ok(out)
+    }
+
+    pub fn read(path: &Path) -> crate::Result<Table> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Table::parse(&text)
+    }
+
+    pub fn write(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_text()?)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Typed accessor: parse cell as f64.
+    pub fn f64(&self, row: usize, col: usize) -> crate::Result<f64> {
+        self.rows[row][col]
+            .parse::<f64>()
+            .with_context(|| format!("row {row} col {col}: not a number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let text = "a\tb\tc\n1\t2.5\tx\n3\t4\ty\n";
+        let t = Table::parse(text).unwrap();
+        assert_eq!(t.header, vec!["a", "b", "c"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.to_text().unwrap(), text);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let t = Table::parse("# hi\n\na\tb\n# mid\n1\t2\n").unwrap();
+        assert_eq!(t.rows, vec![vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(Table::parse("a\tb\n1\n").is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Table::parse("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn col_lookup() {
+        let t = Table::parse("x\ty\n1\t2\n").unwrap();
+        assert_eq!(t.col("y"), Some(1));
+        assert_eq!(t.col("z"), None);
+    }
+
+    #[test]
+    fn tab_in_field_rejected_on_write() {
+        let mut t = Table::new(vec!["a".into()]);
+        t.push_row(vec!["has\ttab".into()]).unwrap();
+        assert!(t.to_text().is_err());
+    }
+
+    #[test]
+    fn typed_accessor() {
+        let t = Table::parse("v\n2.25\n").unwrap();
+        assert_eq!(t.f64(0, 0).unwrap(), 2.25);
+    }
+}

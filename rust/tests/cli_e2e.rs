@@ -1,0 +1,129 @@
+//! Integration: the `c3o` CLI binary end to end, plus failure injection on
+//! the artifact loading path.
+
+use std::process::Command;
+
+fn c3o() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_c3o"))
+}
+
+#[test]
+fn generate_then_configure_from_disk() {
+    let dir = std::env::temp_dir().join(format!("c3o_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // generate
+    let out = c3o()
+        .args(["generate", "--out", dir.to_str().unwrap(), "--seed", "77"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("930"), "{stdout}");
+    for job in ["sort", "grep", "sgd", "kmeans", "pagerank"] {
+        assert!(dir.join(format!("{job}.tsv")).exists(), "{job}.tsv missing");
+    }
+
+    // configure against the generated corpus
+    let out = c3o()
+        .args([
+            "configure",
+            "--job",
+            "kmeans",
+            "--size",
+            "15",
+            "--ctx",
+            "7,0.001",
+            "--deadline",
+            "900",
+            "--confidence",
+            "0.95",
+            "--data",
+            dir.to_str().unwrap(),
+            "--backend",
+            "native",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("machine type : m5.xlarge"), "{stdout}");
+    assert!(stdout.contains("scale-out"), "{stdout}");
+    assert!(stdout.contains("runtime/cost pairs"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn configure_with_impossible_deadline_fails_cleanly() {
+    let out = c3o()
+        .args([
+            "configure", "--job", "sort", "--size", "20", "--deadline", "1",
+            "--backend", "native",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no scale-out"), "{stderr}");
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let out = c3o().args(["frobnicate"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn unknown_job_is_an_error() {
+    let out = c3o()
+        .args(["configure", "--job", "mapreduce", "--size", "10", "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown job"));
+}
+
+// --- Failure injection on the artifact path -------------------------------
+
+#[test]
+fn engine_rejects_corrupt_manifest() {
+    use c3o::runtime::Engine;
+    let dir = std::env::temp_dir().join(format!("c3o_art_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Wrong shape constants.
+    std::fs::write(dir.join("MANIFEST.tsv"), "# N=4\tF=8\tB=128\tQ=64\nname\tsha\tshapes\n")
+        .unwrap();
+    let err = match Engine::load(&dir) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("corrupt manifest accepted"),
+    };
+    assert!(err.contains("N=4"), "{err}");
+
+    // Manifest lists a module that does not exist.
+    std::fs::write(
+        dir.join("MANIFEST.tsv"),
+        "# N=128\tF=8\tB=128\tQ=64\nghost_module\tdeadbeef\tf32[1]\n",
+    )
+    .unwrap();
+    let err = match Engine::load(&dir) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("ghost manifest accepted"),
+    };
+    assert!(err.contains("ghost_module"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_rejects_unparseable_hlo() {
+    use c3o::runtime::Engine;
+    let dir = std::env::temp_dir().join(format!("c3o_badhlo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("MANIFEST.tsv"), "# N=128\tF=8\tB=128\tQ=64\n").unwrap();
+    for m in ["ols_batch", "nnls_batch", "predict_grid"] {
+        std::fs::write(dir.join(format!("{m}.hlo.txt")), "this is not HLO").unwrap();
+    }
+    assert!(Engine::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

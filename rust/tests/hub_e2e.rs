@@ -1,0 +1,193 @@
+//! Integration: the full collaborative loop over a live TCP hub.
+//!
+//! Covers the Fig. 4 workflow (browse → fetch → contribute) plus the
+//! §III-C-b validation gate under honest, corrupted and malicious
+//! contributions, and concurrent client safety.
+
+use std::sync::Arc;
+
+use c3o::cloud::Catalog;
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::util::prng::Pcg;
+
+fn start_hub_with_data() -> HubServer {
+    let state = Arc::new(HubState::new());
+    let catalog = Catalog::aws_like();
+    for job in [JobKind::Sort, JobKind::Grep] {
+        let mut repo = Repository::new(job, &format!("spark {job}"));
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        repo.data = generate_job(job, &GeneratorConfig::default(), &catalog).unwrap();
+        state.insert(repo);
+    }
+    // Empty repo to exercise the bootstrap path.
+    state.insert(Repository::new(JobKind::KMeans, "spark kmeans"));
+    HubServer::start("127.0.0.1:0", state, catalog, ValidationPolicy::default()).unwrap()
+}
+
+fn honest_runs(job: JobKind, n: usize, seed: u64) -> Dataset {
+    let catalog = Catalog::aws_like();
+    let model = WorkloadModel::default();
+    let mt = catalog.get("m5.xlarge").unwrap();
+    let mut rng = Pcg::seed(seed);
+    let mut ds = Dataset::new(job);
+    for _ in 0..n {
+        let s = rng.range(2, 13) as u32;
+        let (d, ctx) = match job {
+            JobKind::Sort => (rng.range_f64(10.0, 20.0), vec![]),
+            JobKind::KMeans => (rng.range_f64(10.0, 20.0), vec![5.0, 0.001]),
+            _ => (rng.range_f64(10.0, 20.0), vec![0.01]),
+        };
+        let input = JobInput::new(job, d, ctx);
+        ds.push(model.observe(mt, s, &input, &mut rng)).unwrap();
+    }
+    ds
+}
+
+#[test]
+fn browse_fetch_contribute_roundtrip() {
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+    let mut client = HubClient::connect(&addr).unwrap();
+
+    // Step 1: browse.
+    let repos = client.list_repos().unwrap();
+    assert_eq!(repos.len(), 3);
+    let sort = repos.iter().find(|r| r.job == JobKind::Sort).unwrap();
+    assert_eq!(sort.records, 126);
+    assert_eq!(sort.maintainer_machine.as_deref(), Some("m5.xlarge"));
+
+    // Step 2: fetch code + runtime data.
+    let fetched = client.get_repo(JobKind::Sort).unwrap();
+    assert_eq!(fetched.data.len(), 126);
+
+    // Step 6: contribute honest new runs.
+    let contrib = honest_runs(JobKind::Sort, 8, 42);
+    let (accepted, reason) = client.submit_runs(&contrib).unwrap();
+    assert!(accepted, "{reason}");
+
+    // The shared dataset grew.
+    let after = client.get_repo(JobKind::Sort).unwrap();
+    assert_eq!(after.data.len(), 126 + 8);
+
+    let (acc, rej, repos) = client.stats().unwrap();
+    assert_eq!((acc, rej, repos), (1, 0, 3));
+    server.shutdown();
+}
+
+#[test]
+fn malicious_contribution_rejected_and_quarantined() {
+    let server = start_hub_with_data();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+
+    let mut poison = Dataset::new(JobKind::Sort);
+    let mut rng = Pcg::seed(7);
+    for _ in 0..30 {
+        poison
+            .push(RunRecord {
+                machine_type: "m5.xlarge".into(),
+                scale_out: rng.range(2, 13) as u32,
+                data_size_gb: rng.range_f64(10.0, 20.0),
+                context: vec![],
+                runtime_s: 1e7, // fabricated
+            })
+            .unwrap();
+    }
+    let (accepted, reason) = client.submit_runs(&poison).unwrap();
+    assert!(!accepted, "poison accepted: {reason}");
+
+    // Repo unchanged; rejection counted.
+    let after = client.get_repo(JobKind::Sort).unwrap();
+    assert_eq!(after.data.len(), 126);
+    let (acc, rej, _) = client.stats().unwrap();
+    assert_eq!((acc, rej), (0, 1));
+    server.shutdown();
+}
+
+#[test]
+fn wire_level_garbage_is_survivable() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = start_hub_with_data();
+    let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+    raw.write_all(b"this is not json\n").unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+
+    // Unknown op.
+    raw.write_all(b"{\"op\":\"frobnicate\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown op"), "{line}");
+
+    // The connection (and server) still works afterwards.
+    raw.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    server.shutdown();
+}
+
+#[test]
+fn bootstrap_repo_accepts_first_data_then_validates() {
+    let server = start_hub_with_data();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+
+    // KMeans repo is empty: bootstrap accepts honest data.
+    let first = honest_runs(JobKind::KMeans, 8, 1);
+    let (accepted, reason) = client.submit_runs(&first).unwrap();
+    assert!(accepted, "{reason}");
+
+    // Grow past the bootstrap threshold.
+    let more = honest_runs(JobKind::KMeans, 10, 2);
+    let (accepted, _) = client.submit_runs(&more).unwrap();
+    assert!(accepted);
+
+    // Now the gate is armed: poison must bounce.
+    let mut poison = honest_runs(JobKind::KMeans, 20, 3);
+    for r in &mut poison.records {
+        r.runtime_s *= 500.0;
+    }
+    let (accepted, reason) = client.submit_runs(&poison).unwrap();
+    assert!(!accepted, "poison accepted after bootstrap: {reason}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_consistent_state() {
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = HubClient::connect(&addr).unwrap();
+            for i in 0..5 {
+                let contrib = honest_runs(JobKind::Sort, 3, 1000 + t * 100 + i);
+                let _ = c.submit_runs(&contrib).unwrap();
+                let _ = c.list_repos().unwrap();
+                let _ = c.get_repo(JobKind::Grep).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = HubClient::connect(&addr).unwrap();
+    let (acc, rej, _) = c.stats().unwrap();
+    assert_eq!(acc + rej, 30, "every submission got a verdict");
+    let repo = c.get_repo(JobKind::Sort).unwrap();
+    assert_eq!(repo.data.len(), 126 + (acc as usize) * 3);
+    server.shutdown();
+}
+
+#[test]
+fn get_missing_repo_is_clean_error() {
+    let server = start_hub_with_data();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+    let err = client.get_repo(JobKind::PageRank).unwrap_err();
+    assert!(err.to_string().contains("no repository"), "{err:#}");
+    server.shutdown();
+}

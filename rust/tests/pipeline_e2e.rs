@@ -1,0 +1,139 @@
+//! Integration: generate → train → configure → execute, end to end.
+//!
+//! The decisive check is the paper's §IV-B guarantee: across many
+//! deadline-constrained configurations, the empirical deadline-hit rate
+//! must reach the requested confidence.
+
+use std::sync::Arc;
+
+use c3o::cloud::{Catalog, CloudProvider};
+use c3o::configurator::{configure, UserGoals};
+use c3o::data::JobKind;
+use c3o::runtime::NativeBackend;
+use c3o::sim::{generate_job, Executor, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::util::prng::Pcg;
+
+#[test]
+fn deadline_hit_rate_reaches_confidence() {
+    let catalog = Catalog::aws_like();
+    let shared =
+        generate_job(JobKind::Grep, &GeneratorConfig::default(), &catalog).unwrap();
+    let provider = CloudProvider::new(Catalog::aws_like());
+    let exec = Executor::new(&provider, WorkloadModel::default(), 0xE2E);
+    let backend: Arc<dyn c3o::runtime::FitBackend> = Arc::new(NativeBackend::new());
+
+    let mut rng = Pcg::seed(0xDEAD11);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    let confidence = 0.90;
+    for _ in 0..40 {
+        let d = rng.range_f64(10.0, 20.0);
+        let ratio = *rng.choose(&[0.001, 0.01, 0.1]);
+        let input = JobInput::new(JobKind::Grep, d, vec![ratio]);
+        // A deadline that is feasible but not trivial: interpolate between
+        // the fastest and slowest catalog runtimes for this input.
+        let model = WorkloadModel::default();
+        let mt = catalog.get("m5.xlarge").unwrap();
+        let t_fast = model.mean_runtime(mt, 12, &input);
+        let t_slow = model.mean_runtime(mt, 2, &input);
+        let deadline = t_fast + 0.5 * (t_slow - t_fast);
+
+        let goals = UserGoals { deadline_s: Some(deadline), confidence };
+        let choice = match configure(
+            &catalog,
+            &shared,
+            Some("m5.xlarge"),
+            &input,
+            &goals,
+            backend.clone(),
+        ) {
+            Ok(c) => c,
+            Err(_) => continue, // infeasible at this confidence: skip
+        };
+        let report = exec
+            .run(
+                &c3o::cloud::ClusterConfig {
+                    machine_type: choice.machine_type.clone(),
+                    scale_out: choice.scale_out,
+                },
+                &input,
+                Some(deadline),
+            )
+            .unwrap();
+        total += 1;
+        if report.deadline_met == Some(true) {
+            hits += 1;
+        }
+    }
+    assert!(total >= 25, "too many infeasible cases: {total}");
+    let rate = hits as f64 / total as f64;
+    assert!(
+        rate >= confidence - 0.07, // finite-sample slack on 40 trials
+        "deadline hit rate {rate:.2} < confidence {confidence}"
+    );
+    assert_eq!(provider.active_clusters(), 0, "leaked clusters");
+}
+
+#[test]
+fn configurator_avoids_memory_cliff_in_practice() {
+    // K-Means 20 GB on c5.xlarge: the simulator has a spill cliff below
+    // ~6 nodes. The configurator must steer clear and the executed
+    // runtime must be cliff-free.
+    let catalog = Catalog::aws_like();
+    let shared =
+        generate_job(JobKind::KMeans, &GeneratorConfig::default(), &catalog).unwrap();
+    let backend: Arc<dyn c3o::runtime::FitBackend> = Arc::new(NativeBackend::new());
+    let input = JobInput::new(JobKind::KMeans, 20.0, vec![6.0, 0.001]);
+    let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+    let choice = configure(
+        &catalog,
+        &shared,
+        Some("c5.xlarge"),
+        &input,
+        &goals,
+        backend,
+    )
+    .unwrap();
+    // 20 GB * 1.25 / (0.55 * 8 GB) = 5.7 ⇒ s >= 6 is clean.
+    assert!(choice.scale_out >= 6, "picked cliffed scale-out {}", choice.scale_out);
+}
+
+#[test]
+fn predictions_track_executions_within_materials_error() {
+    // Train on the shared corpus, execute fresh runs, and check the
+    // predictor's MAPE against *live* executions (not just held-out data).
+    let catalog = Catalog::aws_like();
+    let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog)
+        .unwrap()
+        .for_machine("m5.xlarge");
+    let data = c3o::models::TrainData::from_dataset(&shared).unwrap();
+    let backend: Arc<dyn c3o::runtime::FitBackend> = Arc::new(NativeBackend::new());
+    let mut predictor = c3o::models::C3oPredictor::new(backend);
+    predictor.fit(&data).unwrap();
+
+    let provider = CloudProvider::new(Catalog::aws_like());
+    let exec = Executor::new(&provider, WorkloadModel::default(), 77);
+    let mut rng = Pcg::seed(0xACC);
+    let mut errs = Vec::new();
+    for _ in 0..30 {
+        let s = rng.range(2, 13) as u32;
+        let d = rng.range_f64(10.0, 20.0);
+        let input = JobInput::new(JobKind::Sort, d, vec![]);
+        let pred = predictor.predict_one(&[s as f64, d]).unwrap();
+        let rep = exec
+            .run(
+                &c3o::cloud::ClusterConfig {
+                    machine_type: "m5.xlarge".into(),
+                    scale_out: s,
+                },
+                &input,
+                None,
+            )
+            .unwrap();
+        errs.push(((pred - rep.record.runtime_s) / rep.record.runtime_s).abs());
+    }
+    let mape = 100.0 * errs.iter().sum::<f64>() / errs.len() as f64;
+    // Live single runs carry full run-to-run noise (the corpus stores
+    // medians of five), so the bound is looser than Table II's.
+    assert!(mape < 12.0, "live MAPE {mape:.2}%");
+}

@@ -1,0 +1,235 @@
+//! Property-based tests over coordinator invariants (seeded sweeps via
+//! `c3o::util::proptest` — the offline cache has no proptest crate).
+
+use std::sync::Arc;
+
+use c3o::cloud::Catalog;
+use c3o::configurator::{select_scale_out, UserGoals};
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::linalg::Matrix;
+use c3o::models::{C3oPredictor, RuntimeModel, TrainData};
+use c3o::runtime::NativeBackend;
+use c3o::util::erf::{confidence_multiplier, erf, erf_inv};
+use c3o::util::prng::Pcg;
+use c3o::util::proptest::{forall, forall_res};
+
+fn world(rng: &mut Pcg, n: usize) -> TrainData {
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..n {
+        let s = rng.range(2, 13) as f64;
+        let (d, k) = if i % 3 == 0 {
+            (20.0, 5.0)
+        } else {
+            (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64)
+        };
+        rows.push(vec![s, d, k]);
+        y.push((1.0 / s + 0.02 * s) * (10.0 + 4.0 * d + 9.0 * k)
+            * (1.0 + 0.03 * rng.normal()));
+    }
+    TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+}
+
+#[test]
+fn prop_erf_inverse_round_trip() {
+    forall(
+        "erf(erf_inv(x)) == x",
+        300,
+        |rng| rng.range_f64(-0.999, 0.999),
+        |&x| (erf(erf_inv(x)) - x).abs() < 1e-9,
+    );
+}
+
+#[test]
+fn prop_confidence_multiplier_quantile_semantics() {
+    // P(eps <= mu + m*sigma) == c for Gaussian residuals: check via
+    // Monte-Carlo against the multiplier.
+    forall_res(
+        "multiplier is the c-quantile",
+        20,
+        |rng| (rng.range_f64(0.6, 0.99), rng.next_u64()),
+        |&(c, seed)| {
+            let m = confidence_multiplier(c);
+            let mut rng = Pcg::seed(seed);
+            let n = 20_000;
+            let below = (0..n).filter(|_| rng.normal() <= m).count();
+            let frac = below as f64 / n as f64;
+            anyhow::ensure!((frac - c).abs() < 0.015, "c={c} frac={frac}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_c3o_never_worse_than_all_candidates() {
+    // The selection report's chosen MAPE is the min over candidates by
+    // construction; verify over random worlds (guards regressions in the
+    // scoring plumbing).
+    forall_res(
+        "C3O selection picks the argmin",
+        15,
+        |rng| {
+            let n = rng.range(12, 40);
+            world(rng, n)
+        },
+        |data| {
+            let mut p = C3oPredictor::new(Arc::new(NativeBackend::new()));
+            let report = p.fit(data)?;
+            let min = report
+                .scores
+                .iter()
+                .map(|(_, s)| s.mape)
+                .fold(f64::INFINITY, f64::min);
+            anyhow::ensure!((report.chosen_score.mape - min).abs() < 1e-12);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scaleout_monotone_in_deadline() {
+    // Looser deadlines can only keep or *lower* the chosen scale-out.
+    let catalog = Catalog::aws_like();
+    let mut p = C3oPredictor::new(Arc::new(NativeBackend::new()));
+    let mut rng = Pcg::seed(0x5CA1E);
+    let data = world(&mut rng, 60);
+    p.fit(&data).unwrap();
+    let input = c3o::sim::JobInput::new(JobKind::KMeans, 20.0, vec![5.0, 0.001]);
+
+    forall_res(
+        "scale-out monotone in deadline",
+        40,
+        |rng| {
+            let d1 = rng.range_f64(30.0, 400.0);
+            let d2 = d1 + rng.range_f64(1.0, 300.0);
+            (d1, d2)
+        },
+        |&(tight, loose)| {
+            let choose = |deadline: f64| {
+                select_scale_out(
+                    &catalog,
+                    "m5.xlarge",
+                    &p,
+                    &input,
+                    &UserGoals { deadline_s: Some(deadline), confidence: 0.9 },
+                    0.0,
+                    8.0,
+                )
+            };
+            match (choose(tight), choose(loose)) {
+                (Ok(a), Ok(b)) => {
+                    anyhow::ensure!(
+                        b.scale_out <= a.scale_out,
+                        "loose {} > tight {}",
+                        b.scale_out,
+                        a.scale_out
+                    );
+                }
+                (Err(_), Ok(_)) => {}  // tight infeasible, loose ok: fine
+                (Ok(_), Err(e)) => anyhow::bail!("loose infeasible but tight ok: {e}"),
+                (Err(_), Err(_)) => {} // both infeasible: fine
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dataset_tsv_round_trip() {
+    forall_res(
+        "dataset TSV round-trips",
+        50,
+        |rng| {
+            let job = *rng.choose(&JobKind::ALL);
+            let n = rng.range(1, 20);
+            let mut ds = Dataset::new(job);
+            for _ in 0..n {
+                ds.push(RunRecord {
+                    machine_type: format!("m{}.xlarge", rng.range(1, 9)),
+                    scale_out: rng.range(1, 30) as u32,
+                    data_size_gb: rng.range_f64(0.1, 50.0),
+                    context: (0..job.context_features())
+                        .map(|_| rng.range_f64(0.0001, 100.0))
+                        .collect(),
+                    runtime_s: rng.range_f64(1.0, 10_000.0),
+                })
+                .unwrap();
+            }
+            ds
+        },
+        |ds| {
+            let table = ds.to_table()?;
+            let text = table.to_text()?;
+            let back = Dataset::from_table(ds.job, &c3o::util::tsv::Table::parse(&text)?)?;
+            anyhow::ensure!(back.len() == ds.len());
+            for (a, b) in ds.records.iter().zip(&back.records) {
+                anyhow::ensure!(a.machine_type == b.machine_type);
+                anyhow::ensure!(a.scale_out == b.scale_out);
+                anyhow::ensure!((a.runtime_s - b.runtime_s).abs() < 1e-9);
+                anyhow::ensure!((a.data_size_gb - b.data_size_gb).abs() < 1e-9);
+                for (x, y) in a.context.iter().zip(&b.context) {
+                    anyhow::ensure!((x - y).abs() < 1e-9);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gbm_predictions_bounded_by_target_range() {
+    // Squared-loss leaf means can never exceed the observed target range.
+    forall_res(
+        "GBM stays within target hull",
+        20,
+        |rng| {
+            let n = rng.range(5, 50);
+            (world(rng, n), rng.range_f64(1.0, 40.0), rng.range_f64(5.0, 35.0))
+        },
+        |(data, s, d)| {
+            let mut m = c3o::models::Gbm::with_defaults();
+            m.fit(data)?;
+            let lo = data.y.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = data.y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let p = m.predict_one(&[*s, *d, 5.0])?;
+            let slack = 1e-9 * hi.abs().max(1.0);
+            anyhow::ensure!(
+                p >= lo - slack && p <= hi + slack,
+                "p={p} outside [{lo}, {hi}]"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_loo_is_permutation_invariant_for_ernest() {
+    // Shuffling training rows must not change Ernest's LOO prediction for
+    // a given (physical) point.
+    forall_res(
+        "Ernest LOO permutation-invariant",
+        15,
+        |rng| {
+            let n = rng.range(6, 20);
+            let data = world(rng, n);
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            (data, perm)
+        },
+        |(data, perm)| {
+            let model = c3o::models::Ernest::new(Arc::new(NativeBackend::new()));
+            let base = model.loo_predictions(data)?;
+            let shuffled = data.subset(perm);
+            let shuf = model.loo_predictions(&shuffled)?;
+            for (pos, &orig) in perm.iter().enumerate() {
+                anyhow::ensure!(
+                    (shuf[pos] - base[orig]).abs() < 1e-6,
+                    "row {orig}: {} vs {}",
+                    shuf[pos],
+                    base[orig]
+                );
+            }
+            Ok(())
+        },
+    );
+}

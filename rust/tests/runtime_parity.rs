@@ -1,0 +1,196 @@
+//! Integration: PJRT engine (AOT artifacts) vs native backend parity.
+//!
+//! The artifacts compute in f32 with fixed padded shapes and iterative
+//! NNLS; the native backend computes in f64 with exact solvers. Parity is
+//! therefore approximate — tolerances below reflect f32 Gram conditioning,
+//! and the *predictions* (what the models actually consume) are compared
+//! tighter than the raw coefficients.
+//!
+//! Requires `make artifacts` (fails with a pointer if missing).
+
+use std::sync::Arc;
+
+use c3o::linalg::Matrix;
+use c3o::models::{Bom, Ernest, RuntimeModel, TrainData};
+use c3o::runtime::{Engine, FitBackend, NativeBackend};
+use c3o::util::prng::Pcg;
+
+fn engine() -> Arc<Engine> {
+    static ONCE: std::sync::OnceLock<Arc<Engine>> = std::sync::OnceLock::new();
+    ONCE.get_or_init(|| {
+        Arc::new(
+            Engine::load_default()
+                .expect("artifacts missing — run `make artifacts` before cargo test"),
+        )
+    })
+    .clone()
+}
+
+/// A well-scaled random ridge problem with LOO-style masks.
+fn problem(seed: u64, n: usize, f: usize, b: usize) -> (Matrix, Vec<f64>, Matrix) {
+    let mut rng = Pcg::seed(seed);
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..f).map(|_| rng.f64() * 2.0 - 0.5).collect())
+        .collect();
+    let beta: Vec<f64> = (0..f).map(|_| rng.f64() * 3.0).collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            r.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>() + 0.01 * rng.normal()
+        })
+        .collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    let mut w = Matrix::zeros(b, n);
+    for bi in 0..b {
+        for j in 0..n {
+            w[(bi, j)] = 1.0;
+        }
+        w[(bi, bi % n)] = 0.0; // LOO-ish masks
+    }
+    (x, y, w)
+}
+
+#[test]
+fn ols_predictions_agree() {
+    let eng = engine();
+    let native = NativeBackend::new();
+    for seed in [1u64, 2, 3] {
+        let (x, y, w) = problem(seed, 40, 5, 16);
+        // MIN_LAM on the engine path is 1e-4; use the same for parity.
+        let (_, p_e) = eng.ols_batch(&x, &y, &w, 1e-4).unwrap();
+        let (_, p_n) = native.ols_batch(&x, &y, &w, 1e-4).unwrap();
+        let scale = y.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(
+            p_e.max_abs_diff(&p_n) < 2e-3 * scale.max(1.0),
+            "seed {seed}: diff {}",
+            p_e.max_abs_diff(&p_n)
+        );
+    }
+}
+
+#[test]
+fn nnls_predictions_agree() {
+    let eng = engine();
+    let native = NativeBackend::new();
+    for seed in [4u64, 5] {
+        let (x, y, w) = problem(seed, 32, 4, 8);
+        let (t_e, p_e) = eng.nnls_batch(&x, &y, &w, 1e-4).unwrap();
+        let (_, p_n) = native.nnls_batch(&x, &y, &w, 1e-4).unwrap();
+        // Coefficients must be nonnegative on both paths.
+        for v in t_e.data() {
+            assert!(*v >= -1e-6, "negative NNLS coefficient {v}");
+        }
+        let scale = y.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(
+            p_e.max_abs_diff(&p_n) < 2e-2 * scale.max(1.0),
+            "seed {seed}: diff {}",
+            p_e.max_abs_diff(&p_n)
+        );
+    }
+}
+
+#[test]
+fn predict_grid_agrees() {
+    let eng = engine();
+    let native = NativeBackend::new();
+    let mut rng = Pcg::seed(6);
+    let theta = Matrix::from_rows(
+        &(0..8)
+            .map(|_| (0..4).map(|_| rng.f64()).collect::<Vec<_>>())
+            .collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let xq = Matrix::from_rows(
+        &(0..10)
+            .map(|_| (0..4).map(|_| rng.f64() * 5.0).collect::<Vec<_>>())
+            .collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let a = eng.predict_grid(&theta, &xq).unwrap();
+    let b = native.predict_grid(&theta, &xq).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn oversized_problems_fall_back_to_native() {
+    let eng = engine();
+    let before = eng.fallbacks();
+    let (x, y, w) = problem(7, 150, 5, 8); // N=150 > 128
+    let (_, p_e) = eng.ols_batch(&x, &y, &w, 1e-4).unwrap();
+    assert!(eng.fallbacks() > before, "fallback not counted");
+    // And the fallback result is the native result exactly.
+    let native = NativeBackend::new();
+    let (_, p_n) = native.ols_batch(&x, &y, &w, 1e-4).unwrap();
+    assert!(p_e.max_abs_diff(&p_n) < 1e-12);
+}
+
+#[test]
+fn ernest_model_parity_between_backends() {
+    let eng = engine();
+    let mut rng = Pcg::seed(8);
+    let rows: Vec<Vec<f64>> = (0..30)
+        .map(|_| vec![rng.range(2, 13) as f64, rng.range_f64(10.0, 30.0)])
+        .collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| 20.0 + 3.0 * r[1] / r[0] + 5.0 * r[0].log2() + 0.8 * r[0])
+        .collect();
+    let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+
+    let mut e_pjrt = Ernest::new(eng);
+    let mut e_native = Ernest::new(Arc::new(NativeBackend::new()));
+    e_pjrt.fit(&data).unwrap();
+    e_native.fit(&data).unwrap();
+    for s in [2u32, 6, 12] {
+        let q = [s as f64, 20.0];
+        let a = e_pjrt.predict_one(&q).unwrap();
+        let b = e_native.predict_one(&q).unwrap();
+        assert!((a / b - 1.0).abs() < 0.05, "s={s}: pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn bom_model_parity_between_backends() {
+    let eng = engine();
+    let mut rng = Pcg::seed(9);
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..48 {
+        let s = rng.range(2, 13) as f64;
+        let (d, k) = if i % 2 == 0 { (20.0, 5.0) } else { (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64) };
+        rows.push(vec![s, d, k]);
+        y.push((1.0 / s + 0.02 * s) * (10.0 + 4.0 * d + 9.0 * k));
+    }
+    let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+
+    let mut b_pjrt = Bom::new(eng);
+    let mut b_native = Bom::new(Arc::new(NativeBackend::new()));
+    b_pjrt.fit(&data).unwrap();
+    b_native.fit(&data).unwrap();
+    for s in [3u32, 8, 11] {
+        let q = [s as f64, 20.0, 5.0];
+        let a = b_pjrt.predict_one(&q).unwrap();
+        let b = b_native.predict_one(&q).unwrap();
+        assert!((a / b - 1.0).abs() < 0.08, "s={s}: pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn engine_survives_concurrent_callers() {
+    let eng = engine();
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            let eng = eng.clone();
+            std::thread::spawn(move || {
+                for i in 0..5 {
+                    let (x, y, w) = problem(100 + t * 10 + i, 24, 4, 8);
+                    let (_, p) = eng.ols_batch(&x, &y, &w, 1e-4).unwrap();
+                    assert_eq!(p.rows(), 8);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
