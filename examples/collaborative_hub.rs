@@ -7,12 +7,17 @@
 //! Act 2 — the validation gate (§III-C-b): honest contributions are
 //!   accepted, fabricated ones are rejected, and prediction quality is
 //!   unharmed afterwards.
+//! Act 3 — the v1 prediction service: the hub answers `predict_batch` and
+//!   `configure` itself from its fitted-model cache, so users get
+//!   predictions without downloading the corpus or fitting anything.
 //!
 //! Run with:  cargo run --release --example collaborative_hub
 
 use std::sync::Arc;
 
+use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
+use c3o::configurator::UserGoals;
 use c3o::data::{Dataset, JobKind, RunRecord};
 use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
 use c3o::models::{C3oPredictor, TrainData};
@@ -34,8 +39,13 @@ fn main() -> anyhow::Result<()> {
     repo.maintainer_machine = Some("m5.xlarge".into());
     repo.data = generate_job(JobKind::KMeans, &GeneratorConfig::default(), &catalog)?;
     state.insert(repo);
-    let server =
-        HubServer::start("127.0.0.1:0", state, catalog.clone(), ValidationPolicy::default())?;
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog.clone(),
+        ValidationPolicy::default(),
+        backend.clone(),
+    ));
+    let server = HubServer::start("127.0.0.1:0", service)?;
     let mut client = HubClient::connect(&server.addr.to_string())?;
 
     // ---------- Act 1: cold start ----------
@@ -80,8 +90,14 @@ fn main() -> anyhow::Result<()> {
     let (m_local, mape_local) = score(&local_only)?;
     let (m_global, mape_global) = score(&global)?;
     println!("=== Act 1: cold start on an unseen context (k=8) ===");
-    println!("  local-only ({} pts, k=3 history): {m_local:<4} MAPE {mape_local:.2}%", local_only.len());
-    println!("  hub global ({} pts, all contexts): {m_global:<4} MAPE {mape_global:.2}%", global.len());
+    println!(
+        "  local-only ({} pts, k=3 history): {m_local:<4} MAPE {mape_local:.2}%",
+        local_only.len()
+    );
+    println!(
+        "  hub global ({} pts, all contexts): {m_global:<4} MAPE {mape_global:.2}%",
+        global.len()
+    );
     println!(
         "  collaboration gain: {:.1}x lower error\n",
         mape_local / mape_global.max(1e-9)
@@ -96,8 +112,13 @@ fn main() -> anyhow::Result<()> {
         let input = JobInput::new(JobKind::KMeans, rng.range_f64(10.0, 20.0), vec![6.0, 0.001]);
         honest.push(model.observe(mt, s, &input, &mut rng))?;
     }
-    let (ok, reason) = client.submit_runs(&honest)?;
-    println!("  honest user (10 runs, k=6)    : {} — {reason}", if ok { "ACCEPTED" } else { "REJECTED" });
+    let v = client.submit_runs(&honest)?;
+    println!(
+        "  honest user (10 runs, k=6)    : {} — {} (repo revision {})",
+        if v.accepted { "ACCEPTED" } else { "REJECTED" },
+        v.reason,
+        v.revision
+    );
 
     // Saboteur: fabricated runtimes.
     let mut poison = Dataset::new(JobKind::KMeans);
@@ -110,8 +131,12 @@ fn main() -> anyhow::Result<()> {
             runtime_s: 1.0, // "my cluster is magic"
         })?;
     }
-    let (ok, reason) = client.submit_runs(&poison)?;
-    println!("  saboteur (25 fabricated runs) : {} — {reason}", if ok { "ACCEPTED" } else { "REJECTED" });
+    let v = client.submit_runs(&poison)?;
+    println!(
+        "  saboteur (25 fabricated runs) : {} — {}",
+        if v.accepted { "ACCEPTED" } else { "REJECTED" },
+        v.reason
+    );
 
     // Prediction quality after the attack attempt.
     let after = client.get_repo(JobKind::KMeans)?.data.for_machine("m5.xlarge");
@@ -119,11 +144,43 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  global MAPE after the episode : {mape_after:.2}% (before: {mape_global:.2}%)"
     );
-    let (acc, rej, _) = client.stats()?;
-    println!("  hub counters                  : {acc} accepted, {rej} rejected");
+    let s = client.stats()?;
+    println!(
+        "  hub counters                  : {} accepted, {} rejected",
+        s.accepted, s.rejected
+    );
+
+    // ---------- Act 3: server-side prediction (API v1) ----------
+    println!("\n=== Act 3: the hub predicts and configures itself ===");
+    let rows: Vec<Vec<f64>> = (2..=12).map(|s| vec![s as f64, 15.0, 8.0, 0.001]).collect();
+    let b1 = client.predict_batch(JobKind::KMeans, None, &rows)?;
+    let b2 = client.predict_batch(JobKind::KMeans, None, &rows)?;
+    println!(
+        "  predict_batch ({} rows)       : model {} on {} (cold fit, then cached: {})",
+        rows.len(),
+        b1.model,
+        b1.machine_type,
+        b2.cached
+    );
+    let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+    let choice = client.configure(JobKind::KMeans, 15.0, vec![8.0, 0.001], &goals, None)?;
+    println!(
+        "  hub-side configure            : {} x{} (est {:.0} s, UCB {:.0} s, ${:.3})",
+        choice.machine_type,
+        choice.scale_out,
+        choice.predicted_runtime_s,
+        choice.runtime_ucb_s,
+        choice.est_cost_usd
+    );
+    let s = client.stats()?;
+    println!(
+        "  prediction service            : {} cold fit(s), {} cache hit(s)",
+        s.fits, s.cache_hits
+    );
 
     server.shutdown();
     anyhow::ensure!(mape_global < mape_local, "collaboration must help the cold-start user");
     anyhow::ensure!(mape_after < mape_global * 2.0, "gate failed to protect accuracy");
+    anyhow::ensure!(b2.cached, "second batch must be served from the cache");
     Ok(())
 }

@@ -16,6 +16,7 @@
 
 use std::sync::Arc;
 
+use c3o::api::service::PredictionService;
 use c3o::cloud::{Catalog, CloudProvider, ClusterConfig};
 use c3o::configurator::{configure, UserGoals};
 use c3o::data::JobKind;
@@ -77,12 +78,13 @@ fn main() -> anyhow::Result<()> {
         repo.data = ds;
         state.insert(repo);
     }
-    let server = HubServer::start(
-        "127.0.0.1:0",
+    let service = Arc::new(PredictionService::new(
         state,
         catalog.clone(),
         ValidationPolicy::default(),
-    )?;
+        backend.clone(),
+    ));
+    let server = HubServer::start("127.0.0.1:0", service)?;
     println!("[e2e] hub listening on {}", server.addr);
 
     // --- The cloud.
@@ -147,8 +149,7 @@ fn main() -> anyhow::Result<()> {
         // Step 6: contribute the observation back.
         let mut contrib = c3o::data::Dataset::new(job);
         contrib.push(report.record.clone())?;
-        let (accepted, _) = client.submit_runs(&contrib)?;
-        if accepted {
+        if client.submit_runs(&contrib)?.accepted {
             contributions_accepted += 1;
         }
 
@@ -167,7 +168,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- Headline report.
     let mut client = HubClient::connect(&server.addr.to_string())?;
-    let (acc, rej, _) = client.stats()?;
+    let hub_stats = client.stats()?;
+    let (acc, rej) = (hub_stats.accepted, hub_stats.rejected);
     println!("\n=== E7 end-to-end report ===");
     println!("users served            : {deadline_total}");
     println!(

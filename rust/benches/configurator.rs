@@ -85,7 +85,10 @@ fn main() {
     common::write_csv("configurator.csv", "confidence,jobs,hit_rate", &csv);
 
     // --- configure() latency (interactive path).
-    println!("\nconfigure() latency (fit + sweep, Grep n={}):", shared.for_machine(TARGET_MACHINE).len());
+    println!(
+        "\nconfigure() latency (fit + sweep, Grep n={}):",
+        shared.for_machine(TARGET_MACHINE).len()
+    );
     let input = JobInput::new(JobKind::Grep, 15.0, vec![0.01]);
     let goals = UserGoals { deadline_s: Some(600.0), confidence: 0.95 };
     let r = bench("configure/grep", 1, 10, || {

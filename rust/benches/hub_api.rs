@@ -1,0 +1,85 @@
+//! E8 — the hub API service layer: cold fit vs fitted-model cache.
+//!
+//! Measures `predict_batch` through `PredictionService` (the exact path a
+//! v1 `predict_batch` frame takes after parsing) in two regimes:
+//!
+//!   * cold — a fresh service per call: every batch pays the full dynamic
+//!     model selection fit (CV all candidates + refit winner),
+//!   * warm — one long-lived service: every batch is answered from the
+//!     fitted-model cache, zero refits.
+//!
+//! The ratio is what the server-side cache buys a loaded hub: the paper's
+//! 10-30 s selection phase amortizes across every user of a repository
+//! instead of being paid per request.
+
+mod common;
+
+use std::sync::Arc;
+
+use c3o::api::service::PredictionService;
+use c3o::bench::bench;
+use c3o::cloud::Catalog;
+use c3o::data::JobKind;
+use c3o::hub::{HubState, Repository, ValidationPolicy};
+use c3o::runtime::FitBackend;
+use c3o::sim::{generate_job, GeneratorConfig};
+
+fn shared_state() -> Arc<HubState> {
+    let catalog = Catalog::aws_like();
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "standard Spark sort");
+    repo.maintainer_machine = Some("m5.xlarge".to_string());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog)
+        .expect("generate corpus");
+    state.insert(repo);
+    state
+}
+
+fn make_service(state: Arc<HubState>, backend: Arc<dyn FitBackend>) -> PredictionService {
+    PredictionService::new(state, Catalog::aws_like(), ValidationPolicy::default(), backend)
+}
+
+fn main() {
+    let backend = common::backend();
+    // Built once: the corpus is shared; only the service (and hence the
+    // model cache) differs between the cold and warm regimes.
+    let state = shared_state();
+    let mut csv = Vec::new();
+
+    println!("== E8: hub API — cold fit vs fitted-model cache ==\n");
+    for &nrows in &[11usize, 64, 256] {
+        let rows: Vec<Vec<f64>> = (0..nrows)
+            .map(|i| vec![2.0 + (i % 11) as f64, 10.0 + (i % 20) as f64])
+            .collect();
+
+        // Cold: a fresh service per iteration — every call refits.
+        let (st, be) = (state.clone(), backend.clone());
+        let r_cold = bench(&format!("predict_batch_cold/{nrows}"), 1, 5, || {
+            let svc = make_service(st.clone(), be.clone());
+            svc.predict_batch(JobKind::Sort, None, &rows).unwrap()
+        });
+        println!("  {}", r_cold.per_iter_display());
+
+        // Warm: one service, primed once — served from the cache.
+        let svc = make_service(state.clone(), backend.clone());
+        svc.predict_batch(JobKind::Sort, None, &rows).unwrap();
+        let r_warm = bench(&format!("predict_batch_warm/{nrows}"), 3, 30, || {
+            svc.predict_batch(JobKind::Sort, None, &rows).unwrap()
+        });
+        println!("  {}", r_warm.per_iter_display());
+
+        let (fits, hits, entries) = svc.fit_stats();
+        assert_eq!(fits, 1, "warm path must never refit (got {fits} fits)");
+        assert_eq!(entries, 1);
+        println!(
+            "    -> cache speedup: {:.1}x ({} fit, {} hits)\n",
+            r_cold.mean_s / r_warm.mean_s.max(1e-12),
+            fits,
+            hits
+        );
+        csv.push(format!("predict_batch_cold,{nrows},{:.6}", r_cold.mean_s));
+        csv.push(format!("predict_batch_warm,{nrows},{:.6}", r_warm.mean_s));
+    }
+
+    common::write_csv("hub_api.csv", "bench,rows,mean_s", &csv);
+}

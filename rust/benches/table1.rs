@@ -18,7 +18,16 @@ fn main() {
 
     println!("\nTable I: Overview of Runtime Data for Model Evaluation\n");
     let p = TablePrinter::new(vec![10, 8, 16, 14, 12]);
-    println!("{}", p.row(&["job".into(), "runs".into(), "input sizes".into(), "scale-outs".into(), "#features".into()]));
+    println!(
+        "{}",
+        p.row(&[
+            "job".into(),
+            "runs".into(),
+            "input sizes".into(),
+            "scale-outs".into(),
+            "#features".into(),
+        ])
+    );
     println!("{}", p.sep());
     let mut csv = Vec::new();
     for ds in &datasets {

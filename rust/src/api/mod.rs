@@ -1,0 +1,25 @@
+//! Versioned Hub API (the typed protocol layer).
+//!
+//! * [`proto`] — v1 wire protocol: [`proto::Request`] / [`proto::Response`]
+//!   envelopes with explicit versioning (`v`), correlation ids (`id`), a
+//!   typed [`proto::Op`] set, structured [`proto::WireError`]s, and typed
+//!   payload structs. The single serialize/deserialize path for all hub
+//!   traffic.
+//! * [`service`] — [`service::PredictionService`]: the server-side engine
+//!   that answers every op, owning a fitted-model cache keyed by
+//!   `(job, machine_type)` and invalidated by repository revisions, so
+//!   `predict_batch` on a warm cache performs zero refits.
+//!
+//! Future hub endpoints (auth, quotas, sharding) land here: add an
+//! [`proto::Op`] variant + payload type, then a `dispatch` arm in the
+//! service.
+
+pub mod proto;
+pub mod service;
+
+pub use proto::{
+    BatchPrediction, CatalogPayload, ErrorCode, HubStats, Op, Prediction, RepoList,
+    RepoPayload, RepoSummary, Request, Response, SubmitOutcome, WireError,
+    PROTOCOL_VERSION,
+};
+pub use service::PredictionService;

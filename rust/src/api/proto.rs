@@ -1,0 +1,1100 @@
+//! Hub wire protocol **v1**: typed request/response frames.
+//!
+//! Every frame is one newline-delimited JSON object. Requests carry an
+//! explicit protocol version `v`, a client-chosen correlation `id`, an op
+//! name and the op's fields; responses echo `v` and `id` and carry either
+//! a `payload` object (`ok: true`) or a structured `error{code, message}`
+//! (`ok: false`). All serialization funnels through this module — neither
+//! [`crate::hub::server`] nor [`crate::hub::client`] builds raw
+//! [`Json`] frames.
+//!
+//! See `DESIGN.md` §4 for the full specification with one example frame
+//! per op.
+
+use anyhow::Context;
+
+use crate::configurator::{ConfigChoice, ScaleOutOption};
+use crate::data::JobKind;
+use crate::util::json::Json;
+
+/// The wire version this build speaks. Bump on breaking frame changes;
+/// servers reject other versions with [`ErrorCode::VersionMismatch`].
+pub const PROTOCOL_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Machine-readable error categories carried in `error.code`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Frame is not a JSON object / not parseable at all.
+    BadRequest,
+    /// Missing or unsupported protocol version `v`.
+    VersionMismatch,
+    /// A required field is absent or has the wrong type.
+    MissingField,
+    /// The op name is not part of this protocol version.
+    UnknownOp,
+    /// The referenced entity (repository, machine type) does not exist.
+    NotFound,
+    /// The request parsed but its content is invalid (bad TSV, wrong
+    /// feature arity, out-of-range confidence, ...).
+    InvalidData,
+    /// The hub cannot serve this yet (e.g. not enough runtime data to fit).
+    Unavailable,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::VersionMismatch => "version_mismatch",
+            ErrorCode::MissingField => "missing_field",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::InvalidData => "invalid_data",
+            ErrorCode::Unavailable => "unavailable",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Decode a wire code; unknown codes (from a newer server) degrade to
+    /// [`ErrorCode::Internal`] rather than failing the whole reply.
+    pub fn from_wire(s: &str) -> ErrorCode {
+        match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "version_mismatch" => ErrorCode::VersionMismatch,
+            "missing_field" => ErrorCode::MissingField,
+            "unknown_op" => ErrorCode::UnknownOp,
+            "not_found" => ErrorCode::NotFound,
+            "invalid_data" => ErrorCode::InvalidData,
+            "unavailable" => ErrorCode::Unavailable,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// A structured protocol error: what went wrong, machine- and
+/// human-readable.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        WireError { code, message: message.into() }
+    }
+
+    /// Wrap an internal error chain.
+    pub fn internal(e: &anyhow::Error) -> Self {
+        WireError::new(ErrorCode::Internal, format!("{e:#}"))
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.as_str().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// Field helpers (server-side decode -> WireError)
+// ---------------------------------------------------------------------------
+
+fn need_str<'a>(frame: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    frame.get(key).and_then(Json::as_str).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::MissingField,
+            format!("missing or non-string field `{key}`"),
+        )
+    })
+}
+
+fn need_f64(frame: &Json, key: &str) -> Result<f64, WireError> {
+    frame.get(key).and_then(Json::as_f64).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::MissingField,
+            format!("missing or non-numeric field `{key}`"),
+        )
+    })
+}
+
+fn opt_str(frame: &Json, key: &str) -> Option<String> {
+    frame.get(key).and_then(Json::as_str).map(|s| s.to_string())
+}
+
+fn opt_f64(frame: &Json, key: &str) -> Option<f64> {
+    frame.get(key).and_then(Json::as_f64)
+}
+
+fn need_job(frame: &Json) -> Result<JobKind, WireError> {
+    need_str(frame, "job")?
+        .parse::<JobKind>()
+        .map_err(|e| WireError::new(ErrorCode::InvalidData, format!("{e:#}")))
+}
+
+fn f64_array(j: &Json, key: &str) -> Result<Vec<f64>, WireError> {
+    let arr = j.get(key).and_then(Json::as_arr).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::MissingField,
+            format!("missing or non-array field `{key}`"),
+        )
+    })?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64().ok_or_else(|| {
+                WireError::new(
+                    ErrorCode::InvalidData,
+                    format!("field `{key}` must contain only numbers"),
+                )
+            })
+        })
+        .collect()
+}
+
+fn opt_f64_array(j: &Json, key: &str) -> Result<Vec<f64>, WireError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(Vec::new()),
+        Some(_) => f64_array(j, key),
+    }
+}
+
+fn rows_array(j: &Json, key: &str) -> Result<Vec<Vec<f64>>, WireError> {
+    let arr = j.get(key).and_then(Json::as_arr).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::MissingField,
+            format!("missing or non-array field `{key}`"),
+        )
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, row) in arr.iter().enumerate() {
+        let cells = row.as_arr().ok_or_else(|| {
+            WireError::new(
+                ErrorCode::InvalidData,
+                format!("`{key}[{i}]` must be an array of numbers"),
+            )
+        })?;
+        out.push(
+            cells
+                .iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        WireError::new(
+                            ErrorCode::InvalidData,
+                            format!("`{key}[{i}]` must contain only numbers"),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<f64>, WireError>>()?,
+        );
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Field helpers (client-side decode -> anyhow)
+// ---------------------------------------------------------------------------
+
+fn jstr(j: &Json, key: &str) -> crate::Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("payload missing string `{key}`"))?
+        .to_string())
+}
+
+fn jf64(j: &Json, key: &str) -> crate::Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("payload missing number `{key}`"))
+}
+
+fn ju64(j: &Json, key: &str) -> crate::Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .with_context(|| format!("payload missing integer `{key}`"))
+}
+
+fn jbool(j: &Json, key: &str) -> crate::Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .with_context(|| format!("payload missing bool `{key}`"))
+}
+
+fn jf64_arr(j: &Json, key: &str) -> crate::Result<Vec<f64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("payload missing array `{key}`"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("`{key}`: non-numeric element")))
+        .collect()
+}
+
+fn opt_string(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(|s| s.to_string())
+}
+
+fn f64s_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Ops
+// ---------------------------------------------------------------------------
+
+/// The v1 operation set.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Browse available repositories (Fig. 4 step 1).
+    ListRepos,
+    /// Download a repository's metadata + runtime data (Fig. 4 step 2).
+    GetRepo { job: JobKind },
+    /// Contribute runtime data; goes through the §III-C-b gate.
+    SubmitRuns { job: JobKind, data_tsv: String },
+    /// The hub's machine-type catalog.
+    Catalog,
+    /// Hub + prediction-service counters.
+    Stats,
+    /// Server-side prediction for one feature row.
+    Predict {
+        job: JobKind,
+        machine_type: Option<String>,
+        features: Vec<f64>,
+    },
+    /// Server-side prediction for many rows against ONE fitted model (the
+    /// E4 hot path, answered from the fitted-model cache).
+    PredictBatch {
+        job: JobKind,
+        machine_type: Option<String>,
+        rows: Vec<Vec<f64>>,
+    },
+    /// Full §IV configuration (machine type + scale-out) on the hub.
+    Configure {
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        deadline_s: Option<f64>,
+        confidence: f64,
+        machine_type: Option<String>,
+    },
+    /// Ask the server to stop accepting connections and quiesce.
+    Shutdown,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::ListRepos => "list_repos",
+            Op::GetRepo { .. } => "get_repo",
+            Op::SubmitRuns { .. } => "submit_runs",
+            Op::Catalog => "catalog",
+            Op::Stats => "stats",
+            Op::Predict { .. } => "predict",
+            Op::PredictBatch { .. } => "predict_batch",
+            Op::Configure { .. } => "configure",
+            Op::Shutdown => "shutdown",
+        }
+    }
+
+    fn encode_fields(&self, pairs: &mut Vec<(&'static str, Json)>) {
+        match self {
+            Op::ListRepos | Op::Catalog | Op::Stats | Op::Shutdown => {}
+            Op::GetRepo { job } => pairs.push(("job", Json::Str(job.to_string()))),
+            Op::SubmitRuns { job, data_tsv } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                pairs.push(("data_tsv", Json::Str(data_tsv.clone())));
+            }
+            Op::Predict { job, machine_type, features } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                if let Some(m) = machine_type {
+                    pairs.push(("machine_type", Json::Str(m.clone())));
+                }
+                pairs.push(("features", f64s_to_json(features)));
+            }
+            Op::PredictBatch { job, machine_type, rows } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                if let Some(m) = machine_type {
+                    pairs.push(("machine_type", Json::Str(m.clone())));
+                }
+                pairs.push((
+                    "rows",
+                    Json::Arr(rows.iter().map(|r| f64s_to_json(r)).collect()),
+                ));
+            }
+            Op::Configure {
+                job,
+                data_size_gb,
+                context,
+                deadline_s,
+                confidence,
+                machine_type,
+            } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                pairs.push(("data_size_gb", Json::Num(*data_size_gb)));
+                pairs.push(("context", f64s_to_json(context)));
+                if let Some(d) = deadline_s {
+                    pairs.push(("deadline_s", Json::Num(*d)));
+                }
+                pairs.push(("confidence", Json::Num(*confidence)));
+                if let Some(m) = machine_type {
+                    pairs.push(("machine_type", Json::Str(m.clone())));
+                }
+            }
+        }
+    }
+
+    fn decode(name: &str, frame: &Json) -> Result<Op, WireError> {
+        Ok(match name {
+            "list_repos" => Op::ListRepos,
+            "get_repo" => Op::GetRepo { job: need_job(frame)? },
+            "submit_runs" => Op::SubmitRuns {
+                job: need_job(frame)?,
+                data_tsv: need_str(frame, "data_tsv")?.to_string(),
+            },
+            "catalog" => Op::Catalog,
+            "stats" => Op::Stats,
+            "predict" => Op::Predict {
+                job: need_job(frame)?,
+                machine_type: opt_str(frame, "machine_type"),
+                features: f64_array(frame, "features")?,
+            },
+            "predict_batch" => Op::PredictBatch {
+                job: need_job(frame)?,
+                machine_type: opt_str(frame, "machine_type"),
+                rows: rows_array(frame, "rows")?,
+            },
+            "configure" => Op::Configure {
+                job: need_job(frame)?,
+                data_size_gb: need_f64(frame, "data_size_gb")?,
+                context: opt_f64_array(frame, "context")?,
+                deadline_s: opt_f64(frame, "deadline_s"),
+                confidence: opt_f64(frame, "confidence").unwrap_or(0.95),
+                machine_type: opt_str(frame, "machine_type"),
+            },
+            "shutdown" => Op::Shutdown,
+            other => {
+                return Err(WireError::new(
+                    ErrorCode::UnknownOp,
+                    format!("unknown op: {other}"),
+                ))
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request
+// ---------------------------------------------------------------------------
+
+/// One request frame: `{v, id, op, ...op fields}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub v: u64,
+    pub id: u64,
+    pub op: Op,
+}
+
+/// Why a request line could not be turned into a [`Request`]. Carries the
+/// best-effort `id` recovered from the frame so the error response can
+/// still be correlated (0 when the frame was unreadable).
+#[derive(Debug, Clone)]
+pub struct RequestParseError {
+    pub id: u64,
+    pub error: WireError,
+}
+
+impl Request {
+    pub fn new(id: u64, op: Op) -> Self {
+        Request { v: PROTOCOL_VERSION, id, op }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("v", Json::Num(self.v as f64)),
+            ("id", Json::Num(self.id as f64)),
+            ("op", Json::Str(self.op.name().to_string())),
+        ];
+        self.op.encode_fields(&mut pairs);
+        Json::obj(pairs)
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse + validate one request line (server side).
+    pub fn parse(line: &str) -> Result<Request, RequestParseError> {
+        let fail = |id: u64, code: ErrorCode, msg: String| RequestParseError {
+            id,
+            error: WireError::new(code, msg),
+        };
+        let frame = Json::parse(line.trim()).map_err(|e| {
+            fail(0, ErrorCode::BadRequest, format!("malformed JSON: {e:#}"))
+        })?;
+        if !matches!(frame, Json::Obj(_)) {
+            return Err(fail(
+                0,
+                ErrorCode::BadRequest,
+                "request frame must be a JSON object".to_string(),
+            ));
+        }
+        let id = frame.get("id").and_then(Json::as_u64).unwrap_or(0);
+        let v = match frame.get("v").and_then(Json::as_u64) {
+            Some(v) => v,
+            None => {
+                return Err(fail(
+                    id,
+                    ErrorCode::VersionMismatch,
+                    "missing protocol version field `v`".to_string(),
+                ))
+            }
+        };
+        if v != PROTOCOL_VERSION {
+            return Err(fail(
+                id,
+                ErrorCode::VersionMismatch,
+                format!("unsupported protocol version {v} (server speaks v{PROTOCOL_VERSION})"),
+            ));
+        }
+        if frame.get("id").and_then(Json::as_u64).is_none() {
+            return Err(fail(
+                0,
+                ErrorCode::MissingField,
+                "missing or non-integer request field `id`".to_string(),
+            ));
+        }
+        let name = need_str(&frame, "op").map_err(|error| RequestParseError { id, error })?;
+        let op = Op::decode(name, &frame).map_err(|error| RequestParseError { id, error })?;
+        Ok(Request { v, id, op })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response
+// ---------------------------------------------------------------------------
+
+/// One response frame: `{v, id, ok, payload}` or `{v, id, ok, error}`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub v: u64,
+    pub id: u64,
+    pub result: Result<Json, WireError>,
+}
+
+impl Response {
+    pub fn ok(id: u64, payload: Json) -> Self {
+        Response { v: PROTOCOL_VERSION, id, result: Ok(payload) }
+    }
+
+    pub fn err(id: u64, error: WireError) -> Self {
+        Response { v: PROTOCOL_VERSION, id, result: Err(error) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("v", Json::Num(self.v as f64)),
+            ("id", Json::Num(self.id as f64)),
+            ("ok", Json::Bool(self.result.is_ok())),
+        ];
+        match &self.result {
+            Ok(payload) => pairs.push(("payload", payload.clone())),
+            Err(e) => pairs.push(("error", e.to_json())),
+        }
+        Json::obj(pairs)
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse one response line (client side).
+    pub fn parse(line: &str) -> crate::Result<Response> {
+        let frame = Json::parse(line.trim()).context("malformed hub response")?;
+        let v = frame
+            .get("v")
+            .and_then(Json::as_u64)
+            .context("hub response missing `v`")?;
+        let id = frame
+            .get("id")
+            .and_then(Json::as_u64)
+            .context("hub response missing `id`")?;
+        let ok = frame
+            .get("ok")
+            .and_then(Json::as_bool)
+            .context("hub response missing `ok`")?;
+        let result = if ok {
+            Ok(frame.get("payload").cloned().unwrap_or(Json::Null))
+        } else {
+            let err = frame.get("error").context("error response missing `error`")?;
+            Err(WireError::new(
+                ErrorCode::from_wire(err.get("code").and_then(Json::as_str).unwrap_or("")),
+                err.get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown hub error")
+                    .to_string(),
+            ))
+        };
+        Ok(Response { v, id, result })
+    }
+
+    /// Client-side envelope check: version, id correlation, ok flag.
+    /// Returns the payload on success.
+    pub fn payload(self, expect_id: u64) -> crate::Result<Json> {
+        anyhow::ensure!(
+            self.v == PROTOCOL_VERSION,
+            "protocol version mismatch: hub replied v{} (client speaks v{PROTOCOL_VERSION})",
+            self.v
+        );
+        anyhow::ensure!(
+            self.id == expect_id,
+            "response id mismatch: sent {expect_id}, got {}",
+            self.id
+        );
+        match self.result {
+            Ok(payload) => Ok(payload),
+            Err(e) => anyhow::bail!("hub error {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payloads
+// ---------------------------------------------------------------------------
+
+/// One repository in a `list_repos` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepoSummary {
+    pub job: JobKind,
+    pub description: String,
+    pub records: usize,
+    pub maintainer_machine: Option<String>,
+    /// Monotonic dataset revision; bumps on every accepted contribution.
+    pub revision: u64,
+}
+
+impl RepoSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("description", Json::Str(self.description.clone())),
+            ("records", Json::Num(self.records as f64)),
+            (
+                "maintainer_machine",
+                match &self.maintainer_machine {
+                    Some(m) => Json::Str(m.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("revision", Json::Num(self.revision as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(RepoSummary {
+            job: jstr(j, "job")?.parse()?,
+            description: jstr(j, "description")?,
+            records: ju64(j, "records")? as usize,
+            maintainer_machine: opt_string(j, "maintainer_machine"),
+            revision: ju64(j, "revision")?,
+        })
+    }
+}
+
+/// `list_repos` payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepoList {
+    pub repos: Vec<RepoSummary>,
+}
+
+impl RepoList {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "repos",
+            Json::Arr(self.repos.iter().map(|r| r.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let repos = j
+            .get("repos")
+            .and_then(Json::as_arr)
+            .context("payload missing array `repos`")?
+            .iter()
+            .map(RepoSummary::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(RepoList { repos })
+    }
+}
+
+/// `get_repo` payload: metadata + the full runtime dataset as TSV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepoPayload {
+    pub job: JobKind,
+    pub description: String,
+    pub maintainer_machine: Option<String>,
+    pub revision: u64,
+    pub data_tsv: String,
+}
+
+impl RepoPayload {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("description", Json::Str(self.description.clone())),
+            (
+                "maintainer_machine",
+                match &self.maintainer_machine {
+                    Some(m) => Json::Str(m.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("revision", Json::Num(self.revision as f64)),
+            ("data_tsv", Json::Str(self.data_tsv.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(RepoPayload {
+            job: jstr(j, "job")?.parse()?,
+            description: jstr(j, "description")?,
+            maintainer_machine: opt_string(j, "maintainer_machine"),
+            revision: ju64(j, "revision")?,
+            data_tsv: jstr(j, "data_tsv")?,
+        })
+    }
+}
+
+/// `submit_runs` payload: the §III-C-b gate's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitOutcome {
+    pub accepted: bool,
+    pub reason: String,
+    /// Repository revision after the submission (bumped iff accepted).
+    pub revision: u64,
+}
+
+impl SubmitOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::Bool(self.accepted)),
+            ("reason", Json::Str(self.reason.clone())),
+            ("revision", Json::Num(self.revision as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(SubmitOutcome {
+            accepted: jbool(j, "accepted")?,
+            reason: jstr(j, "reason")?,
+            revision: ju64(j, "revision")?,
+        })
+    }
+}
+
+/// One machine type in a `catalog` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineTypeInfo {
+    pub name: String,
+    pub vcpus: u32,
+    pub memory_gb: f64,
+    pub price_per_hour: f64,
+    pub family: String,
+}
+
+impl MachineTypeInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vcpus", Json::Num(self.vcpus as f64)),
+            ("memory_gb", Json::Num(self.memory_gb)),
+            ("price_per_hour", Json::Num(self.price_per_hour)),
+            ("family", Json::Str(self.family.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(MachineTypeInfo {
+            name: jstr(j, "name")?,
+            vcpus: ju64(j, "vcpus")? as u32,
+            memory_gb: jf64(j, "memory_gb")?,
+            price_per_hour: jf64(j, "price_per_hour")?,
+            family: jstr(j, "family")?,
+        })
+    }
+}
+
+/// `catalog` payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatalogPayload {
+    pub types: Vec<MachineTypeInfo>,
+    pub provisioning_delay_s: f64,
+}
+
+impl CatalogPayload {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "types",
+                Json::Arr(self.types.iter().map(|t| t.to_json()).collect()),
+            ),
+            ("provisioning_delay_s", Json::Num(self.provisioning_delay_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let types = j
+            .get("types")
+            .and_then(Json::as_arr)
+            .context("payload missing array `types`")?
+            .iter()
+            .map(MachineTypeInfo::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(CatalogPayload { types, provisioning_delay_s: jf64(j, "provisioning_delay_s")? })
+    }
+}
+
+/// `stats` payload: hub counters + prediction-service cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HubStats {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub repos: u64,
+    /// Cold fits performed by the prediction service since start.
+    pub fits: u64,
+    /// Requests answered from the fitted-model cache.
+    pub cache_hits: u64,
+    /// Live entries in the fitted-model cache.
+    pub cache_entries: u64,
+}
+
+impl HubStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("repos", Json::Num(self.repos as f64)),
+            ("fits", Json::Num(self.fits as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_entries", Json::Num(self.cache_entries as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(HubStats {
+            accepted: ju64(j, "accepted")?,
+            rejected: ju64(j, "rejected")?,
+            repos: ju64(j, "repos")?,
+            fits: ju64(j, "fits")?,
+            cache_hits: ju64(j, "cache_hits")?,
+            cache_entries: ju64(j, "cache_entries")?,
+        })
+    }
+}
+
+/// `predict` payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub machine_type: String,
+    /// Name of the model dynamic selection chose (GBM | BOM | OGB | ...).
+    pub model: String,
+    /// Whether the fitted model came from the cache.
+    pub cached: bool,
+    pub runtime_s: f64,
+}
+
+impl Prediction {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine_type", Json::Str(self.machine_type.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("cached", Json::Bool(self.cached)),
+            ("runtime_s", Json::Num(self.runtime_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(Prediction {
+            machine_type: jstr(j, "machine_type")?,
+            model: jstr(j, "model")?,
+            cached: jbool(j, "cached")?,
+            runtime_s: jf64(j, "runtime_s")?,
+        })
+    }
+}
+
+/// `predict_batch` payload: one fitted model, many rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPrediction {
+    pub machine_type: String,
+    pub model: String,
+    pub cached: bool,
+    pub runtimes: Vec<f64>,
+}
+
+impl BatchPrediction {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine_type", Json::Str(self.machine_type.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("cached", Json::Bool(self.cached)),
+            ("runtimes", f64s_to_json(&self.runtimes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(BatchPrediction {
+            machine_type: jstr(j, "machine_type")?,
+            model: jstr(j, "model")?,
+            cached: jbool(j, "cached")?,
+            runtimes: jf64_arr(j, "runtimes")?,
+        })
+    }
+}
+
+/// Encode a configurator decision as a `configure` payload.
+pub fn config_choice_to_json(c: &ConfigChoice) -> Json {
+    Json::obj(vec![
+        ("machine_type", Json::Str(c.machine_type.clone())),
+        ("scale_out", Json::Num(c.scale_out as f64)),
+        ("predicted_runtime_s", Json::Num(c.predicted_runtime_s)),
+        ("runtime_ucb_s", Json::Num(c.runtime_ucb_s)),
+        ("est_cost_usd", Json::Num(c.est_cost_usd)),
+        (
+            "options",
+            Json::Arr(
+                c.options
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("scale_out", Json::Num(o.scale_out as f64)),
+                            ("predicted_runtime_s", Json::Num(o.predicted_runtime_s)),
+                            ("runtime_ucb_s", Json::Num(o.runtime_ucb_s)),
+                            ("cost_usd", Json::Num(o.cost_usd)),
+                            ("bottleneck", Json::Bool(o.bottleneck)),
+                            (
+                                "admissible",
+                                match o.admissible {
+                                    Some(b) => Json::Bool(b),
+                                    None => Json::Null,
+                                },
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Decode a `configure` payload back into the configurator's native type,
+/// so hub mode hands callers the same [`ConfigChoice`] local mode does.
+pub fn config_choice_from_json(j: &Json) -> crate::Result<ConfigChoice> {
+    let options = j
+        .get("options")
+        .and_then(Json::as_arr)
+        .context("payload missing array `options`")?
+        .iter()
+        .map(|o| {
+            Ok(ScaleOutOption {
+                scale_out: ju64(o, "scale_out")? as u32,
+                predicted_runtime_s: jf64(o, "predicted_runtime_s")?,
+                runtime_ucb_s: jf64(o, "runtime_ucb_s")?,
+                cost_usd: jf64(o, "cost_usd")?,
+                bottleneck: jbool(o, "bottleneck")?,
+                admissible: o.get("admissible").and_then(Json::as_bool),
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(ConfigChoice {
+        machine_type: jstr(j, "machine_type")?,
+        scale_out: ju64(j, "scale_out")? as u32,
+        predicted_runtime_s: jf64(j, "predicted_runtime_s")?,
+        runtime_ucb_s: jf64(j, "runtime_ucb_s")?,
+        est_cost_usd: jf64(j, "est_cost_usd")?,
+        options,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(op: Op) {
+        let req = Request::new(42, op);
+        let back = Request::parse(&req.to_line()).expect("parse");
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn request_round_trips_every_op() {
+        round_trip(Op::ListRepos);
+        round_trip(Op::GetRepo { job: JobKind::Sort });
+        round_trip(Op::SubmitRuns {
+            job: JobKind::Grep,
+            data_tsv: "a\tb\n1\t2\n".to_string(),
+        });
+        round_trip(Op::Catalog);
+        round_trip(Op::Stats);
+        round_trip(Op::Predict {
+            job: JobKind::KMeans,
+            machine_type: Some("m5.xlarge".into()),
+            features: vec![4.0, 15.0, 8.0, 0.001],
+        });
+        round_trip(Op::PredictBatch {
+            job: JobKind::Sort,
+            machine_type: None,
+            rows: vec![vec![2.0, 10.0], vec![4.0, 10.0]],
+        });
+        round_trip(Op::Configure {
+            job: JobKind::PageRank,
+            data_size_gb: 0.25,
+            context: vec![0.1, 0.001],
+            deadline_s: Some(900.0),
+            confidence: 0.95,
+            machine_type: None,
+        });
+        round_trip(Op::Shutdown);
+    }
+
+    #[test]
+    fn malformed_json_is_bad_request_with_id_zero() {
+        let e = Request::parse("this is not json").unwrap_err();
+        assert_eq!(e.id, 0);
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        let e = Request::parse("[1,2,3]").unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn missing_version_is_version_mismatch() {
+        let e = Request::parse(r#"{"id":7,"op":"stats"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::VersionMismatch);
+        assert_eq!(e.id, 7, "id still recovered for correlation");
+    }
+
+    #[test]
+    fn wrong_version_is_version_mismatch() {
+        let e = Request::parse(r#"{"v":2,"id":7,"op":"stats"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::VersionMismatch);
+        assert!(e.error.message.contains("version 2"), "{}", e.error.message);
+    }
+
+    #[test]
+    fn missing_id_is_missing_field() {
+        let e = Request::parse(r#"{"v":1,"op":"stats"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::MissingField);
+        assert_eq!(e.id, 0);
+    }
+
+    #[test]
+    fn unknown_op_keeps_request_id() {
+        let e = Request::parse(r#"{"v":1,"id":9,"op":"frobnicate"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::UnknownOp);
+        assert_eq!(e.id, 9);
+    }
+
+    #[test]
+    fn missing_op_field_is_missing_field() {
+        let e = Request::parse(r#"{"v":1,"id":3}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::MissingField);
+        let e = Request::parse(r#"{"v":1,"id":3,"op":"get_repo"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::MissingField);
+        assert!(e.error.message.contains("job"), "{}", e.error.message);
+    }
+
+    #[test]
+    fn bad_job_value_is_invalid_data() {
+        let e = Request::parse(r#"{"v":1,"id":3,"op":"get_repo","job":"mapreduce"}"#)
+            .unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::InvalidData);
+    }
+
+    #[test]
+    fn response_ok_round_trip_and_payload_check() {
+        let r = Response::ok(5, Json::obj(vec![("x", Json::Num(1.0))]));
+        let back = Response::parse(&r.to_line()).unwrap();
+        assert_eq!(back.id, 5);
+        let payload = back.payload(5).unwrap();
+        assert_eq!(payload.get("x").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn response_error_round_trip() {
+        let r = Response::err(6, WireError::new(ErrorCode::NotFound, "no repository for sort"));
+        let line = r.to_line();
+        assert!(line.contains(r#""ok":false"#), "{line}");
+        assert!(line.contains(r#""code":"not_found""#), "{line}");
+        let back = Response::parse(&line).unwrap();
+        let err = back.payload(6).unwrap_err();
+        assert!(err.to_string().contains("not_found"), "{err:#}");
+        assert!(err.to_string().contains("no repository"), "{err:#}");
+    }
+
+    #[test]
+    fn mismatched_response_id_rejected() {
+        let r = Response::ok(999, Json::Null);
+        let err = r.payload(5).unwrap_err();
+        assert!(err.to_string().contains("id mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn mismatched_response_version_rejected() {
+        let mut r = Response::ok(5, Json::Null);
+        r.v = 2;
+        let err = r.payload(5).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn config_choice_round_trips() {
+        let c = ConfigChoice {
+            machine_type: "m5.xlarge".into(),
+            scale_out: 6,
+            predicted_runtime_s: 123.25,
+            runtime_ucb_s: 150.5,
+            est_cost_usd: 0.32,
+            options: vec![ScaleOutOption {
+                scale_out: 6,
+                predicted_runtime_s: 123.25,
+                runtime_ucb_s: 150.5,
+                cost_usd: 0.32,
+                bottleneck: false,
+                admissible: Some(true),
+            }],
+        };
+        let back = config_choice_from_json(&config_choice_to_json(&c)).unwrap();
+        assert_eq!(back.machine_type, c.machine_type);
+        assert_eq!(back.scale_out, c.scale_out);
+        assert_eq!(back.predicted_runtime_s, c.predicted_runtime_s);
+        assert_eq!(back.options.len(), 1);
+        assert_eq!(back.options[0].admissible, Some(true));
+    }
+
+    #[test]
+    fn stats_payload_round_trips() {
+        let s = HubStats {
+            accepted: 3,
+            rejected: 1,
+            repos: 5,
+            fits: 2,
+            cache_hits: 7,
+            cache_entries: 2,
+        };
+        assert_eq!(HubStats::from_json(&s.to_json()).unwrap(), s);
+    }
+}

@@ -1,0 +1,572 @@
+//! Server-side prediction service: the hub answers `predict` /
+//! `predict_batch` / `configure` itself from the shared corpus, instead of
+//! every user downloading the runtime data and fitting locally.
+//!
+//! The service owns a cache of fitted [`C3oPredictor`]s keyed by
+//! `(job, machine_type)` and stamped with the repository's dataset
+//! *revision* at fit time. [`crate::hub::HubState`] bumps a repository's
+//! revision on every accepted contribution, so a stale cache entry is
+//! detected by a simple revision comparison — and an accepted
+//! `submit_runs` additionally drops exactly that job's entries so they do
+//! not pin memory. Entries for other jobs are untouched.
+//!
+//! All ops of the v1 protocol dispatch through [`PredictionService::handle_line`];
+//! the TCP layer in [`crate::hub::server`] only frames lines.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cloud::Catalog;
+use crate::configurator::{
+    fit_predictor, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
+};
+use crate::data::{Dataset, JobKind};
+use crate::hub::{HubState, ValidationPolicy};
+use crate::models::C3oPredictor;
+use crate::runtime::FitBackend;
+use crate::sim::JobInput;
+use crate::util::json::Json;
+use crate::util::tsv::Table;
+
+use super::proto::{
+    self, BatchPrediction, CatalogPayload, ErrorCode, HubStats, MachineTypeInfo, Op,
+    Prediction, RepoList, RepoPayload, RepoSummary, Request, Response, SubmitOutcome,
+    WireError,
+};
+
+/// A fitted predictor plus everything the configurator needs to reuse it.
+pub struct FittedModel {
+    pub machine_type: String,
+    /// Winner of dynamic model selection (GBM | BOM | OGB | ...).
+    pub chosen: String,
+    /// CV residual mean μ (§IV-B).
+    pub resid_mu: f64,
+    /// CV residual std σ (§IV-B).
+    pub resid_sigma: f64,
+    /// Dataset revision this model was fitted on.
+    pub revision: u64,
+    pub predictor: C3oPredictor,
+}
+
+struct CacheSlot {
+    revision: u64,
+    model: Arc<FittedModel>,
+}
+
+/// The hub's stateful prediction engine.
+pub struct PredictionService {
+    state: Arc<HubState>,
+    catalog: Catalog,
+    policy: ValidationPolicy,
+    backend: Arc<dyn FitBackend>,
+    cache: Mutex<HashMap<(JobKind, String), CacheSlot>>,
+    /// Per-key single-flight gates: concurrent cold requests for the same
+    /// `(job, machine_type)` serialize here, and all but the first reuse
+    /// the first's fit (bounded by jobs x machine types).
+    fit_gates: Mutex<HashMap<(JobKind, String), Arc<Mutex<()>>>>,
+    fits: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl PredictionService {
+    pub fn new(
+        state: Arc<HubState>,
+        catalog: Catalog,
+        policy: ValidationPolicy,
+        backend: Arc<dyn FitBackend>,
+    ) -> Self {
+        PredictionService {
+            state,
+            catalog,
+            policy,
+            backend,
+            cache: Mutex::new(HashMap::new()),
+            fit_gates: Mutex::new(HashMap::new()),
+            fits: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn state(&self) -> &Arc<HubState> {
+        &self.state
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// `(cold fits, cache hits, live cache entries)` since start.
+    pub fn fit_stats(&self) -> (u64, u64, u64) {
+        let entries = self.cache.lock().unwrap().len() as u64;
+        (
+            self.fits.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            entries,
+        )
+    }
+
+    // -- fitted-model cache -------------------------------------------------
+
+    /// Fetch (or fit) the predictor for `(job, machine_type)`. Returns the
+    /// model and whether it came from the cache.
+    fn fitted(
+        &self,
+        job: JobKind,
+        machine_type: Option<&str>,
+    ) -> Result<(Arc<FittedModel>, bool), WireError> {
+        let repo = self.state.get(job).ok_or_else(|| {
+            WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
+        })?;
+        // §IV-A machine choice: explicit request > maintainer designation >
+        // general-purpose fallback — identical to local mode.
+        let machine = select_machine_type(
+            &self.catalog,
+            &repo.data,
+            machine_type.or(repo.maintainer_machine.as_deref()),
+        )
+        .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
+
+        let key = (job, machine.clone());
+        if let Some(slot) = self.cache.lock().unwrap().get(&key) {
+            if slot.revision == repo.revision {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((slot.model.clone(), true));
+            }
+        }
+
+        // Cold or stale. Single-flight: serialize fits per key so N
+        // concurrent cold requests pay for one fit, not N.
+        let gate = self
+            .fit_gates
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(Mutex::new(())))
+            .clone();
+        let _fitting = gate.lock().unwrap();
+
+        // Fresh snapshot under the gate: while we waited, the previous
+        // holder may have fitted — possibly on a newer revision than our
+        // pre-gate snapshot — so both the re-check and the fit must use
+        // current data.
+        let repo = self.state.get(job).ok_or_else(|| {
+            WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
+        })?;
+        if let Some(slot) = self.cache.lock().unwrap().get(&key) {
+            if slot.revision == repo.revision {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((slot.model.clone(), true));
+            }
+        }
+
+        // Fit outside the cache lock (fits are slow).
+        let (predictor, report) = fit_predictor(&repo.data, &machine, self.backend.clone())
+            .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
+        self.fits.fetch_add(1, Ordering::Relaxed);
+        let model = Arc::new(FittedModel {
+            machine_type: machine.clone(),
+            chosen: report.chosen.clone(),
+            resid_mu: report.chosen_score.resid_mean,
+            resid_sigma: report.chosen_score.resid_std,
+            revision: repo.revision,
+            predictor,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, CacheSlot { revision: repo.revision, model: model.clone() });
+        Ok((model, false))
+    }
+
+    fn check_arity(&self, job: JobKind, width: usize, what: &str) -> Result<(), WireError> {
+        let want = 2 + job.context_features();
+        if width != want {
+            return Err(WireError::new(
+                ErrorCode::InvalidData,
+                format!(
+                    "{job}: expected {want} {what} [scale_out, data_size_gb, context...], got {width}"
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    // -- typed op implementations -------------------------------------------
+
+    pub fn list_repos(&self) -> RepoList {
+        let repos = self
+            .state
+            .jobs()
+            .into_iter()
+            .filter_map(|job| self.state.get(job))
+            .map(|r| RepoSummary {
+                job: r.job,
+                description: r.description.clone(),
+                records: r.data.len(),
+                maintainer_machine: r.maintainer_machine.clone(),
+                revision: r.revision,
+            })
+            .collect();
+        RepoList { repos }
+    }
+
+    pub fn get_repo(&self, job: JobKind) -> Result<RepoPayload, WireError> {
+        let repo = self.state.get(job).ok_or_else(|| {
+            WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
+        })?;
+        let data_tsv = repo
+            .data
+            .to_table()
+            .and_then(|t| t.to_text())
+            .map_err(|e| WireError::internal(&e))?;
+        Ok(RepoPayload {
+            job: repo.job,
+            description: repo.description.clone(),
+            maintainer_machine: repo.maintainer_machine.clone(),
+            revision: repo.revision,
+            data_tsv,
+        })
+    }
+
+    pub fn submit_tsv(&self, job: JobKind, data_tsv: &str) -> Result<SubmitOutcome, WireError> {
+        if self.state.get(job).is_none() {
+            return Err(WireError::new(
+                ErrorCode::NotFound,
+                format!("no repository for {job}"),
+            ));
+        }
+        let contribution = Table::parse(data_tsv)
+            .and_then(|t| Dataset::from_table(job, &t))
+            .map_err(|e| WireError::new(ErrorCode::InvalidData, format!("{e:#}")))?;
+        // Atomic validate+merge — see HubState::submit for the race this
+        // prevents. The returned revision is read inside the same critical
+        // section, so it is exactly this submission's revision.
+        let (verdict, revision) = self
+            .state
+            .submit(contribution, &self.policy)
+            .map_err(|e| WireError::internal(&e))?;
+        if verdict.accepted {
+            // The revision key already makes stale entries unreachable;
+            // drop them eagerly so exactly this job's slots free up.
+            self.cache.lock().unwrap().retain(|(j, _), _| *j != job);
+        }
+        Ok(SubmitOutcome { accepted: verdict.accepted, reason: verdict.reason, revision })
+    }
+
+    pub fn catalog_payload(&self) -> CatalogPayload {
+        CatalogPayload {
+            types: self
+                .catalog
+                .types()
+                .iter()
+                .map(|t| MachineTypeInfo {
+                    name: t.name.clone(),
+                    vcpus: t.vcpus,
+                    memory_gb: t.memory_gb,
+                    price_per_hour: t.price_per_hour,
+                    family: t.family.to_string(),
+                })
+                .collect(),
+            provisioning_delay_s: self.catalog.provisioning_delay_s,
+        }
+    }
+
+    pub fn stats_payload(&self) -> HubStats {
+        let (accepted, rejected) = self.state.counters();
+        let (fits, cache_hits, cache_entries) = self.fit_stats();
+        HubStats {
+            accepted,
+            rejected,
+            repos: self.state.jobs().len() as u64,
+            fits,
+            cache_hits,
+            cache_entries,
+        }
+    }
+
+    pub fn predict(
+        &self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        features: &[f64],
+    ) -> Result<Prediction, WireError> {
+        self.check_arity(job, features.len(), "features")?;
+        let (fm, cached) = self.fitted(job, machine_type)?;
+        let runtime_s = fm
+            .predictor
+            .predict_one(features)
+            .map_err(|e| WireError::internal(&e))?;
+        Ok(Prediction {
+            machine_type: fm.machine_type.clone(),
+            model: fm.chosen.clone(),
+            cached,
+            runtime_s,
+        })
+    }
+
+    pub fn predict_batch(
+        &self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        rows: &[Vec<f64>],
+    ) -> Result<BatchPrediction, WireError> {
+        for row in rows {
+            self.check_arity(job, row.len(), "features per row")?;
+        }
+        let (fm, cached) = self.fitted(job, machine_type)?;
+        let runtimes = rows
+            .iter()
+            .map(|row| fm.predictor.predict_one(row))
+            .collect::<crate::Result<Vec<f64>>>()
+            .map_err(|e| WireError::internal(&e))?;
+        Ok(BatchPrediction {
+            machine_type: fm.machine_type.clone(),
+            model: fm.chosen.clone(),
+            cached,
+            runtimes,
+        })
+    }
+
+    pub fn configure(
+        &self,
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        goals: &UserGoals,
+        machine_type: Option<&str>,
+    ) -> Result<ConfigChoice, WireError> {
+        self.check_arity(job, 2 + context.len(), "features")?;
+        let (fm, _) = self.fitted(job, machine_type)?;
+        let input = JobInput::new(job, data_size_gb, context);
+        select_scale_out(
+            &self.catalog,
+            &fm.machine_type,
+            &fm.predictor,
+            &input,
+            goals,
+            fm.resid_mu,
+            fm.resid_sigma,
+        )
+        .map_err(|e| WireError::new(ErrorCode::InvalidData, format!("{e:#}")))
+    }
+
+    // -- protocol dispatch --------------------------------------------------
+
+    /// Handle one wire line and produce the response frame. Never panics on
+    /// untrusted input; every failure is a structured `error{code}`.
+    pub fn handle_line(&self, line: &str, stop: &AtomicBool) -> Response {
+        match Request::parse(line) {
+            Ok(req) => {
+                let id = req.id;
+                match self.dispatch(req.op, stop) {
+                    Ok(payload) => Response::ok(id, payload),
+                    Err(e) => Response::err(id, e),
+                }
+            }
+            Err(e) => Response::err(e.id, e.error),
+        }
+    }
+
+    fn dispatch(&self, op: Op, stop: &AtomicBool) -> Result<Json, WireError> {
+        match op {
+            Op::ListRepos => Ok(self.list_repos().to_json()),
+            Op::GetRepo { job } => Ok(self.get_repo(job)?.to_json()),
+            Op::SubmitRuns { job, data_tsv } => Ok(self.submit_tsv(job, &data_tsv)?.to_json()),
+            Op::Catalog => Ok(self.catalog_payload().to_json()),
+            Op::Stats => Ok(self.stats_payload().to_json()),
+            Op::Predict { job, machine_type, features } => {
+                Ok(self.predict(job, machine_type.as_deref(), &features)?.to_json())
+            }
+            Op::PredictBatch { job, machine_type, rows } => {
+                Ok(self.predict_batch(job, machine_type.as_deref(), &rows)?.to_json())
+            }
+            Op::Configure {
+                job,
+                data_size_gb,
+                context,
+                deadline_s,
+                confidence,
+                machine_type,
+            } => {
+                let goals = UserGoals { deadline_s, confidence };
+                let choice =
+                    self.configure(job, data_size_gb, context, &goals, machine_type.as_deref())?;
+                Ok(proto::config_choice_to_json(&choice))
+            }
+            Op::Shutdown => {
+                stop.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hub::Repository;
+    use crate::runtime::NativeBackend;
+    use crate::sim::{generate_job, GeneratorConfig, WorkloadModel};
+    use crate::util::prng::Pcg;
+
+    fn service_with_data() -> PredictionService {
+        let catalog = Catalog::aws_like();
+        let state = Arc::new(HubState::new());
+        for job in [JobKind::Sort, JobKind::Grep] {
+            let mut repo = Repository::new(job, &format!("spark {job}"));
+            repo.maintainer_machine = Some("m5.xlarge".to_string());
+            repo.data = generate_job(job, &GeneratorConfig::default(), &catalog).unwrap();
+            state.insert(repo);
+        }
+        PredictionService::new(
+            state,
+            catalog,
+            ValidationPolicy::default(),
+            Arc::new(NativeBackend::new()),
+        )
+    }
+
+    fn honest_tsv(job: JobKind, n: usize, seed: u64) -> String {
+        let catalog = Catalog::aws_like();
+        let model = WorkloadModel::default();
+        let mt = catalog.get("m5.xlarge").unwrap();
+        let mut rng = Pcg::seed(seed);
+        let mut ds = Dataset::new(job);
+        for _ in 0..n {
+            let s = rng.range(2, 13) as u32;
+            let ctx = match job {
+                JobKind::Sort => vec![],
+                JobKind::Grep => vec![0.01],
+                _ => vec![5.0, 0.001],
+            };
+            let input = JobInput::new(job, rng.range_f64(10.0, 20.0), ctx);
+            ds.push(model.observe(mt, s, &input, &mut rng)).unwrap();
+        }
+        ds.to_table().unwrap().to_text().unwrap()
+    }
+
+    #[test]
+    fn warm_cache_performs_zero_refits() {
+        let svc = service_with_data();
+        let p = svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        assert!(!p.cached, "first call must be a cold fit");
+        assert_eq!(svc.fit_stats().0, 1);
+
+        let rows: Vec<Vec<f64>> = (2..=12).map(|s| vec![s as f64, 15.0]).collect();
+        let b = svc.predict_batch(JobKind::Sort, None, &rows).unwrap();
+        assert!(b.cached);
+        assert_eq!(b.runtimes.len(), rows.len());
+        let (fits, hits, entries) = svc.fit_stats();
+        assert_eq!(fits, 1, "warm predict_batch must not refit");
+        assert!(hits >= 1);
+        assert_eq!(entries, 1);
+    }
+
+    #[test]
+    fn accepted_submit_invalidates_only_that_job() {
+        let svc = service_with_data();
+        svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        svc.predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+        assert_eq!(svc.fit_stats().0, 2);
+
+        let out = svc.submit_tsv(JobKind::Sort, &honest_tsv(JobKind::Sort, 8, 11)).unwrap();
+        assert!(out.accepted, "{}", out.reason);
+        assert_eq!(out.revision, 1, "accepted submit bumps the revision");
+
+        // Grep is untouched: served from cache, no new fit.
+        let g = svc.predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+        assert!(g.cached);
+        assert_eq!(svc.fit_stats().0, 2);
+
+        // Sort was invalidated: next predict refits on the new revision.
+        let s = svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        assert!(!s.cached);
+        assert_eq!(svc.fit_stats().0, 3);
+    }
+
+    #[test]
+    fn rejected_submit_keeps_cache_and_revision() {
+        let svc = service_with_data();
+        svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        // Fabricated runtimes: the §III-C-b gate must bounce them.
+        let mut poison = Dataset::new(JobKind::Sort);
+        let mut rng = Pcg::seed(3);
+        for _ in 0..25 {
+            poison
+                .push(crate::data::RunRecord {
+                    machine_type: "m5.xlarge".into(),
+                    scale_out: rng.range(2, 13) as u32,
+                    data_size_gb: rng.range_f64(10.0, 20.0),
+                    context: vec![],
+                    runtime_s: 1e7,
+                })
+                .unwrap();
+        }
+        let tsv = poison.to_table().unwrap().to_text().unwrap();
+        let out = svc.submit_tsv(JobKind::Sort, &tsv).unwrap();
+        assert!(!out.accepted);
+        assert_eq!(out.revision, 0);
+        let p = svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        assert!(p.cached, "rejected submit must not invalidate the cache");
+    }
+
+    #[test]
+    fn missing_repo_is_not_found() {
+        let svc = service_with_data();
+        let e = svc.predict(JobKind::PageRank, None, &[4.0, 0.25, 0.1, 0.001]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::NotFound);
+        let e = svc.get_repo(JobKind::PageRank).unwrap_err();
+        assert_eq!(e.code, ErrorCode::NotFound);
+    }
+
+    #[test]
+    fn wrong_feature_arity_is_invalid_data() {
+        let svc = service_with_data();
+        let e = svc.predict(JobKind::Sort, None, &[4.0]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidData);
+        let e = svc
+            .predict_batch(JobKind::Grep, None, &[vec![4.0, 15.0]])
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidData);
+    }
+
+    #[test]
+    fn configure_matches_local_configurator() {
+        let svc = service_with_data();
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let remote = svc
+            .configure(JobKind::Sort, 15.0, vec![], &goals, Some("m5.xlarge"))
+            .unwrap();
+        let local = crate::configurator::configure(
+            svc.catalog(),
+            &svc.state().get(JobKind::Sort).unwrap().data,
+            Some("m5.xlarge"),
+            &JobInput::new(JobKind::Sort, 15.0, vec![]),
+            &goals,
+            Arc::new(NativeBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(remote.machine_type, local.machine_type);
+        assert_eq!(remote.scale_out, local.scale_out);
+        assert!((remote.predicted_runtime_s - local.predicted_runtime_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handle_line_never_drops_malformed_input() {
+        let svc = service_with_data();
+        let stop = AtomicBool::new(false);
+        let r = svc.handle_line("not json at all", &stop);
+        let line = r.to_line();
+        assert!(line.contains(r#""ok":false"#), "{line}");
+        assert!(line.contains("bad_request"), "{line}");
+
+        let r = svc.handle_line(r#"{"v":1,"id":4,"op":"stats"}"#, &stop);
+        assert!(r.to_line().contains(r#""ok":true"#));
+        assert!(!stop.load(Ordering::SeqCst));
+
+        let r = svc.handle_line(r#"{"v":1,"id":5,"op":"shutdown"}"#, &stop);
+        assert!(r.to_line().contains(r#""ok":true"#));
+        assert!(stop.load(Ordering::SeqCst), "shutdown op sets the stop flag");
+    }
+}

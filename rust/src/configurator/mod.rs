@@ -21,9 +21,28 @@ use std::sync::Arc;
 
 use crate::cloud::Catalog;
 use crate::data::Dataset;
-use crate::models::{C3oPredictor, TrainData};
+use crate::models::{C3oPredictor, SelectionReport, TrainData};
 use crate::runtime::FitBackend;
 use crate::sim::JobInput;
+
+/// Fit a C3O predictor on one machine type's slice of `shared` — the §IV
+/// training step, shared by local mode and the hub's server-side
+/// `PredictionService` (which caches the result per repository revision).
+pub fn fit_predictor(
+    shared: &Dataset,
+    machine: &str,
+    backend: Arc<dyn FitBackend>,
+) -> crate::Result<(C3oPredictor, SelectionReport)> {
+    let view = shared.for_machine(machine);
+    anyhow::ensure!(
+        view.len() >= 4,
+        "not enough runtime data for machine type {machine}"
+    );
+    let data = TrainData::from_dataset(&view)?;
+    let mut predictor = C3oPredictor::new(backend);
+    let report = predictor.fit(&data)?;
+    Ok((predictor, report))
+}
 
 /// End-to-end configuration: machine type (§IV-A) then scale-out (§IV-B).
 ///
@@ -39,14 +58,7 @@ pub fn configure(
     backend: Arc<dyn FitBackend>,
 ) -> crate::Result<ConfigChoice> {
     let machine = select_machine_type(catalog, shared, maintainer_type)?;
-    let view = shared.for_machine(&machine);
-    anyhow::ensure!(
-        view.len() >= 4,
-        "not enough runtime data for machine type {machine}"
-    );
-    let data = TrainData::from_dataset(&view)?;
-    let mut predictor = C3oPredictor::new(backend);
-    let report = predictor.fit(&data)?;
+    let (predictor, report) = fit_predictor(shared, &machine, backend)?;
     let (mu, sigma) = (report.chosen_score.resid_mean, report.chosen_score.resid_std);
 
     select_scale_out(catalog, &machine, &predictor, input, goals, mu, sigma)

@@ -1,22 +1,26 @@
-//! Hub client: the user-side half of the Fig. 4 workflow.
+//! Hub client: the user-side half of the Fig. 4 workflow, plus the v1
+//! server-side ops (`predict`, `predict_batch`, `configure`).
+//!
+//! Every call goes through the typed [`crate::api::proto`] layer: the
+//! client assigns a fresh correlation id per request, and rejects replies
+//! whose `id` or protocol version do not match.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
 
+use crate::api::proto::{
+    self, BatchPrediction, CatalogPayload, HubStats, Op, Prediction, Request, Response,
+    SubmitOutcome,
+};
+use crate::configurator::{ConfigChoice, UserGoals};
 use crate::data::{Dataset, JobKind};
 use crate::util::json::Json;
 use crate::util::tsv::Table;
 
-/// Listing entry returned by `list_repos`.
-#[derive(Debug, Clone)]
-pub struct RepoInfo {
-    pub job: JobKind,
-    pub description: String,
-    pub records: usize,
-    pub maintainer_machine: Option<String>,
-}
+/// Listing entry returned by `list_repos` (the wire payload type).
+pub type RepoInfo = proto::RepoSummary;
 
 /// Fetched repository (Fig. 4 step 2: job + runtime data + metadata).
 #[derive(Debug, Clone)]
@@ -24,6 +28,8 @@ pub struct FetchedRepo {
     pub job: JobKind,
     pub description: String,
     pub maintainer_machine: Option<String>,
+    /// Dataset revision at fetch time.
+    pub revision: u64,
     pub data: Dataset,
 }
 
@@ -31,6 +37,7 @@ pub struct FetchedRepo {
 pub struct HubClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    next_id: u64,
 }
 
 impl HubClient {
@@ -38,114 +45,126 @@ impl HubClient {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to hub at {addr}"))?;
         stream.set_nodelay(true).ok();
-        Ok(HubClient { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Ok(HubClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
     }
 
-    fn call(&mut self, req: Json) -> crate::Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
+    /// Send one op, await its reply, verify the envelope (version, id,
+    /// ok flag) and return the payload.
+    fn call(&mut self, op: Op) -> crate::Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, op);
+        self.writer.write_all(req.to_line().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
         if self.reader.read_line(&mut line)? == 0 {
             anyhow::bail!("hub closed the connection");
         }
-        let reply = Json::parse(line.trim())?;
-        if reply.get("ok").and_then(|j| j.as_bool()) != Some(true) {
-            let msg = reply
-                .get("error")
-                .and_then(|j| j.as_str())
-                .unwrap_or("unknown hub error");
-            anyhow::bail!("hub error: {msg}");
-        }
-        Ok(reply)
+        Response::parse(&line)?.payload(id)
     }
 
     /// Fig. 4 step 1: browse available jobs.
     pub fn list_repos(&mut self) -> crate::Result<Vec<RepoInfo>> {
-        let reply = self.call(Json::obj(vec![("op", Json::Str("list_repos".into()))]))?;
-        let mut out = Vec::new();
-        for item in reply.get("repos").and_then(|j| j.as_arr()).unwrap_or(&[]) {
-            out.push(RepoInfo {
-                job: item
-                    .get("job")
-                    .and_then(|j| j.as_str())
-                    .context("repo missing job")?
-                    .parse()?,
-                description: item
-                    .get("description")
-                    .and_then(|j| j.as_str())
-                    .unwrap_or("")
-                    .to_string(),
-                records: item
-                    .get("records")
-                    .and_then(|j| j.as_u64())
-                    .unwrap_or(0) as usize,
-                maintainer_machine: item
-                    .get("maintainer_machine")
-                    .and_then(|j| j.as_str())
-                    .map(|s| s.to_string()),
-            });
-        }
-        Ok(out)
+        let payload = self.call(Op::ListRepos)?;
+        Ok(proto::RepoList::from_json(&payload)?.repos)
     }
 
     /// Fig. 4 step 2: download job + associated runtime data.
     pub fn get_repo(&mut self, job: JobKind) -> crate::Result<FetchedRepo> {
-        let reply = self.call(Json::obj(vec![
-            ("op", Json::Str("get_repo".into())),
-            ("job", Json::Str(job.to_string())),
-        ]))?;
-        let tsv = reply
-            .get("data_tsv")
-            .and_then(|j| j.as_str())
-            .context("reply missing data_tsv")?;
-        let data = Dataset::from_table(job, &Table::parse(tsv)?)?;
+        let payload = self.call(Op::GetRepo { job })?;
+        let repo = proto::RepoPayload::from_json(&payload)?;
+        let data = Dataset::from_table(job, &Table::parse(&repo.data_tsv)?)?;
         Ok(FetchedRepo {
             job,
-            description: reply
-                .get("description")
-                .and_then(|j| j.as_str())
-                .unwrap_or("")
-                .to_string(),
-            maintainer_machine: reply
-                .get("maintainer_machine")
-                .and_then(|j| j.as_str())
-                .map(|s| s.to_string()),
+            description: repo.description,
+            maintainer_machine: repo.maintainer_machine,
+            revision: repo.revision,
             data,
         })
     }
 
     /// Fig. 4 step 6: contribute newly generated runtime data.
-    /// Returns (accepted, reason).
-    pub fn submit_runs(&mut self, data: &Dataset) -> crate::Result<(bool, String)> {
-        let reply = self.call(Json::obj(vec![
-            ("op", Json::Str("submit_runs".into())),
-            ("job", Json::Str(data.job.to_string())),
-            ("data_tsv", Json::Str(data.to_table()?.to_text()?)),
-        ]))?;
-        Ok((
-            reply.get("accepted").and_then(|j| j.as_bool()).unwrap_or(false),
-            reply
-                .get("reason")
-                .and_then(|j| j.as_str())
-                .unwrap_or("")
-                .to_string(),
-        ))
+    pub fn submit_runs(&mut self, data: &Dataset) -> crate::Result<SubmitOutcome> {
+        let payload = self.call(Op::SubmitRuns {
+            job: data.job,
+            data_tsv: data.to_table()?.to_text()?,
+        })?;
+        SubmitOutcome::from_json(&payload)
     }
 
-    /// Hub stats: (accepted, rejected, repos).
-    pub fn stats(&mut self) -> crate::Result<(u64, u64, u64)> {
-        let reply = self.call(Json::obj(vec![("op", Json::Str("stats".into()))]))?;
-        Ok((
-            reply.get("accepted").and_then(|j| j.as_u64()).unwrap_or(0),
-            reply.get("rejected").and_then(|j| j.as_u64()).unwrap_or(0),
-            reply.get("repos").and_then(|j| j.as_u64()).unwrap_or(0),
-        ))
+    /// The hub's machine-type catalog.
+    pub fn catalog(&mut self) -> crate::Result<CatalogPayload> {
+        let payload = self.call(Op::Catalog)?;
+        CatalogPayload::from_json(&payload)
+    }
+
+    /// Hub + prediction-service counters.
+    pub fn stats(&mut self) -> crate::Result<HubStats> {
+        let payload = self.call(Op::Stats)?;
+        HubStats::from_json(&payload)
+    }
+
+    /// Server-side prediction for one feature row
+    /// `[scale_out, data_size_gb, context...]`.
+    pub fn predict(
+        &mut self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        features: &[f64],
+    ) -> crate::Result<Prediction> {
+        let payload = self.call(Op::Predict {
+            job,
+            machine_type: machine_type.map(|s| s.to_string()),
+            features: features.to_vec(),
+        })?;
+        Prediction::from_json(&payload)
+    }
+
+    /// Server-side batch prediction: many rows, one fitted model.
+    pub fn predict_batch(
+        &mut self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        rows: &[Vec<f64>],
+    ) -> crate::Result<BatchPrediction> {
+        let payload = self.call(Op::PredictBatch {
+            job,
+            machine_type: machine_type.map(|s| s.to_string()),
+            rows: rows.to_vec(),
+        })?;
+        BatchPrediction::from_json(&payload)
+    }
+
+    /// Full §IV configuration on the hub: machine type + scale-out under
+    /// the user's deadline/confidence goals. Returns the same
+    /// [`ConfigChoice`] local mode produces.
+    pub fn configure(
+        &mut self,
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        goals: &UserGoals,
+        machine_type: Option<&str>,
+    ) -> crate::Result<ConfigChoice> {
+        let payload = self.call(Op::Configure {
+            job,
+            data_size_gb,
+            context,
+            deadline_s: goals.deadline_s,
+            confidence: goals.confidence,
+            machine_type: machine_type.map(|s| s.to_string()),
+        })?;
+        proto::config_choice_from_json(&payload)
     }
 
     /// Ask the server to stop accepting connections.
     pub fn shutdown(&mut self) -> crate::Result<()> {
-        self.call(Json::obj(vec![("op", Json::Str("shutdown".into()))]))?;
+        self.call(Op::Shutdown)?;
         Ok(())
     }
 }

@@ -8,11 +8,14 @@
 //! * [`repo`] — repository state and on-disk layout (TSV, §VI-A).
 //! * [`validate`] — the §III-C-b contribution gate: retrain with the new
 //!   data and reject it if held-out prediction error degrades.
-//! * [`server`] / [`client`] — newline-delimited-JSON protocol over TCP
+//! * [`server`] / [`client`] — newline-delimited-JSON transport over TCP
 //!   (threaded; the offline crate cache has no tokio, see DESIGN.md §2).
+//!   All frames are typed by [`crate::api::proto`] (wire protocol v1) and
+//!   served by [`crate::api::service::PredictionService`].
 //!
-//! Protocol ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
-//! `stats`, `shutdown`.
+//! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
+//! `stats`, `predict`, `predict_batch`, `configure`, `shutdown` —
+//! specified in DESIGN.md §4.
 
 pub mod client;
 pub mod repo;

@@ -18,6 +18,10 @@ pub struct Repository {
     /// Short human description shown in hub listings.
     pub description: String,
     pub data: Dataset,
+    /// Monotonic dataset revision: bumped on every committed dataset
+    /// change, so the PredictionService's fitted-model cache can detect
+    /// staleness with a single integer comparison.
+    pub revision: u64,
 }
 
 impl Repository {
@@ -27,6 +31,7 @@ impl Repository {
             maintainer_machine: None,
             description: description.to_string(),
             data: Dataset::new(job),
+            revision: 0,
         }
     }
 }
@@ -62,15 +67,23 @@ impl HubState {
         self.repos.read().unwrap().get(&job).cloned()
     }
 
-    /// Replace a repo's dataset (post-validation commit).
-    pub fn commit_data(&self, job: JobKind, data: Dataset) -> crate::Result<()> {
+    /// Replace a repo's dataset (post-validation commit). Bumps the repo's
+    /// revision so cached fitted models keyed on the old revision go stale;
+    /// returns the post-commit revision.
+    pub fn commit_data(&self, job: JobKind, data: Dataset) -> crate::Result<u64> {
         let mut repos = self.repos.write().unwrap();
         let repo = repos
             .get_mut(&job)
             .with_context(|| format!("no repository for {job}"))?;
         repo.data = data;
+        repo.revision += 1;
         *self.accepted.write().unwrap() += 1;
-        Ok(())
+        Ok(repo.revision)
+    }
+
+    /// Current dataset revision of `job`'s repository.
+    pub fn revision(&self, job: JobKind) -> Option<u64> {
+        self.repos.read().unwrap().get(&job).map(|r| r.revision)
     }
 
     pub fn note_rejection(&self) {
@@ -79,27 +92,32 @@ impl HubState {
 
     /// Atomic submission: validate `contribution` against the *current*
     /// dataset and merge it in one critical section (§III-C-b gate).
+    /// Returns the verdict together with the repository revision as of
+    /// *this* submission — read inside the critical section, so a
+    /// concurrent later submit cannot leak its revision into this reply.
     pub fn submit(
         &self,
         contribution: crate::data::Dataset,
         policy: &super::validate::ValidationPolicy,
-    ) -> crate::Result<super::validate::Verdict> {
+    ) -> crate::Result<(super::validate::Verdict, u64)> {
         let _guard = self.submit_lock.lock().unwrap();
-        let existing = self
-            .get(contribution.job)
-            .with_context(|| format!("no repository for {}", contribution.job))?
-            .data;
+        let job = contribution.job;
+        let repo = self
+            .get(job)
+            .with_context(|| format!("no repository for {job}"))?;
+        let existing = repo.data;
         let verdict = super::validate::validate_contribution(&existing, &contribution, policy)?;
-        if verdict.accepted {
+        let revision = if verdict.accepted {
             let mut merged = existing;
             for rec in contribution.records {
                 merged.push(rec)?;
             }
-            self.commit_data(contribution.job, merged)?;
+            self.commit_data(job, merged)?
         } else {
             self.note_rejection();
-        }
-        Ok(verdict)
+            repo.revision
+        };
+        Ok((verdict, revision))
     }
 
     pub fn counters(&self) -> (u64, u64) {
@@ -114,7 +132,10 @@ impl HubState {
         Ok(())
     }
 
-    /// Load repositories from TSV files under `dir` (missing files skipped).
+    /// Load repositories from TSV files under `dir` (missing files
+    /// skipped). Like every committed dataset change, each load bumps the
+    /// repo's revision so fitted models cached against the old data go
+    /// stale.
     pub fn load(&self, dir: &Path) -> crate::Result<usize> {
         let mut loaded = 0;
         for job in JobKind::ALL {
@@ -126,6 +147,7 @@ impl HubState {
                     .entry(job)
                     .or_insert_with(|| Repository::new(job, "loaded from disk"));
                 repo.data = data;
+                repo.revision += 1;
                 loaded += 1;
             }
         }
@@ -170,6 +192,24 @@ mod tests {
         assert_eq!(hub.counters(), (1, 0));
         hub.note_rejection();
         assert_eq!(hub.counters(), (1, 1));
+    }
+
+    #[test]
+    fn commit_bumps_revision_per_repo() {
+        let hub = HubState::new();
+        hub.insert(Repository::new(JobKind::Sort, ""));
+        hub.insert(Repository::new(JobKind::Grep, ""));
+        assert_eq!(hub.revision(JobKind::Sort), Some(0));
+        let mut ds = Dataset::new(JobKind::Sort);
+        ds.push(rec(4)).unwrap();
+        hub.commit_data(JobKind::Sort, ds.clone()).unwrap();
+        assert_eq!(hub.revision(JobKind::Sort), Some(1));
+        ds.push(rec(6)).unwrap();
+        hub.commit_data(JobKind::Sort, ds).unwrap();
+        assert_eq!(hub.revision(JobKind::Sort), Some(2));
+        // Other repositories are untouched.
+        assert_eq!(hub.revision(JobKind::Grep), Some(0));
+        assert_eq!(hub.revision(JobKind::KMeans), None);
     }
 
     #[test]

@@ -1,4 +1,8 @@
 //! Hub server: newline-delimited JSON over TCP, thread per connection.
+//!
+//! This layer only frames lines. Every request is parsed, dispatched and
+//! answered by [`PredictionService::handle_line`] through the typed
+//! [`crate::api::proto`] v1 protocol — no ad-hoc JSON is built here.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -8,34 +12,27 @@ use std::thread::JoinHandle;
 
 use anyhow::Context;
 
-use crate::cloud::Catalog;
-use crate::data::{Dataset, JobKind};
-use crate::util::json::Json;
+use crate::api::service::PredictionService;
 
 use super::repo::HubState;
-use super::validate::ValidationPolicy;
 
 /// A running hub server.
 pub struct HubServer {
     pub addr: SocketAddr,
-    state: Arc<HubState>,
+    service: Arc<PredictionService>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
 impl HubServer {
-    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral test port) and serve.
-    pub fn start(
-        addr: &str,
-        state: Arc<HubState>,
-        catalog: Catalog,
-        policy: ValidationPolicy,
-    ) -> crate::Result<HubServer> {
+    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
+    /// the v1 protocol from `service`.
+    pub fn start(addr: &str, service: Arc<PredictionService>) -> crate::Result<HubServer> {
         let listener = TcpListener::bind(addr).context("binding hub listener")?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
 
-        let t_state = state.clone();
+        let t_service = service.clone();
         let t_stop = stop.clone();
         let accept_thread = std::thread::spawn(move || {
             for stream in listener.incoming() {
@@ -44,12 +41,10 @@ impl HubServer {
                 }
                 match stream {
                     Ok(s) => {
-                        let st = t_state.clone();
-                        let cat = catalog.clone();
-                        let pol = policy.clone();
+                        let svc = t_service.clone();
                         let stp = t_stop.clone();
                         std::thread::spawn(move || {
-                            let _ = serve_conn(s, &st, &cat, &pol, &stp);
+                            let _ = serve_conn(s, &svc, &stp);
                         });
                     }
                     Err(_) => break,
@@ -57,14 +52,19 @@ impl HubServer {
             }
         });
 
-        Ok(HubServer { addr: local, state, stop, accept_thread: Some(accept_thread) })
+        Ok(HubServer { addr: local, service, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn service(&self) -> &Arc<PredictionService> {
+        &self.service
     }
 
     pub fn state(&self) -> &Arc<HubState> {
-        &self.state
+        self.service.state()
     }
 
-    /// Stop accepting and join the accept loop.
+    /// Stop accepting and join the accept loop. In-flight connections see
+    /// the flag on their next request and close.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so `incoming()` returns.
@@ -87,9 +87,7 @@ impl Drop for HubServer {
 
 fn serve_conn(
     stream: TcpStream,
-    state: &HubState,
-    catalog: &Catalog,
-    policy: &ValidationPolicy,
+    service: &PredictionService,
     stop: &AtomicBool,
 ) -> crate::Result<()> {
     stream.set_nodelay(true).ok();
@@ -101,126 +99,19 @@ fn serve_conn(
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // peer closed
         }
-        let reply = match handle_request(&line, state, catalog, policy, stop) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
+        // Check per request, not just at accept time: once `shutdown` is
+        // requested, in-flight connections must quiesce instead of serving
+        // forever (closing drops the request; the peer sees EOF).
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let reply = service.handle_line(&line, stop);
+        writer.write_all(reply.to_line().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-    }
-}
-
-fn handle_request(
-    line: &str,
-    state: &HubState,
-    catalog: &Catalog,
-    policy: &ValidationPolicy,
-    stop: &AtomicBool,
-) -> crate::Result<Json> {
-    let req = Json::parse(line.trim())?;
-    let op = req.get("op").and_then(|j| j.as_str()).context("missing op")?;
-    match op {
-        "list_repos" => {
-            let repos: Vec<Json> = state
-                .jobs()
-                .into_iter()
-                .filter_map(|job| state.get(job))
-                .map(|r| {
-                    Json::obj(vec![
-                        ("job", Json::Str(r.job.to_string())),
-                        ("description", Json::Str(r.description.clone())),
-                        ("records", Json::Num(r.data.len() as f64)),
-                        (
-                            "maintainer_machine",
-                            match &r.maintainer_machine {
-                                Some(m) => Json::Str(m.clone()),
-                                None => Json::Null,
-                            },
-                        ),
-                    ])
-                })
-                .collect();
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("repos", Json::Arr(repos))]))
+        // The request we just served may itself have been `shutdown`.
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
         }
-        "get_repo" => {
-            let job: JobKind = req
-                .get("job")
-                .and_then(|j| j.as_str())
-                .context("missing job")?
-                .parse()?;
-            let repo = state.get(job).with_context(|| format!("no repository for {job}"))?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("job", Json::Str(repo.job.to_string())),
-                ("description", Json::Str(repo.description.clone())),
-                (
-                    "maintainer_machine",
-                    match &repo.maintainer_machine {
-                        Some(m) => Json::Str(m.clone()),
-                        None => Json::Null,
-                    },
-                ),
-                ("data_tsv", Json::Str(repo.data.to_table()?.to_text()?)),
-            ]))
-        }
-        "submit_runs" => {
-            let job: JobKind = req
-                .get("job")
-                .and_then(|j| j.as_str())
-                .context("missing job")?
-                .parse()?;
-            let tsv = req
-                .get("data_tsv")
-                .and_then(|j| j.as_str())
-                .context("missing data_tsv")?;
-            let table = crate::util::tsv::Table::parse(tsv)?;
-            let contribution = Dataset::from_table(job, &table)?;
-            // Atomic validate+merge — see HubState::submit for the race
-            // this prevents.
-            let verdict = state.submit(contribution, policy)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("accepted", Json::Bool(verdict.accepted)),
-                ("reason", Json::Str(verdict.reason)),
-            ]))
-        }
-        "catalog" => {
-            let types: Vec<Json> = catalog
-                .types()
-                .iter()
-                .map(|t| {
-                    Json::obj(vec![
-                        ("name", Json::Str(t.name.clone())),
-                        ("vcpus", Json::Num(t.vcpus as f64)),
-                        ("memory_gb", Json::Num(t.memory_gb)),
-                        ("price_per_hour", Json::Num(t.price_per_hour)),
-                        ("family", Json::Str(t.family.to_string())),
-                    ])
-                })
-                .collect();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("types", Json::Arr(types)),
-                ("provisioning_delay_s", Json::Num(catalog.provisioning_delay_s)),
-            ]))
-        }
-        "stats" => {
-            let (acc, rej) = state.counters();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("accepted", Json::Num(acc as f64)),
-                ("rejected", Json::Num(rej as f64)),
-                ("repos", Json::Num(state.jobs().len() as f64)),
-            ]))
-        }
-        "shutdown" => {
-            stop.store(true, Ordering::SeqCst);
-            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
-        }
-        other => anyhow::bail!("unknown op: {other}"),
     }
 }

@@ -3,8 +3,12 @@
 //! Subcommands:
 //!   generate   — produce the 930-experiment shared runtime corpus (Table I)
 //!   eval       — run the Table II / Fig. 5 harnesses
-//!   serve      — run a C3O Hub
-//!   configure  — pick a cluster configuration for a job (Fig. 4 workflow)
+//!   serve      — run a C3O Hub speaking wire protocol v1 (DESIGN.md §4):
+//!                repositories + server-side PredictionService with a
+//!                fitted-model cache
+//!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
+//!                fits locally from --data, or delegates to a hub with
+//!                --hub ADDR (no local fit, served from the hub's cache)
 //!
 //! Examples:
 //!   c3o generate --out data/
@@ -12,16 +16,19 @@
 //!   c3o serve --addr 127.0.0.1:7033 --data data/
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
 //!       --deadline 900 --confidence 0.95 --data data/
+//!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
+//!       --deadline 900 --hub 127.0.0.1:7033
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
-use c3o::configurator::{configure, UserGoals};
+use c3o::configurator::{configure, ConfigChoice, UserGoals};
 use c3o::data::{Dataset, JobKind};
 use c3o::eval::{self, Fig5Config, Table2Config};
-use c3o::hub::{HubServer, HubState, Repository, ValidationPolicy};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
 use c3o::sim::{generate_all, GeneratorConfig, JobInput};
 
@@ -136,9 +143,18 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         let n = state.load(&PathBuf::from(dir))?;
         eprintln!("[c3o] loaded {n} repositories from {dir}");
     }
-    let server = HubServer::start(&addr, state, Catalog::aws_like(), ValidationPolicy::default())?;
+    let service = Arc::new(PredictionService::new(
+        state,
+        Catalog::aws_like(),
+        ValidationPolicy::default(),
+        backend(flags),
+    ));
+    let server = HubServer::start(&addr, service)?;
     println!("C3O Hub listening on {}", server.addr);
-    println!("ops: list_repos | get_repo | submit_runs | catalog | stats | shutdown");
+    println!(
+        "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
+         predict | predict_batch | configure | shutdown"
+    );
     // Serve until stdin closes (or forever under a service manager).
     let mut buf = String::new();
     let _ = std::io::stdin().read_line(&mut buf);
@@ -167,29 +183,54 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         confidence: flags.get("confidence").map(|s| s.parse()).transpose()?.unwrap_or(0.95),
     };
 
-    let catalog = Catalog::aws_like();
-    let shared = match flags.get("data") {
-        Some(dir) => Dataset::load(job, &PathBuf::from(dir).join(format!("{job}.tsv")))?,
+    let choice = match flags.get("hub") {
+        Some(addr) => {
+            // Hub mode: the server answers from its fitted-model cache —
+            // no runtime data is downloaded and nothing is fitted locally.
+            let mut client = HubClient::connect(addr)?;
+            client.configure(
+                job,
+                size,
+                ctx,
+                &goals,
+                flags.get("machine").map(|s| s.as_str()),
+            )?
+        }
         None => {
-            eprintln!("[c3o] no --data dir; generating the shared corpus in-memory");
-            c3o::sim::generate_job(job, &GeneratorConfig::default(), &catalog)?
+            let catalog = Catalog::aws_like();
+            let shared = match flags.get("data") {
+                Some(dir) => {
+                    Dataset::load(job, &PathBuf::from(dir).join(format!("{job}.tsv")))?
+                }
+                None => {
+                    eprintln!("[c3o] no --data dir; generating the shared corpus in-memory");
+                    c3o::sim::generate_job(job, &GeneratorConfig::default(), &catalog)?
+                }
+            };
+            let backend = backend(flags);
+            let input = JobInput::new(job, size, ctx);
+            configure(
+                &catalog,
+                &shared,
+                flags.get("machine").map(|s| s.as_str()).or(Some(eval::TARGET_MACHINE)),
+                &input,
+                &goals,
+                backend,
+            )?
         }
     };
-    let backend = backend(flags);
-    let input = JobInput::new(job, size, ctx);
-    let choice = configure(
-        &catalog,
-        &shared,
-        flags.get("machine").map(|s| s.as_str()).or(Some(eval::TARGET_MACHINE)),
-        &input,
-        &goals,
-        backend,
-    )?;
+    print_choice(job, size, &choice);
+    Ok(())
+}
 
+fn print_choice(job: JobKind, size: f64, choice: &ConfigChoice) {
     println!("chosen configuration for {job} ({size} GB):");
     println!("  machine type : {}", choice.machine_type);
     println!("  scale-out    : {} nodes", choice.scale_out);
-    println!("  est. runtime : {:.0} s (UCB {:.0} s)", choice.predicted_runtime_s, choice.runtime_ucb_s);
+    println!(
+        "  est. runtime : {:.0} s (UCB {:.0} s)",
+        choice.predicted_runtime_s, choice.runtime_ucb_s
+    );
     println!("  est. cost    : ${:.3}", choice.est_cost_usd);
     println!("\n  runtime/cost pairs per scale-out (§IV-B):");
     for o in &choice.options {
@@ -207,7 +248,6 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
             }
         );
     }
-    Ok(())
 }
 
 fn main() {

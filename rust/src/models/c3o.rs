@@ -51,7 +51,14 @@ impl C3oPredictor {
             Box::new(Bom::new(backend.clone())),
             Box::new(Ogb::with_defaults()),
         ];
-        C3oPredictor { candidates, fitted: None, report: None, loo_cap: 120, kfold_k: 10, seed: 0xC30 }
+        C3oPredictor {
+            candidates,
+            fitted: None,
+            report: None,
+            loo_cap: 120,
+            kfold_k: 10,
+            seed: 0xC30,
+        }
     }
 
     /// Register a maintainer-supplied custom model (§III-C-c: custom models
@@ -90,7 +97,12 @@ impl C3oPredictor {
                 Ok(s) => scores.push((c.name().to_string(), s)),
                 Err(_) => scores.push((
                     c.name().to_string(),
-                    CvScore { mape: f64::INFINITY, resid_mean: 0.0, resid_std: f64::INFINITY, n: 0 },
+                    CvScore {
+                        mape: f64::INFINITY,
+                        resid_mean: 0.0,
+                        resid_std: f64::INFINITY,
+                        n: 0,
+                    },
                 )),
             }
         }

@@ -68,8 +68,10 @@ impl TrainData {
 }
 
 /// A runtime model. Implementations must be deterministic given their
-/// construction-time seed.
-pub trait RuntimeModel: Send {
+/// construction-time seed. `Send + Sync` so fitted models can be shared
+/// across hub connection threads via the PredictionService cache
+/// (prediction is `&self`).
+pub trait RuntimeModel: Send + Sync {
     /// Short name as it appears in the paper's tables.
     fn name(&self) -> &'static str;
 

@@ -70,8 +70,19 @@ pub struct Engine {
 
 impl Engine {
     /// Load and compile all artifacts from `dir` (usually `artifacts/`).
+    ///
+    /// Manifest verification is always available; actually compiling and
+    /// executing the HLO requires the `pjrt` cargo feature (the `xla`
+    /// crate is not in the offline crate cache — see DESIGN.md §2).
+    /// Without it, `load` fails cleanly and callers fall back to
+    /// [`super::NativeBackend`].
     pub fn load(dir: &Path) -> crate::Result<Engine> {
         Self::verify_manifest(dir)?;
+        Self::spawn_worker(dir)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn spawn_worker(dir: &Path) -> crate::Result<Engine> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let dir_owned = dir.to_path_buf();
@@ -88,6 +99,15 @@ impl Engine {
             native: super::NativeBackend::new(),
             fallbacks: std::sync::atomic::AtomicU64::new(0),
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn spawn_worker(_dir: &Path) -> crate::Result<Engine> {
+        bail!(
+            "PJRT engine disabled: built without the `pjrt` cargo feature \
+             (the offline crate cache has no `xla` bindings); \
+             use the native backend"
+        )
     }
 
     /// How many calls were served by the native fallback because they
@@ -250,14 +270,17 @@ impl FitBackend for Engine {
 }
 
 // ---------------------------------------------------------------------------
-// Worker side: owns the non-Send PJRT handles.
+// Worker side: owns the non-Send PJRT handles. Everything below touches the
+// `xla` crate and therefore only exists under the `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 struct Modules {
     ols: xla::PjRtLoadedExecutable,
     nnls: xla::PjRtLoadedExecutable,
     predict: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 fn worker_loop(dir: PathBuf, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<crate::Result<()>>) {
     let modules = match compile_modules(&dir) {
         Ok(m) => {
@@ -286,6 +309,7 @@ fn worker_loop(dir: PathBuf, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<cr
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_modules(dir: &Path) -> crate::Result<Modules> {
     let client =
         xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
@@ -307,6 +331,7 @@ fn compile_modules(dir: &Path) -> crate::Result<Modules> {
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(dims)
@@ -314,6 +339,7 @@ fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
 }
 
 /// Pad `x` (n×f), `y` (n), `w` (b×n) to the artifact shapes.
+#[cfg(feature = "pjrt")]
 fn pad_inputs(
     x: &Matrix,
     y: &[f64],
@@ -343,6 +369,7 @@ fn pad_inputs(
     Ok((xp, yp, wp, n, f, b))
 }
 
+#[cfg(feature = "pjrt")]
 fn run_fit(
     exe: &xla::PjRtLoadedExecutable,
     x: &Matrix,
@@ -381,6 +408,7 @@ fn run_fit(
     Ok((theta, preds))
 }
 
+#[cfg(feature = "pjrt")]
 fn run_predict(
     exe: &xla::PjRtLoadedExecutable,
     theta: &Matrix,

@@ -88,7 +88,11 @@ fn grid_axes(job: JobKind) -> (Vec<f64>, Vec<Vec<f64>>) {
 }
 
 /// Generate the shared dataset for one job, sized per Table I.
-pub fn generate_job(job: JobKind, cfg: &GeneratorConfig, catalog: &Catalog) -> crate::Result<Dataset> {
+pub fn generate_job(
+    job: JobKind,
+    cfg: &GeneratorConfig,
+    catalog: &Catalog,
+) -> crate::Result<Dataset> {
     let (sizes, contexts) = grid_axes(job);
     // Full grid.
     let mut grid = Vec::new();

@@ -1,0 +1,267 @@
+//! Wire protocol v1 conformance over live TCP: structured error paths,
+//! client-side envelope checks, the fitted-model cache through the public
+//! API, and hub/local configurator parity.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use c3o::api::service::PredictionService;
+use c3o::cloud::Catalog;
+use c3o::configurator::{configure, UserGoals};
+use c3o::data::JobKind;
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::runtime::NativeBackend;
+use c3o::sim::{generate_job, GeneratorConfig, JobInput};
+
+fn start_hub() -> HubServer {
+    let state = Arc::new(HubState::new());
+    let catalog = Catalog::aws_like();
+    for job in [JobKind::Sort, JobKind::Grep] {
+        let mut repo = Repository::new(job, &format!("spark {job}"));
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        repo.data = generate_job(job, &GeneratorConfig::default(), &catalog).unwrap();
+        state.insert(repo);
+    }
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog,
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    HubServer::start("127.0.0.1:0", service).unwrap()
+}
+
+/// Send raw frames over one connection, collecting one reply line each.
+fn roundtrip_raw(addr: &str, frames: &[&str]) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = Vec::new();
+    for frame in frames {
+        stream.write_all(frame.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection dropped on frame: {frame}");
+        out.push(line);
+    }
+    out
+}
+
+#[test]
+fn every_protocol_error_is_structured_and_survivable() {
+    let server = start_hub();
+    let addr = server.addr.to_string();
+
+    // All on ONE connection: a structured error must never cost the
+    // connection.
+    let replies = roundtrip_raw(
+        &addr,
+        &[
+            // 1. malformed JSON
+            "{{{ definitely not json",
+            // 2. not an object
+            "[1,2,3]",
+            // 3. missing version
+            r#"{"id":1,"op":"stats"}"#,
+            // 4. wrong version
+            r#"{"v":99,"id":2,"op":"stats"}"#,
+            // 5. missing id
+            r#"{"v":1,"op":"stats"}"#,
+            // 6. unknown op
+            r#"{"v":1,"id":3,"op":"frobnicate"}"#,
+            // 7. missing op field
+            r#"{"v":1,"id":4}"#,
+            // 8. missing required op argument
+            r#"{"v":1,"id":5,"op":"get_repo"}"#,
+            // 9. bad argument value
+            r#"{"v":1,"id":6,"op":"get_repo","job":"mapreduce"}"#,
+            // 10. missing repository
+            r#"{"v":1,"id":7,"op":"get_repo","job":"pagerank"}"#,
+            // ... and the connection still answers real requests.
+            r#"{"v":1,"id":8,"op":"stats"}"#,
+        ],
+    );
+    let expect = [
+        ("bad_request", "\"id\":0"),
+        ("bad_request", "\"id\":0"),
+        ("version_mismatch", "\"id\":1"),
+        ("version_mismatch", "\"id\":2"),
+        ("missing_field", "\"id\":0"),
+        ("unknown_op", "\"id\":3"),
+        ("missing_field", "\"id\":4"),
+        ("missing_field", "\"id\":5"),
+        ("invalid_data", "\"id\":6"),
+        ("not_found", "\"id\":7"),
+    ];
+    for (i, (code, id)) in expect.iter().enumerate() {
+        assert!(replies[i].contains("\"ok\":false"), "frame {i}: {}", replies[i]);
+        assert!(replies[i].contains(code), "frame {i}: want {code}: {}", replies[i]);
+        assert!(replies[i].contains(id), "frame {i}: want {id}: {}", replies[i]);
+    }
+    assert!(replies[10].contains("\"ok\":true"), "{}", replies[10]);
+    server.shutdown();
+}
+
+#[test]
+fn client_rejects_mismatched_response_id() {
+    // A fake hub that answers with the wrong correlation id.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"v\":1,\"id\":999,\"ok\":true,\"payload\":{}}\n")
+            .unwrap();
+        writer.flush().unwrap();
+    });
+
+    let mut client = HubClient::connect(&addr).unwrap();
+    let err = client.stats().unwrap_err();
+    assert!(err.to_string().contains("id mismatch"), "{err:#}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn client_rejects_mismatched_response_version() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"v\":7,\"id\":1,\"ok\":true,\"payload\":{}}\n")
+            .unwrap();
+        writer.flush().unwrap();
+    });
+
+    let mut client = HubClient::connect(&addr).unwrap();
+    let err = client.stats().unwrap_err();
+    assert!(err.to_string().contains("version mismatch"), "{err:#}");
+    fake.join().unwrap();
+}
+
+#[test]
+fn predict_batch_warm_cache_zero_refits_over_the_wire() {
+    let server = start_hub();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+
+    // Cold: the first predict fits.
+    let p = client.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+    assert!(!p.cached);
+    assert!(p.runtime_s.is_finite());
+    assert_eq!(p.machine_type, "m5.xlarge", "maintainer designation wins");
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits, 1);
+
+    // Warm: a batch over the whole scale-out range, zero refits.
+    let rows: Vec<Vec<f64>> = (2..=12).map(|so| vec![so as f64, 15.0]).collect();
+    let b = client.predict_batch(JobKind::Sort, None, &rows).unwrap();
+    assert!(b.cached);
+    assert_eq!(b.runtimes.len(), rows.len());
+    assert_eq!(b.model, p.model, "same fitted model as the single predict");
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits, 1, "warm predict_batch must not refit");
+    assert!(s.cache_hits >= 1);
+    assert_eq!(s.cache_entries, 1);
+
+    // An accepted contribution invalidates ONLY the touched job.
+    client.predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits, 2);
+
+    let contrib = {
+        use c3o::sim::WorkloadModel;
+        use c3o::util::prng::Pcg;
+        let catalog = Catalog::aws_like();
+        let model = WorkloadModel::default();
+        let mt = catalog.get("m5.xlarge").unwrap();
+        let mut rng = Pcg::seed(77);
+        let mut ds = c3o::data::Dataset::new(JobKind::Sort);
+        for _ in 0..8 {
+            let so = rng.range(2, 13) as u32;
+            let input = JobInput::new(JobKind::Sort, rng.range_f64(10.0, 20.0), vec![]);
+            ds.push(model.observe(mt, so, &input, &mut rng)).unwrap();
+        }
+        ds
+    };
+    let verdict = client.submit_runs(&contrib).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    assert_eq!(verdict.revision, 1);
+
+    // Grep still cached; sort refits on its new revision.
+    let g = client.predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+    assert!(g.cached);
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits, 2, "grep unaffected by the sort contribution");
+    let p2 = client.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+    assert!(!p2.cached, "sort cache entry invalidated by accepted submit");
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits, 3);
+    server.shutdown();
+}
+
+#[test]
+fn hub_configure_matches_local_configure() {
+    let server = start_hub();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+    let catalog = Catalog::aws_like();
+    // The exact corpus the hub serves (same generator, same seed).
+    let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+
+    let local = configure(
+        &catalog,
+        &shared,
+        Some("m5.xlarge"),
+        &JobInput::new(JobKind::Sort, 15.0, vec![]),
+        &goals,
+        Arc::new(NativeBackend::new()),
+    )
+    .unwrap();
+    let remote = client
+        .configure(JobKind::Sort, 15.0, vec![], &goals, None)
+        .unwrap();
+
+    assert_eq!(remote.machine_type, local.machine_type);
+    assert_eq!(remote.scale_out, local.scale_out);
+    assert!((remote.predicted_runtime_s - local.predicted_runtime_s).abs() < 1e-9);
+    assert!((remote.runtime_ucb_s - local.runtime_ucb_s).abs() < 1e-9);
+    assert!((remote.est_cost_usd - local.est_cost_usd).abs() < 1e-9);
+    assert_eq!(remote.options.len(), local.options.len());
+    for (r, l) in remote.options.iter().zip(&local.options) {
+        assert_eq!(r.scale_out, l.scale_out);
+        assert_eq!(r.bottleneck, l.bottleneck);
+        assert_eq!(r.admissible, l.admissible);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn configure_error_paths_are_structured() {
+    let server = start_hub();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+
+    // Impossible deadline -> invalid_data with the configurator's message.
+    let goals = UserGoals { deadline_s: Some(1.0), confidence: 0.95 };
+    let err = client
+        .configure(JobKind::Sort, 15.0, vec![], &goals, None)
+        .unwrap_err();
+    assert!(err.to_string().contains("no scale-out"), "{err:#}");
+
+    // Unknown repository -> not_found.
+    let goals = UserGoals::default();
+    let err = client
+        .configure(JobKind::PageRank, 0.25, vec![0.1, 0.001], &goals, None)
+        .unwrap_err();
+    assert!(err.to_string().contains("not_found"), "{err:#}");
+    server.shutdown();
+}

@@ -55,6 +55,75 @@ fn generate_then_configure_from_disk() {
 }
 
 #[test]
+fn configure_via_hub_matches_local_mode() {
+    use std::io::{BufRead, BufReader};
+    use std::process::Stdio;
+
+    let dir = std::env::temp_dir().join(format!("c3o_hub_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Shared corpus on disk (deterministic seed).
+    let out = c3o()
+        .args(["generate", "--out", dir.to_str().unwrap(), "--seed", "909"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Serve it on an ephemeral port; the listening line reports the addr.
+    let mut serve = c3o()
+        .args([
+            "serve", "--addr", "127.0.0.1:0", "--data", dir.to_str().unwrap(),
+            "--backend", "native",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut first_line = String::new();
+    BufReader::new(serve.stdout.as_mut().unwrap())
+        .read_line(&mut first_line)
+        .unwrap();
+    let addr = first_line.trim().rsplit(' ').next().unwrap().to_string();
+    assert!(addr.contains(':'), "no addr in: {first_line}");
+
+    let configure_args = |mode: &[&str]| {
+        let mut a = vec![
+            "configure", "--job", "sort", "--size", "15", "--deadline", "900",
+            "--confidence", "0.95", "--backend", "native",
+        ];
+        a.extend_from_slice(mode);
+        a.iter().map(|s| s.to_string()).collect::<Vec<_>>()
+    };
+    let local = c3o()
+        .args(configure_args(&["--data", dir.to_str().unwrap()]))
+        .output()
+        .unwrap();
+    assert!(local.status.success(), "{}", String::from_utf8_lossy(&local.stderr));
+    let hub = c3o().args(configure_args(&["--hub", &addr])).output().unwrap();
+    assert!(hub.status.success(), "{}", String::from_utf8_lossy(&hub.stderr));
+
+    // Same chosen machine type and scale-out, local vs hub-delegated.
+    let pick = |stdout: &[u8]| -> (String, String) {
+        let text = String::from_utf8_lossy(stdout).to_string();
+        let grab = |tag: &str| {
+            text.lines()
+                .find(|l| l.contains(tag))
+                .unwrap_or_else(|| panic!("missing `{tag}` in: {text}"))
+                .to_string()
+        };
+        (grab("machine type"), grab("scale-out"))
+    };
+    assert_eq!(pick(&local.stdout), pick(&hub.stdout));
+
+    // Closing stdin shuts the hub down.
+    drop(serve.stdin.take());
+    let status = serve.wait().unwrap();
+    assert!(status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn configure_with_impossible_deadline_fails_cleanly() {
     let out = c3o()
         .args([

@@ -2,13 +2,16 @@
 //!
 //! Covers the Fig. 4 workflow (browse → fetch → contribute) plus the
 //! §III-C-b validation gate under honest, corrupted and malicious
-//! contributions, and concurrent client safety.
+//! contributions, concurrent client safety, and shutdown quiescence —
+//! all over wire protocol v1.
 
 use std::sync::Arc;
 
+use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
 use c3o::data::{Dataset, JobKind, RunRecord};
 use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::runtime::NativeBackend;
 use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
 use c3o::util::prng::Pcg;
 
@@ -23,7 +26,13 @@ fn start_hub_with_data() -> HubServer {
     }
     // Empty repo to exercise the bootstrap path.
     state.insert(Repository::new(JobKind::KMeans, "spark kmeans"));
-    HubServer::start("127.0.0.1:0", state, catalog, ValidationPolicy::default()).unwrap()
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog,
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    HubServer::start("127.0.0.1:0", service).unwrap()
 }
 
 fn honest_runs(job: JobKind, n: usize, seed: u64) -> Dataset {
@@ -57,22 +66,26 @@ fn browse_fetch_contribute_roundtrip() {
     let sort = repos.iter().find(|r| r.job == JobKind::Sort).unwrap();
     assert_eq!(sort.records, 126);
     assert_eq!(sort.maintainer_machine.as_deref(), Some("m5.xlarge"));
+    assert_eq!(sort.revision, 0);
 
     // Step 2: fetch code + runtime data.
     let fetched = client.get_repo(JobKind::Sort).unwrap();
     assert_eq!(fetched.data.len(), 126);
+    assert_eq!(fetched.revision, 0);
 
     // Step 6: contribute honest new runs.
     let contrib = honest_runs(JobKind::Sort, 8, 42);
-    let (accepted, reason) = client.submit_runs(&contrib).unwrap();
-    assert!(accepted, "{reason}");
+    let verdict = client.submit_runs(&contrib).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    assert_eq!(verdict.revision, 1, "accepted contribution bumps the revision");
 
     // The shared dataset grew.
     let after = client.get_repo(JobKind::Sort).unwrap();
     assert_eq!(after.data.len(), 126 + 8);
+    assert_eq!(after.revision, 1);
 
-    let (acc, rej, repos) = client.stats().unwrap();
-    assert_eq!((acc, rej, repos), (1, 0, 3));
+    let s = client.stats().unwrap();
+    assert_eq!((s.accepted, s.rejected, s.repos), (1, 0, 3));
     server.shutdown();
 }
 
@@ -94,14 +107,15 @@ fn malicious_contribution_rejected_and_quarantined() {
             })
             .unwrap();
     }
-    let (accepted, reason) = client.submit_runs(&poison).unwrap();
-    assert!(!accepted, "poison accepted: {reason}");
+    let verdict = client.submit_runs(&poison).unwrap();
+    assert!(!verdict.accepted, "poison accepted: {}", verdict.reason);
+    assert_eq!(verdict.revision, 0, "rejected contribution keeps the revision");
 
     // Repo unchanged; rejection counted.
     let after = client.get_repo(JobKind::Sort).unwrap();
     assert_eq!(after.data.len(), 126);
-    let (acc, rej, _) = client.stats().unwrap();
-    assert_eq!((acc, rej), (0, 1));
+    let s = client.stats().unwrap();
+    assert_eq!((s.accepted, s.rejected), (0, 1));
     server.shutdown();
 }
 
@@ -115,15 +129,17 @@ fn wire_level_garbage_is_survivable() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("bad_request"), "{line}");
 
     // Unknown op.
-    raw.write_all(b"{\"op\":\"frobnicate\"}\n").unwrap();
+    raw.write_all(b"{\"v\":1,\"id\":1,\"op\":\"frobnicate\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown_op"), "{line}");
     assert!(line.contains("unknown op"), "{line}");
 
     // The connection (and server) still works afterwards.
-    raw.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    raw.write_all(b"{\"v\":1,\"id\":2,\"op\":\"stats\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\":true"), "{line}");
@@ -137,21 +153,20 @@ fn bootstrap_repo_accepts_first_data_then_validates() {
 
     // KMeans repo is empty: bootstrap accepts honest data.
     let first = honest_runs(JobKind::KMeans, 8, 1);
-    let (accepted, reason) = client.submit_runs(&first).unwrap();
-    assert!(accepted, "{reason}");
+    let verdict = client.submit_runs(&first).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
 
     // Grow past the bootstrap threshold.
     let more = honest_runs(JobKind::KMeans, 10, 2);
-    let (accepted, _) = client.submit_runs(&more).unwrap();
-    assert!(accepted);
+    assert!(client.submit_runs(&more).unwrap().accepted);
 
     // Now the gate is armed: poison must bounce.
     let mut poison = honest_runs(JobKind::KMeans, 20, 3);
     for r in &mut poison.records {
         r.runtime_s *= 500.0;
     }
-    let (accepted, reason) = client.submit_runs(&poison).unwrap();
-    assert!(!accepted, "poison accepted after bootstrap: {reason}");
+    let verdict = client.submit_runs(&poison).unwrap();
+    assert!(!verdict.accepted, "poison accepted after bootstrap: {}", verdict.reason);
     server.shutdown();
 }
 
@@ -176,10 +191,11 @@ fn concurrent_clients_consistent_state() {
         h.join().unwrap();
     }
     let mut c = HubClient::connect(&addr).unwrap();
-    let (acc, rej, _) = c.stats().unwrap();
-    assert_eq!(acc + rej, 30, "every submission got a verdict");
+    let s = c.stats().unwrap();
+    assert_eq!(s.accepted + s.rejected, 30, "every submission got a verdict");
     let repo = c.get_repo(JobKind::Sort).unwrap();
-    assert_eq!(repo.data.len(), 126 + (acc as usize) * 3);
+    assert_eq!(repo.data.len(), 126 + (s.accepted as usize) * 3);
+    assert_eq!(repo.revision, s.accepted, "one revision bump per accepted submit");
     server.shutdown();
 }
 
@@ -189,5 +205,29 @@ fn get_missing_repo_is_clean_error() {
     let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
     let err = client.get_repo(JobKind::PageRank).unwrap_err();
     assert!(err.to_string().contains("no repository"), "{err:#}");
+    assert!(err.to_string().contains("not_found"), "{err:#}");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_quiesces_in_flight_connections() {
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+
+    // An in-flight connection that has already served a request...
+    let mut c1 = HubClient::connect(&addr).unwrap();
+    c1.stats().unwrap();
+
+    // ...survives until another client requests shutdown.
+    let mut c2 = HubClient::connect(&addr).unwrap();
+    c2.shutdown().unwrap();
+
+    // c1's next request must observe the stop flag and get a closed
+    // connection, not an answer (and certainly not a hang).
+    let err = c1.stats().unwrap_err();
+    assert!(
+        err.to_string().contains("closed"),
+        "expected closed connection, got: {err:#}"
+    );
     server.shutdown();
 }

@@ -6,7 +6,9 @@
 //! and the *predictions* (what the models actually consume) are compared
 //! tighter than the raw coefficients.
 //!
-//! Requires `make artifacts` (fails with a pointer if missing).
+//! Requires `make artifacts` plus a build with the `pjrt` feature; when
+//! either is missing the tests skip (with a note) instead of failing —
+//! the native backend is the only fit path in that configuration.
 
 use std::sync::Arc;
 
@@ -15,13 +17,14 @@ use c3o::models::{Bom, Ernest, RuntimeModel, TrainData};
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
 use c3o::util::prng::Pcg;
 
-fn engine() -> Arc<Engine> {
-    static ONCE: std::sync::OnceLock<Arc<Engine>> = std::sync::OnceLock::new();
-    ONCE.get_or_init(|| {
-        Arc::new(
-            Engine::load_default()
-                .expect("artifacts missing — run `make artifacts` before cargo test"),
-        )
+fn engine() -> Option<Arc<Engine>> {
+    static ONCE: std::sync::OnceLock<Option<Arc<Engine>>> = std::sync::OnceLock::new();
+    ONCE.get_or_init(|| match Engine::load_default() {
+        Ok(e) => Some(Arc::new(e)),
+        Err(e) => {
+            eprintln!("[runtime_parity] skipping: PJRT engine unavailable ({e:#})");
+            None
+        }
     })
     .clone()
 }
@@ -52,7 +55,7 @@ fn problem(seed: u64, n: usize, f: usize, b: usize) -> (Matrix, Vec<f64>, Matrix
 
 #[test]
 fn ols_predictions_agree() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let native = NativeBackend::new();
     for seed in [1u64, 2, 3] {
         let (x, y, w) = problem(seed, 40, 5, 16);
@@ -70,7 +73,7 @@ fn ols_predictions_agree() {
 
 #[test]
 fn nnls_predictions_agree() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let native = NativeBackend::new();
     for seed in [4u64, 5] {
         let (x, y, w) = problem(seed, 32, 4, 8);
@@ -91,7 +94,7 @@ fn nnls_predictions_agree() {
 
 #[test]
 fn predict_grid_agrees() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let native = NativeBackend::new();
     let mut rng = Pcg::seed(6);
     let theta = Matrix::from_rows(
@@ -113,7 +116,7 @@ fn predict_grid_agrees() {
 
 #[test]
 fn oversized_problems_fall_back_to_native() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let before = eng.fallbacks();
     let (x, y, w) = problem(7, 150, 5, 8); // N=150 > 128
     let (_, p_e) = eng.ols_batch(&x, &y, &w, 1e-4).unwrap();
@@ -126,7 +129,7 @@ fn oversized_problems_fall_back_to_native() {
 
 #[test]
 fn ernest_model_parity_between_backends() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let mut rng = Pcg::seed(8);
     let rows: Vec<Vec<f64>> = (0..30)
         .map(|_| vec![rng.range(2, 13) as f64, rng.range_f64(10.0, 30.0)])
@@ -151,13 +154,17 @@ fn ernest_model_parity_between_backends() {
 
 #[test]
 fn bom_model_parity_between_backends() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let mut rng = Pcg::seed(9);
     let mut rows = Vec::new();
     let mut y = Vec::new();
     for i in 0..48 {
         let s = rng.range(2, 13) as f64;
-        let (d, k) = if i % 2 == 0 { (20.0, 5.0) } else { (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64) };
+        let (d, k) = if i % 2 == 0 {
+            (20.0, 5.0)
+        } else {
+            (rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64)
+        };
         rows.push(vec![s, d, k]);
         y.push((1.0 / s + 0.02 * s) * (10.0 + 4.0 * d + 9.0 * k));
     }
@@ -177,7 +184,7 @@ fn bom_model_parity_between_backends() {
 
 #[test]
 fn engine_survives_concurrent_callers() {
-    let eng = engine();
+    let Some(eng) = engine() else { return };
     let handles: Vec<_> = (0..6)
         .map(|t| {
             let eng = eng.clone();
