@@ -1,9 +1,14 @@
 //! Shared helpers for the bench binaries.
 
+// Each bench binary compiles this module separately and uses a subset of
+// the helpers; the unused ones are not dead code.
+#![allow(dead_code)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
+use c3o::util::json::Json;
 
 /// Splits per evaluation cell: the paper uses 300; override with
 /// C3O_SPLITS for quick runs.
@@ -32,6 +37,28 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) {
     }
     std::fs::write(&path, text).expect("write csv");
     println!("[bench] wrote {}", path.display());
+}
+
+/// Merge one section into `BENCH_hub_load.json` at the crate root — the
+/// machine-readable perf summary tracked across PRs. Each bench binary
+/// owns one top-level key and re-writing it leaves the others intact, so
+/// `cargo bench` runs accumulate into a single file.
+pub fn write_bench_json(section: &str, value: Json) {
+    let path = PathBuf::from("BENCH_hub_load.json");
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(|| Json::Obj(Default::default()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Default::default());
+    }
+    if let Json::Obj(map) = &mut root {
+        map.insert(section.to_string(), value);
+    }
+    let mut text = root.to_string();
+    text.push('\n');
+    std::fs::write(&path, text).expect("write bench json");
+    println!("[bench] wrote section `{section}` to {}", path.display());
 }
 
 /// The production backend if artifacts exist, else native (announced).

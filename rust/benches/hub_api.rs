@@ -23,6 +23,7 @@ use c3o::data::JobKind;
 use c3o::hub::{HubState, Repository, ValidationPolicy};
 use c3o::runtime::FitBackend;
 use c3o::sim::{generate_job, GeneratorConfig};
+use c3o::util::json::Json;
 
 fn shared_state() -> Arc<HubState> {
     let catalog = Catalog::aws_like();
@@ -45,6 +46,7 @@ fn main() {
     // model cache) differs between the cold and warm regimes.
     let state = shared_state();
     let mut csv = Vec::new();
+    let mut summary = Vec::new();
 
     println!("== E8: hub API — cold fit vs fitted-model cache ==\n");
     for &nrows in &[11usize, 64, 256] {
@@ -79,7 +81,14 @@ fn main() {
         );
         csv.push(format!("predict_batch_cold,{nrows},{:.6}", r_cold.mean_s));
         csv.push(format!("predict_batch_warm,{nrows},{:.6}", r_warm.mean_s));
+        summary.push(Json::obj(vec![
+            ("rows", Json::Num(nrows as f64)),
+            ("cold_mean_s", Json::Num(r_cold.mean_s)),
+            ("warm_mean_s", Json::Num(r_warm.mean_s)),
+            ("cache_speedup", Json::Num(r_cold.mean_s / r_warm.mean_s.max(1e-12))),
+        ]));
     }
 
     common::write_csv("hub_api.csv", "bench,rows,mean_s", &csv);
+    common::write_bench_json("hub_api", Json::Arr(summary));
 }

@@ -1,0 +1,152 @@
+//! E9 — hub load: requests/sec through the TCP worker-pool server.
+//!
+//! Drives a live [`HubServer`] with K concurrent clients issuing
+//! `predict_batch` frames and reports aggregate throughput:
+//!
+//!   * cold — fresh server per sample: the first request pays the full
+//!     dynamic model-selection fit,
+//!   * warm — one long-lived server, primed once: every request is
+//!     answered from the sharded fitted-model cache (asserted: zero
+//!     refits), measured at 1, 2, 4 and 8 concurrent clients.
+//!
+//! A single client is latency-bound (write → server → read ping-pong);
+//! the worker pool + striped cache let K clients overlap those cycles, so
+//! warm throughput should scale with the client count. Results land in
+//! `BENCH_hub_load.json` (section `hub_load`) so the perf trajectory is
+//! tracked across PRs.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use c3o::api::service::PredictionService;
+use c3o::cloud::Catalog;
+use c3o::data::JobKind;
+use c3o::hub::{
+    HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy,
+};
+use c3o::runtime::FitBackend;
+use c3o::sim::{generate_job, GeneratorConfig};
+use c3o::util::json::Json;
+
+const ROWS_PER_REQUEST: usize = 8;
+const WARM_TOTAL_REQS: usize = 400;
+const CLIENT_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn service(backend: Arc<dyn FitBackend>) -> Arc<PredictionService> {
+    let catalog = Catalog::aws_like();
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "standard Spark sort");
+    repo.maintainer_machine = Some("m5.xlarge".to_string());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog)
+        .expect("generate corpus");
+    state.insert(repo);
+    Arc::new(PredictionService::new(state, catalog, ValidationPolicy::default(), backend))
+}
+
+fn rows() -> Vec<Vec<f64>> {
+    (0..ROWS_PER_REQUEST)
+        .map(|i| vec![2.0 + (i % 11) as f64, 10.0 + (i % 20) as f64])
+        .collect()
+}
+
+/// Drive `reqs_per_client` warm `predict_batch` requests from `clients`
+/// concurrent connections; returns aggregate requests/sec.
+fn drive(addr: &str, clients: usize, reqs_per_client: usize) -> f64 {
+    let rows = rows();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                let mut c = HubClient::connect(addr).expect("connect");
+                for _ in 0..reqs_per_client {
+                    let b = c.predict_batch(JobKind::Sort, None, &rows).expect("predict");
+                    assert!(b.cached, "load loop must stay on the warm path");
+                }
+            });
+        }
+    });
+    (clients * reqs_per_client) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let backend = common::backend();
+    println!("== E9: hub load — worker-pool throughput over TCP ==\n");
+
+    // Cold: fresh server per sample; the first predict_batch pays the fit.
+    let mut cold = Vec::new();
+    for _ in 0..3 {
+        let svc = service(backend.clone());
+        let server = HubServer::start_with(
+            "127.0.0.1:0",
+            svc,
+            ServerConfig { workers: 8, max_conns: 256, ..ServerConfig::default() },
+        )
+        .expect("start hub");
+        let mut c = HubClient::connect(&server.addr.to_string()).expect("connect");
+        let t0 = Instant::now();
+        let b = c.predict_batch(JobKind::Sort, None, &rows()).expect("predict");
+        assert!(!b.cached, "first request on a fresh server must be a cold fit");
+        cold.push(t0.elapsed().as_secs_f64());
+        server.shutdown();
+    }
+    let cold_mean = cold.iter().sum::<f64>() / cold.len() as f64;
+    println!(
+        "  cold predict_batch (fit incl.)   {:>10.1} ms/req  ({:>7.1} req/s)",
+        cold_mean * 1e3,
+        1.0 / cold_mean
+    );
+
+    // Warm: one server, primed once, then driven at increasing K.
+    let svc = service(backend.clone());
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        svc,
+        ServerConfig { workers: 16, max_conns: 256, ..ServerConfig::default() },
+    )
+    .expect("start hub");
+    let addr = server.addr.to_string();
+    let mut prime = HubClient::connect(&addr).expect("connect");
+    prime.predict_batch(JobKind::Sort, None, &rows()).expect("prime");
+    drop(prime);
+    drive(&addr, 1, 50); // unmeasured warmup of the whole path
+
+    let mut per_k: Vec<(usize, f64)> = Vec::new();
+    for &k in &CLIENT_COUNTS {
+        let rps = drive(&addr, k, WARM_TOTAL_REQS / k);
+        println!("  warm predict_batch, {k:>2} client(s)  {rps:>10.0} req/s");
+        per_k.push((k, rps));
+    }
+    let rps1 = per_k[0].1;
+    let rps_max = per_k.last().unwrap().1;
+    let scaling = rps_max / rps1.max(1e-12);
+    println!("\n  -> warm scaling, {} clients vs 1: {scaling:.2}x", CLIENT_COUNTS[3]);
+
+    // The whole warm phase must have been served by the single primed fit.
+    let mut c = HubClient::connect(&addr).expect("connect");
+    let stats = c.stats().expect("stats");
+    assert_eq!(stats.fits, 1, "warm load loop must never refit");
+    server.shutdown();
+
+    let warm: Vec<Json> = per_k
+        .iter()
+        .map(|&(k, rps)| {
+            Json::obj(vec![
+                ("clients", Json::Num(k as f64)),
+                ("rps", Json::Num(rps)),
+            ])
+        })
+        .collect();
+    common::write_bench_json(
+        "hub_load",
+        Json::obj(vec![
+            ("job", Json::Str("sort".to_string())),
+            ("rows_per_request", Json::Num(ROWS_PER_REQUEST as f64)),
+            ("cold_s_per_req", Json::Num(cold_mean)),
+            ("cold_rps", Json::Num(1.0 / cold_mean)),
+            ("warm", Json::Arr(warm)),
+            ("warm_scaling_8_vs_1", Json::Num(scaling)),
+        ]),
+    );
+}

@@ -560,6 +560,15 @@ impl Response {
             "protocol version mismatch: hub replied v{} (client speaks v{PROTOCOL_VERSION})",
             self.v
         );
+        // `id` 0 is the server's connection-scoped error channel — frames
+        // it could not correlate to a request (unparseable input, or a
+        // refusal sent before any request was read, e.g. flood control).
+        // Surface that error instead of calling it a correlation failure.
+        if self.id == 0 && expect_id != 0 {
+            if let Err(e) = &self.result {
+                anyhow::bail!("hub error {e}");
+            }
+        }
         anyhow::ensure!(
             self.id == expect_id,
             "response id mismatch: sent {expect_id}, got {}",

@@ -10,16 +10,22 @@
 //! `submit_runs` additionally drops exactly that job's entries so they do
 //! not pin memory. Entries for other jobs are untouched.
 //!
+//! The cache is *sharded* into [`CACHE_STRIPES`] fixed stripes, each its
+//! own `RwLock`ed map, so concurrent warm `predict`/`predict_batch` hits
+//! take only a read lock on one stripe (DESIGN.md §7). Cold fits remain
+//! single-flight per key: N concurrent cold requests pay for one fit.
+//!
 //! All ops of the v1 protocol dispatch through [`PredictionService::handle_line`];
 //! the TCP layer in [`crate::hub::server`] only frames lines.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cloud::Catalog;
 use crate::configurator::{
-    fit_predictor, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
+    fit_prepared, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
 };
 use crate::data::{Dataset, JobKind};
 use crate::hub::{HubState, ValidationPolicy};
@@ -54,17 +60,29 @@ struct CacheSlot {
     model: Arc<FittedModel>,
 }
 
+/// Cache key: one fitted model per `(job, machine_type)`.
+type CacheKey = (JobKind, String);
+
+/// Fixed stripe count for the fitted-model cache. Contention is per
+/// stripe, so unrelated keys proceed in parallel; 16 stripes comfortably
+/// exceed jobs × machine types in practice while keeping invalidation a
+/// short walk.
+const CACHE_STRIPES: usize = 16;
+
 /// The hub's stateful prediction engine.
 pub struct PredictionService {
     state: Arc<HubState>,
     catalog: Catalog,
     policy: ValidationPolicy,
     backend: Arc<dyn FitBackend>,
-    cache: Mutex<HashMap<(JobKind, String), CacheSlot>>,
+    /// Sharded fitted-model cache: `CACHE_STRIPES` independent maps, each
+    /// behind its own `RwLock`. Warm hits take one read lock on one
+    /// stripe; inserts and invalidations take that stripe's write lock.
+    cache: Vec<RwLock<HashMap<CacheKey, CacheSlot>>>,
     /// Per-key single-flight gates: concurrent cold requests for the same
     /// `(job, machine_type)` serialize here, and all but the first reuse
     /// the first's fit (bounded by jobs x machine types).
-    fit_gates: Mutex<HashMap<(JobKind, String), Arc<Mutex<()>>>>,
+    fit_gates: Mutex<HashMap<CacheKey, Arc<Mutex<()>>>>,
     fits: AtomicU64,
     cache_hits: AtomicU64,
 }
@@ -81,7 +99,7 @@ impl PredictionService {
             catalog,
             policy,
             backend,
-            cache: Mutex::new(HashMap::new()),
+            cache: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
             fit_gates: Mutex::new(HashMap::new()),
             fits: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
@@ -98,7 +116,7 @@ impl PredictionService {
 
     /// `(cold fits, cache hits, live cache entries)` since start.
     pub fn fit_stats(&self) -> (u64, u64, u64) {
-        let entries = self.cache.lock().unwrap().len() as u64;
+        let entries: u64 = self.cache.iter().map(|s| s.read().unwrap().len() as u64).sum();
         (
             self.fits.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
@@ -107,6 +125,26 @@ impl PredictionService {
     }
 
     // -- fitted-model cache -------------------------------------------------
+
+    /// The stripe a key lives in (stable for the service's lifetime).
+    fn stripe(&self, key: &CacheKey) -> &RwLock<HashMap<CacheKey, CacheSlot>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.cache[h.finish() as usize % CACHE_STRIPES]
+    }
+
+    /// Warm-path lookup: one read lock on one stripe. Returns the model
+    /// only if it was fitted on exactly `revision`.
+    fn lookup(&self, key: &CacheKey, revision: u64) -> Option<Arc<FittedModel>> {
+        let stripe = self.stripe(key).read().unwrap();
+        match stripe.get(key) {
+            Some(slot) if slot.revision == revision => {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                Some(slot.model.clone())
+            }
+            _ => None,
+        }
+    }
 
     /// Fetch (or fit) the predictor for `(job, machine_type)`. Returns the
     /// model and whether it came from the cache.
@@ -119,20 +157,19 @@ impl PredictionService {
             WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
         })?;
         // §IV-A machine choice: explicit request > maintainer designation >
-        // general-purpose fallback — identical to local mode.
+        // general-purpose fallback — identical to local mode, but answered
+        // from the revision-cached columnar view, so the per-request path
+        // never scans (or clones) the record list.
         let machine = select_machine_type(
             &self.catalog,
-            &repo.data,
+            repo.view(),
             machine_type.or(repo.maintainer_machine.as_deref()),
         )
         .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
 
         let key = (job, machine.clone());
-        if let Some(slot) = self.cache.lock().unwrap().get(&key) {
-            if slot.revision == repo.revision {
-                self.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((slot.model.clone(), true));
-            }
+        if let Some(model) = self.lookup(&key, repo.revision) {
+            return Ok((model, true));
         }
 
         // Cold or stale. Single-flight: serialize fits per key so N
@@ -153,15 +190,13 @@ impl PredictionService {
         let repo = self.state.get(job).ok_or_else(|| {
             WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
         })?;
-        if let Some(slot) = self.cache.lock().unwrap().get(&key) {
-            if slot.revision == repo.revision {
-                self.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((slot.model.clone(), true));
-            }
+        if let Some(model) = self.lookup(&key, repo.revision) {
+            return Ok((model, true));
         }
 
-        // Fit outside the cache lock (fits are slow).
-        let (predictor, report) = fit_predictor(&repo.data, &machine, self.backend.clone())
+        // Fit outside the cache lock (fits are slow), from the snapshot's
+        // columnar view — built once per revision, shared by every fit.
+        let (predictor, report) = fit_prepared(repo.view(), &machine, self.backend.clone())
             .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
         self.fits.fetch_add(1, Ordering::Relaxed);
         let model = Arc::new(FittedModel {
@@ -172,8 +207,8 @@ impl PredictionService {
             revision: repo.revision,
             predictor,
         });
-        self.cache
-            .lock()
+        self.stripe(&key)
+            .write()
             .unwrap()
             .insert(key, CacheSlot { revision: repo.revision, model: model.clone() });
         Ok((model, false))
@@ -247,9 +282,13 @@ impl PredictionService {
             .submit(contribution, &self.policy)
             .map_err(|e| WireError::internal(&e))?;
         if verdict.accepted {
-            // The revision key already makes stale entries unreachable;
-            // drop them eagerly so exactly this job's slots free up.
-            self.cache.lock().unwrap().retain(|(j, _), _| *j != job);
+            // The revision stamp already makes stale entries unreachable;
+            // drop them eagerly so exactly this job's slots free up. One
+            // short write-locked walk per stripe; other stripes' readers
+            // are unaffected.
+            for stripe in &self.cache {
+                stripe.write().unwrap().retain(|(j, _), _| *j != job);
+            }
         }
         Ok(SubmitOutcome { accepted: verdict.accepted, reason: verdict.reason, revision })
     }
@@ -461,6 +500,31 @@ mod tests {
         assert_eq!(fits, 1, "warm predict_batch must not refit");
         assert!(hits >= 1);
         assert_eq!(entries, 1);
+    }
+
+    #[test]
+    fn concurrent_warm_predicts_share_one_fit() {
+        let svc = Arc::new(service_with_data());
+        // Prime the cache with the one cold fit.
+        svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25usize {
+                    let s = 2.0 + ((t + i) % 10) as f64;
+                    let p = svc.predict(JobKind::Sort, None, &[s, 15.0]).unwrap();
+                    assert!(p.cached, "warm path must hit the striped cache");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (fits, hits, entries) = svc.fit_stats();
+        assert_eq!(fits, 1, "concurrent warm predicts must never refit");
+        assert_eq!(entries, 1);
+        assert!(hits >= 100);
     }
 
     #[test]

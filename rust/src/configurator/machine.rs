@@ -4,23 +4,28 @@
 //! from test runs; users adopt it and only tune the scale-out. When no
 //! designation exists, the fallback "preferably chooses a general-purpose
 //! machine for which there is runtime data available".
+//!
+//! Selection consumes a [`FeatureMatrix`] view, whose per-machine counts
+//! are already materialized — on the hub this is the repository
+//! snapshot's revision-cached view, so the per-request path does no
+//! record scan at all; local mode builds the view once per `configure`
+//! and reuses it for the fit.
 
 use crate::cloud::Catalog;
-use crate::data::Dataset;
+use crate::data::FeatureMatrix;
 
 /// Pick the machine type per §IV-A.
 pub fn select_machine_type(
     catalog: &Catalog,
-    shared: &Dataset,
+    view: &FeatureMatrix,
     maintainer_type: Option<&str>,
 ) -> crate::Result<String> {
-    let available = shared.machine_types();
-    anyhow::ensure!(!available.is_empty(), "no runtime data at all");
+    anyhow::ensure!(view.machines().next().is_some(), "no runtime data at all");
 
     if let Some(mt) = maintainer_type {
         catalog.get(mt)?; // must exist in the catalog
         anyhow::ensure!(
-            available.iter().any(|a| a == mt),
+            view.rows(mt) > 0,
             "maintainer designated {mt} but the shared dataset has no runs on it"
         );
         return Ok(mt.to_string());
@@ -29,7 +34,7 @@ pub fn select_machine_type(
     // Fallback: general-purpose types with data, most data first.
     let mut best: Option<(usize, String)> = None;
     for t in catalog.general_purpose() {
-        let n = shared.for_machine(&t.name).len();
+        let n = view.rows(&t.name);
         if n > 0 && best.as_ref().map_or(true, |(bn, _)| n > *bn) {
             best = Some((n, t.name.clone()));
         }
@@ -37,20 +42,23 @@ pub fn select_machine_type(
     if let Some((_, name)) = best {
         return Ok(name);
     }
-    // Last resort: any type with the most data.
-    let name = available
-        .into_iter()
-        .max_by_key(|mt| shared.for_machine(mt).len())
-        .expect("non-empty");
+    // Last resort: any type with the most data (ties go to the
+    // lexicographically last type: `machines()` iterates sorted and
+    // `max_by_key` keeps the last maximum).
+    let name = view
+        .machines()
+        .max_by_key(|m| view.rows(m))
+        .expect("non-empty")
+        .to_string();
     Ok(name)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{JobKind, RunRecord};
+    use crate::data::{Dataset, JobKind, RunRecord};
 
-    fn ds_with(machines: &[(&str, usize)]) -> Dataset {
+    fn view_with(machines: &[(&str, usize)]) -> FeatureMatrix {
         let mut ds = Dataset::new(JobKind::Sort);
         for (mt, count) in machines {
             for i in 0..*count {
@@ -64,52 +72,52 @@ mod tests {
                 .unwrap();
             }
         }
-        ds
+        ds.feature_view()
     }
 
     #[test]
     fn maintainer_designation_wins() {
         let catalog = Catalog::aws_like();
-        let ds = ds_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
-        let mt = select_machine_type(&catalog, &ds, Some("m5.xlarge")).unwrap();
+        let view = view_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
+        let mt = select_machine_type(&catalog, &view, Some("m5.xlarge")).unwrap();
         assert_eq!(mt, "m5.xlarge");
     }
 
     #[test]
     fn maintainer_designation_requires_data() {
         let catalog = Catalog::aws_like();
-        let ds = ds_with(&[("c5.xlarge", 5)]);
-        assert!(select_machine_type(&catalog, &ds, Some("m5.xlarge")).is_err());
+        let view = view_with(&[("c5.xlarge", 5)]);
+        assert!(select_machine_type(&catalog, &view, Some("m5.xlarge")).is_err());
     }
 
     #[test]
     fn maintainer_designation_must_be_in_catalog() {
         let catalog = Catalog::aws_like();
-        let ds = ds_with(&[("weird.type", 5)]);
-        assert!(select_machine_type(&catalog, &ds, Some("weird.type")).is_err());
+        let view = view_with(&[("weird.type", 5)]);
+        assert!(select_machine_type(&catalog, &view, Some("weird.type")).is_err());
     }
 
     #[test]
     fn fallback_prefers_general_purpose_with_data() {
         let catalog = Catalog::aws_like();
         // c5 has more data, but m5 (general) has data too => m5 wins.
-        let ds = ds_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
-        let mt = select_machine_type(&catalog, &ds, None).unwrap();
+        let view = view_with(&[("m5.xlarge", 5), ("c5.xlarge", 50)]);
+        let mt = select_machine_type(&catalog, &view, None).unwrap();
         assert_eq!(mt, "m5.xlarge");
     }
 
     #[test]
     fn fallback_uses_any_type_when_no_general_data() {
         let catalog = Catalog::aws_like();
-        let ds = ds_with(&[("c5.xlarge", 3), ("r5.xlarge", 9)]);
-        let mt = select_machine_type(&catalog, &ds, None).unwrap();
+        let view = view_with(&[("c5.xlarge", 3), ("r5.xlarge", 9)]);
+        let mt = select_machine_type(&catalog, &view, None).unwrap();
         assert_eq!(mt, "r5.xlarge");
     }
 
     #[test]
     fn empty_dataset_rejected() {
         let catalog = Catalog::aws_like();
-        let ds = Dataset::new(JobKind::Sort);
-        assert!(select_machine_type(&catalog, &ds, None).is_err());
+        let view = Dataset::new(JobKind::Sort).feature_view();
+        assert!(select_machine_type(&catalog, &view, None).is_err());
     }
 }

@@ -19,29 +19,41 @@ pub use scaleout::{select_scale_out, ConfigChoice, ScaleOutOption, UserGoals};
 
 use std::sync::Arc;
 
+use anyhow::Context as _;
+
 use crate::cloud::Catalog;
-use crate::data::Dataset;
-use crate::models::{C3oPredictor, SelectionReport, TrainData};
+use crate::data::{Dataset, FeatureMatrix};
+use crate::models::{C3oPredictor, SelectionReport};
 use crate::runtime::FitBackend;
 use crate::sim::JobInput;
 
-/// Fit a C3O predictor on one machine type's slice of `shared` — the §IV
-/// training step, shared by local mode and the hub's server-side
-/// `PredictionService` (which caches the result per repository revision).
+/// Fit a C3O predictor from a prebuilt columnar view — the §IV training
+/// step. The hub's `PredictionService` calls this with the view its
+/// repository snapshot built once for the current dataset revision, so
+/// concurrent fits (and refits after a cache invalidation) never
+/// re-materialize feature rows.
+pub fn fit_prepared(
+    view: &FeatureMatrix,
+    machine: &str,
+    backend: Arc<dyn FitBackend>,
+) -> crate::Result<(C3oPredictor, SelectionReport)> {
+    let data = view
+        .train_data(machine)
+        .filter(|d| d.len() >= 4)
+        .with_context(|| format!("not enough runtime data for machine type {machine}"))?;
+    let mut predictor = C3oPredictor::new(backend);
+    let report = predictor.fit(data)?;
+    Ok((predictor, report))
+}
+
+/// Fit a C3O predictor on one machine type's slice of `shared` — local
+/// mode, which has no cached view to reuse.
 pub fn fit_predictor(
     shared: &Dataset,
     machine: &str,
     backend: Arc<dyn FitBackend>,
 ) -> crate::Result<(C3oPredictor, SelectionReport)> {
-    let view = shared.for_machine(machine);
-    anyhow::ensure!(
-        view.len() >= 4,
-        "not enough runtime data for machine type {machine}"
-    );
-    let data = TrainData::from_dataset(&view)?;
-    let mut predictor = C3oPredictor::new(backend);
-    let report = predictor.fit(&data)?;
-    Ok((predictor, report))
+    fit_prepared(&shared.feature_view(), machine, backend)
 }
 
 /// End-to-end configuration: machine type (§IV-A) then scale-out (§IV-B).
@@ -57,8 +69,10 @@ pub fn configure(
     goals: &UserGoals,
     backend: Arc<dyn FitBackend>,
 ) -> crate::Result<ConfigChoice> {
-    let machine = select_machine_type(catalog, shared, maintainer_type)?;
-    let (predictor, report) = fit_predictor(shared, &machine, backend)?;
+    // One columnar view serves both the machine choice and the fit.
+    let view = shared.feature_view();
+    let machine = select_machine_type(catalog, &view, maintainer_type)?;
+    let (predictor, report) = fit_prepared(&view, &machine, backend)?;
     let (mu, sigma) = (report.chosen_score.resid_mean, report.chosen_score.resid_std);
 
     select_scale_out(catalog, &machine, &predictor, input, goals, mu, sigma)

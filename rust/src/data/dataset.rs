@@ -1,11 +1,13 @@
 //! Run records and datasets: the shared runtime data of the paper.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 use anyhow::{bail, Context};
 
 use super::JobKind;
+use crate::linalg::Matrix;
+use crate::models::TrainData;
 use crate::util::tsv::Table;
 
 /// One executed (job, configuration, inputs) observation.
@@ -100,6 +102,21 @@ impl Dataset {
                 .cloned()
                 .collect(),
         }
+    }
+
+    /// Number of records on one machine type, without materializing a
+    /// filtered dataset — the hub's machine-selection step runs on every
+    /// `predict`, so the count must not clone records.
+    pub fn count_machine(&self, machine_type: &str) -> usize {
+        self.records.iter().filter(|r| r.machine_type == machine_type).count()
+    }
+
+    /// Build the columnar training views of this dataset — see
+    /// [`FeatureMatrix`]. The hub builds this once per repository revision
+    /// (`crate::hub::Repository::view`) and every fit against that revision
+    /// reuses it; local mode builds it per `configure` call.
+    pub fn feature_view(&self) -> FeatureMatrix {
+        FeatureMatrix::build(self)
     }
 
     /// Machine types present, sorted.
@@ -211,6 +228,62 @@ impl Dataset {
     }
 }
 
+/// Columnar training views of a dataset: the feature matrix
+/// `[scale_out, data_size, context...]` and target vector of every machine
+/// type's slice, materialized in one pass over the records.
+///
+/// This replaces the fit-time `for_machine(..)` + per-record `features()`
+/// path, which cloned every matching record (including its machine-type
+/// `String`) and allocated one `Vec` per row on every fit. A
+/// `FeatureMatrix` is built once per dataset revision and shared by every
+/// fit against that revision.
+#[derive(Debug, Clone)]
+pub struct FeatureMatrix {
+    /// Feature arity: `2 + job.context_features()`.
+    pub width: usize,
+    groups: BTreeMap<String, TrainData>,
+}
+
+impl FeatureMatrix {
+    /// Materialize the per-machine views. Record arity is guaranteed by
+    /// [`Dataset::push`] (every constructor funnels through it), so the
+    /// flat buffers are rectangular by construction.
+    pub fn build(ds: &Dataset) -> FeatureMatrix {
+        let width = 2 + ds.job.context_features();
+        let mut flat: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+        for rec in &ds.records {
+            let (xs, ys) = flat.entry(rec.machine_type.clone()).or_default();
+            xs.push(rec.scale_out as f64);
+            xs.push(rec.data_size_gb);
+            xs.extend_from_slice(&rec.context);
+            ys.push(rec.runtime_s);
+        }
+        let mut groups = BTreeMap::new();
+        for (machine, (xs, ys)) in flat {
+            let x = Matrix::from_vec(ys.len(), width, xs)
+                .expect("push-validated records are rectangular");
+            let data = TrainData::new(x, ys).expect("one target per row");
+            groups.insert(machine, data);
+        }
+        FeatureMatrix { width, groups }
+    }
+
+    /// The training view for one machine type (`None` if it has no runs).
+    pub fn train_data(&self, machine_type: &str) -> Option<&TrainData> {
+        self.groups.get(machine_type)
+    }
+
+    /// Number of records on one machine type.
+    pub fn rows(&self, machine_type: &str) -> usize {
+        self.groups.get(machine_type).map_or(0, TrainData::len)
+    }
+
+    /// Machine types with at least one record, sorted.
+    pub fn machines(&self) -> impl Iterator<Item = &str> {
+        self.groups.keys().map(String::as_str)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +353,44 @@ mod tests {
         ds.push(rec("c5", 2, 10.0, vec![], 12.0)).unwrap();
         assert_eq!(ds.for_machine("m5").len(), 1);
         assert_eq!(ds.machine_types(), vec!["c5", "m5"]);
+        assert_eq!(ds.count_machine("m5"), 1);
+        assert_eq!(ds.count_machine("r5"), 0);
+    }
+
+    #[test]
+    fn feature_view_groups_by_machine() {
+        let mut ds = Dataset::new(JobKind::Grep);
+        ds.push(rec("m5.xlarge", 4, 12.5, vec![0.01], 321.5)).unwrap();
+        ds.push(rec("c5.xlarge", 8, 20.0, vec![0.10], 123.0)).unwrap();
+        ds.push(rec("m5.xlarge", 2, 10.0, vec![0.05], 200.0)).unwrap();
+        let view = ds.feature_view();
+        assert_eq!(view.width, 3);
+        let m5 = view.train_data("m5.xlarge").unwrap();
+        assert_eq!(m5.len(), 2);
+        assert_eq!(m5.x.row(0), &[4.0, 12.5, 0.01]);
+        assert_eq!(m5.x.row(1), &[2.0, 10.0, 0.05]);
+        assert_eq!(m5.y, vec![321.5, 200.0]);
+        assert_eq!(view.rows("c5.xlarge"), 1);
+        assert!(view.train_data("r5.xlarge").is_none());
+        assert_eq!(view.machines().collect::<Vec<_>>(), vec!["c5.xlarge", "m5.xlarge"]);
+    }
+
+    #[test]
+    fn feature_view_matches_row_materialization() {
+        // The columnar view must be bit-identical to the old
+        // for_machine + features() path, so fits see the same numbers.
+        let mut ds = Dataset::new(JobKind::KMeans);
+        for (m, s) in [("m5", 2), ("c5", 4), ("m5", 6), ("m5", 8)] {
+            ds.push(rec(m, s, 10.0 + s as f64, vec![5.0, 0.001], 100.0 / s as f64))
+                .unwrap();
+        }
+        let view = ds.feature_view();
+        for m in ds.machine_types() {
+            let td = TrainData::from_dataset(&ds.for_machine(&m)).unwrap();
+            let tv = view.train_data(&m).unwrap();
+            assert_eq!(td.x.data(), tv.x.data(), "{m}");
+            assert_eq!(td.y, tv.y, "{m}");
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! client assigns a fresh correlation id per request, and rejects replies
 //! whose `id` or protocol version do not match.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
@@ -54,17 +54,42 @@ impl HubClient {
 
     /// Send one op, await its reply, verify the envelope (version, id,
     /// ok flag) and return the payload.
+    ///
+    /// Every way a hub teardown can surface mid-call — clean EOF, broken
+    /// pipe on write, or a reset when the hub closed just before our
+    /// frame arrived — reports the same "hub closed the connection"
+    /// error, so callers need not care which side of the race they hit.
     fn call(&mut self, op: Op) -> crate::Result<Json> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, op);
-        self.writer.write_all(req.to_line().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("hub closed the connection");
-        }
+        let reader = &mut self.reader;
+        let writer = &mut self.writer;
+        let mut io = move || -> std::io::Result<String> {
+            writer.write_all(req.to_line().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Err(ErrorKind::UnexpectedEof.into());
+            }
+            Ok(line)
+        };
+        let line = match io() {
+            Ok(line) => line,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::UnexpectedEof
+                        | ErrorKind::BrokenPipe
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                ) =>
+            {
+                anyhow::bail!("hub closed the connection")
+            }
+            Err(e) => return Err(e.into()),
+        };
         Response::parse(&line)?.payload(id)
     }
 

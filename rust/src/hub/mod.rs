@@ -9,9 +9,10 @@
 //! * [`validate`] — the §III-C-b contribution gate: retrain with the new
 //!   data and reject it if held-out prediction error degrades.
 //! * [`server`] / [`client`] — newline-delimited-JSON transport over TCP
-//!   (threaded; the offline crate cache has no tokio, see DESIGN.md §2).
-//!   All frames are typed by [`crate::api::proto`] (wire protocol v1) and
-//!   served by [`crate::api::service::PredictionService`].
+//!   (a bounded worker pool of blocking threads; the offline crate cache
+//!   has no tokio, see DESIGN.md §2 and §7). All frames are typed by
+//!   [`crate::api::proto`] (wire protocol v1) and served by
+//!   [`crate::api::service::PredictionService`].
 //!
 //! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
 //! `stats`, `predict`, `predict_batch`, `configure`, `shutdown` —
@@ -24,5 +25,5 @@ pub mod validate;
 
 pub use client::HubClient;
 pub use repo::{HubState, Repository};
-pub use server::HubServer;
+pub use server::{HubServer, ServerConfig};
 pub use validate::{validate_contribution, ValidationPolicy, Verdict};

@@ -1,15 +1,28 @@
 //! Hub repositories: job metadata + shared runtime data.
+//!
+//! Concurrency model (DESIGN.md §7): every committed dataset change
+//! publishes a fresh immutable [`Repository`] snapshot behind an `Arc`, so
+//! readers get the current snapshot with one `Arc` clone — never a deep
+//! `Dataset` copy — and keep reading their snapshot while later commits
+//! publish newer ones. Writes to *different* repositories serialize only
+//! on their own per-job submit lock, so contributions to different jobs
+//! validate and commit in parallel.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::Context;
 
-use crate::data::{Dataset, JobKind};
+use crate::data::{Dataset, FeatureMatrix, JobKind};
 
 /// One C3O repository (paper Fig. 4, step 1-2): a common job, its
 /// maintainer-designated machine type, and the shared runtime data.
+///
+/// A `Repository` value is an immutable snapshot once published through
+/// [`HubState`]; dataset changes build and publish a *new* snapshot with a
+/// bumped revision (copy-on-write).
 #[derive(Debug, Clone)]
 pub struct Repository {
     pub job: JobKind,
@@ -22,6 +35,10 @@ pub struct Repository {
     /// change, so the PredictionService's fitted-model cache can detect
     /// staleness with a single integer comparison.
     pub revision: u64,
+    /// Columnar training view of `data`, built at most once per revision:
+    /// the snapshot is immutable, so every fit against this revision
+    /// reuses the same feature matrices (see [`FeatureMatrix`]).
+    view: OnceLock<Arc<FeatureMatrix>>,
 }
 
 impl Repository {
@@ -32,22 +49,70 @@ impl Repository {
             description: description.to_string(),
             data: Dataset::new(job),
             revision: 0,
+            view: OnceLock::new(),
         }
+    }
+
+    /// Copy-on-write step: the same repository metadata with `data`
+    /// replaced and the revision bumped (the view cache starts empty and
+    /// is rebuilt lazily for the new revision).
+    fn with_data(&self, data: Dataset) -> Repository {
+        Repository {
+            job: self.job,
+            maintainer_machine: self.maintainer_machine.clone(),
+            description: self.description.clone(),
+            data,
+            revision: self.revision + 1,
+            view: OnceLock::new(),
+        }
+    }
+
+    /// The columnar training view of this snapshot's data, built on first
+    /// use and shared by every subsequent fit against this revision.
+    pub fn view(&self) -> &Arc<FeatureMatrix> {
+        self.view.get_or_init(|| Arc::new(self.data.feature_view()))
     }
 }
 
-/// Shared hub state: job → repository, behind a RwLock (reads dominate).
+/// Per-repository cell: the current published snapshot plus the lock that
+/// serializes this repository's validate-then-commit sequences.
+#[derive(Debug)]
+struct RepoCell {
+    current: Arc<Repository>,
+    /// Serializes the validate-then-commit sequence of submissions *to
+    /// this repository*. Without it two concurrent contributions both
+    /// validate against the same snapshot and the second commit silently
+    /// drops the first's records (lost update) — caught by
+    /// `hub_e2e::concurrent_clients_consistent_state`. Being per-job, it
+    /// lets contributions to different repositories commit in parallel.
+    submit_lock: Arc<Mutex<()>>,
+}
+
+impl RepoCell {
+    fn new(repo: Repository) -> RepoCell {
+        RepoCell { current: Arc::new(repo), submit_lock: Arc::new(Mutex::new(())) }
+    }
+
+    /// Publish a new snapshot with `data`; returns the new revision.
+    fn publish(&mut self, data: Dataset) -> u64 {
+        let next = self.current.with_data(data);
+        let revision = next.revision;
+        self.current = Arc::new(next);
+        revision
+    }
+}
+
+/// Shared hub state: job → published repository snapshot.
+///
+/// Lock ordering (must be respected by every method): a per-job
+/// `submit_lock` is always taken *before* the `repos` map lock, and the
+/// map lock is never held while waiting on a submit lock — the submit
+/// path clones the lock handle out of the map first, then acquires it.
 #[derive(Debug, Default)]
 pub struct HubState {
-    repos: RwLock<BTreeMap<JobKind, Repository>>,
-    accepted: RwLock<u64>,
-    rejected: RwLock<u64>,
-    /// Serializes the validate-then-commit sequence of submissions.
-    /// Without it two concurrent contributions both validate against the
-    /// same snapshot and the second commit silently drops the first's
-    /// records (lost update) — caught by
-    /// `hub_e2e::concurrent_clients_consistent_state`.
-    submit_lock: std::sync::Mutex<()>,
+    repos: RwLock<BTreeMap<JobKind, RepoCell>>,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
 }
 
 impl HubState {
@@ -55,39 +120,44 @@ impl HubState {
         Self::default()
     }
 
+    /// Register (or replace) a repository. Setup-time only: replacing a
+    /// repo mid-traffic also replaces its submit lock.
     pub fn insert(&self, repo: Repository) {
-        self.repos.write().unwrap().insert(repo.job, repo);
+        self.repos.write().unwrap().insert(repo.job, RepoCell::new(repo));
     }
 
     pub fn jobs(&self) -> Vec<JobKind> {
         self.repos.read().unwrap().keys().copied().collect()
     }
 
-    pub fn get(&self, job: JobKind) -> Option<Repository> {
-        self.repos.read().unwrap().get(&job).cloned()
+    /// Current snapshot of `job`'s repository: one `Arc` clone, no data
+    /// copy. The snapshot stays valid (and immutable) while later commits
+    /// publish newer ones.
+    pub fn get(&self, job: JobKind) -> Option<Arc<Repository>> {
+        self.repos.read().unwrap().get(&job).map(|cell| cell.current.clone())
     }
 
-    /// Replace a repo's dataset (post-validation commit). Bumps the repo's
-    /// revision so cached fitted models keyed on the old revision go stale;
-    /// returns the post-commit revision.
+    /// Replace a repo's dataset (post-validation commit) by publishing a
+    /// new snapshot. Bumps the repo's revision so cached fitted models
+    /// keyed on the old revision go stale; returns the post-commit
+    /// revision.
     pub fn commit_data(&self, job: JobKind, data: Dataset) -> crate::Result<u64> {
         let mut repos = self.repos.write().unwrap();
-        let repo = repos
+        let cell = repos
             .get_mut(&job)
             .with_context(|| format!("no repository for {job}"))?;
-        repo.data = data;
-        repo.revision += 1;
-        *self.accepted.write().unwrap() += 1;
-        Ok(repo.revision)
+        let revision = cell.publish(data);
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        Ok(revision)
     }
 
     /// Current dataset revision of `job`'s repository.
     pub fn revision(&self, job: JobKind) -> Option<u64> {
-        self.repos.read().unwrap().get(&job).map(|r| r.revision)
+        self.repos.read().unwrap().get(&job).map(|cell| cell.current.revision)
     }
 
     pub fn note_rejection(&self) {
-        *self.rejected.write().unwrap() += 1;
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Atomic submission: validate `contribution` against the *current*
@@ -95,20 +165,33 @@ impl HubState {
     /// Returns the verdict together with the repository revision as of
     /// *this* submission — read inside the critical section, so a
     /// concurrent later submit cannot leak its revision into this reply.
+    ///
+    /// The critical section is per-repository: submissions to different
+    /// jobs validate and commit fully in parallel.
     pub fn submit(
         &self,
         contribution: crate::data::Dataset,
         policy: &super::validate::ValidationPolicy,
     ) -> crate::Result<(super::validate::Verdict, u64)> {
-        let _guard = self.submit_lock.lock().unwrap();
         let job = contribution.job;
+        // Clone the lock handle out of the map before acquiring it, so the
+        // map lock is never held while a (potentially slow) validation of
+        // another submission to the same job is in flight.
+        let lock = {
+            let repos = self.repos.read().unwrap();
+            repos
+                .get(&job)
+                .with_context(|| format!("no repository for {job}"))?
+                .submit_lock
+                .clone()
+        };
+        let _guard = lock.lock().unwrap();
         let repo = self
             .get(job)
             .with_context(|| format!("no repository for {job}"))?;
-        let existing = repo.data;
-        let verdict = super::validate::validate_contribution(&existing, &contribution, policy)?;
+        let verdict = super::validate::validate_contribution(&repo.data, &contribution, policy)?;
         let revision = if verdict.accepted {
-            let mut merged = existing;
+            let mut merged = repo.data.clone();
             for rec in contribution.records {
                 merged.push(rec)?;
             }
@@ -121,13 +204,13 @@ impl HubState {
     }
 
     pub fn counters(&self) -> (u64, u64) {
-        (*self.accepted.read().unwrap(), *self.rejected.read().unwrap())
+        (self.accepted.load(Ordering::Relaxed), self.rejected.load(Ordering::Relaxed))
     }
 
     /// Persist all repositories as TSV files under `dir`.
     pub fn save(&self, dir: &Path) -> crate::Result<()> {
-        for (job, repo) in self.repos.read().unwrap().iter() {
-            repo.data.save(&dir.join(format!("{job}.tsv")))?;
+        for (job, cell) in self.repos.read().unwrap().iter() {
+            cell.current.data.save(&dir.join(format!("{job}.tsv")))?;
         }
         Ok(())
     }
@@ -143,11 +226,10 @@ impl HubState {
             if path.exists() {
                 let data = Dataset::load(job, &path)?;
                 let mut repos = self.repos.write().unwrap();
-                let repo = repos
+                repos
                     .entry(job)
-                    .or_insert_with(|| Repository::new(job, "loaded from disk"));
-                repo.data = data;
-                repo.revision += 1;
+                    .or_insert_with(|| RepoCell::new(Repository::new(job, "loaded from disk")))
+                    .publish(data);
                 loaded += 1;
             }
         }
@@ -179,6 +261,53 @@ mod tests {
         assert_eq!(hub.jobs(), vec![JobKind::Sort]);
         assert_eq!(hub.get(JobKind::Sort).unwrap().data.len(), 1);
         assert!(hub.get(JobKind::Grep).is_none());
+    }
+
+    #[test]
+    fn get_returns_shared_snapshot_not_deep_copy() {
+        let hub = HubState::new();
+        let mut repo = Repository::new(JobKind::Sort, "");
+        repo.data.push(rec(2)).unwrap();
+        hub.insert(repo);
+
+        // Two reads of the same revision share one allocation.
+        let a = hub.get(JobKind::Sort).unwrap();
+        let b = hub.get(JobKind::Sort).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "get() must hand out the published Arc");
+
+        // A commit publishes a *new* snapshot; the old one is untouched.
+        let mut ds = a.data.clone();
+        ds.push(rec(4)).unwrap();
+        hub.commit_data(JobKind::Sort, ds).unwrap();
+        let c = hub.get(JobKind::Sort).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(a.revision, 0);
+        assert_eq!(a.data.len(), 1, "held snapshot is immutable");
+        assert_eq!(c.revision, 1);
+        assert_eq!(c.data.len(), 2);
+    }
+
+    #[test]
+    fn view_is_built_once_per_snapshot() {
+        let hub = HubState::new();
+        let mut repo = Repository::new(JobKind::Sort, "");
+        for s in [2, 4, 6, 8] {
+            repo.data.push(rec(s)).unwrap();
+        }
+        hub.insert(repo);
+        let snap = hub.get(JobKind::Sort).unwrap();
+        let v1 = snap.view().clone();
+        let v2 = hub.get(JobKind::Sort).unwrap().view().clone();
+        assert!(Arc::ptr_eq(&v1, &v2), "same revision shares one view");
+        assert_eq!(v1.rows("m5.xlarge"), 4);
+
+        // A new revision gets a fresh view.
+        let mut ds = snap.data.clone();
+        ds.push(rec(10)).unwrap();
+        hub.commit_data(JobKind::Sort, ds).unwrap();
+        let v3 = hub.get(JobKind::Sort).unwrap().view().clone();
+        assert!(!Arc::ptr_eq(&v1, &v3));
+        assert_eq!(v3.rows("m5.xlarge"), 5);
     }
 
     #[test]
@@ -234,5 +363,40 @@ mod tests {
         assert_eq!(loaded, 1);
         assert_eq!(hub2.get(JobKind::Sort).unwrap().data.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_submits_to_different_jobs_do_not_serialize_state() {
+        // Submissions to different repositories take different locks; this
+        // exercises the commit paths racing on the shared map without a
+        // global submit lock. (Timing is not asserted — only safety.)
+        let hub = Arc::new(HubState::new());
+        for job in [JobKind::Sort, JobKind::Grep] {
+            hub.insert(Repository::new(job, ""));
+        }
+        let mut handles = Vec::new();
+        for job in [JobKind::Sort, JobKind::Grep] {
+            let hub = hub.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..20u32 {
+                    let snap = hub.get(job).unwrap();
+                    let mut ds = snap.data.clone();
+                    let mut r = rec(2 + (i % 10));
+                    if job == JobKind::Grep {
+                        r.context = vec![0.01];
+                    }
+                    ds.push(r).unwrap();
+                    hub.commit_data(job, ds).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hub.revision(JobKind::Sort), Some(20));
+        assert_eq!(hub.revision(JobKind::Grep), Some(20));
+        assert_eq!(hub.get(JobKind::Sort).unwrap().data.len(), 20);
+        assert_eq!(hub.get(JobKind::Grep).unwrap().data.len(), 20);
+        assert_eq!(hub.counters().0, 40);
     }
 }

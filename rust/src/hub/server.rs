@@ -1,58 +1,154 @@
-//! Hub server: newline-delimited JSON over TCP, thread per connection.
+//! Hub server: newline-delimited JSON over TCP, served by a **bounded
+//! worker pool** (DESIGN.md §7).
+//!
+//! The accept thread only enqueues connections; `workers` threads each
+//! own one connection at a time and serve its requests to completion.
+//! At most `max_conns` accepted connections may wait for a free worker —
+//! beyond that the hub answers a structured `unavailable` error frame and
+//! closes, so a connection flood cannot exhaust the process with one OS
+//! thread per socket.
 //!
 //! This layer only frames lines. Every request is parsed, dispatched and
 //! answered by [`PredictionService::handle_line`] through the typed
 //! [`crate::api::proto`] v1 protocol — no ad-hoc JSON is built here.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::api::proto::{ErrorCode, Response, WireError};
 use crate::api::service::PredictionService;
 
 use super::repo::HubState;
+
+/// How often a parked worker re-checks the stop flag — bounds both
+/// shutdown-drain latency and the stop-observation delay of an idle
+/// connection.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Per-syscall response-write timeout. A peer that stops reading (full
+/// receive window, no progress) errors the write and frees the worker;
+/// since shutdown joins workers, an unbounded write would otherwise let
+/// one never-reading client wedge `HubServer::shutdown`/`Drop` forever.
+/// Slow-but-reading peers are unaffected: the timeout applies per write
+/// call, and partial progress restarts it.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Transport tuning for [`HubServer`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Worker threads. Each worker serves one connection at a time, so
+    /// this bounds the number of concurrently served clients.
+    pub workers: usize,
+    /// Accepted connections allowed to queue for a free worker. Beyond
+    /// this the hub refuses with an `unavailable` error frame.
+    pub max_conns: usize,
+    /// How long a connection may sit idle (no request in flight) while
+    /// other connections are queued for a worker, before it is closed to
+    /// free its worker. Only enforced under queue pressure — with free
+    /// capacity, idle connections live forever — so `workers` silent
+    /// sockets cannot starve the pool.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        // At least 4 workers even on small hosts, so a handful of
+        // interactive clients never queue behind each other.
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(4, 64);
+        ServerConfig { workers, max_conns: 128, idle_timeout: Duration::from_secs(10) }
+    }
+}
+
+/// Accepted-but-unserved connections, handed from the accept thread to
+/// the workers.
+struct ConnQueue {
+    pending: Mutex<VecDeque<TcpStream>>,
+    ready: Condvar,
+}
 
 /// A running hub server.
 pub struct HubServer {
     pub addr: SocketAddr,
     service: Arc<PredictionService>,
     stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
     accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl HubServer {
     /// Bind to `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
-    /// the v1 protocol from `service`.
+    /// the v1 protocol from `service` with default transport tuning.
     pub fn start(addr: &str, service: Arc<PredictionService>) -> crate::Result<HubServer> {
+        HubServer::start_with(addr, service, ServerConfig::default())
+    }
+
+    /// [`HubServer::start`] with explicit worker-pool tuning.
+    pub fn start_with(
+        addr: &str,
+        service: Arc<PredictionService>,
+        config: ServerConfig,
+    ) -> crate::Result<HubServer> {
+        anyhow::ensure!(config.workers >= 1, "server needs at least one worker");
         let listener = TcpListener::bind(addr).context("binding hub listener")?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ConnQueue {
+            pending: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
 
-        let t_service = service.clone();
+        let mut workers = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers {
+            let svc = service.clone();
+            let stp = stop.clone();
+            let q = queue.clone();
+            let idle_timeout = config.idle_timeout;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&q, &svc, &stp, idle_timeout)
+            }));
+        }
+
         let t_stop = stop.clone();
+        let t_queue = queue.clone();
+        let max_conns = config.max_conns.max(1);
         let accept_thread = std::thread::spawn(move || {
             for stream in listener.incoming() {
                 if t_stop.load(Ordering::SeqCst) {
                     break;
                 }
                 match stream {
-                    Ok(s) => {
-                        let svc = t_service.clone();
-                        let stp = t_stop.clone();
-                        std::thread::spawn(move || {
-                            let _ = serve_conn(s, &svc, &stp);
-                        });
-                    }
-                    Err(_) => break,
+                    Ok(s) => enqueue(&t_queue, s, max_conns),
+                    // Accept errors are transient (ECONNABORTED from a
+                    // peer that reset while queued, EMFILE under fd
+                    // pressure — exactly the flood this pool defends
+                    // against). Back off briefly and keep accepting
+                    // instead of going permanently deaf.
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
                 }
             }
+            // Wake parked workers so they observe the stop flag promptly.
+            t_queue.ready.notify_all();
         });
 
-        Ok(HubServer { addr: local, service, stop, accept_thread: Some(accept_thread) })
+        Ok(HubServer {
+            addr: local,
+            service,
+            stop,
+            queue,
+            accept_thread: Some(accept_thread),
+            workers,
+        })
     }
 
     pub fn service(&self) -> &Arc<PredictionService> {
@@ -63,13 +159,24 @@ impl HubServer {
         self.service.state()
     }
 
-    /// Stop accepting and join the accept loop. In-flight connections see
-    /// the flag on their next request and close.
+    /// Graceful drain: stop accepting, join the accept loop, then join
+    /// every worker. In-flight connections see the flag at their next
+    /// request boundary (or within [`POLL_INTERVAL`] when idle) and
+    /// close; queued-but-unserved connections are dropped (peer sees
+    /// EOF).
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so `incoming()` returns.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        self.queue.ready.notify_all();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -77,11 +184,66 @@ impl HubServer {
 
 impl Drop for HubServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
+    }
+}
+
+/// Hand a fresh connection to the pool, or refuse it when `max_conns`
+/// connections are already waiting.
+fn enqueue(queue: &ConnQueue, stream: TcpStream, max_conns: usize) {
+    let mut pending = queue.pending.lock().unwrap();
+    if pending.len() >= max_conns {
+        drop(pending);
+        refuse(stream);
+        return;
+    }
+    pending.push_back(stream);
+    drop(pending);
+    queue.ready.notify_one();
+}
+
+/// Best-effort structured refusal: flood control answers with a normal v1
+/// error frame, so well-behaved clients see `unavailable` instead of a
+/// silent hangup. Bounded write timeout — a peer that never reads cannot
+/// stall the accept thread.
+fn refuse(stream: TcpStream) {
+    let mut stream = stream;
+    let _ = stream.set_write_timeout(Some(POLL_INTERVAL));
+    let reply = Response::err(
+        0,
+        WireError::new(ErrorCode::Unavailable, "hub at connection capacity, retry later"),
+    );
+    let _ = stream.write_all(reply.to_line().as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+/// Worker: pop one connection at a time and serve it to completion. Exits
+/// as soon as the stop flag is set; connections still queued are dropped.
+fn worker_loop(
+    queue: &ConnQueue,
+    service: &PredictionService,
+    stop: &AtomicBool,
+    idle_timeout: Duration,
+) {
+    loop {
+        let conn = {
+            let mut pending = queue.pending.lock().unwrap();
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(s) = pending.pop_front() {
+                    break s;
+                }
+                // Timed wait so a lost wakeup can never stall shutdown.
+                let (guard, _) = queue
+                    .ready
+                    .wait_timeout(pending, POLL_INTERVAL)
+                    .unwrap();
+                pending = guard;
+            }
+        };
+        let _ = serve_conn(conn, service, stop, queue, idle_timeout);
     }
 }
 
@@ -89,16 +251,48 @@ fn serve_conn(
     stream: TcpStream,
     service: &PredictionService,
     stop: &AtomicBool,
+    queue: &ConnQueue,
+    idle_timeout: Duration,
 ) -> crate::Result<()> {
     stream.set_nodelay(true).ok();
+    // Bounded read timeout: a worker parked on an idle connection must
+    // re-check the stop flag instead of blocking shutdown forever.
+    stream.set_read_timeout(Some(POLL_INTERVAL)).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
+    let mut last_activity = Instant::now();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // peer closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                // Partial data read before the timeout stays buffered in
+                // `line`; the next read_line appends the rest.
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                // Under queue pressure, yield this worker: an idle peer
+                // (no request even started) must not starve connections
+                // waiting for a worker. With free capacity, idle
+                // connections live on.
+                if line.is_empty()
+                    && last_activity.elapsed() >= idle_timeout
+                    && !queue.pending.lock().unwrap().is_empty()
+                {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
         }
+        last_activity = Instant::now();
         // Check per request, not just at accept time: once `shutdown` is
         // requested, in-flight connections must quiesce instead of serving
         // forever (closing drops the request; the peer sees EOF).
@@ -113,5 +307,6 @@ fn serve_conn(
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
+        line.clear();
     }
 }

@@ -5,7 +5,8 @@
 //!   eval       — run the Table II / Fig. 5 harnesses
 //!   serve      — run a C3O Hub speaking wire protocol v1 (DESIGN.md §4):
 //!                repositories + server-side PredictionService with a
-//!                fitted-model cache
+//!                fitted-model cache, served by a bounded worker pool
+//!                (--workers N, --max-conns Q; alias: `c3o hub`)
 //!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
 //!                fits locally from --data, or delegates to a hub with
 //!                --hub ADDR (no local fit, served from the hub's cache)
@@ -20,15 +21,17 @@
 //!       --deadline 900 --hub 127.0.0.1:7033
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+use anyhow::Context as _;
 
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
 use c3o::configurator::{configure, ConfigChoice, UserGoals};
 use c3o::data::{Dataset, JobKind};
 use c3o::eval::{self, Fig5Config, Table2Config};
-use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy};
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
 use c3o::sim::{generate_all, GeneratorConfig, JobInput};
 
@@ -68,7 +71,7 @@ fn backend(flags: &BTreeMap<String, String>) -> Arc<dyn FitBackend> {
     }
 }
 
-fn load_datasets(dir: &PathBuf) -> anyhow::Result<Vec<Dataset>> {
+fn load_datasets(dir: &Path) -> anyhow::Result<Vec<Dataset>> {
     let mut out = Vec::new();
     for job in JobKind::ALL {
         let path = dir.join(format!("{job}.tsv"));
@@ -149,8 +152,23 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         ValidationPolicy::default(),
         backend(flags),
     ));
-    let server = HubServer::start(&addr, service)?;
+    // Worker-pool tuning: defaults derive from available parallelism;
+    // --workers and --max-conns override.
+    let mut config = ServerConfig::default();
+    if let Some(w) = flags.get("workers") {
+        config.workers = w.parse().context("--workers")?;
+    }
+    if let Some(q) = flags.get("max-conns") {
+        config.max_conns = q.parse().context("--max-conns")?;
+    }
+    let server = HubServer::start_with(&addr, service, config.clone())?;
+    // NOTE: keep the addr as the last token of the first line — clients
+    // (and tests/cli_e2e.rs) parse it from there.
     println!("C3O Hub listening on {}", server.addr);
+    println!(
+        "worker pool: {} workers, {} queued connections max",
+        config.workers, config.max_conns
+    );
     println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
          predict | predict_batch | configure | shutdown"
@@ -258,7 +276,7 @@ fn main() {
     let result = match cmd {
         "generate" => cmd_generate(&flags),
         "eval" => cmd_eval(&rest),
-        "serve" => cmd_serve(&flags),
+        "serve" | "hub" => cmd_serve(&flags),
         "configure" => cmd_configure(&flags),
         _ => {
             eprintln!(

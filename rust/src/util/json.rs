@@ -68,13 +68,6 @@ impl Json {
         }
     }
 
-    /// Serialize to a compact single-line string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -123,6 +116,16 @@ impl Json {
             bail!("trailing garbage at byte {pos}");
         }
         Ok(v)
+    }
+}
+
+/// Compact single-line serialization (callers use the blanket
+/// `ToString::to_string`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

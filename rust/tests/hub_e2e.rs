@@ -10,7 +10,7 @@ use std::sync::Arc;
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
 use c3o::data::{Dataset, JobKind, RunRecord};
-use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy};
 use c3o::runtime::NativeBackend;
 use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
 use c3o::util::prng::Pcg;
@@ -199,6 +199,125 @@ fn concurrent_clients_consistent_state() {
     server.shutdown();
 }
 
+/// Worker-pool stress: concurrent clients mix `predict_batch` and
+/// `submit_runs` across *different* jobs (per-job submit locks commit in
+/// parallel). Afterwards: no lost updates (every accepted submit landed
+/// exactly one revision and all its records), revisions are monotone per
+/// client, and the stats counters add up to the submission count.
+#[test]
+fn stress_mixed_predicts_and_submits_across_jobs() {
+    let state = Arc::new(HubState::new());
+    let catalog = Catalog::aws_like();
+    for job in [JobKind::Sort, JobKind::Grep] {
+        let mut repo = Repository::new(job, &format!("spark {job}"));
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        repo.data = generate_job(job, &GeneratorConfig::default(), &catalog).unwrap();
+        state.insert(repo);
+    }
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog,
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig { workers: 12, max_conns: 64, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    let mut c0 = HubClient::connect(&addr).unwrap();
+    let initial_sort = c0.get_repo(JobKind::Sort).unwrap().data.len();
+    let initial_grep = c0.get_repo(JobKind::Grep).unwrap().data.len();
+
+    const ROUNDS: usize = 3;
+    const RECORDS_PER_SUBMIT: usize = 3;
+    let mut submitters = Vec::new();
+    for t in 0..4usize {
+        let addr = addr.clone();
+        submitters.push(std::thread::spawn(move || {
+            let job = if t % 2 == 0 { JobKind::Sort } else { JobKind::Grep };
+            let mut c = HubClient::connect(&addr).unwrap();
+            let mut outcomes = Vec::new();
+            for i in 0..ROUNDS {
+                let seed = 7000 + (t * 100 + i) as u64;
+                let contrib = honest_runs(job, RECORDS_PER_SUBMIT, seed);
+                let v = c.submit_runs(&contrib).unwrap();
+                outcomes.push((job, v.accepted, v.revision));
+            }
+            outcomes
+        }));
+    }
+    let mut predictors = Vec::new();
+    for t in 0..4usize {
+        let addr = addr.clone();
+        predictors.push(std::thread::spawn(move || {
+            let mut c = HubClient::connect(&addr).unwrap();
+            for i in 0..8usize {
+                let job = if (t + i) % 2 == 0 { JobKind::Sort } else { JobKind::Grep };
+                let rows: Vec<Vec<f64>> = (2..=9u32)
+                    .map(|s| {
+                        let mut r = vec![s as f64, 15.0];
+                        if job == JobKind::Grep {
+                            r.push(0.01);
+                        }
+                        r
+                    })
+                    .collect();
+                let b = c.predict_batch(job, None, &rows).unwrap();
+                assert_eq!(b.runtimes.len(), rows.len());
+                assert!(b.runtimes.iter().all(|rt| rt.is_finite() && *rt > 0.0));
+            }
+        }));
+    }
+
+    let mut all = Vec::new();
+    for h in submitters {
+        let outcomes = h.join().unwrap();
+        // Revisions one client observes for its job never go backwards.
+        for w in outcomes.windows(2) {
+            assert!(w[1].2 >= w[0].2, "revision went backwards: {w:?}");
+        }
+        all.extend(outcomes);
+    }
+    for h in predictors {
+        h.join().unwrap();
+    }
+
+    for (job, initial) in [(JobKind::Sort, initial_sort), (JobKind::Grep, initial_grep)] {
+        let mut accepted_revs: Vec<u64> = all
+            .iter()
+            .filter(|(j, acc, _)| *j == job && *acc)
+            .map(|&(_, _, rev)| rev)
+            .collect();
+        accepted_revs.sort_unstable();
+        let expect: Vec<u64> = (1..=accepted_revs.len() as u64).collect();
+        assert_eq!(
+            accepted_revs, expect,
+            "{job}: each accepted submit commits exactly one revision"
+        );
+        let repo = c0.get_repo(job).unwrap();
+        assert_eq!(repo.revision, accepted_revs.len() as u64);
+        assert_eq!(
+            repo.data.len(),
+            initial + accepted_revs.len() * RECORDS_PER_SUBMIT,
+            "{job}: accepted records must all land (no lost updates)"
+        );
+    }
+
+    let s = c0.stats().unwrap();
+    let accepted_total = all.iter().filter(|(_, acc, _)| *acc).count() as u64;
+    assert_eq!(
+        s.accepted + s.rejected,
+        (4 * ROUNDS) as u64,
+        "every submission got a verdict"
+    );
+    assert_eq!(s.accepted, accepted_total);
+    server.shutdown();
+}
+
 #[test]
 fn get_missing_repo_is_clean_error() {
     let server = start_hub_with_data();
@@ -206,6 +325,93 @@ fn get_missing_repo_is_clean_error() {
     let err = client.get_repo(JobKind::PageRank).unwrap_err();
     assert!(err.to_string().contains("no repository"), "{err:#}");
     assert!(err.to_string().contains("not_found"), "{err:#}");
+    server.shutdown();
+}
+
+#[test]
+fn connection_flood_is_refused_with_structured_unavailable() {
+    use std::io::{BufRead, BufReader};
+    let state = Arc::new(HubState::new());
+    state.insert(Repository::new(JobKind::Sort, "spark sort"));
+    let service = Arc::new(PredictionService::new(
+        state,
+        Catalog::aws_like(),
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig {
+            workers: 1,
+            max_conns: 1,
+            // Generous idle deadline: connection `a` below sits idle under
+            // queue pressure on purpose and must not be reaped mid-test.
+            idle_timeout: std::time::Duration::from_secs(300),
+        },
+    )
+    .unwrap();
+
+    // Occupy the single worker (a served connection is held until the
+    // client hangs up)...
+    let mut a = HubClient::connect(&server.addr.to_string()).unwrap();
+    a.stats().unwrap();
+    // ...and the single queue slot.
+    let _b = std::net::TcpStream::connect(server.addr).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    // The flood overflow gets a structured v1 error frame, not a hangup.
+    let c = std::net::TcpStream::connect(server.addr).unwrap();
+    c.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    let mut line = String::new();
+    BufReader::new(c).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("unavailable"), "{line}");
+    assert!(line.contains("connection capacity"), "{line}");
+
+    // The served connection keeps working through the flood.
+    a.stats().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn idle_connection_is_reaped_only_under_queue_pressure() {
+    let state = Arc::new(HubState::new());
+    state.insert(Repository::new(JobKind::Sort, "spark sort"));
+    let service = Arc::new(PredictionService::new(
+        state,
+        Catalog::aws_like(),
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig {
+            workers: 1,
+            max_conns: 8,
+            idle_timeout: std::time::Duration::from_millis(200),
+        },
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    // `a` holds the only worker and goes idle. With no queue pressure it
+    // survives well past the idle deadline.
+    let mut a = HubClient::connect(&addr).unwrap();
+    a.stats().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(600));
+    a.stats().unwrap();
+
+    // `b` queues behind it; the pressure starts the idle clock on `a`,
+    // so `b` must eventually be served on the freed worker.
+    let mut b = HubClient::connect(&addr).unwrap();
+    let s = b.stats().unwrap();
+    assert_eq!(s.repos, 1);
+
+    // `a` was closed to free the worker.
+    let err = a.stats().unwrap_err();
+    assert!(err.to_string().contains("closed"), "{err:#}");
     server.shutdown();
 }
 
