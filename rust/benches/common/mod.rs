@@ -39,12 +39,12 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) {
     println!("[bench] wrote {}", path.display());
 }
 
-/// Merge one section into `BENCH_hub_load.json` at the crate root — the
-/// machine-readable perf summary tracked across PRs. Each bench binary
-/// owns one top-level key and re-writing it leaves the others intact, so
-/// `cargo bench` runs accumulate into a single file.
-pub fn write_bench_json(section: &str, value: Json) {
-    let path = PathBuf::from("BENCH_hub_load.json");
+/// Merge one section into a bench JSON at the crate root — the
+/// machine-readable perf summaries tracked across PRs. Each bench binary
+/// owns one top-level key of one file and re-writing it leaves the other
+/// sections intact, so `cargo bench` runs accumulate.
+pub fn write_bench_json_named(file: &str, section: &str, value: Json) {
+    let path = PathBuf::from(file);
     let mut root = std::fs::read_to_string(&path)
         .ok()
         .and_then(|text| Json::parse(&text).ok())
@@ -59,6 +59,18 @@ pub fn write_bench_json(section: &str, value: Json) {
     text.push('\n');
     std::fs::write(&path, text).expect("write bench json");
     println!("[bench] wrote section `{section}` to {}", path.display());
+}
+
+/// The hub-path benches (E8/E9) share `BENCH_hub_load.json`.
+pub fn write_bench_json(section: &str, value: Json) {
+    write_bench_json_named("BENCH_hub_load.json", section, value);
+}
+
+/// CI smoke mode (`C3O_BENCH_SMOKE=1`): 1 measured iteration, shrunken
+/// problem sizes — keeps bench binaries compiling *and running* in CI
+/// without burning minutes.
+pub fn smoke() -> bool {
+    std::env::var("C3O_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
 /// The production backend if artifacts exist, else native (announced).

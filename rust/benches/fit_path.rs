@@ -1,0 +1,159 @@
+//! E4 (fit path) — cold-fit latency vs CV threads at repo scale.
+//!
+//! One cold `C3oPredictor::fit` at the paper's 930-experiment corpus
+//! scale cross-validates every candidate (k-fold here: 930 > loo_cap),
+//! which PR 2 left as the hub's remaining serial bottleneck. This bench
+//! drives the `cv::parallel::FitEngine` at 1/2/4/8 threads on one
+//! 930-record training set and reports the speedup over the serial
+//! reference, plus two budgeted rows (point cap and wall-clock cap)
+//! showing the LOO → k-fold → reduced-set degrade.
+//!
+//! The engine guarantees bit-identical scores at any thread count, so the
+//! bench asserts the chosen model and its MAPE bits match the serial run
+//! while timing it.
+//!
+//! Results merge into `BENCH_fit_path.json` (section `fit_path`).
+//! `C3O_BENCH_SMOKE=1` runs 1 iteration at reduced scale for CI.
+
+mod common;
+
+use std::sync::Arc;
+
+use c3o::bench::bench;
+use c3o::cv::{FitEngine, SampleStrategy, SelectionBudget, SelectionPlan};
+use c3o::linalg::Matrix;
+use c3o::models::{C3oPredictor, TrainData};
+use c3o::runtime::FitBackend;
+use c3o::util::json::Json;
+use c3o::util::prng::Pcg;
+
+/// A 930-row training world shaped like the paper's corpus: scale-outs
+/// 2..12, data sizes 10..50 GB, one context feature, separable runtime
+/// with mild noise.
+fn corpus(n: usize, seed: u64) -> TrainData {
+    let mut rng = Pcg::seed(seed);
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = (2 + i % 11) as f64;
+        let d = rng.range_f64(10.0, 50.0);
+        let k = rng.range(3, 10) as f64;
+        rows.push(vec![s, d, k]);
+        y.push(
+            (1.0 / s + 0.02 * s)
+                * (10.0 + 4.0 * d + 9.0 * k)
+                * (1.0 + 0.02 * rng.normal()),
+        );
+    }
+    TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+}
+
+fn cold_fit(
+    backend: &Arc<dyn FitBackend>,
+    data: &TrainData,
+    engine: FitEngine,
+) -> (String, u64) {
+    let mut p = C3oPredictor::new(backend.clone());
+    p.set_engine(engine);
+    let report = p.fit(data).expect("cold fit");
+    (report.chosen, report.chosen_score.mape.to_bits())
+}
+
+fn main() {
+    let backend = common::backend();
+    let smoke = common::smoke();
+    let n = if smoke { 160 } else { 930 };
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, 5) };
+    let thread_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let data = corpus(n, 0xC30);
+
+    println!("== E4 (fit path): cold fit at {n}-record repo scale ==\n");
+
+    // Serial reference: timing baseline + the ground-truth selection.
+    let (chosen_serial, mape_bits_serial) =
+        cold_fit(&backend, &data, FitEngine::serial());
+
+    let mut summary = Vec::new();
+    let mut csv = Vec::new();
+    let mut serial_mean = 0.0f64;
+    for &threads in thread_counts {
+        // Capture the last measured iteration's selection instead of
+        // paying one more untimed cold fit just to assert on it.
+        let mut last = (String::new(), 0u64);
+        let r = bench(&format!("cold_fit/{n}pts/{threads}thr"), warmup, iters, || {
+            last = cold_fit(&backend, &data, FitEngine::with_threads(threads));
+        });
+        // Any thread count must reproduce the serial selection exactly.
+        let (chosen, mape_bits) = last;
+        assert_eq!(chosen, chosen_serial, "{threads} threads changed the winner");
+        assert_eq!(mape_bits, mape_bits_serial, "{threads} threads changed the score");
+
+        if threads == 1 {
+            serial_mean = r.mean_s;
+        }
+        let speedup = serial_mean / r.mean_s.max(1e-12);
+        println!("  {}  ({speedup:.2}x vs 1 thread)", r.per_iter_display());
+        csv.push(format!("cold_fit,{n},{threads},{:.6},{speedup:.3}", r.mean_s));
+        summary.push(Json::obj(vec![
+            ("records", Json::Num(n as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("mean_s", Json::Num(r.mean_s)),
+            ("speedup_vs_serial", Json::Num(speedup)),
+            ("chosen", Json::Str(chosen)),
+        ]));
+    }
+
+    // Budget degrade rows: a hard point cap and a tight wall-clock cap.
+    println!("\n  -- selection budget (LOO → k-fold → reduced set) --");
+    for (label, budget) in [
+        (
+            "points<=120",
+            SelectionBudget {
+                max_points: Some(120),
+                strategy: SampleStrategy::StratifiedByScaleOut,
+                ..SelectionBudget::default()
+            },
+        ),
+        (
+            "wall<=0.5s",
+            SelectionBudget { max_seconds: Some(0.5), ..SelectionBudget::default() },
+        ),
+    ] {
+        let engine = FitEngine { threads: 0, budget };
+        // Capture the last measured fit's report rather than refitting
+        // once more outside the timer.
+        let mut last: Option<(String, SelectionPlan)> = None;
+        let r = bench(&format!("cold_fit_budget/{n}pts/{label}"), warmup, iters, || {
+            let mut p = C3oPredictor::new(backend.clone());
+            p.set_engine(engine.clone());
+            let report = p.fit(&data).expect("budgeted fit");
+            last = Some((report.chosen, report.plan));
+        });
+        let (chosen, plan) = last.expect("at least one measured iteration");
+        println!(
+            "  {}  (plan: {:?} on {}/{} points)",
+            r.per_iter_display(),
+            plan.method,
+            plan.n_used,
+            plan.n_total
+        );
+        csv.push(format!("cold_fit_budget,{n},{label},{:.6},", r.mean_s));
+        summary.push(Json::obj(vec![
+            ("records", Json::Num(n as f64)),
+            ("budget", Json::Str(label.to_string())),
+            ("mean_s", Json::Num(r.mean_s)),
+            ("cv_points", Json::Num(plan.n_used as f64)),
+            ("chosen", Json::Str(chosen)),
+        ]));
+    }
+
+    common::write_csv("fit_path.csv", "bench,records,variant,mean_s,speedup", &csv);
+    common::write_bench_json_named(
+        "BENCH_fit_path.json",
+        "fit_path",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("rows", Json::Arr(summary)),
+        ]),
+    );
+}

@@ -25,8 +25,9 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cloud::Catalog;
 use crate::configurator::{
-    fit_prepared, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
+    fit_prepared_with, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
 };
+use crate::cv::parallel::FitEngine;
 use crate::data::{Dataset, JobKind};
 use crate::hub::{HubState, ValidationPolicy};
 use crate::models::C3oPredictor;
@@ -83,6 +84,12 @@ pub struct PredictionService {
     /// `(job, machine_type)` serialize here, and all but the first reuse
     /// the first's fit (bounded by jobs x machine types).
     fit_gates: Mutex<HashMap<CacheKey, Arc<Mutex<()>>>>,
+    /// Fit-path execution engine for cold fits: CV worker threads plus the
+    /// selection budget. Default: all cores, unlimited budget. Behind a
+    /// leaf `RwLock` (read once per cold fit, never held across one) so
+    /// `HubServer::start_with` can install `ServerConfig::fit_engine()`
+    /// on the already-shared service.
+    engine: RwLock<FitEngine>,
     fits: AtomicU64,
     cache_hits: AtomicU64,
 }
@@ -101,9 +108,26 @@ impl PredictionService {
             backend,
             cache: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
             fit_gates: Mutex::new(HashMap::new()),
+            engine: RwLock::new(FitEngine::default()),
             fits: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
         }
+    }
+
+    /// Replace the cold-fit execution engine (builder style). Note that
+    /// serving over TCP makes the `ServerConfig` authoritative: **both**
+    /// `HubServer::start` and `start_with` install the config's
+    /// `fit_engine()` over this (for `start`, the default config's). The
+    /// builder matters for embedded (service-only) uses.
+    pub fn with_engine(self, engine: FitEngine) -> Self {
+        self.set_engine(engine);
+        self
+    }
+
+    /// Install a new cold-fit execution engine. In-flight fits keep the
+    /// engine they already resolved; subsequent cold fits use the new one.
+    pub fn set_engine(&self, engine: FitEngine) {
+        *self.engine.write().unwrap() = engine;
     }
 
     pub fn state(&self) -> &Arc<HubState> {
@@ -196,8 +220,14 @@ impl PredictionService {
 
         // Fit outside the cache lock (fits are slow), from the snapshot's
         // columnar view — built once per revision, shared by every fit.
-        let (predictor, report) = fit_prepared(repo.view(), &machine, self.backend.clone())
-            .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
+        // The engine fans CV work across cores; thread count and point
+        // caps are bit-deterministic, while a wall-clock budget
+        // (`max_seconds`) plans from timed probes and may legitimately
+        // pick different plans under different machine load.
+        let engine = self.engine.read().unwrap().clone();
+        let (predictor, report) =
+            fit_prepared_with(repo.view(), &machine, self.backend.clone(), &engine)
+                .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
         self.fits.fetch_add(1, Ordering::Relaxed);
         let model = Arc::new(FittedModel {
             machine_type: machine.clone(),

@@ -22,28 +22,43 @@ use std::sync::Arc;
 use anyhow::Context as _;
 
 use crate::cloud::Catalog;
+use crate::cv::parallel::FitEngine;
 use crate::data::{Dataset, FeatureMatrix};
 use crate::models::{C3oPredictor, SelectionReport};
 use crate::runtime::FitBackend;
 use crate::sim::JobInput;
 
-/// Fit a C3O predictor from a prebuilt columnar view — the §IV training
-/// step. The hub's `PredictionService` calls this with the view its
-/// repository snapshot built once for the current dataset revision, so
-/// concurrent fits (and refits after a cache invalidation) never
-/// re-materialize feature rows.
-pub fn fit_prepared(
+/// [`fit_prepared`] with an explicit fit-path execution engine — the
+/// hub's `PredictionService` passes its configured engine here so cold
+/// fits fan CV work across cores (and obey the selection budget), while
+/// any engine produces bit-identical scores and the same chosen model.
+pub fn fit_prepared_with(
     view: &FeatureMatrix,
     machine: &str,
     backend: Arc<dyn FitBackend>,
+    engine: &FitEngine,
 ) -> crate::Result<(C3oPredictor, SelectionReport)> {
     let data = view
         .train_data(machine)
         .filter(|d| d.len() >= 4)
         .with_context(|| format!("not enough runtime data for machine type {machine}"))?;
     let mut predictor = C3oPredictor::new(backend);
+    predictor.set_engine(engine.clone());
     let report = predictor.fit(data)?;
     Ok((predictor, report))
+}
+
+/// Fit a C3O predictor from a prebuilt columnar view — the §IV training
+/// step. The hub's `PredictionService` calls this with the view its
+/// repository snapshot built once for the current dataset revision, so
+/// concurrent fits (and refits after a cache invalidation) never
+/// re-materialize feature rows. Uses the serial reference engine.
+pub fn fit_prepared(
+    view: &FeatureMatrix,
+    machine: &str,
+    backend: Arc<dyn FitBackend>,
+) -> crate::Result<(C3oPredictor, SelectionReport)> {
+    fit_prepared_with(view, machine, backend, &FitEngine::serial())
 }
 
 /// Fit a C3O predictor on one machine type's slice of `shared` — local
@@ -54,6 +69,26 @@ pub fn fit_predictor(
     backend: Arc<dyn FitBackend>,
 ) -> crate::Result<(C3oPredictor, SelectionReport)> {
     fit_prepared(&shared.feature_view(), machine, backend)
+}
+
+/// [`configure`] with an explicit fit-path execution engine (the CLI's
+/// `--fit-threads` / `--fit-budget` land here).
+pub fn configure_with(
+    catalog: &Catalog,
+    shared: &Dataset,
+    maintainer_type: Option<&str>,
+    input: &JobInput,
+    goals: &UserGoals,
+    backend: Arc<dyn FitBackend>,
+    engine: &FitEngine,
+) -> crate::Result<ConfigChoice> {
+    // One columnar view serves both the machine choice and the fit.
+    let view = shared.feature_view();
+    let machine = select_machine_type(catalog, &view, maintainer_type)?;
+    let (predictor, report) = fit_prepared_with(&view, &machine, backend, engine)?;
+    let (mu, sigma) = (report.chosen_score.resid_mean, report.chosen_score.resid_std);
+
+    select_scale_out(catalog, &machine, &predictor, input, goals, mu, sigma)
 }
 
 /// End-to-end configuration: machine type (§IV-A) then scale-out (§IV-B).
@@ -69,13 +104,15 @@ pub fn configure(
     goals: &UserGoals,
     backend: Arc<dyn FitBackend>,
 ) -> crate::Result<ConfigChoice> {
-    // One columnar view serves both the machine choice and the fit.
-    let view = shared.feature_view();
-    let machine = select_machine_type(catalog, &view, maintainer_type)?;
-    let (predictor, report) = fit_prepared(&view, &machine, backend)?;
-    let (mu, sigma) = (report.chosen_score.resid_mean, report.chosen_score.resid_std);
-
-    select_scale_out(catalog, &machine, &predictor, input, goals, mu, sigma)
+    configure_with(
+        catalog,
+        shared,
+        maintainer_type,
+        input,
+        goals,
+        backend,
+        &FitEngine::serial(),
+    )
 }
 
 #[cfg(test)]
@@ -103,5 +140,38 @@ mod tests {
         assert_eq!(choice.machine_type, "m5.xlarge");
         assert!(catalog.scale_outs.contains(&choice.scale_out));
         assert!(choice.predicted_runtime_s > 0.0);
+    }
+
+    #[test]
+    fn parallel_engine_configures_identically_to_serial() {
+        let catalog = Catalog::aws_like();
+        let ds = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let serial = configure(
+            &catalog,
+            &ds,
+            Some("m5.xlarge"),
+            &input,
+            &goals,
+            Arc::new(NativeBackend::new()),
+        )
+        .unwrap();
+        let parallel = configure_with(
+            &catalog,
+            &ds,
+            Some("m5.xlarge"),
+            &input,
+            &goals,
+            Arc::new(NativeBackend::new()),
+            &FitEngine::with_threads(4),
+        )
+        .unwrap();
+        assert_eq!(serial.machine_type, parallel.machine_type);
+        assert_eq!(serial.scale_out, parallel.scale_out);
+        assert_eq!(
+            serial.predicted_runtime_s.to_bits(),
+            parallel.predicted_runtime_s.to_bits()
+        );
     }
 }

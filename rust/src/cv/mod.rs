@@ -1,4 +1,13 @@
 //! Cross-validation: split generation and scoring (paper §V-C, §VI-C).
+//!
+//! The serial scorers here are the *reference semantics*; the fit-path
+//! execution engine in [`parallel`] fans the same splits out across a
+//! worker pool and must reproduce these scores bit-for-bit (asserted in
+//! `parallel::tests` and `models::c3o::tests`).
+
+pub mod parallel;
+
+pub use parallel::{CvMethod, FitEngine, SampleStrategy, SelectionBudget, SelectionPlan};
 
 use crate::models::{RuntimeModel, TrainData};
 use crate::util::prng::Pcg;
@@ -27,6 +36,35 @@ pub fn loo_score(model: &dyn RuntimeModel, data: &TrainData) -> crate::Result<Cv
     Ok(score_from_preds(&preds, &data.y))
 }
 
+/// One fold's `(train, test)` index lists.
+pub type FoldSplit = (Vec<usize>, Vec<usize>);
+
+/// Seeded fold assignment for `n` points: shuffle once, fold `f` tests
+/// every k-th point of the shuffled order. Shared by the serial scorer and
+/// the parallel engine so both fit on byte-identical subsets.
+pub fn kfold_splits(n: usize, k: usize, seed: u64) -> Vec<FoldSplit> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Pcg::new(seed, 0xF0).shuffle(&mut order);
+    // Membership bitmap instead of a `test.contains(i)` scan per training
+    // point: the train list builds in O(n) per fold, not O(n²/k).
+    let mut is_test = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    for fold in 0..k {
+        let test: Vec<usize> =
+            order.iter().copied().skip(fold).step_by(k).collect();
+        for &i in &test {
+            is_test[i] = true;
+        }
+        let train: Vec<usize> =
+            order.iter().copied().filter(|&i| !is_test[i]).collect();
+        for &i in &test {
+            is_test[i] = false;
+        }
+        out.push((train, test));
+    }
+    out
+}
+
 /// K-fold CV (used when the training set outgrows the LOO budget, §VI-C:
 /// "the model selection phase needs to be capped").
 pub fn kfold_score(
@@ -37,16 +75,9 @@ pub fn kfold_score(
 ) -> crate::Result<CvScore> {
     let n = data.len();
     anyhow::ensure!(k >= 2 && n >= k, "kfold: need 2 <= k <= n");
-    let mut order: Vec<usize> = (0..n).collect();
-    Pcg::new(seed, 0xF0).shuffle(&mut order);
-
     let mut preds = vec![0.0; n];
     let mut scratch = model.clone_unfitted();
-    for fold in 0..k {
-        let test: Vec<usize> =
-            order.iter().copied().skip(fold).step_by(k).collect();
-        let train: Vec<usize> =
-            order.iter().copied().filter(|i| !test.contains(i)).collect();
+    for (train, test) in kfold_splits(n, k, seed) {
         scratch.fit(&data.subset(&train))?;
         for &i in &test {
             preds[i] = scratch.predict_one(data.x.row(i))?;
@@ -136,6 +167,25 @@ mod tests {
         let s = score_from_preds(&[110.0, 210.0], &[100.0, 200.0]);
         assert!((s.resid_mean - 10.0).abs() < 1e-12);
         assert!(s.resid_std < 1e-12);
+    }
+
+    #[test]
+    fn kfold_splits_partition_every_fold() {
+        let n = 23;
+        let k = 5;
+        let splits = kfold_splits(n, k, 7);
+        assert_eq!(splits.len(), k);
+        let mut tested: Vec<usize> = Vec::new();
+        for (train, test) in &splits {
+            assert_eq!(train.len() + test.len(), n);
+            let mut all: Vec<usize> = train.iter().chain(test).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>());
+            tested.extend_from_slice(test);
+        }
+        // Every point is held out exactly once across folds.
+        tested.sort_unstable();
+        assert_eq!(tested, (0..n).collect::<Vec<_>>());
     }
 
     #[test]

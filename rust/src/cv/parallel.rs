@@ -1,0 +1,735 @@
+//! The fit-path execution engine (DESIGN.md §8).
+//!
+//! Model selection is the hub's cold-fit latency cliff: LOO retrains every
+//! candidate once per training point, serially — the phase the paper caps
+//! at 10–30 s (§VI-C). [`FitEngine`] fans the (candidate × split) work out
+//! over a scoped worker pool ([`crate::util::par`]) while keeping the
+//! exact split definitions, fit inputs and reduction order of the serial
+//! scorers in [`crate::cv`] — scores are bit-identical and the same model
+//! wins, whatever the thread count. Only candidates that declare
+//! [`RuntimeModel::loo_splits_independent`] (the default per-row refit
+//! loop: GBM, BOM, OGB) have their LOO rows fanned out; everything else —
+//! Ernest's batched backend launch, any custom `loo_predictions`
+//! override — runs as one whole-LOO task calling the model's own
+//! implementation, so overrides keep their exact semantics.
+//!
+//! On top sits the **selection budget**: a wall-clock and/or point cap
+//! that degrades the plan LOO → k-fold → reduced training set (uniform or
+//! stratified-by-scale-out sampling, after arXiv 2111.07904's training
+//! data reduction) instead of blowing the paper's envelope. Point caps are
+//! fully deterministic; the wall-clock cap times one probe fit per
+//! candidate on this machine and is therefore an estimate, not a
+//! guarantee.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use crate::models::{RuntimeModel, TrainData};
+use crate::util::par::par_map;
+use crate::util::prng::Pcg;
+
+use super::{kfold_splits, score_from_preds, CvScore};
+
+/// Training points a budget reduction never goes below (keeps k-fold
+/// meaningful and the optimistic models fittable).
+const MIN_CV_POINTS: usize = 12;
+
+/// Probe-subset size for wall-clock cost calibration.
+const PROBE_POINTS: usize = 32;
+
+/// How the CV training set is thinned when the budget demands reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SampleStrategy {
+    /// Seeded uniform subsample.
+    Uniform,
+    /// Keep the scale-out mix: sample proportionally within each scale-out
+    /// group (arXiv 2111.07904's stratified reduction), so the optimistic
+    /// models still see every cluster size after thinning.
+    #[default]
+    StratifiedByScaleOut,
+}
+
+/// Cost cap for one selection pass. `Default` is unlimited.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SelectionBudget {
+    /// Wall-clock target (seconds) for the whole selection phase. Enforced
+    /// by *planning*, not interruption: a timed probe fit per candidate
+    /// estimates each plan's cost and the highest-fidelity plan that fits
+    /// is chosen (LOO → k-fold → reduced set).
+    pub max_seconds: Option<f64>,
+    /// Hard cap on training points cross-validated; beyond it the CV set
+    /// is sampled down with `strategy`. Deterministic given the seed.
+    pub max_points: Option<usize>,
+    /// How a reduced CV set is drawn.
+    pub strategy: SampleStrategy,
+}
+
+impl SelectionBudget {
+    pub fn is_unlimited(&self) -> bool {
+        self.max_seconds.is_none() && self.max_points.is_none()
+    }
+}
+
+/// CV scheme chosen by the planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CvMethod {
+    /// Leave-one-out: one fit per training point per candidate.
+    Loo,
+    /// K-fold with the given k: k fits per candidate.
+    KFold(usize),
+}
+
+/// What one selection pass actually did — recorded in the
+/// [`crate::models::SelectionReport`] so budget degradation is observable.
+#[derive(Debug, Clone)]
+pub struct SelectionPlan {
+    pub method: CvMethod,
+    /// Rows (ascending) the CV ran on; `None` = the full training set.
+    pub sample: Option<Vec<usize>>,
+    /// Training points available.
+    pub n_total: usize,
+    /// Training points cross-validated.
+    pub n_used: usize,
+    /// Worker threads the engine resolved to.
+    pub threads: usize,
+}
+
+impl SelectionPlan {
+    /// True when the budget forced a training-set reduction.
+    pub fn reduced(&self) -> bool {
+        self.n_used < self.n_total
+    }
+}
+
+/// The fit-path execution engine: a worker-thread count plus a selection
+/// budget. `Default` is all cores, unlimited budget; [`FitEngine::serial`]
+/// is the bit-identical single-threaded reference.
+#[derive(Debug, Clone, Default)]
+pub struct FitEngine {
+    /// Worker threads for the candidate × split fan-out. 0 ⇒ available
+    /// parallelism; 1 ⇒ fully serial.
+    pub threads: usize,
+    pub budget: SelectionBudget,
+}
+
+impl FitEngine {
+    /// The serial reference engine (1 worker, no budget).
+    pub fn serial() -> Self {
+        FitEngine { threads: 1, budget: SelectionBudget::default() }
+    }
+
+    /// Parallel engine with no budget.
+    pub fn with_threads(threads: usize) -> Self {
+        FitEngine { threads, budget: SelectionBudget::default() }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        } else {
+            self.threads
+        }
+    }
+
+    /// Cross-validate every candidate on `data` under the engine's budget.
+    ///
+    /// Returns the executed plan plus one `Result<CvScore>` per candidate,
+    /// in candidate order. A candidate whose fit or prediction fails on any
+    /// split is an `Err` (callers disqualify it); the pass itself only
+    /// fails on structural misuse (k < 2).
+    pub fn score_candidates(
+        &self,
+        candidates: &[Box<dyn RuntimeModel>],
+        data: &TrainData,
+        loo_cap: usize,
+        kfold_k: usize,
+        seed: u64,
+    ) -> crate::Result<(SelectionPlan, Vec<crate::Result<CvScore>>)> {
+        anyhow::ensure!(kfold_k >= 2, "kfold: need k >= 2");
+        anyhow::ensure!(!data.is_empty(), "no training data");
+        let plan = self.plan(candidates, data, loo_cap, kfold_k, seed);
+        let reduced;
+        let cv_data = match &plan.sample {
+            Some(idx) => {
+                reduced = data.subset(idx);
+                &reduced
+            }
+            None => data,
+        };
+        let scores = match plan.method {
+            CvMethod::Loo => self.loo_scores(candidates, cv_data),
+            CvMethod::KFold(k) => self.kfold_scores(candidates, cv_data, k, seed),
+        };
+        Ok((plan, scores))
+    }
+
+    /// Decide the CV method and training subset for this pass.
+    ///
+    /// Without `max_seconds` the plan is a pure function of `(n, loo_cap,
+    /// kfold_k, budget, seed)`. Sets too small for k-fold fall back to LOO
+    /// rather than erroring.
+    fn plan(
+        &self,
+        candidates: &[Box<dyn RuntimeModel>],
+        data: &TrainData,
+        loo_cap: usize,
+        kfold_k: usize,
+        seed: u64,
+    ) -> SelectionPlan {
+        let n_total = data.len();
+        let mut sample: Option<Vec<usize>> = None;
+        let mut n_used = n_total;
+
+        // Hard point cap first: it bounds the CV set regardless of speed.
+        if let Some(cap) = self.budget.max_points {
+            let target = cap.max(3).min(n_total);
+            if target < n_total {
+                sample = Some(sample_cv_indices(data, target, self.budget.strategy, seed));
+                n_used = target;
+            }
+        }
+
+        let mut method =
+            if n_used <= loo_cap { CvMethod::Loo } else { CvMethod::KFold(kfold_k) };
+
+        if let Some(t_max) = self.budget.max_seconds {
+            let rates = self.probe_rates(candidates, data, seed);
+            let rate_sum: f64 = rates.iter().sum();
+            let w = self.resolved_threads() as f64;
+            if method == CvMethod::Loo {
+                // LOO ≈ n fits of ≈ n points (r·m²) per candidate. Row
+                // tasks spread over the pool; a whole-LOO task is one
+                // unsplittable unit, so the wall-clock floor is the
+                // largest such task (planning charges overridden
+                // implementations the full r·m² — a batched backend may
+                // be cheaper, but a budget must not assume so: the
+                // native NNLS "batch" is a per-mask solve loop).
+                let m = n_used as f64;
+                let whole_max: f64 = rates
+                    .iter()
+                    .zip(candidates)
+                    .map(|(r, c)| if c.loo_splits_independent() { 0.0 } else { r * m * m })
+                    .fold(0.0, f64::max);
+                let total: f64 = rates.iter().map(|r| r * m * m).sum();
+                let est_loo = (total / w).max(whole_max);
+                if est_loo > t_max {
+                    method = CvMethod::KFold(kfold_k);
+                }
+            }
+            if let CvMethod::KFold(k) = method {
+                // K-fold ≈ k fits of ≈ n points per candidate.
+                let est_kfold = rate_sum * k as f64 * n_used as f64 / w;
+                if est_kfold > t_max {
+                    let floor = MIN_CV_POINTS.max(k).min(n_used);
+                    let affordable =
+                        (t_max * w / (rate_sum * k as f64).max(1e-12)) as usize;
+                    let target = affordable.clamp(floor, n_used);
+                    if target < n_used {
+                        // Resample from the original data: deterministic
+                        // given the target size.
+                        sample = Some(sample_cv_indices(
+                            data,
+                            target,
+                            self.budget.strategy,
+                            seed,
+                        ));
+                        n_used = target;
+                    }
+                }
+            }
+        }
+
+        // K-fold needs at least k points; tiny (possibly reduced) sets use
+        // LOO, which is affordable there by construction.
+        if let CvMethod::KFold(k) = method {
+            if n_used < k {
+                method = CvMethod::Loo;
+            }
+        }
+
+        SelectionPlan {
+            method,
+            sample,
+            n_total,
+            n_used,
+            threads: self.resolved_threads(),
+        }
+    }
+
+    /// Time one fit per candidate on a small stratified probe subset and
+    /// return per-(point·fit) cost estimates. Only runs when a wall-clock
+    /// budget is set; a candidate whose probe fit errors rates as cheap
+    /// and is disqualified during CV anyway.
+    fn probe_rates(
+        &self,
+        candidates: &[Box<dyn RuntimeModel>],
+        data: &TrainData,
+        seed: u64,
+    ) -> Vec<f64> {
+        let m = PROBE_POINTS.min(data.len());
+        let probe = if m < data.len() {
+            data.subset(&sample_cv_indices(
+                data,
+                m,
+                SampleStrategy::StratifiedByScaleOut,
+                seed ^ 0x9E37,
+            ))
+        } else {
+            data.clone()
+        };
+        par_map(candidates, self.threads, |_, c| {
+            let mut scratch = c.clone_unfitted();
+            let t0 = Instant::now();
+            let _ = scratch.fit(&probe);
+            (t0.elapsed().as_secs_f64() / m as f64).max(1e-9)
+        })
+    }
+
+    /// LOO every candidate over one flat task pool. Row-loop candidates
+    /// (`loo_splits_independent`) fan out one task per held-out row;
+    /// everything else contributes a single whole-LOO task running its own
+    /// `loo_predictions`. Reduction walks tasks in submission order;
+    /// successful candidates score bit-identically to the serial loop,
+    /// while a failing candidate short-circuits its remaining rows (it is
+    /// disqualified either way — only the error text may differ).
+    fn loo_scores(
+        &self,
+        candidates: &[Box<dyn RuntimeModel>],
+        data: &TrainData,
+    ) -> Vec<crate::Result<CvScore>> {
+        let n = data.len();
+
+        #[derive(Clone, Copy)]
+        enum Task {
+            Whole { cand: usize },
+            Row { cand: usize, row: usize },
+        }
+        enum Out {
+            Whole(crate::Result<Vec<f64>>),
+            Row(crate::Result<f64>),
+        }
+
+        let mut tasks: Vec<Task> = Vec::new();
+        for (cand, c) in candidates.iter().enumerate() {
+            if c.loo_splits_independent() {
+                for row in 0..n {
+                    tasks.push(Task::Row { cand, row });
+                }
+            } else {
+                tasks.push(Task::Whole { cand });
+            }
+        }
+
+        // One flag per candidate: once any split fails, that candidate's
+        // remaining row tasks short-circuit — it is disqualified either
+        // way, so n-1 further doomed refits would be pure waste. Only the
+        // reported error message can differ from the serial first-error.
+        let failed: Vec<AtomicBool> =
+            candidates.iter().map(|_| AtomicBool::new(false)).collect();
+
+        let outs = par_map(&tasks, self.threads, |_, t| match *t {
+            Task::Whole { cand } => Out::Whole(candidates[cand].loo_predictions(data)),
+            Task::Row { cand, row } => {
+                if failed[cand].load(Ordering::Relaxed) {
+                    return Out::Row(Err(anyhow::anyhow!(
+                        "skipped: candidate already failed an earlier split"
+                    )));
+                }
+                let mut scratch = candidates[cand].clone_unfitted();
+                let pred = match scratch.fit(&data.subset_excluding(row)) {
+                    Ok(()) => scratch.predict_one(data.x.row(row)),
+                    Err(e) => Err(e),
+                };
+                if pred.is_err() {
+                    failed[cand].store(true, Ordering::Relaxed);
+                }
+                Out::Row(pred)
+            }
+        });
+
+        let mut scores = Vec::with_capacity(candidates.len());
+        let mut it = outs.into_iter();
+        for c in candidates {
+            if !c.loo_splits_independent() {
+                let score = match it.next().expect("one whole-LOO task per candidate") {
+                    Out::Whole(Ok(preds)) => Ok(score_from_preds(&preds, &data.y)),
+                    Out::Whole(Err(e)) => Err(e),
+                    Out::Row(..) => unreachable!("task shape mismatch"),
+                };
+                scores.push(score);
+            } else {
+                // Row tasks were scheduled in row order, so the walk
+                // position is the held-out row.
+                let mut preds = vec![0.0; n];
+                let mut err: Option<anyhow::Error> = None;
+                for (row, slot) in preds.iter_mut().enumerate() {
+                    match it.next().expect("one LOO task per row") {
+                        Out::Row(Ok(p)) => *slot = p,
+                        Out::Row(Err(e)) => {
+                            if err.is_none() {
+                                err = Some(e);
+                            }
+                        }
+                        Out::Whole(..) => unreachable!("task shape mismatch at row {row}"),
+                    }
+                }
+                scores.push(match err {
+                    None => Ok(score_from_preds(&preds, &data.y)),
+                    Some(e) => Err(e),
+                });
+            }
+        }
+        scores
+    }
+
+    /// K-fold every candidate over one flat (candidate × fold) task pool,
+    /// on the exact fold assignment of [`kfold_splits`].
+    fn kfold_scores(
+        &self,
+        candidates: &[Box<dyn RuntimeModel>],
+        data: &TrainData,
+        k: usize,
+        seed: u64,
+    ) -> Vec<crate::Result<CvScore>> {
+        let n = data.len();
+        let splits = kfold_splits(n, k, seed);
+
+        #[derive(Clone, Copy)]
+        struct Task {
+            cand: usize,
+            fold: usize,
+        }
+        let tasks: Vec<Task> = (0..candidates.len())
+            .flat_map(|cand| (0..k).map(move |fold| Task { cand, fold }))
+            .collect();
+
+        let outs = par_map(&tasks, self.threads, |_, t| -> crate::Result<Vec<f64>> {
+            let (train, test) = &splits[t.fold];
+            let mut scratch = candidates[t.cand].clone_unfitted();
+            scratch.fit(&data.subset(train))?;
+            test.iter().map(|&i| scratch.predict_one(data.x.row(i))).collect()
+        });
+
+        let mut scores = Vec::with_capacity(candidates.len());
+        let mut it = outs.into_iter();
+        for _ in candidates {
+            let mut preds = vec![0.0; n];
+            let mut err: Option<anyhow::Error> = None;
+            for (_, test) in splits.iter().take(k) {
+                match it.next().expect("one task per fold") {
+                    Ok(fold_preds) => {
+                        for (&i, p) in test.iter().zip(fold_preds) {
+                            preds[i] = p;
+                        }
+                    }
+                    Err(e) => {
+                        if err.is_none() {
+                            err = Some(e);
+                        }
+                    }
+                }
+            }
+            scores.push(match err {
+                None => Ok(score_from_preds(&preds, &data.y)),
+                Some(e) => Err(e),
+            });
+        }
+        scores
+    }
+}
+
+/// Draw a deterministic `target`-row CV subset (ascending indices).
+pub fn sample_cv_indices(
+    data: &TrainData,
+    target: usize,
+    strategy: SampleStrategy,
+    seed: u64,
+) -> Vec<usize> {
+    let n = data.len();
+    if target >= n {
+        return (0..n).collect();
+    }
+    let mut rng = Pcg::new(seed, 0x5A11);
+    let mut picked = match strategy {
+        SampleStrategy::Uniform => rng.sample_indices(n, target),
+        SampleStrategy::StratifiedByScaleOut => {
+            // Group rows by scale-out (feature 0). HashMap order is not
+            // deterministic, so groups are sorted by value before use.
+            let mut by_key: std::collections::HashMap<u64, Vec<usize>> =
+                std::collections::HashMap::new();
+            for i in 0..n {
+                by_key.entry(data.x.row(i)[0].to_bits()).or_default().push(i);
+            }
+            let mut groups: Vec<(u64, Vec<usize>)> = by_key.into_iter().collect();
+            groups.sort_by(|a, b| f64::from_bits(a.0).total_cmp(&f64::from_bits(b.0)));
+
+            // Largest-remainder proportional allocation per group.
+            let mut quotas: Vec<usize> = Vec::with_capacity(groups.len());
+            let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(groups.len());
+            let mut assigned = 0usize;
+            for (gi, (_, idx)) in groups.iter().enumerate() {
+                let exact = target as f64 * idx.len() as f64 / n as f64;
+                let q = (exact.floor() as usize).min(idx.len());
+                quotas.push(q);
+                assigned += q;
+                fracs.push((exact - q as f64, gi));
+            }
+            // Ties break toward smaller scale-outs for determinism. Total
+            // group capacity is n ≥ target, so the cycle terminates.
+            fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut remaining = target - assigned;
+            let mut at = 0usize;
+            while remaining > 0 {
+                let gi = fracs[at % fracs.len()].1;
+                if quotas[gi] < groups[gi].1.len() {
+                    quotas[gi] += 1;
+                    remaining -= 1;
+                }
+                at += 1;
+            }
+
+            let mut picked = Vec::with_capacity(target);
+            for (gi, (_, idx)) in groups.iter().enumerate() {
+                let mut pool = idx.clone();
+                rng.shuffle(&mut pool);
+                picked.extend_from_slice(&pool[..quotas[gi]]);
+            }
+            picked
+        }
+    };
+    picked.sort_unstable();
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::{kfold_score, loo_score};
+    use crate::linalg::Matrix;
+    use crate::models::{Gbm, GbmParams};
+
+    fn linear_world(n: usize, seed: u64) -> TrainData {
+        let mut rng = Pcg::seed(seed);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range(2, 13) as f64, rng.range_f64(10.0, 30.0)])
+            .collect();
+        let y = rows.iter().map(|r| 5.0 + 2.0 * r[1] + 30.0 / r[0]).collect();
+        TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    fn gbm_candidates() -> Vec<Box<dyn RuntimeModel>> {
+        vec![
+            Box::new(Gbm::with_defaults()),
+            Box::new(Gbm::new(GbmParams { n_estimators: 40, ..Default::default() })),
+        ]
+    }
+
+    fn assert_score_bits(a: &CvScore, b: &CvScore) {
+        assert_eq!(a.mape.to_bits(), b.mape.to_bits());
+        assert_eq!(a.resid_mean.to_bits(), b.resid_mean.to_bits());
+        assert_eq!(a.resid_std.to_bits(), b.resid_std.to_bits());
+        assert_eq!(a.n, b.n);
+    }
+
+    #[test]
+    fn engine_loo_matches_serial_scorer_bitwise() {
+        let data = linear_world(24, 1);
+        let candidates = gbm_candidates();
+        let engine = FitEngine::with_threads(4);
+        let (plan, scores) = engine
+            .score_candidates(&candidates, &data, 120, 10, 0xC30)
+            .unwrap();
+        assert_eq!(plan.method, CvMethod::Loo);
+        assert!(!plan.reduced());
+        for (c, s) in candidates.iter().zip(&scores) {
+            let reference = loo_score(c.as_ref(), &data).unwrap();
+            assert_score_bits(s.as_ref().unwrap(), &reference);
+        }
+    }
+
+    #[test]
+    fn engine_kfold_matches_serial_scorer_bitwise() {
+        let data = linear_world(37, 2);
+        let candidates = gbm_candidates();
+        let engine = FitEngine::with_threads(4);
+        // loo_cap 0 forces the k-fold branch.
+        let (plan, scores) =
+            engine.score_candidates(&candidates, &data, 0, 5, 7).unwrap();
+        assert_eq!(plan.method, CvMethod::KFold(5));
+        for (c, s) in candidates.iter().zip(&scores) {
+            let reference = kfold_score(c.as_ref(), &data, 5, 7).unwrap();
+            assert_score_bits(s.as_ref().unwrap(), &reference);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_engines_agree_bitwise() {
+        let data = linear_world(40, 3);
+        let candidates = gbm_candidates();
+        let (_, serial) = FitEngine::serial()
+            .score_candidates(&candidates, &data, 20, 8, 11)
+            .unwrap();
+        let (_, parallel) = FitEngine::with_threads(8)
+            .score_candidates(&candidates, &data, 20, 8, 11)
+            .unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_score_bits(a.as_ref().unwrap(), b.as_ref().unwrap());
+        }
+    }
+
+    #[test]
+    fn failing_candidate_is_an_err_not_a_crash() {
+        struct Broken;
+        impl RuntimeModel for Broken {
+            fn name(&self) -> &'static str {
+                "Broken"
+            }
+            fn fit(&mut self, _d: &TrainData) -> crate::Result<()> {
+                anyhow::bail!("nope")
+            }
+            fn predict_one(&self, _f: &[f64]) -> crate::Result<f64> {
+                anyhow::bail!("nope")
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(Broken)
+            }
+        }
+        let data = linear_world(12, 4);
+        let candidates: Vec<Box<dyn RuntimeModel>> =
+            vec![Box::new(Broken), Box::new(Gbm::with_defaults())];
+        let (_, scores) = FitEngine::with_threads(4)
+            .score_candidates(&candidates, &data, 120, 10, 0)
+            .unwrap();
+        assert!(scores[0].is_err());
+        assert!(scores[1].is_ok());
+    }
+
+    #[test]
+    fn custom_loo_override_runs_whole_not_per_row() {
+        // A model that overrides `loo_predictions` (without opting into
+        // row fan-out) must be scored through its own override — the
+        // engine may not silently substitute per-row refits.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        struct CountingLoo {
+            calls: Arc<AtomicUsize>,
+        }
+        impl RuntimeModel for CountingLoo {
+            fn name(&self) -> &'static str {
+                "CountingLoo"
+            }
+            fn fit(&mut self, _d: &TrainData) -> crate::Result<()> {
+                Ok(())
+            }
+            fn predict_one(&self, _f: &[f64]) -> crate::Result<f64> {
+                Ok(1.0)
+            }
+            fn loo_predictions(&self, data: &TrainData) -> crate::Result<Vec<f64>> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                // A shortcut whose numbers differ from per-row refits.
+                Ok(vec![7.0; data.len()])
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(CountingLoo { calls: self.calls.clone() })
+            }
+        }
+
+        let data = linear_world(10, 9);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let candidates: Vec<Box<dyn RuntimeModel>> =
+            vec![Box::new(CountingLoo { calls: calls.clone() })];
+        let (_, scores) = FitEngine::with_threads(4)
+            .score_candidates(&candidates, &data, 120, 10, 0)
+            .unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "override called exactly once");
+        let s = scores[0].as_ref().unwrap();
+        // score_from_preds over the override's constant 7.0 predictions.
+        let expected = crate::cv::score_from_preds(&[7.0; 10], &data.y);
+        assert_eq!(s.mape.to_bits(), expected.mape.to_bits());
+    }
+
+    #[test]
+    fn point_budget_reduces_deterministically() {
+        let data = linear_world(90, 5);
+        let budget = SelectionBudget {
+            max_points: Some(30),
+            ..SelectionBudget::default()
+        };
+        let engine = FitEngine { threads: 2, budget };
+        let (plan_a, scores_a) =
+            engine.score_candidates(&gbm_candidates(), &data, 120, 10, 1).unwrap();
+        let (plan_b, scores_b) =
+            engine.score_candidates(&gbm_candidates(), &data, 120, 10, 1).unwrap();
+        assert_eq!(plan_a.n_used, 30);
+        assert!(plan_a.reduced());
+        assert_eq!(plan_a.sample, plan_b.sample);
+        for (a, b) in scores_a.iter().zip(&scores_b) {
+            assert_score_bits(a.as_ref().unwrap(), b.as_ref().unwrap());
+        }
+    }
+
+    #[test]
+    fn wall_clock_budget_degrades_to_reduced_kfold() {
+        let data = linear_world(200, 6);
+        let budget = SelectionBudget {
+            max_seconds: Some(1e-9),
+            ..SelectionBudget::default()
+        };
+        let engine = FitEngine { threads: 2, budget };
+        let (plan, scores) =
+            engine.score_candidates(&gbm_candidates(), &data, 120, 10, 2).unwrap();
+        // An impossibly tight budget bottoms out at the reduction floor.
+        assert!(plan.reduced(), "plan must reduce: {plan:?}");
+        assert_eq!(plan.n_used, 12);
+        assert_eq!(plan.method, CvMethod::KFold(10));
+        for s in &scores {
+            assert!(s.as_ref().unwrap().mape.is_finite());
+        }
+    }
+
+    #[test]
+    fn stratified_sample_preserves_scaleout_mix() {
+        // 3 scale-out groups of 30 each; a 15-point sample keeps 5 of each.
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for g in 0..3 {
+            for i in 0..30 {
+                rows.push(vec![(2 + g * 4) as f64, 10.0 + i as f64]);
+                y.push(100.0 / (2 + g * 4) as f64 + i as f64);
+            }
+        }
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+        let idx =
+            sample_cv_indices(&data, 15, SampleStrategy::StratifiedByScaleOut, 3);
+        assert_eq!(idx.len(), 15);
+        for g in 0..3usize {
+            let lo = g * 30;
+            let hi = lo + 30;
+            let in_group = idx.iter().filter(|&&i| i >= lo && i < hi).count();
+            assert_eq!(in_group, 5, "group {g}: {in_group} of 5");
+        }
+        // Ascending and duplicate-free.
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn uniform_sample_is_sorted_and_distinct() {
+        let data = linear_world(50, 7);
+        let idx = sample_cv_indices(&data, 20, SampleStrategy::Uniform, 9);
+        assert_eq!(idx.len(), 20);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn tiny_sets_fall_back_to_loo_instead_of_erroring() {
+        let data = linear_world(5, 8);
+        // loo_cap 0 would pick k-fold, but n < k: the guard falls back.
+        let (plan, scores) = FitEngine::serial()
+            .score_candidates(&gbm_candidates(), &data, 0, 10, 0)
+            .unwrap();
+        assert_eq!(plan.method, CvMethod::Loo);
+        assert!(scores[0].is_ok());
+    }
+}

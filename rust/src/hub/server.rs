@@ -24,6 +24,7 @@ use anyhow::Context;
 
 use crate::api::proto::{ErrorCode, Response, WireError};
 use crate::api::service::PredictionService;
+use crate::cv::parallel::{FitEngine, SelectionBudget};
 
 use super::repo::HubState;
 
@@ -55,6 +56,24 @@ pub struct ServerConfig {
     /// capacity, idle connections live forever — so `workers` silent
     /// sockets cannot starve the pool.
     pub idle_timeout: Duration,
+    /// CV worker threads for one cold fit's candidate × split fan-out
+    /// (`c3o serve --fit-threads N`; 0 ⇒ available parallelism). Several
+    /// concurrent cold fits may oversubscribe briefly — acceptable, since
+    /// cold fits are rare by construction (single-flight + cache).
+    pub fit_threads: usize,
+    /// Selection budget applied to every cold fit (`--fit-budget SECS`,
+    /// `--fit-points N`). Unlimited by default; `--fit-budget 30` matches
+    /// the paper's §VI-C 10–30 s selection envelope.
+    pub fit_budget: SelectionBudget,
+}
+
+impl ServerConfig {
+    /// The fit-path execution engine this config describes.
+    /// [`HubServer::start_with`] installs it on the service, so the
+    /// server config is authoritative for cold-fit execution.
+    pub fn fit_engine(&self) -> FitEngine {
+        FitEngine { threads: self.fit_threads, budget: self.fit_budget }
+    }
 }
 
 impl Default for ServerConfig {
@@ -65,7 +84,13 @@ impl Default for ServerConfig {
             .map(|n| n.get())
             .unwrap_or(4)
             .clamp(4, 64);
-        ServerConfig { workers, max_conns: 128, idle_timeout: Duration::from_secs(10) }
+        ServerConfig {
+            workers,
+            max_conns: 128,
+            idle_timeout: Duration::from_secs(10),
+            fit_threads: 0,
+            fit_budget: SelectionBudget::default(),
+        }
     }
 }
 
@@ -88,7 +113,11 @@ pub struct HubServer {
 
 impl HubServer {
     /// Bind to `addr` ("127.0.0.1:0" for an ephemeral test port) and serve
-    /// the v1 protocol from `service` with default transport tuning.
+    /// the v1 protocol from `service` with default transport tuning — and
+    /// the default fit engine: like [`HubServer::start_with`], this
+    /// installs the config's (here: default) `fit_engine()` on the
+    /// service, replacing anything set via `with_engine`/`set_engine`.
+    /// To serve a non-default engine, pass a `ServerConfig` carrying it.
     pub fn start(addr: &str, service: Arc<PredictionService>) -> crate::Result<HubServer> {
         HubServer::start_with(addr, service, ServerConfig::default())
     }
@@ -100,6 +129,10 @@ impl HubServer {
         config: ServerConfig,
     ) -> crate::Result<HubServer> {
         anyhow::ensure!(config.workers >= 1, "server needs at least one worker");
+        // The server config is authoritative for cold-fit execution:
+        // install its engine so `fit_threads`/`fit_budget` take effect
+        // however the service was constructed.
+        service.set_engine(config.fit_engine());
         let listener = TcpListener::bind(addr).context("binding hub listener")?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));

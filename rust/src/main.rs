@@ -6,10 +6,15 @@
 //!   serve      — run a C3O Hub speaking wire protocol v1 (DESIGN.md §4):
 //!                repositories + server-side PredictionService with a
 //!                fitted-model cache, served by a bounded worker pool
-//!                (--workers N, --max-conns Q; alias: `c3o hub`)
+//!                (--workers N, --max-conns Q; alias: `c3o hub`). Cold
+//!                fits run on the fit-path engine: --fit-threads T CV
+//!                workers (0 = all cores), --fit-budget SECS and/or
+//!                --fit-points N selection budget (DESIGN.md §8)
 //!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
-//!                fits locally from --data, or delegates to a hub with
-//!                --hub ADDR (no local fit, served from the hub's cache)
+//!                fits locally from --data (same --fit-threads /
+//!                --fit-budget / --fit-points knobs), or delegates to a
+//!                hub with --hub ADDR (no local fit, served from the
+//!                hub's cache)
 //!
 //! Examples:
 //!   c3o generate --out data/
@@ -28,7 +33,8 @@ use anyhow::Context as _;
 
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
-use c3o::configurator::{configure, ConfigChoice, UserGoals};
+use c3o::configurator::{configure_with, ConfigChoice, UserGoals};
+use c3o::cv::parallel::FitEngine;
 use c3o::data::{Dataset, JobKind};
 use c3o::eval::{self, Fig5Config, Table2Config};
 use c3o::hub::{HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy};
@@ -69,6 +75,22 @@ fn backend(flags: &BTreeMap<String, String>) -> Arc<dyn FitBackend> {
             Arc::new(NativeBackend::new())
         }
     }
+}
+
+/// Fit-path engine from `--fit-threads` / `--fit-budget` / `--fit-points`.
+/// Default: all cores, unlimited budget.
+fn fit_engine(flags: &BTreeMap<String, String>) -> anyhow::Result<FitEngine> {
+    let mut engine = FitEngine::default();
+    if let Some(t) = flags.get("fit-threads") {
+        engine.threads = t.parse().context("--fit-threads")?;
+    }
+    if let Some(s) = flags.get("fit-budget") {
+        engine.budget.max_seconds = Some(s.parse().context("--fit-budget")?);
+    }
+    if let Some(p) = flags.get("fit-points") {
+        engine.budget.max_points = Some(p.parse().context("--fit-points")?);
+    }
+    Ok(engine)
 }
 
 fn load_datasets(dir: &Path) -> anyhow::Result<Vec<Dataset>> {
@@ -146,14 +168,9 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         let n = state.load(&PathBuf::from(dir))?;
         eprintln!("[c3o] loaded {n} repositories from {dir}");
     }
-    let service = Arc::new(PredictionService::new(
-        state,
-        Catalog::aws_like(),
-        ValidationPolicy::default(),
-        backend(flags),
-    ));
-    // Worker-pool tuning: defaults derive from available parallelism;
-    // --workers and --max-conns override.
+    // Worker-pool + fit-engine tuning: defaults derive from available
+    // parallelism; --workers/--max-conns/--fit-threads/--fit-budget/
+    // --fit-points override.
     let mut config = ServerConfig::default();
     if let Some(w) = flags.get("workers") {
         config.workers = w.parse().context("--workers")?;
@@ -161,6 +178,16 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     if let Some(q) = flags.get("max-conns") {
         config.max_conns = q.parse().context("--max-conns")?;
     }
+    let engine = fit_engine(flags)?;
+    config.fit_threads = engine.threads;
+    config.fit_budget = engine.budget;
+    // `start_with` installs `config.fit_engine()` on the service.
+    let service = Arc::new(PredictionService::new(
+        state,
+        Catalog::aws_like(),
+        ValidationPolicy::default(),
+        backend(flags),
+    ));
     let server = HubServer::start_with(&addr, service, config.clone())?;
     // NOTE: keep the addr as the last token of the first line — clients
     // (and tests/cli_e2e.rs) parse it from there.
@@ -168,6 +195,18 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     println!(
         "worker pool: {} workers, {} queued connections max",
         config.workers, config.max_conns
+    );
+    println!(
+        "fit engine: {} CV threads, budget {}s / {} points",
+        if config.fit_threads == 0 { "all".to_string() } else { config.fit_threads.to_string() },
+        config
+            .fit_budget
+            .max_seconds
+            .map_or_else(|| "∞".to_string(), |s| format!("{s}")),
+        config
+            .fit_budget
+            .max_points
+            .map_or_else(|| "∞".to_string(), |p| format!("{p}")),
     );
     println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
@@ -227,13 +266,14 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
             };
             let backend = backend(flags);
             let input = JobInput::new(job, size, ctx);
-            configure(
+            configure_with(
                 &catalog,
                 &shared,
                 flags.get("machine").map(|s| s.as_str()).or(Some(eval::TARGET_MACHINE)),
                 &input,
                 &goals,
                 backend,
+                &fit_engine(flags)?,
             )?
         }
     };

@@ -162,10 +162,20 @@ impl RuntimeModel for Bom {
     }
 
     fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        // Fitted-state audit (cf. the Gbm `fitted` flag): the Option-typed
+        // coefficients are an explicit flag already — `ibm` is set last in
+        // `fit`, so a Some here implies a complete fit; no value-based
+        // inference involved.
         let ibm = self.ibm.as_ref().ok_or_else(|| anyhow::anyhow!("BOM not fitted"))?;
         let base: f64 =
             ibm_features(features).iter().zip(ibm).map(|(a, b)| a * b).sum();
         Ok(base * self.speedup(features[0]))
+    }
+
+    /// Uses the default per-row LOO loop — the fit-path engine may fan
+    /// the rows out as independent tasks.
+    fn loo_splits_independent(&self) -> bool {
+        true
     }
 
     fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {

@@ -9,11 +9,17 @@
 //! needs.
 //!
 //! LOO is used up to [`C3oPredictor::loo_cap`] training points, k-fold
-//! beyond — the §VI-C "cap the model selection phase" provision.
+//! beyond — the §VI-C "cap the model selection phase" provision. The CV
+//! work itself runs on a [`FitEngine`]: candidate × split tasks fan out
+//! over a worker pool (bit-identical to the serial path), and an optional
+//! [`crate::cv::parallel::SelectionBudget`] degrades LOO → k-fold →
+//! reduced training set instead of blowing the paper's 10–30 s envelope
+//! (DESIGN.md §8).
 
 use std::sync::Arc;
 
-use crate::cv::{self, CvScore};
+use crate::cv::parallel::{FitEngine, SelectionPlan};
+use crate::cv::CvScore;
 use crate::runtime::FitBackend;
 
 use super::bom::Bom;
@@ -24,12 +30,26 @@ use super::{RuntimeModel, TrainData};
 /// Outcome of one model-selection pass.
 #[derive(Debug, Clone)]
 pub struct SelectionReport {
-    /// Candidate name → CV score, in candidate order.
+    /// Candidate name → CV score, in candidate order. Disqualified
+    /// candidates (fit error or non-finite held-out MAPE) carry ∞ MAPE.
     pub scores: Vec<(String, CvScore)>,
     /// Winner name.
     pub chosen: String,
     /// Winner's CV score (μ, σ feed the configurator).
     pub chosen_score: CvScore,
+    /// What the selection pass actually ran (CV method, any budget-driven
+    /// training-set reduction, thread count).
+    pub plan: SelectionPlan,
+}
+
+/// The ∞-MAPE score a disqualified candidate reports.
+fn disqualified_score() -> CvScore {
+    CvScore {
+        mape: f64::INFINITY,
+        resid_mean: 0.0,
+        resid_std: f64::INFINITY,
+        n: 0,
+    }
 }
 
 /// The C3O runtime predictor.
@@ -40,6 +60,10 @@ pub struct C3oPredictor {
     /// Above this size, selection switches from LOO to k-fold.
     pub loo_cap: usize,
     pub kfold_k: usize,
+    /// Fit-path execution engine: CV worker threads + selection budget.
+    /// Defaults to the serial reference engine; the hub's service and the
+    /// CLI install parallel engines (`--fit-threads`, `--fit-budget`).
+    engine: FitEngine,
     seed: u64,
 }
 
@@ -57,8 +81,20 @@ impl C3oPredictor {
             report: None,
             loo_cap: 120,
             kfold_k: 10,
+            engine: FitEngine::serial(),
             seed: 0xC30,
         }
+    }
+
+    /// Replace the fit-path execution engine (threads + selection budget).
+    /// Any thread count selects the same model with bit-identical scores;
+    /// the budget, when set, may degrade the CV plan.
+    pub fn set_engine(&mut self, engine: FitEngine) {
+        self.engine = engine;
+    }
+
+    pub fn engine(&self) -> &FitEngine {
+        &self.engine
     }
 
     /// Register a maintainer-supplied custom model (§III-C-c: custom models
@@ -71,59 +107,64 @@ impl C3oPredictor {
         self.candidates.iter().map(|c| c.name()).collect()
     }
 
-    /// Cross-validate one candidate under the size-capped policy.
-    fn cv_one(&self, m: &dyn RuntimeModel, data: &TrainData) -> crate::Result<CvScore> {
-        if data.len() <= self.loo_cap {
-            cv::loo_score(m, data)
-        } else {
-            cv::kfold_score(m, data, self.kfold_k, self.seed)
-        }
-    }
-
-    /// Fit = select (CV all candidates) + refit the winner on all data.
+    /// Fit = select (CV all candidates on the engine) + refit the winner
+    /// on all data.
+    ///
+    /// CV runs unfitted clones, so no candidate is pre-fitted here; a
+    /// candidate that errors anywhere (or whose held-out MAPE goes
+    /// non-finite — NaN predictions must not poison the ranking, let
+    /// alone panic it) is disqualified rather than aborting selection.
     pub fn fit(&mut self, data: &TrainData) -> crate::Result<SelectionReport> {
         anyhow::ensure!(data.len() >= 3, "C3O needs >= 3 training points");
-        let mut scores = Vec::with_capacity(self.candidates.len());
-        for c in &self.candidates {
-            let mut scratch = c.clone_unfitted();
-            // Candidates must be fitted once before LOO default paths that
-            // clone; fit errors for a candidate disqualify it rather than
-            // abort selection (a custom model may need more data).
-            let score = match scratch.fit(data) {
-                Ok(()) => self.cv_one(scratch.as_ref(), data),
-                Err(e) => Err(e),
+        let (plan, results) = self.engine.score_candidates(
+            &self.candidates,
+            data,
+            self.loo_cap,
+            self.kfold_k,
+            self.seed,
+        )?;
+        let mut scores: Vec<(String, CvScore)> = Vec::with_capacity(self.candidates.len());
+        for (c, r) in self.candidates.iter().zip(results) {
+            let s = match r {
+                Ok(s) if s.mape.is_finite() => s,
+                _ => disqualified_score(),
             };
-            match score {
-                Ok(s) => scores.push((c.name().to_string(), s)),
-                Err(_) => scores.push((
-                    c.name().to_string(),
-                    CvScore {
-                        mape: f64::INFINITY,
-                        resid_mean: 0.0,
-                        resid_std: f64::INFINITY,
-                        n: 0,
-                    },
-                )),
+            scores.push((c.name().to_string(), s));
+        }
+
+        // Total order (stable: earlier candidates win exact ties) — unlike
+        // `partial_cmp(..).unwrap()`, `total_cmp` cannot panic on NaN.
+        let mut ranked: Vec<usize> = (0..scores.len()).collect();
+        ranked.sort_by(|&a, &b| scores[a].1.mape.total_cmp(&scores[b].1.mape));
+
+        // Refit the best CV candidate on the full training set (selection
+        // may have run on a budget-reduced subset). A candidate that
+        // cross-validates but cannot refit on all data is disqualified and
+        // the next-ranked one takes over.
+        let mut winner: Option<(usize, Box<dyn RuntimeModel>)> = None;
+        for &i in &ranked {
+            if !scores[i].1.mape.is_finite() {
+                break;
+            }
+            let mut m = self.candidates[i].clone_unfitted();
+            match m.fit(data) {
+                Ok(()) => {
+                    winner = Some((i, m));
+                    break;
+                }
+                Err(_) => scores[i].1 = disqualified_score(),
             }
         }
-        let (best_idx, _) = scores
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| a.1.mape.partial_cmp(&b.1.mape).unwrap())
-            .expect("non-empty candidates");
-        anyhow::ensure!(
-            scores[best_idx].1.mape.is_finite(),
-            "no candidate model could be cross-validated"
-        );
+        let (best_idx, fitted) = winner
+            .ok_or_else(|| anyhow::anyhow!("no candidate model could be cross-validated"))?;
 
-        let mut winner = self.candidates[best_idx].clone_unfitted();
-        winner.fit(data)?;
         let report = SelectionReport {
             chosen: scores[best_idx].0.clone(),
             chosen_score: scores[best_idx].1.clone(),
             scores,
+            plan,
         };
-        self.fitted = Some(winner);
+        self.fitted = Some(fitted);
         self.report = Some(report.clone());
         Ok(report)
     }
@@ -167,6 +208,7 @@ impl RuntimeModel for C3oPredictor {
             report: None,
             loo_cap: self.loo_cap,
             kfold_k: self.kfold_k,
+            engine: self.engine.clone(),
             seed: self.seed,
         })
     }
@@ -175,6 +217,7 @@ impl RuntimeModel for C3oPredictor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cv::parallel::{CvMethod, SelectionBudget};
     use crate::linalg::Matrix;
     use crate::runtime::NativeBackend;
     use crate::util::prng::Pcg;
@@ -306,5 +349,126 @@ mod tests {
         p.loo_cap = 100;
         let report = p.fit(&data).unwrap();
         assert!(report.chosen_score.n == 140);
+        assert_eq!(report.plan.method, CvMethod::KFold(10));
+    }
+
+    #[test]
+    fn nan_mape_candidate_disqualified_not_panic() {
+        // Regression: `partial_cmp(..).unwrap()` panicked when a candidate's
+        // held-out predictions went NaN. Now it is disqualified like a fit
+        // error.
+        struct NanModel;
+        impl RuntimeModel for NanModel {
+            fn name(&self) -> &'static str {
+                "NaNModel"
+            }
+            fn fit(&mut self, _d: &TrainData) -> crate::Result<()> {
+                Ok(())
+            }
+            fn predict_one(&self, _f: &[f64]) -> crate::Result<f64> {
+                Ok(f64::NAN)
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(NanModel)
+            }
+        }
+        let data = separable_world(30, 12);
+        let mut p = predictor();
+        p.add_candidate(Box::new(NanModel));
+        let report = p.fit(&data).unwrap();
+        assert_ne!(report.chosen, "NaNModel");
+        let (_, s) = report.scores.iter().find(|(n, _)| n == "NaNModel").unwrap();
+        assert!(s.mape.is_infinite(), "NaN MAPE must rank as disqualified");
+        assert!(report.chosen_score.mape.is_finite());
+    }
+
+    #[test]
+    fn parallel_engine_selects_same_model_with_identical_scores() {
+        // The acceptance property: any thread count reproduces the serial
+        // path bit-for-bit, in both the LOO and the k-fold regime.
+        for &(n, seed) in &[(40usize, 9u64), (140, 10)] {
+            let data = separable_world(n, seed);
+            let mut serial = predictor();
+            serial.loo_cap = 100;
+            serial.set_engine(FitEngine::serial());
+            let mut parallel = predictor();
+            parallel.loo_cap = 100;
+            parallel.set_engine(FitEngine::with_threads(4));
+
+            let rs = serial.fit(&data).unwrap();
+            let rp = parallel.fit(&data).unwrap();
+            assert_eq!(rs.chosen, rp.chosen, "n={n}");
+            assert_eq!(rs.plan.method, rp.plan.method);
+            for ((na, sa), (nb, sb)) in rs.scores.iter().zip(&rp.scores) {
+                assert_eq!(na, nb);
+                assert_eq!(sa.mape.to_bits(), sb.mape.to_bits(), "{na} mape");
+                assert_eq!(sa.resid_mean.to_bits(), sb.resid_mean.to_bits(), "{na} mu");
+                assert_eq!(sa.resid_std.to_bits(), sb.resid_std.to_bits(), "{na} sigma");
+                assert_eq!(sa.n, sb.n);
+            }
+            let q = [6.0, 20.0, 5.0];
+            assert_eq!(
+                serial.predict_one(&q).unwrap().to_bits(),
+                parallel.predict_one(&q).unwrap().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn point_budget_recorded_in_report_and_deterministic() {
+        let data = separable_world(200, 13);
+        let engine = FitEngine {
+            threads: 2,
+            budget: SelectionBudget { max_points: Some(60), ..SelectionBudget::default() },
+        };
+        let mut a = predictor();
+        a.set_engine(engine.clone());
+        let mut b = predictor();
+        b.set_engine(engine);
+        let ra = a.fit(&data).unwrap();
+        let rb = b.fit(&data).unwrap();
+        assert_eq!(ra.plan.n_total, 200);
+        assert_eq!(ra.plan.n_used, 60);
+        assert!(ra.plan.reduced());
+        // 60 reduced points fit under the default LOO cap again.
+        assert_eq!(ra.plan.method, CvMethod::Loo);
+        assert_eq!(ra.chosen, rb.chosen);
+        for ((_, sa), (_, sb)) in ra.scores.iter().zip(&rb.scores) {
+            assert_eq!(sa.mape.to_bits(), sb.mape.to_bits());
+        }
+    }
+
+    #[test]
+    fn winner_that_cannot_refit_on_full_data_falls_back() {
+        // CVs perfectly on LOO subsets (n-1 points) but refuses the full
+        // set — the next-ranked candidate must win instead of `fit`
+        // erroring out.
+        struct SubsetOnlyOracle {
+            full: usize,
+        }
+        impl RuntimeModel for SubsetOnlyOracle {
+            fn name(&self) -> &'static str {
+                "SubsetOnly"
+            }
+            fn fit(&mut self, d: &TrainData) -> crate::Result<()> {
+                anyhow::ensure!(d.len() < self.full, "refuses the full set");
+                Ok(())
+            }
+            fn predict_one(&self, f: &[f64]) -> crate::Result<f64> {
+                Ok((1.0 / f[0] + 0.02 * f[0]) * (10.0 + 4.0 * f[1] + 9.0 * f[2]))
+            }
+            fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
+                Box::new(SubsetOnlyOracle { full: self.full })
+            }
+        }
+        let data = separable_world(30, 14);
+        let mut p = predictor();
+        p.add_candidate(Box::new(SubsetOnlyOracle { full: 30 }));
+        let report = p.fit(&data).unwrap();
+        assert_ne!(report.chosen, "SubsetOnly");
+        assert!(report.chosen_score.mape.is_finite());
+        let (_, s) = report.scores.iter().find(|(n, _)| n == "SubsetOnly").unwrap();
+        assert!(s.mape.is_infinite(), "refit failure must disqualify");
+        assert!(p.predict_one(&[6.0, 20.0, 5.0]).unwrap().is_finite());
     }
 }

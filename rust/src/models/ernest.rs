@@ -60,6 +60,10 @@ impl RuntimeModel for Ernest {
         Ok((0..n).map(|i| preds[(i, i)]).collect())
     }
 
+    // `loo_splits_independent` stays false: the override above is one
+    // batched backend launch for all n splits, and the fit-path engine
+    // schedules it as a single whole-LOO task.
+
     fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
         Box::new(Ernest::new(self.backend.clone()))
     }

@@ -40,11 +40,15 @@ pub struct Gbm {
     params: GbmParams,
     base: f64,
     stages: Vec<RegressionTree>,
+    /// Explicit fitted flag. Inferring fitted-ness from the learned state
+    /// (`!stages.is_empty() || base != 0.0`) misreported a model trained
+    /// on zero-mean targets with `n_estimators: 0` as unfitted.
+    fitted: bool,
 }
 
 impl Gbm {
     pub fn new(params: GbmParams) -> Self {
-        Gbm { params, base: 0.0, stages: Vec::new() }
+        Gbm { params, base: 0.0, stages: Vec::new(), fitted: false }
     }
 
     pub fn with_defaults() -> Self {
@@ -121,12 +125,19 @@ impl RuntimeModel for Gbm {
             }
             self.stages.push(tree);
         }
+        self.fitted = true;
         Ok(())
     }
 
     fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
-        anyhow::ensure!(!self.stages.is_empty() || self.base != 0.0, "GBM not fitted");
+        anyhow::ensure!(self.fitted, "GBM not fitted");
         Ok(self.raw_predict(features))
+    }
+
+    /// Uses the default per-row LOO loop — the fit-path engine may fan
+    /// the rows out as independent tasks.
+    fn loo_splits_independent(&self) -> bool {
+        true
     }
 
     fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {
@@ -238,5 +249,20 @@ mod tests {
     #[test]
     fn unfitted_errors() {
         assert!(Gbm::with_defaults().predict_one(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn zero_mean_targets_with_zero_stages_count_as_fitted() {
+        // Regression: the old `!stages.is_empty() || base != 0.0` check
+        // called this legitimately fitted model "not fitted".
+        let data = TrainData::new(
+            Matrix::from_rows(&[vec![2.0, 1.0], vec![4.0, 1.0]]).unwrap(),
+            vec![-5.0, 5.0],
+        )
+        .unwrap();
+        let mut m = Gbm::new(GbmParams { n_estimators: 0, ..Default::default() });
+        m.fit(&data).unwrap();
+        assert_eq!(m.predict_one(&[3.0, 1.0]).unwrap(), 0.0);
+        assert_eq!(m.n_stages(), 0);
     }
 }

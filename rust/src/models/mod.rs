@@ -65,12 +65,31 @@ impl TrainData {
         let y = idx.iter().map(|&i| self.y[i]).collect();
         TrainData { x: Matrix::from_rows(&rows).unwrap(), y }
     }
+
+    /// All rows except `skip` — the LOO training set for row `skip`.
+    /// Row-identical to `subset` over the complementary index list.
+    pub fn subset_excluding(&self, skip: usize) -> Self {
+        let rows: Vec<Vec<f64>> = (0..self.len())
+            .filter(|&i| i != skip)
+            .map(|i| self.x.row(i).to_vec())
+            .collect();
+        let y = (0..self.len()).filter(|&i| i != skip).map(|i| self.y[i]).collect();
+        TrainData { x: Matrix::from_rows(&rows).unwrap(), y }
+    }
 }
 
 /// A runtime model. Implementations must be deterministic given their
 /// construction-time seed. `Send + Sync` so fitted models can be shared
 /// across hub connection threads via the PredictionService cache
 /// (prediction is `&self`).
+///
+/// **Parallel-fit contract** (since the `cv::parallel` engine): the
+/// fit path ships `clone_unfitted` clones into worker threads and fits
+/// them concurrently, so a clone must be independent of its source —
+/// same hyper-parameters and backend handle, but no shared mutable
+/// state — and `fit` must refit from scratch on every call. Determinism
+/// plus independent clones is what makes parallel selection bit-identical
+/// to the serial path.
 pub trait RuntimeModel: Send + Sync {
     /// Short name as it appears in the paper's tables.
     fn name(&self) -> &'static str;
@@ -97,15 +116,29 @@ pub trait RuntimeModel: Send + Sync {
         let mut out = Vec::with_capacity(n);
         let mut scratch = self.clone_unfitted();
         for i in 0..n {
-            let idx: Vec<usize> = (0..n).filter(|&j| j != i).collect();
-            let sub = data.subset(&idx);
-            scratch.fit(&sub)?;
+            scratch.fit(&data.subset_excluding(i))?;
             out.push(scratch.predict_one(data.x.row(i))?);
         }
         Ok(out)
     }
 
-    /// Fresh unfitted clone (same hyper-parameters/backend).
+    /// True when this model's [`RuntimeModel::loo_predictions`] is the
+    /// default per-row refit loop, so the fit-path engine
+    /// ([`crate::cv::parallel::FitEngine`]) may fan the rows out as
+    /// independent tasks — bit-identical to running the loop, just
+    /// parallel. The default is `false`: a model that overrides
+    /// `loo_predictions` (batched like Ernest's single `nnls_batch`
+    /// launch, or any custom shortcut) is scheduled as **one whole-LOO
+    /// task** calling its override, so existing overrides keep their exact
+    /// semantics without knowing about this flag. In-tree row-loop models
+    /// (GBM, BOM, OGB) opt in.
+    fn loo_splits_independent(&self) -> bool {
+        false
+    }
+
+    /// Fresh unfitted clone (same hyper-parameters/backend). See the
+    /// trait-level parallel-fit contract: clones are fitted concurrently
+    /// in worker threads.
     fn clone_unfitted(&self) -> Box<dyn RuntimeModel>;
 }
 
@@ -137,6 +170,17 @@ mod tests {
         let sub = td.subset(&[2, 0]);
         assert_eq!(sub.y, vec![30.0, 10.0]);
         assert_eq!(sub.x.row(0), &[3.0]);
+    }
+
+    #[test]
+    fn subset_excluding_matches_subset_complement() {
+        let x = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]).unwrap();
+        let td = TrainData::new(x, vec![10.0, 20.0, 30.0]).unwrap();
+        let a = td.subset_excluding(1);
+        let b = td.subset(&[0, 2]);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.row(0), b.x.row(0));
+        assert_eq!(a.x.row(1), b.x.row(1));
     }
 
     #[test]

@@ -79,9 +79,18 @@ impl RuntimeModel for Ogb {
     }
 
     fn predict_one(&self, features: &[f64]) -> crate::Result<f64> {
+        // Fitted-state audit (cf. the Gbm `fitted` flag): like the BOM,
+        // the Option-typed `ibm` is set last in `fit` and is an explicit
+        // flag — no value-based fitted-ness inference here.
         let ibm = self.ibm.as_ref().ok_or_else(|| anyhow::anyhow!("OGB not fitted"))?;
         let base = ibm.predict_one(&ibm_features(features)[1..])?;
         Ok(base * self.speedup(features[0]))
+    }
+
+    /// Uses the default per-row LOO loop — the fit-path engine may fan
+    /// the rows out as independent tasks.
+    fn loo_splits_independent(&self) -> bool {
+        true
     }
 
     fn clone_unfitted(&self) -> Box<dyn RuntimeModel> {

@@ -2,7 +2,10 @@
 //!
 //! Work-steals over an atomic index so uneven item costs balance out;
 //! results land in order. Used by the evaluation harness (300 CV splits
-//! per Table-II cell) and the hub's validation pipeline.
+//! per Table-II cell), the hub's validation pipeline, and the fit-path
+//! execution engine (`cv::parallel`), which feeds it one flat
+//! candidate × split task list so candidate- and split-level parallelism
+//! share a single pool instead of nesting scopes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -24,12 +24,16 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolation percentile, p in [0, 100].
+///
+/// NaN-safe: ranks with `total_cmp` (NaNs sort to the extremes) instead
+/// of panicking on `partial_cmp(..).unwrap()`. With NaN inputs, high
+/// percentiles may return NaN — but monitoring a hub beats crashing it.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     if v.len() == 1 {
         return v[0];
     }
@@ -156,6 +160,16 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // Regression: this panicked on `partial_cmp(..).unwrap()`.
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // Positive NaNs sort last: low/mid percentiles stay finite.
+        assert_eq!(median(&[2.0, f64::NAN, 1.0, 3.0]), 2.5);
     }
 
     #[test]

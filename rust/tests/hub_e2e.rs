@@ -348,6 +348,7 @@ fn connection_flood_is_refused_with_structured_unavailable() {
             // Generous idle deadline: connection `a` below sits idle under
             // queue pressure on purpose and must not be reaped mid-test.
             idle_timeout: std::time::Duration::from_secs(300),
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -391,6 +392,7 @@ fn idle_connection_is_reaped_only_under_queue_pressure() {
             workers: 1,
             max_conns: 8,
             idle_timeout: std::time::Duration::from_millis(200),
+            ..ServerConfig::default()
         },
     )
     .unwrap();

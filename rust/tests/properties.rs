@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use c3o::cloud::Catalog;
 use c3o::configurator::{select_scale_out, UserGoals};
+use c3o::cv::{FitEngine, SelectionBudget};
 use c3o::data::{Dataset, JobKind, RunRecord};
 use c3o::linalg::Matrix;
 use c3o::models::{C3oPredictor, RuntimeModel, TrainData};
@@ -81,6 +82,58 @@ fn prop_c3o_never_worse_than_all_candidates() {
                 .map(|(_, s)| s.mape)
                 .fold(f64::INFINITY, f64::min);
             anyhow::ensure!((report.chosen_score.mape - min).abs() < 1e-12);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_selection_never_panics_on_degenerate_training_data() {
+    // Constant-y, zero-y and single-machine (one scale-out) worlds used to
+    // be able to panic selection via NaN MAPE in `partial_cmp(..).unwrap()`
+    // or value-inferred fitted-state checks. An `Err` (all candidates
+    // disqualified) is acceptable; a panic is the bug.
+    forall_res(
+        "selection survives degenerate data",
+        18,
+        |rng| {
+            let kind = rng.range(0, 3);
+            let n = rng.range(3, 30);
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                let s = match kind {
+                    2 => 4.0, // single machine count for every run
+                    _ => rng.range(2, 13) as f64,
+                };
+                rows.push(vec![s, rng.range_f64(10.0, 30.0), rng.range(3, 10) as f64]);
+                y.push(match kind {
+                    0 => 42.0, // constant runtimes
+                    1 => 0.0,  // zero runtimes
+                    _ => rng.range_f64(1.0, 100.0),
+                });
+            }
+            (kind, TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap())
+        },
+        |(_, data)| {
+            // Serial reference engine...
+            let mut p = C3oPredictor::new(Arc::new(NativeBackend::new()));
+            if let Ok(report) = p.fit(data) {
+                anyhow::ensure!(report.chosen_score.mape.is_finite());
+                anyhow::ensure!(p.predict_one(&[4.0, 20.0, 5.0])?.is_finite());
+            }
+            // ...and the parallel engine with a point budget, so the task
+            // pool, reduction walk and stratified sampler all see the
+            // same degenerate inputs.
+            let mut q = C3oPredictor::new(Arc::new(NativeBackend::new()));
+            q.set_engine(FitEngine {
+                threads: 4,
+                budget: SelectionBudget { max_points: Some(12), ..SelectionBudget::default() },
+            });
+            if let Ok(report) = q.fit(data) {
+                anyhow::ensure!(report.chosen_score.mape.is_finite());
+                anyhow::ensure!(q.predict_one(&[4.0, 20.0, 5.0])?.is_finite());
+            }
             Ok(())
         },
     );
