@@ -10,6 +10,10 @@
 //! Act 3 — the v1 prediction service: the hub answers `predict_batch` and
 //!   `configure` itself from its fitted-model cache, so users get
 //!   predictions without downloading the corpus or fitting anything.
+//! Act 4 — durability (DESIGN.md §9): the hub shuts down, restarts from
+//!   its data dir, and serves the recovered corpus — same revision, same
+//!   records, bit-identical predictions. Acknowledged contributions are
+//!   never lost.
 //!
 //! Run with:  cargo run --release --example collaborative_hub
 
@@ -23,6 +27,7 @@ use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
 use c3o::models::{C3oPredictor, TrainData};
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
 use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::storage::{DurableStore, StorageConfig};
 use c3o::util::prng::Pcg;
 use c3o::util::stats;
 
@@ -33,12 +38,21 @@ fn main() -> anyhow::Result<()> {
     };
     let catalog = Catalog::aws_like();
 
-    // Hub with the shared K-Means corpus.
+    // Durable hub with the shared K-Means corpus: contributions accepted
+    // over the wire are WAL-logged under `data_dir` before they are
+    // acknowledged, so Act 4 can restart the hub and lose nothing.
+    let data_dir = std::env::temp_dir().join(format!("c3o_hub_example_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+    let (store, _) = DurableStore::open(&data_dir, StorageConfig::default())?;
+    let store = Arc::new(store);
+
     let state = Arc::new(HubState::new());
     let mut repo = Repository::new(JobKind::KMeans, "standard Spark K-Means");
     repo.maintainer_machine = Some("m5.xlarge".into());
     repo.data = generate_job(JobKind::KMeans, &GeneratorConfig::default(), &catalog)?;
     state.insert(repo);
+    state.snapshot_to(&store)?; // baseline snapshot of the seeded corpus
+    state.set_storage(store)?;
     let service = Arc::new(PredictionService::new(
         state,
         catalog.clone(),
@@ -178,9 +192,60 @@ fn main() -> anyhow::Result<()> {
         s.fits, s.cache_hits
     );
 
+    // ---------- Act 4: restart recovery (DESIGN.md §9) ----------
+    println!("\n=== Act 4: the hub restarts and loses nothing ===");
+    let before = client.predict_batch(JobKind::KMeans, None, &rows)?;
+    let revision_before = client.get_repo(JobKind::KMeans)?.revision;
+    drop(client);
+    // Graceful drain: WAL fsync + one final compacted snapshot.
     server.shutdown();
+
+    // A brand-new process starts exactly like this: open the data dir,
+    // recover snapshot + WAL tail, serve the recovered corpus.
+    let (store2, recovered) = DurableStore::open(&data_dir, StorageConfig::default())?;
+    let state2 = Arc::new(HubState::new());
+    for repo in recovered {
+        state2.install_recovered(repo);
+    }
+    state2.set_storage(Arc::new(store2))?;
+    let service2 = Arc::new(PredictionService::new(
+        state2,
+        catalog.clone(),
+        ValidationPolicy::default(),
+        backend.clone(),
+    ));
+    let server2 = HubServer::start("127.0.0.1:0", service2)?;
+    let mut client2 = HubClient::connect(&server2.addr.to_string())?;
+
+    let repo2 = client2.get_repo(JobKind::KMeans)?;
+    println!(
+        "  recovered repository          : {} records at revision {} (pre-restart: {})",
+        repo2.data.len(),
+        repo2.revision,
+        revision_before
+    );
+    let after_restart = client2.predict_batch(JobKind::KMeans, None, &rows)?;
+    let identical = before
+        .runtimes
+        .iter()
+        .zip(&after_restart.runtimes)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "  predictions after restart     : {} across {} rows (model {})",
+        if identical { "bit-identical" } else { "DIVERGED" },
+        after_restart.runtimes.len(),
+        after_restart.model
+    );
+    server2.shutdown();
+    let _ = std::fs::remove_dir_all(&data_dir);
+
     anyhow::ensure!(mape_global < mape_local, "collaboration must help the cold-start user");
     anyhow::ensure!(mape_after < mape_global * 2.0, "gate failed to protect accuracy");
     anyhow::ensure!(b2.cached, "second batch must be served from the cache");
+    anyhow::ensure!(
+        repo2.revision == revision_before,
+        "repository revision must survive the restart"
+    );
+    anyhow::ensure!(identical, "recovered hub must predict bit-identically");
     Ok(())
 }

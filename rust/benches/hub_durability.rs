@@ -1,0 +1,161 @@
+//! E11 — hub durability: what the WAL costs on the submit path, and
+//! proof that crash recovery holds at bench scale.
+//!
+//! Drives `HubState::submit` (the real acceptance path, §III-C-b gate in
+//! bootstrap regime so validation cost does not mask I/O cost) under
+//! three configurations:
+//!
+//!   * in-memory — the pre-storage hub: acknowledged writes die with the
+//!     process (the old behavior this subsystem removes),
+//!   * WAL, fsync never — append reaches the kernel before the ack;
+//!     survives process crash (kill -9), not OS crash,
+//!   * WAL, fsync always — fsync before every ack; survives power loss.
+//!
+//! Afterwards the fsync-never data dir is reopened as a crashed process
+//! would find it — including once with a deliberately torn trailing
+//! record — and every acknowledged contribution must be recovered.
+//!
+//! Results merge into `BENCH_hub_durability.json` (section
+//! `hub_durability`). `C3O_BENCH_SMOKE=1` shrinks the submit count for
+//! CI.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::hub::{HubState, Repository, ValidationPolicy};
+use c3o::storage::{DurableStore, FsyncPolicy, StorageConfig};
+use c3o::util::json::Json;
+
+const RECORDS_PER_SUBMIT: usize = 4;
+
+/// Unique records per submission — unique (scale-out, size, runtime)
+/// triples so neither the duplicate-replay gate nor the schema gate
+/// interferes with the I/O measurement.
+fn contribution(i: usize) -> Dataset {
+    let mut ds = Dataset::new(JobKind::Sort);
+    for k in 0..RECORDS_PER_SUBMIT {
+        let n = (i * RECORDS_PER_SUBMIT + k) as f64;
+        ds.push(RunRecord {
+            machine_type: "m5.xlarge".into(),
+            scale_out: 2 + ((i * RECORDS_PER_SUBMIT + k) % 11) as u32,
+            data_size_gb: 10.0 + n * 1e-3,
+            context: vec![],
+            runtime_s: 100.0 + n * 1e-3,
+        })
+        .expect("valid record");
+    }
+    ds
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("c3o_bench_durability_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run `submits` acceptances and return aggregate submits/sec (plus the
+/// data dir when durable, for the recovery phase).
+fn run_mode(tag: &str, submits: usize, durable: Option<FsyncPolicy>) -> (f64, Option<PathBuf>) {
+    let state = HubState::new();
+    state.insert(Repository::new(JobKind::Sort, "bench repo"));
+    // Bootstrap regime: the retrain gate never arms, so the measured cost
+    // is submit bookkeeping + WAL I/O, not GBM fits.
+    let policy = ValidationPolicy { min_existing: usize::MAX, ..Default::default() };
+    let mut dir_out = None;
+    if let Some(fsync) = durable {
+        let dir = fresh_dir(tag);
+        let (store, recovered) =
+            DurableStore::open(&dir, StorageConfig { fsync, snapshot_every: 0 })
+                .expect("open store");
+        assert!(recovered.is_empty());
+        state.set_storage(Arc::new(store)).expect("attach store");
+        dir_out = Some(dir);
+    }
+    let t0 = Instant::now();
+    for i in 0..submits {
+        let (verdict, revision) = state.submit(contribution(i), &policy).expect("submit");
+        assert!(verdict.accepted, "{}", verdict.reason);
+        assert_eq!(revision, (i + 1) as u64);
+    }
+    let rps = submits as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+    (rps, dir_out)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let submits = if smoke { 24 } else { 300 };
+    println!("== E11: hub durability — WAL + fsync cost on the submit path ==");
+    println!("   ({submits} submits x {RECORDS_PER_SUBMIT} records)\n");
+
+    let (mem_rps, _) = run_mode("mem", submits, None);
+    println!("  in-memory (lossy)              {mem_rps:>10.0} submits/s");
+
+    let (never_rps, dir_never) = run_mode("never", submits, Some(FsyncPolicy::Never));
+    println!("  WAL, fsync never               {never_rps:>10.0} submits/s");
+
+    let (always_rps, dir_always) = run_mode("always", submits, Some(FsyncPolicy::Always));
+    println!("  WAL, fsync always              {always_rps:>10.0} submits/s");
+    println!(
+        "\n  -> WAL overhead {:.1}% (no fsync); fsync-always costs {:.1}x vs WAL alone",
+        (mem_rps / never_rps - 1.0) * 100.0,
+        never_rps / always_rps.max(1e-12),
+    );
+
+    // Crash recovery at bench scale: reopen the fsync-never dir exactly as
+    // a killed process left it — no sync, no snapshot ever ran.
+    let dir = dir_never.expect("durable dir");
+    let (_, recovered) =
+        DurableStore::open(&dir, StorageConfig::default()).expect("recover");
+    let sort = recovered.iter().find(|r| r.job == JobKind::Sort).expect("sort repo");
+    assert_eq!(sort.revision, submits as u64, "revision watermark recovered");
+    assert_eq!(
+        sort.data.len(),
+        submits * RECORDS_PER_SUBMIT,
+        "every acknowledged contribution recovered"
+    );
+
+    // Kill -9 mid-append: tear the WAL tail, reopen, acknowledged records
+    // must all survive and the torn bytes must be truncated away.
+    let wal_path = dir.join("wal").join("sort.wal");
+    let mut bytes = std::fs::read(&wal_path).expect("read wal");
+    let clean_len = bytes.len() as u64;
+    bytes.extend_from_slice(&[0x5A; 13]);
+    std::fs::write(&wal_path, &bytes).expect("tear wal");
+    let (store, recovered) =
+        DurableStore::open(&dir, StorageConfig::default()).expect("recover torn");
+    assert_eq!(store.torn_tails(), 1, "torn tail detected");
+    let sort = recovered.iter().find(|r| r.job == JobKind::Sort).expect("sort repo");
+    assert_eq!(sort.data.len(), submits * RECORDS_PER_SUBMIT, "no acknowledged loss");
+    assert_eq!(std::fs::metadata(&wal_path).expect("stat").len(), clean_len);
+    println!(
+        "  recovery: {} submits replayed intact, torn trailing record truncated",
+        submits
+    );
+
+    common::write_bench_json_named(
+        "BENCH_hub_durability.json",
+        "hub_durability",
+        Json::obj(vec![
+            ("submits", Json::Num(submits as f64)),
+            ("records_per_submit", Json::Num(RECORDS_PER_SUBMIT as f64)),
+            ("in_memory_rps", Json::Num(mem_rps)),
+            ("wal_no_fsync_rps", Json::Num(never_rps)),
+            ("wal_fsync_always_rps", Json::Num(always_rps)),
+            (
+                "wal_overhead_pct",
+                Json::Num((mem_rps / never_rps.max(1e-12) - 1.0) * 100.0),
+            ),
+            ("recovery_ok", Json::Bool(true)),
+        ]),
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    if let Some(d) = dir_always {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

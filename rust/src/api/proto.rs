@@ -777,7 +777,8 @@ impl CatalogPayload {
     }
 }
 
-/// `stats` payload: hub counters + prediction-service cache counters.
+/// `stats` payload: hub counters + prediction-service cache counters +
+/// durability counters (zero when the hub runs without a data dir).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HubStats {
     pub accepted: u64,
@@ -789,6 +790,12 @@ pub struct HubStats {
     pub cache_hits: u64,
     /// Live entries in the fitted-model cache.
     pub cache_entries: u64,
+    /// Whether a durable store (WAL + snapshots) is attached.
+    pub durable: bool,
+    /// Accepted contributions appended to the WAL since start.
+    pub wal_appends: u64,
+    /// Compacted snapshots written since start.
+    pub snapshots: u64,
 }
 
 impl HubStats {
@@ -800,6 +807,9 @@ impl HubStats {
             ("fits", Json::Num(self.fits as f64)),
             ("cache_hits", Json::Num(self.cache_hits as f64)),
             ("cache_entries", Json::Num(self.cache_entries as f64)),
+            ("durable", Json::Bool(self.durable)),
+            ("wal_appends", Json::Num(self.wal_appends as f64)),
+            ("snapshots", Json::Num(self.snapshots as f64)),
         ])
     }
 
@@ -811,6 +821,11 @@ impl HubStats {
             fits: ju64(j, "fits")?,
             cache_hits: ju64(j, "cache_hits")?,
             cache_entries: ju64(j, "cache_entries")?,
+            // Additive within protocol v1: absent on pre-durability hubs,
+            // so default instead of erroring (old hub ⇒ not durable).
+            durable: j.get("durable").and_then(Json::as_bool).unwrap_or(false),
+            wal_appends: j.get("wal_appends").and_then(Json::as_u64).unwrap_or(0),
+            snapshots: j.get("snapshots").and_then(Json::as_u64).unwrap_or(0),
         })
     }
 }
@@ -1103,7 +1118,23 @@ mod tests {
             fits: 2,
             cache_hits: 7,
             cache_entries: 2,
+            durable: true,
+            wal_appends: 3,
+            snapshots: 1,
         };
         assert_eq!(HubStats::from_json(&s.to_json()).unwrap(), s);
+    }
+
+    #[test]
+    fn stats_payload_tolerates_pre_durability_hubs() {
+        // The durability counters are additive within v1: a payload from
+        // an older hub (no such fields) must still parse.
+        let j = Json::parse(
+            r#"{"accepted":1,"rejected":0,"repos":2,"fits":1,"cache_hits":3,"cache_entries":1}"#,
+        )
+        .unwrap();
+        let s = HubStats::from_json(&j).unwrap();
+        assert!(!s.durable);
+        assert_eq!((s.wal_appends, s.snapshots), (0, 0));
     }
 }

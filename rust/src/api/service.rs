@@ -306,7 +306,10 @@ impl PredictionService {
             .map_err(|e| WireError::new(ErrorCode::InvalidData, format!("{e:#}")))?;
         // Atomic validate+merge — see HubState::submit for the race this
         // prevents. The returned revision is read inside the same critical
-        // section, so it is exactly this submission's revision.
+        // section, so it is exactly this submission's revision. With a
+        // durable store attached, the accepted contribution is WAL-logged
+        // before the publish: an `accepted` reply implies the data
+        // survives a hub crash (DESIGN.md §9).
         let (verdict, revision) = self
             .state
             .submit(contribution, &self.policy)
@@ -344,6 +347,8 @@ impl PredictionService {
     pub fn stats_payload(&self) -> HubStats {
         let (accepted, rejected) = self.state.counters();
         let (fits, cache_hits, cache_entries) = self.fit_stats();
+        let storage = self.state.storage();
+        let sstats = storage.as_ref().map(|s| s.stats()).unwrap_or_default();
         HubStats {
             accepted,
             rejected,
@@ -351,6 +356,9 @@ impl PredictionService {
             fits,
             cache_hits,
             cache_entries,
+            durable: storage.is_some(),
+            wal_appends: sstats.wal_appends,
+            snapshots: sstats.snapshots,
         }
     }
 

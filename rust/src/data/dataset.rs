@@ -35,6 +35,31 @@ impl RunRecord {
         v.extend_from_slice(&self.context);
         v
     }
+
+    /// Bit-exact identity of this record, usable as a hash key — the
+    /// hub's duplicate-replay gate compares records by it. Floats are
+    /// keyed by `to_bits`; schema validation only admits finite positive
+    /// values, so no NaN/-0.0 aliasing can make bit equality diverge
+    /// from value equality.
+    pub fn fingerprint(&self) -> RecordFingerprint {
+        RecordFingerprint {
+            machine_type: self.machine_type.clone(),
+            scale_out: self.scale_out,
+            data_size_bits: self.data_size_gb.to_bits(),
+            runtime_bits: self.runtime_s.to_bits(),
+            context_bits: self.context.iter().map(|c| c.to_bits()).collect(),
+        }
+    }
+}
+
+/// Hashable bit-exact record identity — see [`RunRecord::fingerprint`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RecordFingerprint {
+    machine_type: String,
+    scale_out: u32,
+    data_size_bits: u64,
+    runtime_bits: u64,
+    context_bits: Vec<u64>,
 }
 
 /// A job's shared runtime dataset (the contents of a C3O repository's data

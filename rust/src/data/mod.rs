@@ -9,5 +9,5 @@
 pub mod dataset;
 pub mod jobs;
 
-pub use dataset::{Dataset, FeatureMatrix, RunRecord};
+pub use dataset::{Dataset, FeatureMatrix, RecordFingerprint, RunRecord};
 pub use jobs::JobKind;

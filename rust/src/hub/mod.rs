@@ -5,14 +5,20 @@
 //! machine type) with the shared runtime data contributed by users, exactly
 //! like the paper's code-plus-runtime-data repositories.
 //!
-//! * [`repo`] — repository state and on-disk layout (TSV, §VI-A).
+//! * [`repo`] — repository state and on-disk layout (TSV, §VI-A); with a
+//!   [`crate::storage::DurableStore`] attached, every accepted
+//!   contribution is WAL-logged before it is published and snapshots
+//!   capture compacted state (crash recovery, DESIGN.md §9).
 //! * [`validate`] — the §III-C-b contribution gate: retrain with the new
-//!   data and reject it if held-out prediction error degrades.
+//!   data and reject it if held-out prediction error degrades (plus
+//!   schema and duplicate-replay defenses).
 //! * [`server`] / [`client`] — newline-delimited-JSON transport over TCP
 //!   (a bounded worker pool of blocking threads; the offline crate cache
 //!   has no tokio, see DESIGN.md §2 and §7). All frames are typed by
 //!   [`crate::api::proto`] (wire protocol v1) and served by
-//!   [`crate::api::service::PredictionService`].
+//!   [`crate::api::service::PredictionService`]. The server also owns the
+//!   durability thread (interval fsync, automatic snapshots) and flushes
+//!   everything on graceful drain.
 //!
 //! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
 //! `stats`, `predict`, `predict_batch`, `configure`, `shutdown` —
@@ -26,4 +32,6 @@ pub mod validate;
 pub use client::HubClient;
 pub use repo::{HubState, Repository};
 pub use server::{HubServer, ServerConfig};
-pub use validate::{validate_contribution, ValidationPolicy, Verdict};
+pub use validate::{
+    validate_contribution, validate_contribution_cached, ValidationPolicy, Verdict,
+};

@@ -7,15 +7,21 @@
 //! publish newer ones. Writes to *different* repositories serialize only
 //! on their own per-job submit lock, so contributions to different jobs
 //! validate and commit in parallel.
+//!
+//! Durability (DESIGN.md §9): with a [`DurableStore`] attached, an
+//! accepted submission is appended to the repository's WAL *inside* the
+//! submit critical section, before the copy-on-write publish — so an
+//! acknowledged submit either survives a crash or was never acknowledged.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::Context;
 
-use crate::data::{Dataset, FeatureMatrix, JobKind};
+use crate::data::{Dataset, FeatureMatrix, JobKind, RecordFingerprint};
+use crate::storage::{DurableStore, RecoveredRepo, RepoImage};
 
 /// One C3O repository (paper Fig. 4, step 1-2): a common job, its
 /// maintainer-designated machine type, and the shared runtime data.
@@ -39,6 +45,11 @@ pub struct Repository {
     /// the snapshot is immutable, so every fit against this revision
     /// reuses the same feature matrices (see [`FeatureMatrix`]).
     view: OnceLock<Arc<FeatureMatrix>>,
+    /// Bit-exact record fingerprints of `data`, built at most once per
+    /// revision: the §III-C-b duplicate-replay gate checks contributions
+    /// against this set, so a submit hashes only the contribution — not
+    /// the whole (ever-growing) corpus — once the cache is warm.
+    fingerprints: OnceLock<Arc<HashSet<RecordFingerprint>>>,
 }
 
 impl Repository {
@@ -50,6 +61,7 @@ impl Repository {
             data: Dataset::new(job),
             revision: 0,
             view: OnceLock::new(),
+            fingerprints: OnceLock::new(),
         }
     }
 
@@ -64,6 +76,7 @@ impl Repository {
             data,
             revision: self.revision + 1,
             view: OnceLock::new(),
+            fingerprints: OnceLock::new(),
         }
     }
 
@@ -71,6 +84,15 @@ impl Repository {
     /// use and shared by every subsequent fit against this revision.
     pub fn view(&self) -> &Arc<FeatureMatrix> {
         self.view.get_or_init(|| Arc::new(self.data.feature_view()))
+    }
+
+    /// Bit-exact fingerprints of every record in this snapshot, built on
+    /// first use and shared by every duplicate-replay check against this
+    /// revision (see [`RunRecord::fingerprint`]).
+    pub fn fingerprints(&self) -> &Arc<HashSet<RecordFingerprint>> {
+        self.fingerprints.get_or_init(|| {
+            Arc::new(self.data.records.iter().map(|r| r.fingerprint()).collect())
+        })
     }
 }
 
@@ -111,6 +133,10 @@ impl RepoCell {
 #[derive(Debug, Default)]
 pub struct HubState {
     repos: RwLock<BTreeMap<JobKind, RepoCell>>,
+    /// Durable store (WAL + snapshots), if attached — see
+    /// [`HubState::set_storage`]. Behind a leaf lock read once per
+    /// submit; never held across I/O.
+    storage: RwLock<Option<Arc<DurableStore>>>,
     accepted: AtomicU64,
     rejected: AtomicU64,
 }
@@ -124,6 +150,136 @@ impl HubState {
     /// repo mid-traffic also replaces its submit lock.
     pub fn insert(&self, repo: Repository) {
         self.repos.write().unwrap().insert(repo.job, RepoCell::new(repo));
+    }
+
+    /// Attach a durable store: from now on every accepted submission is
+    /// appended to its repository's WAL before the publish that makes it
+    /// visible, so an acknowledged submit survives a crash
+    /// ([`DurableStore::open`] replays it). Call at setup time, *after*
+    /// installing any recovered repositories.
+    ///
+    /// Refuses to attach when a repository already holds state the store
+    /// does not cover (records or a non-zero revision with no matching
+    /// snapshot/WAL coverage): recovery rebuilds a repo *only* from the
+    /// store, so attaching over uncovered state would silently lose it at
+    /// the next restart. Write a baseline snapshot first
+    /// ([`HubState::snapshot_to`]) — as `c3o serve` does at boot.
+    pub fn set_storage(&self, store: Arc<DurableStore>) -> crate::Result<()> {
+        if let Some(repo) = self.first_uncovered(&store) {
+            anyhow::bail!(
+                "repository {} holds {} records at revision {} that the durable \
+                 store does not cover (store knows {:?}); write a baseline \
+                 snapshot (HubState::snapshot_to) before attaching storage",
+                repo.job,
+                repo.data.len(),
+                repo.revision,
+                store.coverage(repo.job)
+            );
+        }
+        *self.storage.write().unwrap() = Some(store);
+        Ok(())
+    }
+
+    /// The first repository holding state `store` does not cover — the
+    /// single predicate behind both the boot-time baseline snapshot
+    /// decision (`c3o serve`) and [`HubState::set_storage`]'s refusal.
+    /// `None` means every repository is either empty at revision 0
+    /// (recovery would start it empty too) or exactly covered.
+    pub fn first_uncovered(&self, store: &DurableStore) -> Option<Arc<Repository>> {
+        let repos = self.repos.read().unwrap();
+        for cell in repos.values() {
+            let repo = &cell.current;
+            if repo.data.is_empty() && repo.revision == 0 {
+                continue; // nothing to lose
+            }
+            if store.coverage(repo.job) != Some((repo.revision, repo.data.len())) {
+                return Some(cell.current.clone());
+            }
+        }
+        None
+    }
+
+    /// The attached durable store, if any.
+    pub fn storage(&self) -> Option<Arc<DurableStore>> {
+        self.storage.read().unwrap().clone()
+    }
+
+    /// Detach the durable store, returning the handle. Subsequent
+    /// submissions are no longer WAL-logged; dropping the returned `Arc`
+    /// (all clones) releases the data dir's single-writer lock, letting
+    /// another store open it — the controlled-handover path used by
+    /// restart tests and maintenance flows.
+    pub fn detach_storage(&self) -> Option<Arc<DurableStore>> {
+        self.storage.write().unwrap().take()
+    }
+
+    /// Install one recovered repository (crash recovery): the recovered
+    /// data and revision watermark replace the current snapshot, so
+    /// revisions stay strictly monotone across the restart and the
+    /// service's revision-keyed fitted-model cache can never serve a
+    /// stale model. Metadata comes from the snapshot manifest when it
+    /// captured any, and is otherwise kept from the already-registered
+    /// repository.
+    pub fn install_recovered(&self, rec: RecoveredRepo) {
+        let mut repos = self.repos.write().unwrap();
+        match repos.get_mut(&rec.job) {
+            Some(cell) => {
+                let next = Repository {
+                    job: rec.job,
+                    maintainer_machine: rec
+                        .maintainer_machine
+                        .or_else(|| cell.current.maintainer_machine.clone()),
+                    description: rec
+                        .description
+                        .unwrap_or_else(|| cell.current.description.clone()),
+                    data: rec.data,
+                    revision: rec.revision,
+                    view: OnceLock::new(),
+                    fingerprints: OnceLock::new(),
+                };
+                cell.current = Arc::new(next);
+            }
+            None => {
+                repos.insert(
+                    rec.job,
+                    RepoCell::new(Repository {
+                        job: rec.job,
+                        maintainer_machine: rec.maintainer_machine,
+                        description: rec
+                            .description
+                            .unwrap_or_else(|| format!("recovered {} repository", rec.job)),
+                        data: rec.data,
+                        revision: rec.revision,
+                        view: OnceLock::new(),
+                        fingerprints: OnceLock::new(),
+                    }),
+                );
+            }
+        }
+    }
+
+    /// Write a compacted snapshot of every repository to `store`: TSV per
+    /// repo plus the manifest carrying description / maintainer metadata
+    /// and each repo's revision watermark. The store then compacts the
+    /// WALs. Returns the published snapshot sequence.
+    pub fn snapshot_to(&self, store: &DurableStore) -> crate::Result<u64> {
+        // Capture the published snapshots first (one Arc clone each), so
+        // the map lock is not held across snapshot I/O.
+        let snaps: Vec<Arc<Repository>> = {
+            let repos = self.repos.read().unwrap();
+            repos.values().map(|cell| cell.current.clone()).collect()
+        };
+        let images: Vec<RepoImage<'_>> = snaps
+            .iter()
+            .map(|r| RepoImage {
+                job: r.job,
+                revision: r.revision,
+                description: &r.description,
+                maintainer_machine: r.maintainer_machine.as_deref(),
+                data: &r.data,
+            })
+            .collect();
+        store.snapshot(&images)
     }
 
     pub fn jobs(&self) -> Vec<JobKind> {
@@ -168,6 +324,13 @@ impl HubState {
     ///
     /// The critical section is per-repository: submissions to different
     /// jobs validate and commit fully in parallel.
+    ///
+    /// With a durable store attached, an accepted contribution is
+    /// WAL-appended (carrying its commit revision) *before* the publish:
+    /// a failed append returns an error with nothing committed — the
+    /// submit is simply not acknowledged — while a crash after the append
+    /// replays on recovery, so acknowledged submits are never lost.
+    /// Rejected contributions touch neither the WAL nor the state.
     pub fn submit(
         &self,
         contribution: crate::data::Dataset,
@@ -189,11 +352,29 @@ impl HubState {
         let repo = self
             .get(job)
             .with_context(|| format!("no repository for {job}"))?;
-        let verdict = super::validate::validate_contribution(&repo.data, &contribution, policy)?;
+        // The duplicate-replay gate gets this revision's cached
+        // fingerprint set, so only the contribution is hashed per submit.
+        let verdict = super::validate::validate_contribution_cached(
+            &repo.data,
+            repo.fingerprints(),
+            &contribution,
+            policy,
+        )?;
         let revision = if verdict.accepted {
+            let store = self.storage();
+            // Serialize before the records are consumed by the merge: the
+            // WAL logs exactly what was accepted.
+            let wal_tsv = if store.is_some() {
+                Some(contribution.to_table()?.to_text()?)
+            } else {
+                None
+            };
             let mut merged = repo.data.clone();
             for rec in contribution.records {
                 merged.push(rec)?;
+            }
+            if let (Some(store), Some(tsv)) = (&store, &wal_tsv) {
+                store.append(job, repo.revision + 1, tsv)?;
             }
             self.commit_data(job, merged)?
         } else {
@@ -219,16 +400,36 @@ impl HubState {
     /// skipped). Like every committed dataset change, each load bumps the
     /// repo's revision so fitted models cached against the old data go
     /// stale.
+    ///
+    /// TSV dirs carry *data only*: an already-registered repository keeps
+    /// its description and maintainer designation (only its dataset is
+    /// replaced). Full metadata restoration is the storage manifest's job
+    /// — see [`HubState::install_recovered`].
     pub fn load(&self, dir: &Path) -> crate::Result<usize> {
+        self.load_except(dir, &[])
+    }
+
+    /// [`HubState::load`], skipping `skip` — the jobs a durable store
+    /// already recovered, whose state must not be overwritten by stale
+    /// seed TSVs.
+    pub fn load_except(&self, dir: &Path, skip: &[JobKind]) -> crate::Result<usize> {
         let mut loaded = 0;
         for job in JobKind::ALL {
+            if skip.contains(&job) {
+                continue;
+            }
             let path = dir.join(format!("{job}.tsv"));
             if path.exists() {
                 let data = Dataset::load(job, &path)?;
                 let mut repos = self.repos.write().unwrap();
                 repos
                     .entry(job)
-                    .or_insert_with(|| RepoCell::new(Repository::new(job, "loaded from disk")))
+                    .or_insert_with(|| {
+                        RepoCell::new(Repository::new(
+                            job,
+                            &format!("imported from {}", path.display()),
+                        ))
+                    })
                     .publish(data);
                 loaded += 1;
             }
@@ -363,6 +564,86 @@ mod tests {
         assert_eq!(loaded, 1);
         assert_eq!(hub2.get(JobKind::Sort).unwrap().data.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_keeps_registered_metadata() {
+        let dir = std::env::temp_dir()
+            .join(format!("c3o_hub_meta_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hub = HubState::new();
+        let mut repo = Repository::new(JobKind::Sort, "standard Spark sort");
+        repo.maintainer_machine = Some("m5.xlarge".into());
+        repo.data.push(rec(2)).unwrap();
+        hub.insert(repo);
+        hub.save(&dir).unwrap();
+
+        // Reload into a hub that registered the repo with real metadata:
+        // the TSV carries data only, the registration's intent stays.
+        let hub2 = HubState::new();
+        let mut registered = Repository::new(JobKind::Sort, "standard Spark sort");
+        registered.maintainer_machine = Some("m5.xlarge".into());
+        hub2.insert(registered);
+        assert_eq!(hub2.load(&dir).unwrap(), 1);
+        let loaded = hub2.get(JobKind::Sort).unwrap();
+        assert_eq!(loaded.description, "standard Spark sort");
+        assert_eq!(loaded.maintainer_machine.as_deref(), Some("m5.xlarge"));
+        assert_eq!(loaded.data.len(), 1);
+        assert_eq!(loaded.revision, 1, "a load is a committed dataset change");
+
+        // load_except skips recovered jobs entirely.
+        let hub3 = HubState::new();
+        assert_eq!(hub3.load_except(&dir, &[JobKind::Sort]).unwrap(), 0);
+        assert!(hub3.get(JobKind::Sort).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn install_recovered_sets_watermark_and_merges_metadata() {
+        let hub = HubState::new();
+        let mut registered = Repository::new(JobKind::Sort, "standard Spark sort");
+        registered.maintainer_machine = Some("m5.xlarge".into());
+        hub.insert(registered);
+
+        // WAL-only recovery (no manifest metadata): data + revision land,
+        // the registered metadata survives.
+        let mut data = Dataset::new(JobKind::Sort);
+        data.push(rec(2)).unwrap();
+        data.push(rec(4)).unwrap();
+        hub.install_recovered(crate::storage::RecoveredRepo {
+            job: JobKind::Sort,
+            revision: 5,
+            description: None,
+            maintainer_machine: None,
+            data,
+            replayed: 2,
+        });
+        let repo = hub.get(JobKind::Sort).unwrap();
+        assert_eq!(repo.revision, 5, "recovered watermark installed verbatim");
+        assert_eq!(repo.data.len(), 2);
+        assert_eq!(repo.description, "standard Spark sort");
+        assert_eq!(repo.maintainer_machine.as_deref(), Some("m5.xlarge"));
+
+        // Manifest-backed recovery of an unregistered repo brings its own
+        // metadata.
+        hub.install_recovered(crate::storage::RecoveredRepo {
+            job: JobKind::Grep,
+            revision: 3,
+            description: Some("grepping".into()),
+            maintainer_machine: Some("c5.xlarge".into()),
+            data: Dataset::new(JobKind::Grep),
+            replayed: 0,
+        });
+        let repo = hub.get(JobKind::Grep).unwrap();
+        assert_eq!(repo.revision, 3);
+        assert_eq!(repo.description, "grepping");
+        assert_eq!(repo.maintainer_machine.as_deref(), Some("c5.xlarge"));
+
+        // Revisions keep climbing from the recovered watermark.
+        let mut ds = hub.get(JobKind::Sort).unwrap().data.clone();
+        ds.push(rec(6)).unwrap();
+        hub.commit_data(JobKind::Sort, ds).unwrap();
+        assert_eq!(hub.revision(JobKind::Sort), Some(6));
     }
 
     #[test]

@@ -25,6 +25,7 @@ use anyhow::Context;
 use crate::api::proto::{ErrorCode, Response, WireError};
 use crate::api::service::PredictionService;
 use crate::cv::parallel::{FitEngine, SelectionBudget};
+use crate::storage::{DurableStore, FsyncPolicy};
 
 use super::repo::HubState;
 
@@ -65,6 +66,10 @@ pub struct ServerConfig {
     /// `--fit-points N`). Unlimited by default; `--fit-budget 30` matches
     /// the paper's §VI-C 10–30 s selection envelope.
     pub fit_budget: SelectionBudget,
+    /// Cadence of the durability thread (only spawned when the service's
+    /// `HubState` has a [`DurableStore`] attached): WAL fsync under
+    /// `FsyncPolicy::Interval`, and snapshot-threshold checks.
+    pub flush_interval: Duration,
 }
 
 impl ServerConfig {
@@ -90,6 +95,7 @@ impl Default for ServerConfig {
             idle_timeout: Duration::from_secs(10),
             fit_threads: 0,
             fit_budget: SelectionBudget::default(),
+            flush_interval: Duration::from_millis(200),
         }
     }
 }
@@ -109,6 +115,10 @@ pub struct HubServer {
     queue: Arc<ConnQueue>,
     accept_thread: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    durability_thread: Option<JoinHandle<()>>,
+    /// Set once `stop_and_join` completed, so an explicit `shutdown`
+    /// followed by `Drop` does not drain (or snapshot) twice.
+    drained: bool,
 }
 
 impl HubServer {
@@ -152,6 +162,17 @@ impl HubServer {
             }));
         }
 
+        // Durability thread: periodic WAL fsync (Interval policy) and
+        // automatic snapshots once the append threshold is reached. The
+        // *final* flush is not here — `stop_and_join` runs it after the
+        // workers drained, so it covers every committed submission.
+        let durability_thread = service.state().storage().map(|store| {
+            let state = service.state().clone();
+            let stp = stop.clone();
+            let interval = config.flush_interval;
+            std::thread::spawn(move || durability_loop(&state, &store, &stp, interval))
+        });
+
         let t_stop = stop.clone();
         let t_queue = queue.clone();
         let max_conns = config.max_conns.max(1);
@@ -181,6 +202,8 @@ impl HubServer {
             queue,
             accept_thread: Some(accept_thread),
             workers,
+            durability_thread,
+            drained: false,
         })
     }
 
@@ -196,12 +219,17 @@ impl HubServer {
     /// every worker. In-flight connections see the flag at their next
     /// request boundary (or within [`POLL_INTERVAL`] when idle) and
     /// close; queued-but-unserved connections are dropped (peer sees
-    /// EOF).
+    /// EOF). With a durable store attached, the drain ends with a WAL
+    /// fsync plus a final compacted snapshot, so a clean shutdown leaves
+    /// nothing to replay.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
+        if self.drained {
+            return;
+        }
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so `incoming()` returns.
         let _ = TcpStream::connect(self.addr);
@@ -212,6 +240,25 @@ impl HubServer {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(h) = self.durability_thread.take() {
+            let _ = h.join();
+        }
+        // Graceful-drain flush, after every worker quiesced: all committed
+        // submissions are fsynced, and — only if any append is not yet
+        // snapshot-covered — captured in one final compacted snapshot. A
+        // read-only session must not pay a full-corpus rewrite at every
+        // shutdown.
+        if let Some(store) = self.service.state().storage() {
+            if let Err(e) = store.sync() {
+                eprintln!("[hub] shutdown WAL flush failed: {e:#}");
+            }
+            if store.stats().pending > 0 {
+                if let Err(e) = self.service.state().snapshot_to(&store) {
+                    eprintln!("[hub] shutdown snapshot failed: {e:#}");
+                }
+            }
+        }
+        self.drained = true;
     }
 }
 
@@ -248,6 +295,36 @@ fn refuse(stream: TcpStream) {
     );
     let _ = stream.write_all(reply.to_line().as_bytes());
     let _ = stream.write_all(b"\n");
+}
+
+/// Background durability pass (DESIGN.md §9): under
+/// [`FsyncPolicy::Interval`] fsync dirty WALs every `interval`, and write
+/// a compacted snapshot whenever the store's append threshold is reached.
+/// Errors are reported and retried next tick — durability degrades to the
+/// last good flush instead of killing the serving path.
+fn durability_loop(
+    state: &HubState,
+    store: &DurableStore,
+    stop: &AtomicBool,
+    interval: Duration,
+) {
+    let mut last_flush = Instant::now();
+    while !stop.load(Ordering::SeqCst) {
+        // Short sleeps so shutdown is observed within POLL_INTERVAL even
+        // under long flush intervals.
+        std::thread::sleep(POLL_INTERVAL.min(interval));
+        if store.config().fsync == FsyncPolicy::Interval && last_flush.elapsed() >= interval {
+            last_flush = Instant::now();
+            if let Err(e) = store.sync() {
+                eprintln!("[hub] WAL fsync failed: {e:#}");
+            }
+        }
+        if store.should_snapshot() {
+            if let Err(e) = state.snapshot_to(store) {
+                eprintln!("[hub] automatic snapshot failed: {e:#}");
+            }
+        }
+    }
 }
 
 /// Worker: pop one connection at a time and serve it to completion. Exits

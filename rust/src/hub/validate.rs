@@ -14,7 +14,9 @@
 //! contribution is accepted iff the candidate error does not exceed
 //! `baseline × tolerance` (+ an absolute slack for noise at tiny sizes).
 
-use crate::data::Dataset;
+use std::collections::HashSet;
+
+use crate::data::{Dataset, RecordFingerprint};
 use crate::models::{Gbm, GbmParams, RuntimeModel, TrainData};
 use crate::util::prng::Pcg;
 use crate::util::stats;
@@ -31,6 +33,11 @@ pub struct ValidationPolicy {
     /// Below this many existing records, schema-validate only (there is
     /// nothing meaningful to retrain against yet).
     pub min_existing: usize,
+    /// Largest plausible cluster size: records claiming more instances
+    /// are rejected outright (the paper's corpus tops out at 12; no
+    /// public-cloud Spark job in this problem class runs thousands of
+    /// nodes, so such a record is corruption or fabrication).
+    pub max_scale_out: u32,
     pub seed: u64,
 }
 
@@ -41,6 +48,7 @@ impl Default for ValidationPolicy {
             slack_pp: 1.0,
             holdout_frac: 0.3,
             min_existing: 12,
+            max_scale_out: 512,
             seed: 0x5EED,
         }
     }
@@ -67,6 +75,21 @@ pub fn validate_contribution(
     contribution: &Dataset,
     policy: &ValidationPolicy,
 ) -> crate::Result<Verdict> {
+    let fingerprints: HashSet<RecordFingerprint> =
+        existing.records.iter().map(|r| r.fingerprint()).collect();
+    validate_contribution_cached(existing, &fingerprints, contribution, policy)
+}
+
+/// [`validate_contribution`] with the existing corpus's fingerprint set
+/// supplied by the caller — the hub passes the per-revision cached set
+/// ([`crate::hub::Repository::fingerprints`]) so each submit hashes only
+/// the contribution, not the whole ever-growing corpus.
+pub fn validate_contribution_cached(
+    existing: &Dataset,
+    existing_fingerprints: &HashSet<RecordFingerprint>,
+    contribution: &Dataset,
+    policy: &ValidationPolicy,
+) -> crate::Result<Verdict> {
     anyhow::ensure!(existing.job == contribution.job, "job mismatch");
     if contribution.is_empty() {
         return Ok(Verdict {
@@ -83,6 +106,40 @@ pub fn validate_contribution(
             return Ok(Verdict {
                 accepted: false,
                 reason: format!("schema violation: {e}"),
+                baseline_mape: None,
+                candidate_mape: None,
+            });
+        }
+        if rec.scale_out > policy.max_scale_out {
+            return Ok(Verdict {
+                accepted: false,
+                reason: format!(
+                    "scale-out out of range: {} > {} instances",
+                    rec.scale_out, policy.max_scale_out
+                ),
+                baseline_mape: None,
+                candidate_mape: None,
+            });
+        }
+    }
+
+    // Replay defense: an exact duplicate — of an existing record, or of
+    // another record in the same contribution — carries no information,
+    // so resubmitting a captured contribution (or padding one with
+    // copies) cannot inflate the corpus or skew the models toward one
+    // observation. Real observations never collide exactly: runtimes are
+    // continuous measurements. Only the contribution is hashed here; the
+    // corpus side is the caller-supplied (hub: revision-cached) set.
+    let mut fresh: HashSet<RecordFingerprint> = HashSet::new();
+    for rec in &contribution.records {
+        let fp = rec.fingerprint();
+        if existing_fingerprints.contains(&fp) || !fresh.insert(fp) {
+            return Ok(Verdict {
+                accepted: false,
+                reason: format!(
+                    "duplicate record: {} x{} ({} GB, {} s) is already present",
+                    rec.machine_type, rec.scale_out, rec.data_size_gb, rec.runtime_s
+                ),
                 baseline_mape: None,
                 candidate_mape: None,
             });
@@ -111,7 +168,7 @@ pub fn validate_contribution(
                 candidate_mape: Some(candidate),
             });
         }
-        if worst.map_or(true, |(_, c)| candidate - baseline > c) {
+        if worst.map_or(true, |(b, c)| candidate - baseline > c - b) {
             worst = Some((baseline, candidate));
         }
     }
@@ -289,6 +346,95 @@ mod tests {
         assert!(
             validate_contribution(&existing, &contrib, &ValidationPolicy::default()).is_err()
         );
+    }
+
+    #[test]
+    fn duplicate_of_existing_record_rejected() {
+        let existing = base_dataset();
+        // Replay attack: resubmit records already in the corpus verbatim.
+        let mut contrib = Dataset::new(JobKind::Sort);
+        for r in existing.records.iter().take(3).cloned() {
+            contrib.push(r).unwrap();
+        }
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("duplicate"), "{}", v.reason);
+        assert!(v.baseline_mape.is_none(), "rejected before any retrain");
+    }
+
+    #[test]
+    fn duplicate_within_contribution_rejected() {
+        let existing = base_dataset();
+        let mut contrib = honest_contribution(4, 21);
+        // Pad the contribution with a copy of its own first record.
+        let first = contrib.records[0].clone();
+        contrib.push(first).unwrap();
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("duplicate"), "{}", v.reason);
+    }
+
+    #[test]
+    fn duplicates_rejected_even_in_bootstrap_regime() {
+        // The replay defense must not wait for the retrain gate to arm.
+        let existing = Dataset::new(JobKind::Sort);
+        let mut contrib = honest_contribution(3, 22);
+        let first = contrib.records[0].clone();
+        contrib.push(first).unwrap();
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("duplicate"), "{}", v.reason);
+    }
+
+    #[test]
+    fn out_of_range_scale_out_rejected() {
+        let existing = base_dataset();
+        let mut contrib = honest_contribution(5, 23);
+        contrib.records[2].scale_out = 100_000;
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("out of range"), "{}", v.reason);
+
+        // scale_out 0 is a schema violation (caught even though `push`
+        // was bypassed).
+        let mut contrib = honest_contribution(5, 24);
+        contrib.records[0].scale_out = 0;
+        let v = validate_contribution(&existing, &contrib, &ValidationPolicy::default())
+            .unwrap();
+        assert!(!v.accepted);
+        assert!(v.reason.contains("schema"), "{}", v.reason);
+    }
+
+    #[test]
+    fn property_corrupt_records_always_rejected() {
+        // Property: whatever single corruption a contribution carries,
+        // the gate rejects the whole contribution and never errors out.
+        let existing = base_dataset();
+        let policy = ValidationPolicy::default();
+        let mut rng = Pcg::seed(0xBAD5EED);
+        for case in 0..24u64 {
+            let mut contrib = honest_contribution(6, 1000 + case);
+            let idx = rng.below(contrib.records.len());
+            match case % 6 {
+                0 => contrib.records[idx].runtime_s = f64::NAN,
+                1 => contrib.records[idx].runtime_s = f64::INFINITY,
+                2 => contrib.records[idx].runtime_s = -5.0,
+                3 => contrib.records[idx].scale_out = 0,
+                4 => contrib.records[idx].scale_out = policy.max_scale_out + 1,
+                5 => contrib.records[idx].data_size_gb = -1.0,
+                _ => unreachable!(),
+            }
+            let v = validate_contribution(&existing, &contrib, &policy).unwrap();
+            assert!(!v.accepted, "case {case} accepted: {}", v.reason);
+            assert!(
+                v.baseline_mape.is_none() && v.candidate_mape.is_none(),
+                "case {case}: corruption must be rejected before any retrain"
+            );
+        }
     }
 
     #[test]

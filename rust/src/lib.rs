@@ -32,6 +32,7 @@ pub mod linalg;
 pub mod models;
 pub mod runtime;
 pub mod sim;
+pub mod storage;
 pub mod util;
 
 /// Crate-wide result alias.

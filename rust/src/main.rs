@@ -9,7 +9,13 @@
 //!                (--workers N, --max-conns Q; alias: `c3o hub`). Cold
 //!                fits run on the fit-path engine: --fit-threads T CV
 //!                workers (0 = all cores), --fit-budget SECS and/or
-//!                --fit-points N selection budget (DESIGN.md §8)
+//!                --fit-points N selection budget (DESIGN.md §8).
+//!                With --data-dir DIR the hub is *durable* (DESIGN.md §9):
+//!                accepted contributions are WAL-logged before they are
+//!                acknowledged, snapshots compact the logs
+//!                (--snapshot-every N appends), crashes recover on the
+//!                next start, and --fsync {always,interval,never} picks
+//!                the durability/throughput trade-off
 //!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
 //!                fits locally from --data (same --fit-threads /
 //!                --fit-budget / --fit-points knobs), or delegates to a
@@ -20,6 +26,8 @@
 //!   c3o generate --out data/
 //!   c3o eval table2 --splits 300
 //!   c3o serve --addr 127.0.0.1:7033 --data data/
+//!   c3o serve --addr 127.0.0.1:7033 --data-dir hub-state/ \
+//!       --fsync interval --snapshot-every 64
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
 //!       --deadline 900 --confidence 0.95 --data data/
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
@@ -40,6 +48,7 @@ use c3o::eval::{self, Fig5Config, Table2Config};
 use c3o::hub::{HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy};
 use c3o::runtime::{Engine, FitBackend, NativeBackend};
 use c3o::sim::{generate_all, GeneratorConfig, JobInput};
+use c3o::storage::{DurableStore, StorageConfig};
 
 fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
     let mut flags = BTreeMap::new();
@@ -164,9 +173,60 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         repo.maintainer_machine = Some(eval::TARGET_MACHINE.to_string());
         state.insert(repo);
     }
+    // Durable mode (--data-dir): recover the latest snapshot + WAL tail,
+    // then attach the store so every accepted submission is WAL-logged
+    // before it is acknowledged (DESIGN.md §9).
+    let mut store: Option<Arc<DurableStore>> = None;
+    let mut recovered_jobs: Vec<JobKind> = Vec::new();
+    if let Some(dir) = flags.get("data-dir") {
+        let mut scfg = StorageConfig::default();
+        if let Some(f) = flags.get("fsync") {
+            scfg.fsync = f.parse()?;
+        }
+        if let Some(n) = flags.get("snapshot-every") {
+            scfg.snapshot_every = n.parse().context("--snapshot-every")?;
+        }
+        let (s, recovered) = DurableStore::open(&PathBuf::from(dir), scfg)?;
+        if s.torn_tails() > 0 {
+            eprintln!(
+                "[c3o] truncated {} torn WAL tail(s) left by a previous crash",
+                s.torn_tails()
+            );
+        }
+        for r in recovered {
+            eprintln!(
+                "[c3o] recovered {}: {} records at revision {} ({} WAL record(s) replayed)",
+                r.job,
+                r.data.len(),
+                r.revision,
+                r.replayed
+            );
+            // Only repos with real recovered state suppress TSV seeding:
+            // a baseline snapshot of a still-empty revision-0 repo must
+            // not block a later `--data` seed forever.
+            if r.revision > 0 || !r.data.is_empty() {
+                recovered_jobs.push(r.job);
+            }
+            state.install_recovered(r);
+        }
+        store = Some(Arc::new(s));
+    }
     if let Some(dir) = flags.get("data") {
-        let n = state.load(&PathBuf::from(dir))?;
+        // Seed TSVs fill only repos the durable store did not recover —
+        // recovered state is newer than any seed by construction.
+        let n = state.load_except(&PathBuf::from(dir), &recovered_jobs)?;
         eprintln!("[c3o] loaded {n} repositories from {dir}");
+    }
+    if let Some(store) = &store {
+        // Baseline snapshot — but only when registration or seeding
+        // actually produced state the store does not cover yet (the same
+        // predicate set_storage refuses on). After a graceful shutdown
+        // (final compacted snapshot) a restart would otherwise pay a
+        // full-corpus rewrite for zero added durability.
+        if state.first_uncovered(store).is_some() {
+            state.snapshot_to(store)?;
+        }
+        state.set_storage(store.clone())?;
     }
     // Worker-pool + fit-engine tuning: defaults derive from available
     // parallelism; --workers/--max-conns/--fit-threads/--fit-budget/
@@ -208,6 +268,18 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
             .max_points
             .map_or_else(|| "∞".to_string(), |p| format!("{p}")),
     );
+    match &store {
+        Some(store) => println!(
+            "durability: data dir {} (fsync {}, snapshot every {} appends)",
+            store.dir().display(),
+            store.config().fsync,
+            match store.config().snapshot_every {
+                0 => "∞".to_string(),
+                n => n.to_string(),
+            },
+        ),
+        None => println!("durability: OFF (in-memory only; pass --data-dir to persist)"),
+    }
     println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
          predict | predict_batch | configure | shutdown"

@@ -1,0 +1,780 @@
+//! Durable hub storage: WAL + snapshots + crash recovery (DESIGN.md §9).
+//!
+//! The C3O hub's value *is* its ever-growing shared corpus (paper §III,
+//! §VI) — so an acknowledged `submit_runs` must survive a hub restart or
+//! crash. This module makes it so with the classic two-tier layout:
+//!
+//! * [`wal`] — one append-only, checksummed log per repository. Every
+//!   accepted contribution is appended (carrying its commit revision)
+//!   *before* the copy-on-write publish that makes it visible.
+//! * [`snapshot`] — periodic compacted snapshots: each repo's full
+//!   dataset as TSV plus a manifest with description / maintainer
+//!   metadata and the revision watermark. After a snapshot publishes,
+//!   WAL records it covers are dropped.
+//! * [`DurableStore`] — ties both together: `open` recovers (latest
+//!   snapshot, then the WAL tail replayed on top, torn trailing record
+//!   truncated), `append` logs a contribution under the configured
+//!   [`FsyncPolicy`], `snapshot` compacts.
+//!
+//! Recovery invariants (tested in `rust/tests/durability.rs`):
+//! 1. every contribution whose submit was acknowledged is recovered,
+//! 2. repository revisions are strictly monotone across restarts (the
+//!    fitted-model cache keys on revisions, so reuse would serve stale
+//!    models), and
+//! 3. a recovered hub predicts bit-identically to one that never
+//!    restarted.
+
+pub mod snapshot;
+pub mod wal;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::{ErrorKind, Write};
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use crate::data::{Dataset, JobKind};
+use crate::util::tsv::Table;
+
+pub use snapshot::{RepoImage, RepoManifest};
+pub use wal::{Wal, WalRecord};
+
+/// When WAL appends become durable against an OS crash or power loss.
+/// Every policy survives a *process* crash (kill -9): appends reach the
+/// kernel before the submit is acknowledged, fsync only decides when
+/// they reach stable storage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync before every submit acknowledgment. Safest, slowest.
+    Always,
+    /// A background flusher fsyncs on a fixed cadence (the hub server's
+    /// `flush_interval`). An OS crash can lose at most the last interval.
+    #[default]
+    Interval,
+    /// Never fsync on the append path (the OS writes back on its own
+    /// schedule; snapshots and graceful shutdown still sync).
+    Never,
+}
+
+impl fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Interval => "interval",
+            FsyncPolicy::Never => "never",
+        })
+    }
+}
+
+impl FromStr for FsyncPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "always" => FsyncPolicy::Always,
+            "interval" => FsyncPolicy::Interval,
+            "never" => FsyncPolicy::Never,
+            other => anyhow::bail!("unknown fsync policy: {other} (always|interval|never)"),
+        })
+    }
+}
+
+/// Durability tuning for a [`DurableStore`].
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    pub fsync: FsyncPolicy,
+    /// Automatic snapshot threshold: once this many contributions have
+    /// accumulated in the WALs since the last snapshot,
+    /// [`DurableStore::should_snapshot`] turns true and the hub's
+    /// durability thread writes one. 0 disables automatic snapshots
+    /// (recovery then replays the whole WAL — correct, just slower).
+    pub snapshot_every: u64,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig { fsync: FsyncPolicy::Interval, snapshot_every: 64 }
+    }
+}
+
+/// One repository's recovered state, as returned by [`DurableStore::open`].
+#[derive(Debug)]
+pub struct RecoveredRepo {
+    pub job: JobKind,
+    /// Revision watermark after replay — strictly monotone with the
+    /// pre-crash revision sequence.
+    pub revision: u64,
+    /// `None` when only WAL records existed (no snapshot manifest ever
+    /// captured this repo's metadata); the hub then keeps the registered
+    /// repo's metadata.
+    pub description: Option<String>,
+    pub maintainer_machine: Option<String>,
+    pub data: Dataset,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed: u64,
+}
+
+/// Storage counters surfaced through the hub's `stats` op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    /// WAL appends (accepted contributions logged) since open.
+    pub wal_appends: u64,
+    /// Snapshots written since open.
+    pub snapshots: u64,
+    /// Appends not yet covered by a snapshot.
+    pub pending: u64,
+}
+
+/// Best-effort directory fsync so a create/rename survives power loss —
+/// shared by the WAL and snapshot layers.
+pub(crate) fn sync_dir(path: &Path) {
+    if let Ok(d) = fs::File::open(path) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Advisory single-writer lock on a data dir. Two hubs appending to the
+/// same WALs would assign the same revisions twice and recovery would
+/// drop one side's acknowledged records — so a second open must fail
+/// loudly instead.
+///
+/// Protocol: the owner's pid is staged in a per-pid tmp file, fsynced,
+/// then `hard_link`ed to `LOCK` — link creation is atomic and fails on an
+/// existing target, and the staging means a visible `LOCK` always has
+/// complete content (a concurrent reader can never see a half-written
+/// pid and mistake a *live* lock for a stale one). A lock left by a dead
+/// process (kill -9) is detected via `/proc/<pid>` and taken over; where
+/// `/proc` does not exist (non-Linux) liveness cannot be probed with std
+/// alone, so the holder is assumed alive and the error tells the
+/// operator what to do. Pid recycling can produce a false "still
+/// running" the same way.
+fn acquire_lock(dir: &Path) -> crate::Result<PathBuf> {
+    let path = dir.join("LOCK");
+    let tmp = dir.join(format!("LOCK.{}.tmp", std::process::id()));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("staging lock file {}", tmp.display()))?;
+        writeln!(f, "{}", std::process::id())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().ok();
+    }
+    for _ in 0..2 {
+        match fs::hard_link(&tmp, &path) {
+            Ok(()) => {
+                let _ = fs::remove_file(&tmp);
+                sync_dir(dir);
+                return Ok(path);
+            }
+            Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                let holder = fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u32>().ok());
+                let alive = match holder {
+                    Some(pid) if Path::new("/proc").exists() => {
+                        Path::new(&format!("/proc/{pid}")).exists()
+                    }
+                    Some(_) => true,
+                    // LOCK files become visible only with complete
+                    // content, so unparsable means corruption, not a
+                    // half-written live lock.
+                    None => false,
+                };
+                if alive {
+                    let _ = fs::remove_file(&tmp);
+                    anyhow::bail!(
+                        "data dir {} is locked by process {} ({}); stop it, or remove \
+                         the LOCK file if that process is known to be dead",
+                        dir.display(),
+                        holder.unwrap_or(0),
+                        path.display()
+                    );
+                }
+                // Stale lock from a crashed process: take it over with a
+                // *verified claim*. A bare remove would race a concurrent
+                // takeover — both judge the same LOCK stale, the slower
+                // remove deletes the faster one's freshly-installed live
+                // lock, and two writers own the dir. Renaming the file
+                // aside is atomic and claims one specific inode; checking
+                // its content proves it was the stale lock we judged, not
+                // a fresh live one installed in between.
+                let claimed = dir.join(format!("LOCK.claimed.{}", std::process::id()));
+                if fs::rename(&path, &claimed).is_err() {
+                    // Another claimant moved it first; re-evaluate.
+                    continue;
+                }
+                let claimed_holder = fs::read_to_string(&claimed)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u32>().ok());
+                if claimed_holder == holder {
+                    // Confirmed: we claimed the dead owner's lock. Drop it
+                    // and loop to install ours.
+                    let _ = fs::remove_file(&claimed);
+                } else {
+                    // We grabbed a live lock installed mid-takeover: put
+                    // it back with hard_link — which, unlike rename, can
+                    // never clobber a LOCK some third claimant installed
+                    // while it was aside — and refuse, loudly. (If that
+                    // third lock exists the link fails and the newer
+                    // owner simply stands.)
+                    let _ = fs::hard_link(&claimed, &path);
+                    let _ = fs::remove_file(&claimed);
+                    let _ = fs::remove_file(&tmp);
+                    anyhow::bail!(
+                        "data dir {} lock changed owner during stale takeover \
+                         (now process {}); retry",
+                        dir.display(),
+                        claimed_holder.unwrap_or(0)
+                    );
+                }
+            }
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                return Err(anyhow::Error::new(e)
+                    .context(format!("creating lock file {}", path.display())));
+            }
+        }
+    }
+    let _ = fs::remove_file(&tmp);
+    anyhow::bail!("could not acquire {} (lost the takeover race twice)", path.display())
+}
+
+/// Removes the lock file unless ownership was transferred to the store —
+/// so a recovery error after `acquire_lock` cannot leak a lock owned by
+/// a live pid (which would refuse every retry until process exit).
+struct LockGuard(Option<PathBuf>);
+
+impl LockGuard {
+    fn into_path(mut self) -> PathBuf {
+        self.0.take().expect("lock guard consumed once")
+    }
+}
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        if let Some(path) = &self.0 {
+            let _ = fs::remove_file(path);
+        }
+    }
+}
+
+/// The durable side of a hub data dir: per-repo WALs plus the snapshot
+/// store. One instance per data dir; shared behind an `Arc` by
+/// [`crate::hub::HubState`] and the server's durability thread.
+/// Holds the data dir's `LOCK` file for its lifetime (released on drop;
+/// a crash leaves it stale, and the next open takes it over).
+#[derive(Debug)]
+pub struct DurableStore {
+    dir: PathBuf,
+    lock_path: PathBuf,
+    config: StorageConfig,
+    /// Per-repo WAL, each behind its own lock: appends to different
+    /// repositories do not serialize, and compaction takes the same lock
+    /// as append so a rewrite never races a write.
+    wals: BTreeMap<JobKind, Mutex<Wal>>,
+    /// Per-repo durable coverage: `(revision watermark, record count)`
+    /// reconstructible from snapshot + WAL, advanced by `append` and
+    /// `snapshot`. `append` enforces `revision == watermark + 1` — the
+    /// contiguity recovery depends on — and
+    /// [`crate::hub::HubState::set_storage`] checks a repo's whole state
+    /// is covered before attaching, so storage attached to a
+    /// pre-populated repository without a baseline snapshot fails
+    /// loudly up front instead of silently losing the base records at
+    /// the next recovery.
+    coverage: Mutex<BTreeMap<JobKind, (u64, usize)>>,
+    /// Serializes snapshot writes; holds the latest published sequence.
+    snapshots: Mutex<u64>,
+    appends_total: AtomicU64,
+    appends_since_snapshot: AtomicU64,
+    snapshots_taken: AtomicU64,
+    torn_tails: u64,
+}
+
+impl DurableStore {
+    /// Open (or create) a durable data dir and recover its state: load
+    /// the latest complete snapshot, then replay each repository's WAL
+    /// tail on top — truncating a torn trailing record — and return the
+    /// recovered repositories with their revision watermarks.
+    pub fn open(
+        dir: &Path,
+        config: StorageConfig,
+    ) -> crate::Result<(DurableStore, Vec<RecoveredRepo>)> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating data dir {}", dir.display()))?;
+        let lock = LockGuard(Some(acquire_lock(dir)?));
+        let snap = snapshot::load_latest(dir)?;
+        let seq = snap.as_ref().map_or(0, |s| s.seq);
+        let mut recovered: BTreeMap<JobKind, RecoveredRepo> = BTreeMap::new();
+        if let Some(snap) = snap {
+            for (meta, data) in snap.repos {
+                recovered.insert(
+                    meta.job,
+                    RecoveredRepo {
+                        job: meta.job,
+                        revision: meta.revision,
+                        description: Some(meta.description),
+                        maintainer_machine: meta.maintainer_machine,
+                        data,
+                        replayed: 0,
+                    },
+                );
+            }
+        }
+
+        let mut wals = BTreeMap::new();
+        let mut torn_tails = 0u64;
+        for job in JobKind::ALL {
+            let (wal, scan) = Wal::open(&dir.join("wal").join(format!("{job}.wal")))?;
+            if scan.torn {
+                torn_tails += 1;
+            }
+            for rec in scan.records {
+                let entry = recovered.entry(job).or_insert_with(|| RecoveredRepo {
+                    job,
+                    revision: 0,
+                    description: None,
+                    maintainer_machine: None,
+                    data: Dataset::new(job),
+                    replayed: 0,
+                });
+                if rec.revision <= entry.revision {
+                    // Covered by the snapshot already (the snapshot
+                    // published but its WAL compaction never ran).
+                    continue;
+                }
+                anyhow::ensure!(
+                    rec.revision == entry.revision + 1,
+                    "WAL gap for {job}: repository at revision {}, next WAL record \
+                     claims revision {} — refusing to recover with a hole",
+                    entry.revision,
+                    rec.revision
+                );
+                let contribution = Table::parse(&rec.data_tsv)
+                    .and_then(|t| Dataset::from_table(job, &t))
+                    .with_context(|| {
+                        format!("replaying {job} WAL record at revision {}", rec.revision)
+                    })?;
+                for r in contribution.records {
+                    entry.data.push(r)?;
+                }
+                entry.revision = rec.revision;
+                entry.replayed += 1;
+            }
+            wals.insert(job, Mutex::new(wal));
+        }
+
+        let coverage: BTreeMap<JobKind, (u64, usize)> = recovered
+            .values()
+            .map(|r| (r.job, (r.revision, r.data.len())))
+            .collect();
+        // The replayed WAL backlog counts as pending: a hub that crashes
+        // repeatedly before reaching the snapshot threshold must still
+        // compact once the *accumulated* tail crosses it, or the WAL (and
+        // every restart's replay time) grows without bound.
+        let backlog: u64 = recovered.values().map(|r| r.replayed).sum();
+        let store = DurableStore {
+            dir: dir.to_path_buf(),
+            lock_path: lock.into_path(),
+            config,
+            wals,
+            coverage: Mutex::new(coverage),
+            snapshots: Mutex::new(seq),
+            appends_total: AtomicU64::new(0),
+            appends_since_snapshot: AtomicU64::new(backlog),
+            snapshots_taken: AtomicU64::new(0),
+            torn_tails,
+        };
+        Ok((store, recovered.into_values().collect()))
+    }
+
+    /// Append one accepted contribution, committing as `revision`, to
+    /// `job`'s WAL. Called inside the per-repo submit critical section
+    /// *before* the copy-on-write publish: if this fails, the submission
+    /// is not acknowledged and no state changes. `revision` must extend
+    /// the durable watermark by exactly one — recovery replays on that
+    /// contiguity — so storage attached to a pre-populated repository
+    /// needs a baseline snapshot ([`crate::hub::HubState::snapshot_to`])
+    /// first. Under [`FsyncPolicy::Always`] the record is
+    /// storage-durable on return.
+    pub fn append(&self, job: JobKind, revision: u64, data_tsv: &str) -> crate::Result<()> {
+        let wal = self
+            .wals
+            .get(&job)
+            .with_context(|| format!("no WAL for {job}"))?;
+        // Contiguity check outside the WAL lock so appends to different
+        // repositories still run their I/O in parallel. Same-repo appends
+        // are serialized upstream by the per-repo submit lock, so the
+        // check-then-advance cannot race with itself.
+        {
+            let mut coverage = self.coverage.lock().unwrap();
+            let mark = coverage.entry(job).or_insert((0, 0));
+            anyhow::ensure!(
+                revision == mark.0 + 1,
+                "WAL revision gap for {job}: durable watermark is {}, append claims {} — \
+                 write a baseline snapshot (HubState::snapshot_to) before attaching \
+                 storage to a pre-populated repository",
+                mark.0,
+                revision
+            );
+        }
+        // TSV rows = lines minus the header (fields are tab/newline-free
+        // by construction, so line count is exact).
+        let rows = data_tsv.lines().count().saturating_sub(1);
+        let mut wal = wal.lock().unwrap();
+        // Under `Always`, a failed fsync rolls the frame back inside
+        // append_durable — an unacknowledged record must not survive to
+        // shadow the next acknowledged one at the same revision.
+        wal.append_durable(revision, data_tsv, self.config.fsync == FsyncPolicy::Always)?;
+        drop(wal);
+        {
+            let mut coverage = self.coverage.lock().unwrap();
+            let mark = coverage.entry(job).or_insert((0, 0));
+            *mark = (revision, mark.1 + rows);
+        }
+        self.appends_total.fetch_add(1, Ordering::Relaxed);
+        self.appends_since_snapshot.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// fsync every WAL with unsynced bytes — the `Interval` flusher's
+    /// tick, and the graceful-drain path on shutdown.
+    pub fn sync(&self) -> crate::Result<()> {
+        for wal in self.wals.values() {
+            wal.lock().unwrap().sync()?;
+        }
+        Ok(())
+    }
+
+    /// Write a compacted snapshot of `repos` (each carrying its own
+    /// revision watermark), publish it atomically, then drop the WAL
+    /// records it covers. Serialized internally; appends may proceed
+    /// concurrently — records past a repo's watermark are preserved.
+    pub fn snapshot(&self, repos: &[RepoImage<'_>]) -> crate::Result<u64> {
+        let mut latest = self.snapshots.lock().unwrap();
+        let seq = *latest + 1;
+        snapshot::write(&self.dir, seq, repos)?;
+        *latest = seq;
+        drop(latest);
+        self.snapshots_taken.fetch_add(1, Ordering::Relaxed);
+        self.appends_since_snapshot.store(0, Ordering::Relaxed);
+        {
+            // The snapshot establishes each repo's durable coverage —
+            // unless a concurrent append already advanced past its
+            // watermark, in which case the append's count stands.
+            let mut coverage = self.coverage.lock().unwrap();
+            for repo in repos {
+                let mark = coverage.entry(repo.job).or_insert((0, 0));
+                if repo.revision >= mark.0 {
+                    *mark = (repo.revision, repo.data.len());
+                }
+            }
+        }
+        for repo in repos {
+            if let Some(wal) = self.wals.get(&repo.job) {
+                wal.lock().unwrap().compact(repo.revision)?;
+            }
+        }
+        Ok(seq)
+    }
+
+    /// The durable coverage of `job`: `(revision watermark, records)`
+    /// reconstructible from this store's snapshot + WAL, or `None` if the
+    /// store has never seen the job. [`crate::hub::HubState::set_storage`]
+    /// checks it against the live repository before attaching.
+    pub fn coverage(&self, job: JobKind) -> Option<(u64, usize)> {
+        self.coverage.lock().unwrap().get(&job).copied()
+    }
+
+    /// Whether the automatic snapshot threshold has been reached.
+    pub fn should_snapshot(&self) -> bool {
+        self.config.snapshot_every > 0
+            && self.appends_since_snapshot.load(Ordering::Relaxed) >= self.config.snapshot_every
+    }
+
+    pub fn config(&self) -> &StorageConfig {
+        &self.config
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Torn trailing records truncated during `open` (at most one per
+    /// WAL file — the kill -9 signature).
+    pub fn torn_tails(&self) -> u64 {
+        self.torn_tails
+    }
+
+    pub fn stats(&self) -> StorageStats {
+        StorageStats {
+            wal_appends: self.appends_total.load(Ordering::Relaxed),
+            snapshots: self.snapshots_taken.load(Ordering::Relaxed),
+            pending: self.appends_since_snapshot.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for DurableStore {
+    fn drop(&mut self) {
+        // Release the data-dir lock — but only if it is still ours (a
+        // multi-way takeover race can, in the worst case, have replaced
+        // it with another owner's). If the process dies before this
+        // runs, the next open detects the stale pid instead.
+        let ours = fs::read_to_string(&self.lock_path)
+            .map(|s| s.trim() == std::process::id().to_string())
+            .unwrap_or(false);
+        if ours {
+            let _ = fs::remove_file(&self.lock_path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::RunRecord;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("c3o_store_test_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn contribution(job: JobKind, base: u32) -> Dataset {
+        let mut ds = Dataset::new(job);
+        for k in 0..3u32 {
+            ds.push(RunRecord {
+                machine_type: "m5.xlarge".into(),
+                scale_out: 2 + base + k,
+                data_size_gb: 10.0 + (base + k) as f64,
+                context: if job == JobKind::Grep { vec![0.01] } else { vec![] },
+                runtime_s: 100.0 + (base + k) as f64 * 0.5,
+            })
+            .unwrap();
+        }
+        ds
+    }
+
+    fn tsv(ds: &Dataset) -> String {
+        ds.to_table().unwrap().to_text().unwrap()
+    }
+
+    #[test]
+    fn fresh_dir_recovers_nothing() {
+        let dir = temp_dir("fresh");
+        let (store, recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        assert!(recovered.is_empty());
+        assert_eq!(store.stats(), StorageStats::default());
+        assert_eq!(store.torn_tails(), 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_only_recovery_replays_in_revision_order() {
+        let dir = temp_dir("walonly");
+        {
+            let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+            store.append(JobKind::Sort, 1, &tsv(&contribution(JobKind::Sort, 0))).unwrap();
+            store.append(JobKind::Sort, 2, &tsv(&contribution(JobKind::Sort, 10))).unwrap();
+            store.append(JobKind::Grep, 1, &tsv(&contribution(JobKind::Grep, 0))).unwrap();
+            assert_eq!(store.stats().wal_appends, 3);
+            assert_eq!(store.stats().pending, 3);
+            // No sync, no snapshot: the process "dies" here.
+        }
+        let (_, mut recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        recovered.sort_by_key(|r| r.job);
+        assert_eq!(recovered.len(), 2);
+        let sort = recovered.iter().find(|r| r.job == JobKind::Sort).unwrap();
+        assert_eq!(sort.revision, 2);
+        assert_eq!(sort.replayed, 2);
+        assert_eq!(sort.data.len(), 6);
+        assert!(sort.description.is_none(), "WAL-only recovery has no metadata");
+        let grep = recovered.iter().find(|r| r.job == JobKind::Grep).unwrap();
+        assert_eq!(grep.revision, 1);
+        assert_eq!(grep.data.len(), 3);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_plus_wal_tail_recovery() {
+        let dir = temp_dir("snapwal");
+        let c1 = contribution(JobKind::Sort, 0);
+        let c2 = contribution(JobKind::Sort, 10);
+        {
+            let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+            store.append(JobKind::Sort, 1, &tsv(&c1)).unwrap();
+            // Snapshot at watermark 1 (the post-c1 state), compacting c1.
+            let seq = store
+                .snapshot(&[RepoImage {
+                    job: JobKind::Sort,
+                    revision: 1,
+                    description: "sorting",
+                    maintainer_machine: Some("m5.xlarge"),
+                    data: &c1,
+                }])
+                .unwrap();
+            assert_eq!(seq, 1);
+            assert_eq!(store.stats().pending, 0);
+            // One more contribution after the snapshot, then "crash".
+            store.append(JobKind::Sort, 2, &tsv(&c2)).unwrap();
+        }
+        let (store, recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        let sort = &recovered[0];
+        assert_eq!(sort.revision, 2, "snapshot watermark + replayed tail");
+        assert_eq!(sort.replayed, 1, "only the post-snapshot record replays");
+        assert_eq!(sort.data.len(), 6);
+        assert_eq!(sort.description.as_deref(), Some("sorting"));
+        assert_eq!(sort.maintainer_machine.as_deref(), Some("m5.xlarge"));
+        assert_eq!(store.torn_tails(), 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_published_but_compaction_skipped_is_not_double_applied() {
+        // A WAL record whose revision is <= the snapshot watermark is the
+        // "snapshot flipped, compaction never ran" crash window: replay
+        // must skip it, not apply it twice.
+        let dir = temp_dir("dup");
+        let c1 = contribution(JobKind::Sort, 0);
+        {
+            let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+            store.append(JobKind::Sort, 1, &tsv(&c1)).unwrap();
+            store.sync().unwrap();
+            // Snapshot WITHOUT the store's compaction step, simulating the
+            // crash between CURRENT flip and WAL rewrite.
+            snapshot::write(
+                &dir,
+                1,
+                &[RepoImage {
+                    job: JobKind::Sort,
+                    revision: 1,
+                    description: "sorting",
+                    maintainer_machine: None,
+                    data: &c1,
+                }],
+            )
+            .unwrap();
+        }
+        let (_, recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        let sort = &recovered[0];
+        assert_eq!(sort.revision, 1);
+        assert_eq!(sort.replayed, 0, "covered record skipped");
+        assert_eq!(sort.data.len(), 3, "not double-applied");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_gap_on_disk_refuses_recovery() {
+        let dir = temp_dir("gap");
+        {
+            let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+            store.append(JobKind::Sort, 1, &tsv(&contribution(JobKind::Sort, 0))).unwrap();
+        }
+        // Forge a revision gap directly in the file (the store's append
+        // guard refuses to create one through the API).
+        let (mut wal, _) = Wal::open(&dir.join("wal").join("sort.wal")).unwrap();
+        wal.append(3, &tsv(&contribution(JobKind::Sort, 10))).unwrap();
+        wal.sync().unwrap();
+        drop(wal);
+        let err = DurableStore::open(&dir, StorageConfig::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("WAL gap"), "{err:#}");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_guard_requires_contiguous_revisions() {
+        let dir = temp_dir("guard");
+        let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        // Attaching storage to a pre-populated repo (revision already 1)
+        // without a baseline snapshot: the very first append fails with
+        // an actionable error instead of writing an unrecoverable WAL.
+        let err = store
+            .append(JobKind::Sort, 2, &tsv(&contribution(JobKind::Sort, 0)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("revision gap"), "{err:#}");
+        assert!(format!("{err:#}").contains("snapshot"), "{err:#}");
+
+        // The failed append did not advance the watermark; the proper
+        // sequence still works, and a skip after a success still fails.
+        store.append(JobKind::Sort, 1, &tsv(&contribution(JobKind::Sort, 0))).unwrap();
+        assert!(store.append(JobKind::Sort, 3, &tsv(&contribution(JobKind::Sort, 10))).is_err());
+        store.append(JobKind::Sort, 2, &tsv(&contribution(JobKind::Sort, 10))).unwrap();
+
+        // A snapshot fast-forwards the watermark (baseline for a
+        // pre-populated Grep repo at revision 5).
+        let grep = contribution(JobKind::Grep, 0);
+        store
+            .snapshot(&[RepoImage {
+                job: JobKind::Grep,
+                revision: 5,
+                description: "grep base",
+                maintainer_machine: None,
+                data: &grep,
+            }])
+            .unwrap();
+        assert!(store.append(JobKind::Grep, 5, &tsv(&contribution(JobKind::Grep, 10))).is_err());
+        store.append(JobKind::Grep, 6, &tsv(&contribution(JobKind::Grep, 10))).unwrap();
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_counted_and_survivors_recovered() {
+        let dir = temp_dir("torn");
+        {
+            let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+            store.append(JobKind::Sort, 1, &tsv(&contribution(JobKind::Sort, 0))).unwrap();
+            store.sync().unwrap();
+        }
+        let wal_path = dir.join("wal").join("sort.wal");
+        let mut bytes = fs::read(&wal_path).unwrap();
+        let clean_len = bytes.len() as u64;
+        bytes.extend_from_slice(&[0x77; 9]); // half-written next record
+        fs::write(&wal_path, &bytes).unwrap();
+        let (store, recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        assert_eq!(store.torn_tails(), 1);
+        assert_eq!(recovered[0].data.len(), 3, "acknowledged records survive");
+        assert_eq!(fs::metadata(&wal_path).unwrap().len(), clean_len, "tail truncated");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn second_open_on_a_live_dir_is_refused_until_release() {
+        let dir = temp_dir("lock");
+        let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        // Same pid is alive, so the lock must hold.
+        let err = DurableStore::open(&dir, StorageConfig::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("is locked by process"), "{err:#}");
+        // Releasing the store releases the dir.
+        drop(store);
+        let (_, recovered) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        assert!(recovered.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_lock_from_dead_process_is_taken_over() {
+        let dir = temp_dir("stalelock");
+        fs::create_dir_all(&dir).unwrap();
+        // A pid far beyond pid_max: definitely not running.
+        fs::write(dir.join("LOCK"), "999999999\n").unwrap();
+        let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        let lock = fs::read_to_string(dir.join("LOCK")).unwrap();
+        assert_eq!(lock.trim(), std::process::id().to_string());
+        drop(store);
+        assert!(!dir.join("LOCK").exists(), "drop releases the lock");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_policy_parse_display_roundtrip() {
+        for p in [FsyncPolicy::Always, FsyncPolicy::Interval, FsyncPolicy::Never] {
+            assert_eq!(p.to_string().parse::<FsyncPolicy>().unwrap(), p);
+        }
+        assert!("sometimes".parse::<FsyncPolicy>().is_err());
+    }
+}

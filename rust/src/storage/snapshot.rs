@@ -1,0 +1,364 @@
+//! Compacted snapshots of the hub's repositories (DESIGN.md §9).
+//!
+//! A snapshot is one numbered directory under `<data-dir>/snapshots/`
+//! holding each repository's full dataset as TSV (the paper's §VI-A
+//! layout, unchanged) plus `MANIFEST.json` with the metadata the TSVs
+//! cannot carry: description, maintainer designation and — critically —
+//! the *revision watermark* each dataset was captured at, which is what
+//! lets recovery line the WAL tail up against the snapshot.
+//!
+//! Publication is atomic: the snapshot directory is written and fsynced
+//! first (manifest last — a directory without one is an aborted attempt
+//! and is ignored), then the `CURRENT` pointer file flips to the new
+//! sequence via tmp + rename. A crash at any point leaves `CURRENT`
+//! naming a complete older snapshot whose WAL was never compacted, so
+//! replay still covers everything.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use super::sync_dir;
+use crate::data::{Dataset, JobKind};
+use crate::util::json::Json;
+
+/// Metadata of one repository inside a snapshot manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepoManifest {
+    pub job: JobKind,
+    /// Revision watermark: the repo revision this snapshot captured.
+    pub revision: u64,
+    pub records: u64,
+    pub description: String,
+    pub maintainer_machine: Option<String>,
+}
+
+/// A loaded snapshot: per-repo metadata plus the datasets.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub seq: u64,
+    pub repos: Vec<(RepoManifest, Dataset)>,
+}
+
+/// Borrowed image of one repository, as handed to [`write`].
+#[derive(Debug)]
+pub struct RepoImage<'a> {
+    pub job: JobKind,
+    pub revision: u64,
+    pub description: &'a str,
+    pub maintainer_machine: Option<&'a str>,
+    pub data: &'a Dataset,
+}
+
+fn snapshots_root(dir: &Path) -> PathBuf {
+    dir.join("snapshots")
+}
+
+fn seq_dir(dir: &Path, seq: u64) -> PathBuf {
+    snapshots_root(dir).join(format!("{seq:06}"))
+}
+
+fn current_path(dir: &Path) -> PathBuf {
+    snapshots_root(dir).join("CURRENT")
+}
+
+fn write_sync(path: &Path, bytes: &[u8]) -> crate::Result<()> {
+    let mut f =
+        File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(bytes)?;
+    f.sync_all()
+        .with_context(|| format!("fsync {}", path.display()))?;
+    Ok(())
+}
+
+/// Write snapshot `seq` and atomically flip `CURRENT` to it, then prune
+/// older snapshot directories (only the newest is ever needed: recovery
+/// is snapshot + WAL tail, never a snapshot chain).
+pub fn write(dir: &Path, seq: u64, repos: &[RepoImage<'_>]) -> crate::Result<()> {
+    let out = seq_dir(dir, seq);
+    // A leftover directory from a crashed attempt at this seq is garbage.
+    if out.exists() {
+        fs::remove_dir_all(&out)
+            .with_context(|| format!("clearing stale snapshot {}", out.display()))?;
+    }
+    fs::create_dir_all(&out)
+        .with_context(|| format!("creating snapshot dir {}", out.display()))?;
+    let mut entries = Vec::new();
+    for repo in repos {
+        let text = repo.data.to_table()?.to_text()?;
+        write_sync(&out.join(format!("{}.tsv", repo.job)), text.as_bytes())?;
+        entries.push(Json::obj(vec![
+            ("job", Json::Str(repo.job.to_string())),
+            ("revision", Json::Num(repo.revision as f64)),
+            ("records", Json::Num(repo.data.len() as f64)),
+            ("description", Json::Str(repo.description.to_string())),
+            (
+                "maintainer_machine",
+                match repo.maintainer_machine {
+                    Some(m) => Json::Str(m.to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ]));
+    }
+    let manifest = Json::obj(vec![
+        ("seq", Json::Num(seq as f64)),
+        ("repos", Json::Arr(entries)),
+    ]);
+    // Manifest last: its presence marks the directory complete.
+    write_sync(&out.join("MANIFEST.json"), manifest.to_string().as_bytes())?;
+    sync_dir(&out);
+
+    let tmp = snapshots_root(dir).join("CURRENT.tmp");
+    write_sync(&tmp, format!("{seq}\n").as_bytes())?;
+    fs::rename(&tmp, current_path(dir)).context("flipping snapshot CURRENT")?;
+    sync_dir(&snapshots_root(dir));
+    prune(dir, seq);
+    Ok(())
+}
+
+/// Best-effort removal of snapshot directories older than `keep`.
+fn prune(dir: &Path, keep: u64) {
+    if let Ok(rd) = fs::read_dir(snapshots_root(dir)) {
+        for entry in rd.flatten() {
+            if let Ok(seq) = entry.file_name().to_string_lossy().parse::<u64>() {
+                if seq < keep {
+                    let _ = fs::remove_dir_all(entry.path());
+                }
+            }
+        }
+    }
+}
+
+/// Load the newest complete snapshot under `dir`, or `None` on a fresh
+/// data dir. `CURRENT` is authoritative; if it is missing or unreadable
+/// the highest sequence with a manifest is used instead. A snapshot that
+/// `CURRENT` never flipped to is deliberately ignored: its WAL was never
+/// compacted, so replaying on the older snapshot recovers the same state.
+pub fn load_latest(dir: &Path) -> crate::Result<Option<Snapshot>> {
+    let root = snapshots_root(dir);
+    if !root.exists() {
+        return Ok(None);
+    }
+    let seq = fs::read_to_string(current_path(dir))
+        .ok()
+        .and_then(|text| text.trim().parse::<u64>().ok())
+        .or_else(|| highest_complete(&root));
+    let seq = match seq {
+        Some(seq) => seq,
+        None => return Ok(None),
+    };
+    let out = seq_dir(dir, seq);
+    let manifest_text = fs::read_to_string(out.join("MANIFEST.json"))
+        .with_context(|| format!("reading snapshot manifest in {}", out.display()))?;
+    let manifest = Json::parse(&manifest_text)
+        .with_context(|| format!("parsing snapshot manifest in {}", out.display()))?;
+    let entries = manifest
+        .get("repos")
+        .and_then(Json::as_arr)
+        .context("snapshot manifest: missing repos array")?;
+    let mut repos = Vec::new();
+    for entry in entries {
+        let job: JobKind = entry
+            .get("job")
+            .and_then(Json::as_str)
+            .context("snapshot manifest: repo missing job")?
+            .parse()?;
+        let revision = entry
+            .get("revision")
+            .and_then(Json::as_u64)
+            .context("snapshot manifest: repo missing revision")?;
+        let description = entry
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let maintainer_machine = entry
+            .get("maintainer_machine")
+            .and_then(Json::as_str)
+            .map(|s| s.to_string());
+        let data = Dataset::load(job, &out.join(format!("{job}.tsv")))
+            .with_context(|| format!("loading snapshot dataset for {job}"))?;
+        let records = data.len() as u64;
+        if let Some(expect) = entry.get("records").and_then(Json::as_u64) {
+            anyhow::ensure!(
+                expect == records,
+                "snapshot {seq}: {job} has {records} records on disk, manifest says {expect}"
+            );
+        }
+        repos.push((
+            RepoManifest { job, revision, records, description, maintainer_machine },
+            data,
+        ));
+    }
+    Ok(Some(Snapshot { seq, repos }))
+}
+
+fn highest_complete(root: &Path) -> Option<u64> {
+    let mut best = None;
+    if let Ok(rd) = fs::read_dir(root) {
+        for entry in rd.flatten() {
+            if let Ok(seq) = entry.file_name().to_string_lossy().parse::<u64>() {
+                if entry.path().join("MANIFEST.json").exists()
+                    && best.map_or(true, |b| seq > b)
+                {
+                    best = Some(seq);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::RunRecord;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("c3o_snap_test_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn dataset(n: usize) -> Dataset {
+        let mut ds = Dataset::new(JobKind::Sort);
+        for i in 0..n {
+            ds.push(RunRecord {
+                machine_type: "m5.xlarge".into(),
+                scale_out: 2 + i as u32,
+                data_size_gb: 10.0 + i as f64 * 0.125,
+                context: vec![],
+                runtime_s: 100.0 / (1 + i) as f64,
+            })
+            .unwrap();
+        }
+        ds
+    }
+
+    #[test]
+    fn fresh_dir_has_no_snapshot() {
+        let dir = temp_dir("fresh");
+        assert!(load_latest(&dir).unwrap().is_none());
+        fs::create_dir_all(dir.join("snapshots")).unwrap();
+        assert!(load_latest(&dir).unwrap().is_none(), "empty snapshots root");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_load_roundtrip_preserves_metadata_and_watermark() {
+        let dir = temp_dir("roundtrip");
+        let data = dataset(3);
+        let images = [RepoImage {
+            job: JobKind::Sort,
+            revision: 7,
+            description: "standard Spark sort",
+            maintainer_machine: Some("m5.xlarge"),
+            data: &data,
+        }];
+        write(&dir, 1, &images).unwrap();
+        let snap = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(snap.seq, 1);
+        assert_eq!(snap.repos.len(), 1);
+        let (meta, loaded) = &snap.repos[0];
+        assert_eq!(meta.job, JobKind::Sort);
+        assert_eq!(meta.revision, 7);
+        assert_eq!(meta.records, 3);
+        assert_eq!(meta.description, "standard Spark sort");
+        assert_eq!(meta.maintainer_machine.as_deref(), Some("m5.xlarge"));
+        assert_eq!(loaded.records, data.records, "TSV roundtrip is exact");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn newer_snapshot_replaces_and_prunes_older() {
+        let dir = temp_dir("prune");
+        let d1 = dataset(2);
+        let d2 = dataset(5);
+        write(
+            &dir,
+            1,
+            &[RepoImage {
+                job: JobKind::Sort,
+                revision: 2,
+                description: "v1",
+                maintainer_machine: None,
+                data: &d1,
+            }],
+        )
+        .unwrap();
+        write(
+            &dir,
+            2,
+            &[RepoImage {
+                job: JobKind::Sort,
+                revision: 5,
+                description: "v2",
+                maintainer_machine: None,
+                data: &d2,
+            }],
+        )
+        .unwrap();
+        let snap = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(snap.seq, 2);
+        assert_eq!(snap.repos[0].0.revision, 5);
+        assert_eq!(snap.repos[0].0.maintainer_machine, None);
+        assert!(!seq_dir(&dir, 1).exists(), "older snapshot pruned");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn aborted_snapshot_without_manifest_is_ignored() {
+        let dir = temp_dir("aborted");
+        let d1 = dataset(2);
+        write(
+            &dir,
+            1,
+            &[RepoImage {
+                job: JobKind::Sort,
+                revision: 3,
+                description: "good",
+                maintainer_machine: None,
+                data: &d1,
+            }],
+        )
+        .unwrap();
+        // Crash mid-snapshot 2: directory exists, no manifest, CURRENT
+        // still points at 1.
+        fs::create_dir_all(seq_dir(&dir, 2)).unwrap();
+        fs::write(seq_dir(&dir, 2).join("sort.tsv"), b"partial").unwrap();
+        let snap = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(snap.seq, 1, "CURRENT is authoritative");
+
+        // CURRENT lost entirely: fall back to the highest *complete* dir.
+        fs::remove_file(current_path(&dir)).unwrap();
+        let snap = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(snap.seq, 1, "incomplete snapshot 2 must be skipped");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dataset_snapshots_cleanly() {
+        let dir = temp_dir("empty");
+        let data = Dataset::new(JobKind::Grep);
+        write(
+            &dir,
+            1,
+            &[RepoImage {
+                job: JobKind::Grep,
+                revision: 0,
+                description: "empty repo",
+                maintainer_machine: None,
+                data: &data,
+            }],
+        )
+        .unwrap();
+        let snap = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(snap.repos[0].0.records, 0);
+        assert!(snap.repos[0].1.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

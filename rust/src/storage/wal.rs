@@ -1,0 +1,446 @@
+//! Per-repository write-ahead log (DESIGN.md §9).
+//!
+//! One append-only file per repository holds every accepted contribution
+//! that is not yet covered by a published snapshot. Each record is
+//! length-prefixed and checksummed:
+//!
+//! ```text
+//! [len: u32 LE] [crc32(payload): u32 LE] [payload: len bytes]
+//! payload = [revision: u64 LE] [contribution TSV, UTF-8]
+//! ```
+//!
+//! The `revision` is the repository revision the contribution *committed
+//! as*, so replay can line records up against a snapshot's revision
+//! watermark and recovery keeps revisions strictly monotone across
+//! restarts.
+//!
+//! Crash semantics: a record is appended with a single `write_all` before
+//! the commit publishes, so a crash can only leave a *torn tail* — a
+//! half-written final record. [`Wal::open`] scans the file, truncates
+//! everything from the first bad frame on, and positions the file for
+//! append; every record that survived the scan was fully written and is
+//! safe to replay. fsync is the caller's policy decision
+//! ([`crate::storage::FsyncPolicy`]): [`Wal::append`] only guarantees the
+//! bytes reached the kernel, [`Wal::sync`] makes them storage-durable.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// Frame header bytes: `len` + `crc`.
+const HEADER_BYTES: usize = 8;
+/// Payload bytes preceding the TSV text: the commit revision.
+const REVISION_BYTES: usize = 8;
+/// Upper bound on one record's payload. A parsed length beyond this is
+/// treated as corruption, not as an allocation request.
+const MAX_RECORD_BYTES: usize = 64 * 1024 * 1024;
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE), the frame checksum.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One decoded WAL record: an accepted contribution and the repository
+/// revision it committed as.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    pub revision: u64,
+    /// The accepted contribution, TSV-encoded (same codec as the wire's
+    /// `submit_runs` payload).
+    pub data_tsv: String,
+}
+
+/// Outcome of scanning a WAL file's bytes.
+#[derive(Debug)]
+pub struct WalScan {
+    /// Records of the valid prefix, in append order.
+    pub records: Vec<WalRecord>,
+    /// Byte length of the valid prefix.
+    pub valid_len: u64,
+    /// Whether bytes past `valid_len` existed (a torn or corrupt tail
+    /// that [`Wal::open`] truncates).
+    pub torn: bool,
+}
+
+/// Decode as many complete, checksummed records as `bytes` holds. Stops
+/// at the first bad frame: records past a torn one cannot be trusted.
+pub fn scan(bytes: &[u8]) -> WalScan {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        if pos + HEADER_BYTES > bytes.len() {
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len < REVISION_BYTES || len > MAX_RECORD_BYTES {
+            break;
+        }
+        let start = pos + HEADER_BYTES;
+        let end = match start.checked_add(len) {
+            Some(end) if end <= bytes.len() => end,
+            _ => break,
+        };
+        let payload = &bytes[start..end];
+        if crc32(payload) != crc {
+            break;
+        }
+        let revision = u64::from_le_bytes(payload[..REVISION_BYTES].try_into().unwrap());
+        let tsv = match std::str::from_utf8(&payload[REVISION_BYTES..]) {
+            Ok(tsv) => tsv,
+            Err(_) => break,
+        };
+        records.push(WalRecord { revision, data_tsv: tsv.to_string() });
+        pos = end;
+    }
+    WalScan { records, valid_len: pos as u64, torn: pos < bytes.len() }
+}
+
+fn encode(revision: u64, data_tsv: &str) -> crate::Result<Vec<u8>> {
+    let tsv = data_tsv.as_bytes();
+    let payload_len = REVISION_BYTES + tsv.len();
+    anyhow::ensure!(
+        payload_len <= MAX_RECORD_BYTES,
+        "WAL record too large: {payload_len} bytes"
+    );
+    let mut payload = Vec::with_capacity(payload_len);
+    payload.extend_from_slice(&revision.to_le_bytes());
+    payload.extend_from_slice(tsv);
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload_len);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    Ok(buf)
+}
+
+/// An open write-ahead log file.
+#[derive(Debug)]
+pub struct Wal {
+    path: PathBuf,
+    file: File,
+    /// Byte length of the valid record prefix — the append position.
+    /// Tracked so a failed partial append can be rolled back with
+    /// `set_len` instead of leaving a torn frame mid-file that would
+    /// poison every *later* acknowledged record at recovery (scan stops
+    /// at the first bad frame).
+    len: u64,
+    /// Set when a failed append could not be rolled back: the file may
+    /// hold a torn frame, so further appends would land after garbage
+    /// and be silently truncated by the next recovery. A poisoned WAL
+    /// refuses appends — the submit path then refuses acknowledgments —
+    /// until the process restarts and `open` truncates the tail.
+    poisoned: bool,
+    /// Whether bytes were appended since the last fsync.
+    dirty: bool,
+}
+
+impl Wal {
+    /// Open `path` (creating it and its parents if missing), scan the
+    /// existing records, truncate any torn tail, and leave the file
+    /// positioned for append. Returns the log and the scan result.
+    pub fn open(path: &Path) -> crate::Result<(Wal, WalScan)> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating WAL dir {}", parent.display()))?;
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)
+            .with_context(|| format!("reading WAL {}", path.display()))?;
+        let result = scan(&bytes);
+        if result.torn {
+            file.set_len(result.valid_len)
+                .with_context(|| format!("truncating torn WAL tail in {}", path.display()))?;
+            file.sync_data().ok();
+        }
+        let wal = Wal {
+            path: path.to_path_buf(),
+            file,
+            len: result.valid_len,
+            poisoned: false,
+            dirty: false,
+        };
+        Ok((wal, result))
+    }
+
+    /// Append one record. A single `write_all`, so a crash mid-append
+    /// leaves at most a torn tail (truncated by the next [`Wal::open`]).
+    /// A *failed* partial write is rolled back with `set_len`; if even
+    /// the rollback fails the log is poisoned and refuses further
+    /// appends, so a torn mid-file frame can never silently swallow
+    /// later acknowledged records at recovery. Durability against OS
+    /// crash is [`Wal::sync`]'s job.
+    pub fn append(&mut self, revision: u64, data_tsv: &str) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "WAL {} is poisoned by an earlier failed append; restart to recover",
+            self.path.display()
+        );
+        let buf = encode(revision, data_tsv)?;
+        if let Err(e) = self.file.write_all(&buf) {
+            // Partial frames must not stay in the file: everything after
+            // them would be truncated by the next recovery scan.
+            if self.file.set_len(self.len).is_err() {
+                self.poisoned = true;
+            }
+            return Err(anyhow::Error::new(e)
+                .context(format!("appending to WAL {}", self.path.display())));
+        }
+        self.len += buf.len() as u64;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// [`Wal::append`] and, when `sync`, fsync before returning. A failed
+    /// fsync rolls the frame back (or poisons the log), exactly like a
+    /// failed write: the record was *not* acknowledged, so leaving its
+    /// intact frame in place would let it shadow the next acknowledged
+    /// record claiming the same revision — recovery would then resurrect
+    /// the unacknowledged one and skip the acknowledged one.
+    pub fn append_durable(
+        &mut self,
+        revision: u64,
+        data_tsv: &str,
+        sync: bool,
+    ) -> crate::Result<()> {
+        let before = self.len;
+        let was_dirty = self.dirty;
+        self.append(revision, data_tsv)?;
+        if sync {
+            if let Err(e) = self.sync() {
+                if self.file.set_len(before).is_ok() {
+                    self.len = before;
+                    // Bytes up to `before` are exactly as durable as they
+                    // were before this call.
+                    self.dirty = was_dirty;
+                } else {
+                    self.poisoned = true;
+                }
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// fsync appended bytes, if any.
+    pub fn sync(&mut self) -> crate::Result<()> {
+        if self.dirty {
+            self.file
+                .sync_data()
+                .with_context(|| format!("fsync WAL {}", self.path.display()))?;
+            self.dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Drop records with `revision <= watermark` — they are covered by a
+    /// published snapshot. Rewrites the log atomically (tmp file +
+    /// rename) and continues appending to the new file. Records appended
+    /// concurrently with the snapshot (revision past the watermark) are
+    /// preserved; the caller serializes `compact` against `append` by
+    /// holding the same lock around both.
+    pub fn compact(&mut self, watermark: u64) -> crate::Result<()> {
+        self.sync()?;
+        let bytes = fs::read(&self.path)
+            .with_context(|| format!("reading WAL {} for compaction", self.path.display()))?;
+        let result = scan(&bytes);
+        let tmp = self.path.with_extension("wal.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            for rec in &result.records {
+                if rec.revision > watermark {
+                    f.write_all(&encode(rec.revision, &rec.data_tsv)?)?;
+                }
+            }
+            f.sync_data()?;
+        }
+        fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing compacted WAL {}", self.path.display()))?;
+        if let Some(parent) = self.path.parent() {
+            super::sync_dir(parent);
+        }
+        // The old handle points at the unlinked inode; reopen for append.
+        self.file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening compacted WAL {}", self.path.display()))?;
+        self.len = self
+            .file
+            .metadata()
+            .with_context(|| format!("sizing compacted WAL {}", self.path.display()))?
+            .len();
+        // The rewrite kept only intact frames, so a poisoned log is
+        // healed by compaction.
+        self.poisoned = false;
+        self.dirty = false;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_wal(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("c3o_wal_test_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir.join("test.wal")
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_reopen_roundtrip() {
+        let path = temp_wal("roundtrip");
+        {
+            let (mut wal, result) = Wal::open(&path).unwrap();
+            assert!(result.records.is_empty());
+            assert!(!result.torn);
+            wal.append(1, "h\t1\nr\t2\n").unwrap();
+            wal.append(2, "h\t1\nr\t3\n").unwrap();
+            wal.sync().unwrap();
+        }
+        let (_, result) = Wal::open(&path).unwrap();
+        assert!(!result.torn);
+        assert_eq!(result.records.len(), 2);
+        assert_eq!(result.records[0].revision, 1);
+        assert_eq!(result.records[1].data_tsv, "h\t1\nr\t3\n");
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_survivors_kept() {
+        let path = temp_wal("torn");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(1, "a\t1\n").unwrap();
+            wal.append(2, "a\t2\n").unwrap();
+            wal.sync().unwrap();
+        }
+        let full = fs::read(&path).unwrap();
+
+        // Kill -9 mid-append: half of record 3 on disk.
+        let mut torn = full.clone();
+        torn.extend_from_slice(&encode(3, "a\t3\n").unwrap()[..7]);
+        fs::write(&path, &torn).unwrap();
+        let (_, result) = Wal::open(&path).unwrap();
+        assert!(result.torn);
+        assert_eq!(result.records.len(), 2, "acknowledged records survive");
+        assert_eq!(
+            fs::metadata(&path).unwrap().len(),
+            full.len() as u64,
+            "torn tail truncated on open"
+        );
+
+        // A second open sees a clean file.
+        let (_, result) = Wal::open(&path).unwrap();
+        assert!(!result.torn);
+        assert_eq!(result.records.len(), 2);
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn corrupt_byte_stops_replay_at_the_flip() {
+        let path = temp_wal("corrupt");
+        {
+            let (mut wal, _) = Wal::open(&path).unwrap();
+            wal.append(1, "a\t1\n").unwrap();
+            wal.append(2, "a\t2\n").unwrap();
+            wal.sync().unwrap();
+        }
+        let mut bytes = fs::read(&path).unwrap();
+        let rec1_len = encode(1, "a\t1\n").unwrap().len();
+        // Flip a payload byte of record 2: CRC mismatch.
+        let idx = rec1_len + HEADER_BYTES + 2;
+        bytes[idx] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let (_, result) = Wal::open(&path).unwrap();
+        assert!(result.torn);
+        assert_eq!(result.records.len(), 1, "only the intact prefix replays");
+        assert_eq!(result.records[0].revision, 1);
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn compact_drops_covered_records_and_keeps_appending() {
+        let path = temp_wal("compact");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(1, "a\t1\n").unwrap();
+        wal.append(2, "a\t2\n").unwrap();
+        wal.append(3, "a\t3\n").unwrap();
+        wal.compact(2).unwrap();
+        let (mut wal, result) = Wal::open(&path).unwrap();
+        assert_eq!(result.records.len(), 1);
+        assert_eq!(result.records[0].revision, 3);
+
+        // The log still accepts appends after compaction.
+        wal.append(4, "a\t4\n").unwrap();
+        wal.sync().unwrap();
+        let (_, result) = Wal::open(&path).unwrap();
+        assert_eq!(result.records.len(), 2);
+        assert_eq!(result.records[1].revision, 4);
+
+        // Compacting everything empties the file.
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.compact(4).unwrap();
+        assert_eq!(fs::metadata(&path).unwrap().len(), 0);
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_corruption_not_allocation() {
+        let path = temp_wal("hugelen");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&[0xAA; 32]);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, &bytes).unwrap();
+        let (_, result) = Wal::open(&path).unwrap();
+        assert!(result.torn);
+        assert!(result.records.is_empty());
+        assert_eq!(result.valid_len, 0);
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

@@ -1,0 +1,400 @@
+//! Durable hub storage (DESIGN.md §9), end to end:
+//!
+//! * every *acknowledged* submission survives a crash — WAL-only recovery,
+//!   with and without a snapshot, with and without a torn trailing record,
+//! * repository revisions are strictly monotone across restarts,
+//! * a recovered hub predicts **bit-identically** to one that never
+//!   restarted,
+//! * rejected contributions leave WAL, revision and cache state untouched,
+//! * the TCP server's graceful drain flushes and snapshots everything.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use c3o::api::service::PredictionService;
+use c3o::cloud::Catalog;
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy};
+use c3o::runtime::NativeBackend;
+use c3o::sim::{generate_job, GeneratorConfig, JobInput, WorkloadModel};
+use c3o::storage::{DurableStore, FsyncPolicy, StorageConfig};
+use c3o::util::prng::Pcg;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("c3o_durability_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn honest_runs(n: usize, seed: u64) -> Dataset {
+    let catalog = Catalog::aws_like();
+    let model = WorkloadModel::default();
+    let mt = catalog.get("m5.xlarge").unwrap();
+    let mut rng = Pcg::seed(seed);
+    let mut ds = Dataset::new(JobKind::Sort);
+    for _ in 0..n {
+        let s = rng.range(2, 13) as u32;
+        let input = JobInput::new(JobKind::Sort, rng.range_f64(10.0, 20.0), vec![]);
+        ds.push(model.observe(mt, s, &input, &mut rng)).unwrap();
+    }
+    ds
+}
+
+fn open(dir: &Path, fsync: FsyncPolicy) -> (Arc<DurableStore>, Vec<c3o::storage::RecoveredRepo>) {
+    let (store, recovered) =
+        DurableStore::open(dir, StorageConfig { fsync, snapshot_every: 0 }).unwrap();
+    (Arc::new(store), recovered)
+}
+
+/// A durable hub with an empty Sort repository (bootstrap regime: the
+/// §III-C-b retrain gate is not armed yet, so submits are cheap).
+fn durable_hub(dir: &Path, fsync: FsyncPolicy) -> (HubState, Arc<DurableStore>) {
+    let state = HubState::new();
+    state.insert(Repository::new(JobKind::Sort, "sorting"));
+    let (store, recovered) = open(dir, fsync);
+    assert!(recovered.is_empty(), "fresh dir must recover nothing");
+    state.set_storage(store.clone()).unwrap();
+    (state, store)
+}
+
+#[test]
+fn acknowledged_submits_survive_crash_without_any_snapshot() {
+    let dir = fresh_dir("wal_only");
+    let (state, store) = durable_hub(&dir, FsyncPolicy::Never);
+    let policy = ValidationPolicy::default();
+
+    let mut acknowledged: Vec<RunRecord> = Vec::new();
+    for seed in 0..3u64 {
+        let contrib = honest_runs(3, 100 + seed);
+        let (verdict, revision) = state.submit(contrib.clone(), &policy).unwrap();
+        assert!(verdict.accepted, "{}", verdict.reason);
+        assert_eq!(revision, seed + 1);
+        acknowledged.extend(contrib.records);
+    }
+    assert_eq!(store.stats().wal_appends, 3);
+
+    // Crash: no sync, no snapshot, no graceful anything.
+    drop(state);
+    drop(store);
+
+    let (_, recovered) = open(&dir, FsyncPolicy::Never);
+    assert_eq!(recovered.len(), 1);
+    let sort = &recovered[0];
+    assert_eq!(sort.job, JobKind::Sort);
+    assert_eq!(sort.revision, 3, "revision watermark survives the restart");
+    assert_eq!(sort.replayed, 3);
+    assert_eq!(
+        sort.data.records, acknowledged,
+        "every acknowledged contribution recovered, in commit order"
+    );
+    assert!(sort.description.is_none(), "no snapshot ran — no manifest metadata");
+
+    // Revisions continue monotonically from the recovered watermark.
+    let state = HubState::new();
+    state.insert(Repository::new(JobKind::Sort, "sorting"));
+    let (store, recovered) = open(&dir, FsyncPolicy::Never);
+    for r in recovered {
+        state.install_recovered(r);
+    }
+    state.set_storage(store).unwrap();
+    let (verdict, revision) = state.submit(honest_runs(2, 999), &policy).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    assert_eq!(revision, 4, "post-recovery commits extend the revision line");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_trailing_record_is_truncated_acknowledged_survive() {
+    let dir = fresh_dir("torn");
+    let (state, store) = durable_hub(&dir, FsyncPolicy::Never);
+    let policy = ValidationPolicy::default();
+    for seed in 0..3u64 {
+        let (verdict, _) = state.submit(honest_runs(3, 200 + seed), &policy).unwrap();
+        assert!(verdict.accepted, "{}", verdict.reason);
+    }
+    drop(state);
+    drop(store);
+
+    let wal = dir.join("wal").join("sort.wal");
+    let clean = std::fs::read(&wal).unwrap();
+
+    // Kill -9 arrived mid-append: garbage tail after the acknowledged
+    // records.
+    let mut torn = clean.clone();
+    torn.extend_from_slice(&[0xC3, 0x0C, 0xAF, 0xFE, 0x00, 0x01, 0x02]);
+    std::fs::write(&wal, &torn).unwrap();
+    let (store, recovered) = open(&dir, FsyncPolicy::Never);
+    assert_eq!(store.torn_tails(), 1);
+    assert_eq!(recovered[0].revision, 3);
+    assert_eq!(recovered[0].data.len(), 9, "acknowledged records all survive");
+    assert_eq!(
+        std::fs::metadata(&wal).unwrap().len(),
+        clean.len() as u64,
+        "the torn trailing record is truncated on open"
+    );
+    drop(store);
+
+    // Crash half-way through the *last valid* record instead: exactly the
+    // unacknowledged half-write disappears, the prefix stays.
+    let mut cut = clean.clone();
+    cut.truncate(clean.len() - 5);
+    std::fs::write(&wal, &cut).unwrap();
+    let (store, recovered) = open(&dir, FsyncPolicy::Never);
+    assert_eq!(store.torn_tails(), 1);
+    assert_eq!(recovered[0].revision, 2);
+    assert_eq!(recovered[0].data.len(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_compacts_wal_and_restores_metadata() {
+    let dir = fresh_dir("snapshot");
+    let state = HubState::new();
+    let mut repo = Repository::new(JobKind::Sort, "standard Spark sort implementation");
+    repo.maintainer_machine = Some("m5.xlarge".into());
+    state.insert(repo);
+    let (store, _) = open(&dir, FsyncPolicy::Interval);
+    state.set_storage(store.clone()).unwrap();
+    let policy = ValidationPolicy::default();
+
+    for seed in 0..2u64 {
+        let (verdict, _) = state.submit(honest_runs(3, 300 + seed), &policy).unwrap();
+        assert!(verdict.accepted, "{}", verdict.reason);
+    }
+    let wal = dir.join("wal").join("sort.wal");
+    assert!(std::fs::metadata(&wal).unwrap().len() > 0);
+
+    let seq = state.snapshot_to(&store).unwrap();
+    assert_eq!(seq, 1);
+    assert_eq!(
+        std::fs::metadata(&wal).unwrap().len(),
+        0,
+        "snapshot compacts the covered WAL records away"
+    );
+
+    // One more acknowledged submit after the snapshot, then crash.
+    let (verdict, revision) = state.submit(honest_runs(3, 310), &policy).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    assert_eq!(revision, 3);
+    drop(state);
+    drop(store);
+
+    let (_, recovered) = open(&dir, FsyncPolicy::Interval);
+    let sort = recovered.iter().find(|r| r.job == JobKind::Sort).unwrap();
+    assert_eq!(sort.revision, 3, "snapshot watermark + WAL tail");
+    assert_eq!(sort.replayed, 1, "only the post-snapshot record replays");
+    assert_eq!(sort.data.len(), 9);
+    assert_eq!(
+        sort.description.as_deref(),
+        Some("standard Spark sort implementation"),
+        "manifest restores the description"
+    );
+    assert_eq!(
+        sort.maintainer_machine.as_deref(),
+        Some("m5.xlarge"),
+        "manifest restores the maintainer designation"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rejected_contribution_touches_neither_wal_nor_state() {
+    let dir = fresh_dir("rejected");
+    let catalog = Catalog::aws_like();
+    let state = HubState::new();
+    let mut repo = Repository::new(JobKind::Sort, "sorting");
+    repo.maintainer_machine = Some("m5.xlarge".into());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    state.insert(repo);
+    let (store, _) = open(&dir, FsyncPolicy::Always);
+    // Baseline snapshot first: set_storage refuses to attach over a
+    // pre-populated repository the store does not cover.
+    state.snapshot_to(&store).unwrap();
+    state.set_storage(store.clone()).unwrap();
+    let policy = ValidationPolicy::default();
+
+    let wal = dir.join("wal").join("sort.wal");
+    let len_before = std::fs::metadata(&wal).unwrap().len();
+
+    // Fabricated runtimes: the §III-C-b gate bounces them.
+    let mut poison = Dataset::new(JobKind::Sort);
+    let mut rng = Pcg::seed(7);
+    for _ in 0..25 {
+        poison
+            .push(RunRecord {
+                machine_type: "m5.xlarge".into(),
+                scale_out: rng.range(2, 13) as u32,
+                data_size_gb: rng.range_f64(10.0, 20.0),
+                context: vec![],
+                runtime_s: 1e7,
+            })
+            .unwrap();
+    }
+    let (verdict, revision) = state.submit(poison, &policy).unwrap();
+    assert!(!verdict.accepted);
+    assert_eq!(revision, 0, "rejection does not bump the revision");
+    assert_eq!(state.counters(), (0, 1), "rejection is counted");
+    assert_eq!(
+        std::fs::metadata(&wal).unwrap().len(),
+        len_before,
+        "rejection must not append to the WAL"
+    );
+    assert_eq!(store.stats().wal_appends, 0);
+
+    // A replayed (duplicate) contribution is rejected and equally silent.
+    let contrib = honest_runs(4, 42);
+    let (verdict, _) = state.submit(contrib.clone(), &policy).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    let after_accept = std::fs::metadata(&wal).unwrap().len();
+    assert!(after_accept > len_before);
+
+    let (verdict, revision) = state.submit(contrib, &policy).unwrap();
+    assert!(!verdict.accepted, "replay must be rejected");
+    assert!(verdict.reason.contains("duplicate"), "{}", verdict.reason);
+    assert_eq!(revision, 1, "revision unchanged by the replay");
+    assert_eq!(state.counters(), (1, 2));
+    assert_eq!(std::fs::metadata(&wal).unwrap().len(), after_accept);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn set_storage_refuses_uncovered_prepopulated_repo() {
+    // Attaching a fresh store to a repo that already holds records would
+    // lose them at the next recovery (the store rebuilds repos only from
+    // snapshot + WAL) — so it must fail up front, and succeed after a
+    // baseline snapshot.
+    let dir = fresh_dir("uncovered");
+    let catalog = Catalog::aws_like();
+    let state = HubState::new();
+    let mut repo = Repository::new(JobKind::Sort, "sorting");
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    state.insert(repo);
+    let (store, _) = open(&dir, FsyncPolicy::Never);
+    let err = state.set_storage(store.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("does not cover"), "{err:#}");
+    assert!(state.storage().is_none(), "refused attach leaves no storage");
+
+    state.snapshot_to(&store).unwrap();
+    state.set_storage(store).unwrap();
+    assert!(state.storage().is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovered_hub_predicts_bit_identically() {
+    let dir = fresh_dir("parity");
+    let catalog = Catalog::aws_like();
+    let backend = Arc::new(NativeBackend::new());
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "standard Spark sort implementation");
+    repo.maintainer_machine = Some("m5.xlarge".into());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    state.insert(repo);
+    let (store, _) = open(&dir, FsyncPolicy::Interval);
+    // Baseline snapshot: the seeded corpus is captured before the first
+    // WAL append builds on it (exactly what `c3o serve --data-dir` does).
+    state.snapshot_to(&store).unwrap();
+    state.set_storage(store.clone()).unwrap();
+
+    let live = PredictionService::new(
+        state.clone(),
+        catalog.clone(),
+        ValidationPolicy::default(),
+        backend.clone(),
+    );
+    for seed in [51u64, 52u64] {
+        let tsv = honest_runs(4, seed).to_table().unwrap().to_text().unwrap();
+        let out = live.submit_tsv(JobKind::Sort, &tsv).unwrap();
+        assert!(out.accepted, "{}", out.reason);
+    }
+    let rows: Vec<Vec<f64>> = (2..=12).map(|s| vec![s as f64, 15.0]).collect();
+    let before = live.predict_batch(JobKind::Sort, None, &rows).unwrap();
+
+    // Release the live hub's store first — the data dir is single-writer
+    // locked — then restart purely from disk: the WAL tail replays onto
+    // the baseline snapshot; no graceful shutdown happened.
+    drop(store);
+    drop(state.detach_storage());
+    let (_, recovered) = open(&dir, FsyncPolicy::Interval);
+    let state2 = Arc::new(HubState::new());
+    for r in recovered {
+        state2.install_recovered(r);
+    }
+    assert_eq!(
+        state2.revision(JobKind::Sort),
+        state.revision(JobKind::Sort),
+        "revisions match across the restart"
+    );
+    assert_eq!(
+        state2.get(JobKind::Sort).unwrap().data.records,
+        state.get(JobKind::Sort).unwrap().data.records,
+        "recovered dataset is value-identical to the live one"
+    );
+    let recovered_svc = PredictionService::new(
+        state2,
+        catalog,
+        ValidationPolicy::default(),
+        backend,
+    );
+    let after = recovered_svc.predict_batch(JobKind::Sort, None, &rows).unwrap();
+    assert_eq!(after.machine_type, before.machine_type);
+    assert_eq!(after.model, before.model, "same model wins selection");
+    for (a, b) in before.runtimes.iter().zip(&after.runtimes) {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "recovered hub must predict bit-identically"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_graceful_drain_flushes_and_snapshots() {
+    let dir = fresh_dir("drain");
+    let catalog = Catalog::aws_like();
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "sorting");
+    repo.maintainer_machine = Some("m5.xlarge".into());
+    state.insert(repo);
+    let (store, _) = open(&dir, FsyncPolicy::Interval);
+    state.snapshot_to(&store).unwrap();
+    state.set_storage(store.clone()).unwrap();
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog,
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig { workers: 2, max_conns: 16, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+    let verdict = client.submit_runs(&honest_runs(5, 77)).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    let stats = client.stats().unwrap();
+    assert!(stats.durable, "stats must report the durable store");
+    assert_eq!(stats.wal_appends, 1);
+    drop(client);
+    server.shutdown();
+    // The server (service → state → store) is gone; drop the test's own
+    // handle too so the data dir's single-writer lock is released.
+    drop(store);
+
+    // The drain wrote a final compacted snapshot: recovery needs no WAL.
+    assert_eq!(
+        std::fs::metadata(dir.join("wal").join("sort.wal")).unwrap().len(),
+        0,
+        "graceful drain compacts the WAL into the final snapshot"
+    );
+    let (_, recovered) = open(&dir, FsyncPolicy::Interval);
+    let sort = recovered.iter().find(|r| r.job == JobKind::Sort).unwrap();
+    assert_eq!(sort.revision, 1);
+    assert_eq!(sort.data.len(), 5);
+    assert_eq!(sort.replayed, 0, "everything came from the final snapshot");
+    assert_eq!(sort.maintainer_machine.as_deref(), Some("m5.xlarge"));
+    std::fs::remove_dir_all(&dir).ok();
+}
