@@ -1,0 +1,123 @@
+//! E12 (config search) — catalog-wide `configure_search`: cold full-grid
+//! fits vs the warm fitted-model cache.
+//!
+//! Cold: a fresh `PredictionService` per call pays one dynamic-selection
+//! fit per sufficiently-covered machine type (the corpus covers two), on
+//! the fit-path engine at 1/2/4/8 CV threads. Warm: one long-lived
+//! service answers the whole (machine type × scale-out) grid from its
+//! revision-keyed cache — asserted zero refits via the service's fit
+//! counters, the same property `tests/api_v1.rs` checks over the wire.
+//!
+//! Results merge into `BENCH_config_search.json` (section
+//! `config_search`). `C3O_BENCH_SMOKE=1` runs 1 iteration at reduced
+//! thread coverage for CI.
+
+mod common;
+
+use std::sync::Arc;
+
+use c3o::api::service::PredictionService;
+use c3o::bench::bench;
+use c3o::cloud::Catalog;
+use c3o::configurator::UserGoals;
+use c3o::cv::FitEngine;
+use c3o::data::JobKind;
+use c3o::hub::{HubState, Repository, ValidationPolicy};
+use c3o::runtime::FitBackend;
+use c3o::sim::{generate_job, GeneratorConfig};
+use c3o::util::json::Json;
+
+fn shared_state() -> Arc<HubState> {
+    let catalog = Catalog::aws_like();
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "standard Spark sort");
+    repo.maintainer_machine = Some("m5.xlarge".to_string());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog)
+        .expect("generate corpus");
+    state.insert(repo);
+    state
+}
+
+fn make_service(state: Arc<HubState>, backend: Arc<dyn FitBackend>) -> PredictionService {
+    PredictionService::new(state, Catalog::aws_like(), ValidationPolicy::default(), backend)
+}
+
+fn main() {
+    let backend = common::backend();
+    let smoke = common::smoke();
+    let state = shared_state();
+    let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+    let thread_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, 5) };
+
+    println!("== E12: configure_search — cold full-grid fits vs warm cache ==\n");
+
+    // Reference winner: any thread count (and the warm path) must agree.
+    let reference = {
+        let svc = make_service(state.clone(), backend.clone());
+        svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap()
+    };
+
+    let mut csv = Vec::new();
+    let mut summary = Vec::new();
+    let mut serial_mean = 0.0f64;
+    for &threads in thread_counts {
+        let (st, be) = (state.clone(), backend.clone());
+        let mut last = None;
+        let r = bench(&format!("configure_search_cold/{threads}thr"), warmup, iters, || {
+            let svc = make_service(st.clone(), be.clone());
+            svc.set_engine(FitEngine::with_threads(threads));
+            last = Some(svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap());
+        });
+        let got = last.expect("at least one measured iteration");
+        assert_eq!(
+            got.choice.machine_type, reference.choice.machine_type,
+            "{threads} threads changed the winning machine type"
+        );
+        assert_eq!(got.choice.scale_out, reference.choice.scale_out);
+        if threads == 1 {
+            serial_mean = r.mean_s;
+        }
+        let speedup = serial_mean / r.mean_s.max(1e-12);
+        println!("  {}  ({speedup:.2}x vs 1 thread)", r.per_iter_display());
+        csv.push(format!("configure_search_cold,{threads},{:.6},{speedup:.3}", r.mean_s));
+        summary.push(Json::obj(vec![
+            ("variant", Json::Str("cold".to_string())),
+            ("threads", Json::Num(threads as f64)),
+            ("mean_s", Json::Num(r.mean_s)),
+            ("speedup_vs_serial", Json::Num(speedup)),
+        ]));
+    }
+
+    // Warm: one service, primed once — the whole grid from the cache.
+    let svc = make_service(state.clone(), backend.clone());
+    svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+    let fits_primed = svc.fit_stats().0;
+    let (w_warm, i_warm) = if smoke { (0, 1) } else { (3, 30) };
+    let r_warm = bench("configure_search_warm", w_warm, i_warm, || {
+        let s = svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+        assert_eq!(s.choice.scale_out, reference.choice.scale_out);
+    });
+    let (fits, hits, _) = svc.fit_stats();
+    assert_eq!(fits, fits_primed, "warm full-grid search must never refit");
+    println!("  {}  ({fits} fits total, {hits} cache hits)", r_warm.per_iter_display());
+    csv.push(format!("configure_search_warm,-,{:.6},", r_warm.mean_s));
+    summary.push(Json::obj(vec![
+        ("variant", Json::Str("warm".to_string())),
+        ("mean_s", Json::Num(r_warm.mean_s)),
+        ("fits", Json::Num(fits as f64)),
+        ("cache_hits", Json::Num(hits as f64)),
+    ]));
+
+    common::write_csv("config_search.csv", "bench,threads,mean_s,speedup", &csv);
+    common::write_bench_json_named(
+        "BENCH_config_search.json",
+        "config_search",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("winner", Json::Str(reference.choice.machine_type.clone())),
+            ("scale_out", Json::Num(reference.choice.scale_out as f64)),
+            ("rows", Json::Arr(summary)),
+        ]),
+    );
+}

@@ -13,7 +13,9 @@
 
 use anyhow::Context;
 
-use crate::configurator::{ConfigChoice, ScaleOutOption};
+use crate::configurator::{
+    CatalogSearch, ConfigChoice, FrontierEntry, ScaleOutOption, TypeOutcome, TypeReport,
+};
 use crate::data::JobKind;
 use crate::util::json::Json;
 
@@ -290,6 +292,17 @@ pub enum Op {
         confidence: f64,
         machine_type: Option<String>,
     },
+    /// Catalog-wide configuration search on the hub: the full
+    /// (machine type × scale-out) grid, one fitted model per type out of
+    /// the revision-keyed cache, returning the cost-optimal admissible
+    /// configuration plus the ranked frontier and per-type outcomes.
+    ConfigureSearch {
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        deadline_s: Option<f64>,
+        confidence: f64,
+    },
     /// Ask the server to stop accepting connections and quiesce.
     Shutdown,
 }
@@ -305,6 +318,7 @@ impl Op {
             Op::Predict { .. } => "predict",
             Op::PredictBatch { .. } => "predict_batch",
             Op::Configure { .. } => "configure",
+            Op::ConfigureSearch { .. } => "configure_search",
             Op::Shutdown => "shutdown",
         }
     }
@@ -353,6 +367,15 @@ impl Op {
                     pairs.push(("machine_type", Json::Str(m.clone())));
                 }
             }
+            Op::ConfigureSearch { job, data_size_gb, context, deadline_s, confidence } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                pairs.push(("data_size_gb", Json::Num(*data_size_gb)));
+                pairs.push(("context", f64s_to_json(context)));
+                if let Some(d) = deadline_s {
+                    pairs.push(("deadline_s", Json::Num(*d)));
+                }
+                pairs.push(("confidence", Json::Num(*confidence)));
+            }
         }
     }
 
@@ -383,6 +406,13 @@ impl Op {
                 deadline_s: opt_f64(frame, "deadline_s"),
                 confidence: opt_f64(frame, "confidence").unwrap_or(0.95),
                 machine_type: opt_str(frame, "machine_type"),
+            },
+            "configure_search" => Op::ConfigureSearch {
+                job: need_job(frame)?,
+                data_size_gb: need_f64(frame, "data_size_gb")?,
+                context: opt_f64_array(frame, "context")?,
+                deadline_s: opt_f64(frame, "deadline_s"),
+                confidence: opt_f64(frame, "confidence").unwrap_or(0.95),
             },
             "shutdown" => Op::Shutdown,
             other => {
@@ -890,6 +920,34 @@ impl BatchPrediction {
     }
 }
 
+fn scale_out_option_to_json(o: &ScaleOutOption) -> Json {
+    Json::obj(vec![
+        ("scale_out", Json::Num(o.scale_out as f64)),
+        ("predicted_runtime_s", Json::Num(o.predicted_runtime_s)),
+        ("runtime_ucb_s", Json::Num(o.runtime_ucb_s)),
+        ("cost_usd", Json::Num(o.cost_usd)),
+        ("bottleneck", Json::Bool(o.bottleneck)),
+        (
+            "admissible",
+            match o.admissible {
+                Some(b) => Json::Bool(b),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn scale_out_option_from_json(o: &Json) -> crate::Result<ScaleOutOption> {
+    Ok(ScaleOutOption {
+        scale_out: ju64(o, "scale_out")? as u32,
+        predicted_runtime_s: jf64(o, "predicted_runtime_s")?,
+        runtime_ucb_s: jf64(o, "runtime_ucb_s")?,
+        cost_usd: jf64(o, "cost_usd")?,
+        bottleneck: jbool(o, "bottleneck")?,
+        admissible: o.get("admissible").and_then(Json::as_bool),
+    })
+}
+
 /// Encode a configurator decision as a `configure` payload.
 pub fn config_choice_to_json(c: &ConfigChoice) -> Json {
     Json::obj(vec![
@@ -900,27 +958,7 @@ pub fn config_choice_to_json(c: &ConfigChoice) -> Json {
         ("est_cost_usd", Json::Num(c.est_cost_usd)),
         (
             "options",
-            Json::Arr(
-                c.options
-                    .iter()
-                    .map(|o| {
-                        Json::obj(vec![
-                            ("scale_out", Json::Num(o.scale_out as f64)),
-                            ("predicted_runtime_s", Json::Num(o.predicted_runtime_s)),
-                            ("runtime_ucb_s", Json::Num(o.runtime_ucb_s)),
-                            ("cost_usd", Json::Num(o.cost_usd)),
-                            ("bottleneck", Json::Bool(o.bottleneck)),
-                            (
-                                "admissible",
-                                match o.admissible {
-                                    Some(b) => Json::Bool(b),
-                                    None => Json::Null,
-                                },
-                            ),
-                        ])
-                    })
-                    .collect(),
-            ),
+            Json::Arr(c.options.iter().map(scale_out_option_to_json).collect()),
         ),
     ])
 }
@@ -933,16 +971,7 @@ pub fn config_choice_from_json(j: &Json) -> crate::Result<ConfigChoice> {
         .and_then(Json::as_arr)
         .context("payload missing array `options`")?
         .iter()
-        .map(|o| {
-            Ok(ScaleOutOption {
-                scale_out: ju64(o, "scale_out")? as u32,
-                predicted_runtime_s: jf64(o, "predicted_runtime_s")?,
-                runtime_ucb_s: jf64(o, "runtime_ucb_s")?,
-                cost_usd: jf64(o, "cost_usd")?,
-                bottleneck: jbool(o, "bottleneck")?,
-                admissible: o.get("admissible").and_then(Json::as_bool),
-            })
-        })
+        .map(scale_out_option_from_json)
         .collect::<crate::Result<Vec<_>>>()?;
     Ok(ConfigChoice {
         machine_type: jstr(j, "machine_type")?,
@@ -952,6 +981,123 @@ pub fn config_choice_from_json(j: &Json) -> crate::Result<ConfigChoice> {
         est_cost_usd: jf64(j, "est_cost_usd")?,
         options,
     })
+}
+
+fn type_report_to_json(t: &TypeReport) -> Json {
+    let mut pairs = vec![
+        ("machine_type", Json::Str(t.machine_type.clone())),
+        ("runs", Json::Num(t.runs as f64)),
+    ];
+    match &t.outcome {
+        TypeOutcome::Evaluated { model, options, pick } => {
+            pairs.push(("status", Json::Str("evaluated".to_string())));
+            pairs.push(("model", Json::Str(model.clone())));
+            pairs.push((
+                "pick",
+                match pick {
+                    Some(s) => Json::Num(*s as f64),
+                    None => Json::Null,
+                },
+            ));
+            pairs.push((
+                "options",
+                Json::Arr(options.iter().map(scale_out_option_to_json).collect()),
+            ));
+        }
+        TypeOutcome::InsufficientData { required } => {
+            pairs.push(("status", Json::Str("insufficient_data".to_string())));
+            pairs.push(("required", Json::Num(*required as f64)));
+        }
+        TypeOutcome::Failed { error } => {
+            pairs.push(("status", Json::Str("failed".to_string())));
+            pairs.push(("error", Json::Str(error.clone())));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn type_report_from_json(j: &Json) -> crate::Result<TypeReport> {
+    let status = jstr(j, "status")?;
+    let outcome = match status.as_str() {
+        "evaluated" => TypeOutcome::Evaluated {
+            model: jstr(j, "model")?,
+            options: j
+                .get("options")
+                .and_then(Json::as_arr)
+                .context("evaluated type missing array `options`")?
+                .iter()
+                .map(scale_out_option_from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            pick: j.get("pick").and_then(Json::as_u64).map(|s| s as u32),
+        },
+        "insufficient_data" => {
+            TypeOutcome::InsufficientData { required: ju64(j, "required")? as usize }
+        }
+        "failed" => TypeOutcome::Failed { error: jstr(j, "error")? },
+        other => anyhow::bail!("unknown per-type status: {other}"),
+    };
+    Ok(TypeReport {
+        machine_type: jstr(j, "machine_type")?,
+        runs: ju64(j, "runs")? as usize,
+        outcome,
+    })
+}
+
+/// Encode a catalog-wide search result as a `configure_search` payload.
+pub fn catalog_search_to_json(s: &CatalogSearch) -> Json {
+    Json::obj(vec![
+        ("choice", config_choice_to_json(&s.choice)),
+        (
+            "frontier",
+            Json::Arr(
+                s.frontier
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("machine_type", Json::Str(f.machine_type.clone())),
+                            ("scale_out", Json::Num(f.scale_out as f64)),
+                            ("predicted_runtime_s", Json::Num(f.predicted_runtime_s)),
+                            ("runtime_ucb_s", Json::Num(f.runtime_ucb_s)),
+                            ("cost_usd", Json::Num(f.cost_usd)),
+                            ("bottleneck", Json::Bool(f.bottleneck)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("types", Json::Arr(s.types.iter().map(type_report_to_json).collect())),
+    ])
+}
+
+/// Decode a `configure_search` payload back into the configurator's
+/// native [`CatalogSearch`], so hub mode hands callers exactly what local
+/// mode computes.
+pub fn catalog_search_from_json(j: &Json) -> crate::Result<CatalogSearch> {
+    let choice = config_choice_from_json(j.get("choice").context("payload missing `choice`")?)?;
+    let frontier = j
+        .get("frontier")
+        .and_then(Json::as_arr)
+        .context("payload missing array `frontier`")?
+        .iter()
+        .map(|f| {
+            Ok(FrontierEntry {
+                machine_type: jstr(f, "machine_type")?,
+                scale_out: ju64(f, "scale_out")? as u32,
+                predicted_runtime_s: jf64(f, "predicted_runtime_s")?,
+                runtime_ucb_s: jf64(f, "runtime_ucb_s")?,
+                cost_usd: jf64(f, "cost_usd")?,
+                bottleneck: jbool(f, "bottleneck")?,
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    let types = j
+        .get("types")
+        .and_then(Json::as_arr)
+        .context("payload missing array `types`")?
+        .iter()
+        .map(type_report_from_json)
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(CatalogSearch { choice, frontier, types })
 }
 
 #[cfg(test)]
@@ -991,6 +1137,13 @@ mod tests {
             deadline_s: Some(900.0),
             confidence: 0.95,
             machine_type: None,
+        });
+        round_trip(Op::ConfigureSearch {
+            job: JobKind::KMeans,
+            data_size_gb: 15.0,
+            context: vec![5.0, 0.001],
+            deadline_s: None,
+            confidence: 0.9,
         });
         round_trip(Op::Shutdown);
     }
@@ -1107,6 +1260,80 @@ mod tests {
         assert_eq!(back.predicted_runtime_s, c.predicted_runtime_s);
         assert_eq!(back.options.len(), 1);
         assert_eq!(back.options[0].admissible, Some(true));
+    }
+
+    #[test]
+    fn catalog_search_payload_round_trips() {
+        let option = ScaleOutOption {
+            scale_out: 4,
+            predicted_runtime_s: 200.0,
+            runtime_ucb_s: 240.0,
+            cost_usd: 0.12,
+            bottleneck: false,
+            admissible: Some(true),
+        };
+        let s = CatalogSearch {
+            choice: ConfigChoice {
+                machine_type: "c5.xlarge".into(),
+                scale_out: 4,
+                predicted_runtime_s: 200.0,
+                runtime_ucb_s: 240.0,
+                est_cost_usd: 0.12,
+                options: vec![option.clone()],
+            },
+            frontier: vec![FrontierEntry {
+                machine_type: "c5.xlarge".into(),
+                scale_out: 4,
+                predicted_runtime_s: 200.0,
+                runtime_ucb_s: 240.0,
+                cost_usd: 0.12,
+                bottleneck: false,
+            }],
+            types: vec![
+                TypeReport {
+                    machine_type: "c5.xlarge".into(),
+                    runs: 63,
+                    outcome: TypeOutcome::Evaluated {
+                        model: "GBM".into(),
+                        options: vec![option],
+                        pick: Some(4),
+                    },
+                },
+                TypeReport {
+                    machine_type: "r5.xlarge".into(),
+                    runs: 1,
+                    outcome: TypeOutcome::InsufficientData { required: 4 },
+                },
+                TypeReport {
+                    machine_type: "i3.xlarge".into(),
+                    runs: 9,
+                    outcome: TypeOutcome::Failed { error: "fit exploded".into() },
+                },
+            ],
+        };
+        let back = catalog_search_from_json(&catalog_search_to_json(&s)).unwrap();
+        assert_eq!(back.choice.machine_type, "c5.xlarge");
+        assert_eq!(back.choice.scale_out, 4);
+        assert_eq!(back.frontier.len(), 1);
+        assert_eq!(back.frontier[0].cost_usd, 0.12);
+        assert_eq!(back.types.len(), 3);
+        match &back.types[0].outcome {
+            TypeOutcome::Evaluated { model, options, pick } => {
+                assert_eq!(model, "GBM");
+                assert_eq!(options.len(), 1);
+                assert_eq!(*pick, Some(4));
+            }
+            other => panic!("expected Evaluated, got {other:?}"),
+        }
+        match &back.types[1].outcome {
+            TypeOutcome::InsufficientData { required } => assert_eq!(*required, 4),
+            other => panic!("expected InsufficientData, got {other:?}"),
+        }
+        match &back.types[2].outcome {
+            TypeOutcome::Failed { error } => assert_eq!(error, "fit exploded"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(back.types[1].runs, 1);
     }
 
     #[test]

@@ -25,10 +25,11 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cloud::Catalog;
 use crate::configurator::{
-    fit_prepared_with, select_machine_type, select_scale_out, ConfigChoice, UserGoals,
+    fit_prepared_with, search_catalog, select_machine_type, select_scale_out, CatalogSearch,
+    ConfigChoice, GridPrediction, GridSource, MIN_RUNS_PER_TYPE, NoTypesEvaluated, UserGoals,
 };
 use crate::cv::parallel::FitEngine;
-use crate::data::{Dataset, JobKind};
+use crate::data::{Dataset, FeatureMatrix, JobKind};
 use crate::hub::{HubState, ValidationPolicy};
 use crate::models::C3oPredictor;
 use crate::runtime::FitBackend;
@@ -428,6 +429,56 @@ impl PredictionService {
         .map_err(|e| WireError::new(ErrorCode::InvalidData, format!("{e:#}")))
     }
 
+    /// Catalog-wide configuration search: evaluate every machine type's
+    /// scale-out grid — one fitted model per type, resolved through the
+    /// revision-keyed cache, so a warm hub answers the whole grid with
+    /// zero refits — and return the cost-optimal admissible configuration
+    /// plus the ranked frontier. Types below the data floor are reported
+    /// as `insufficient_data`, never silently skipped.
+    pub fn configure_search(
+        &self,
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        goals: &UserGoals,
+    ) -> Result<CatalogSearch, WireError> {
+        self.check_arity(job, 2 + context.len(), "features")?;
+        let repo = self.state.get(job).ok_or_else(|| {
+            WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
+        })?;
+        if self.catalog.types().is_empty() {
+            return Err(WireError::new(
+                ErrorCode::Unavailable,
+                "catalog has no machine types to search",
+            ));
+        }
+        // Data-starved repo: nothing to fit anywhere — a distinct typed
+        // error from "deadline impossible on a fitted grid".
+        let view = repo.view().clone();
+        if !self.catalog.types().iter().any(|t| view.rows(&t.name) >= MIN_RUNS_PER_TYPE) {
+            return Err(WireError::new(
+                ErrorCode::Unavailable,
+                format!(
+                    "no machine type has >= {MIN_RUNS_PER_TYPE} runs for {job}; \
+                     contribute runtime data first"
+                ),
+            ));
+        }
+        let input = JobInput::new(job, data_size_gb, context);
+        let mut source = ServiceGridSource { svc: self, job, view };
+        search_catalog(&self.catalog, &mut source, &input, goals).map_err(|e| {
+            // Zero types evaluated (every covered type failed its fit) is
+            // a hub-side condition like the data-starved case above — not
+            // a bad request.
+            let code = if e.downcast_ref::<NoTypesEvaluated>().is_some() {
+                ErrorCode::Unavailable
+            } else {
+                ErrorCode::InvalidData
+            };
+            WireError::new(code, format!("{e:#}"))
+        })
+    }
+
     // -- protocol dispatch --------------------------------------------------
 
     /// Handle one wire line and produce the response frame. Never panics on
@@ -471,11 +522,56 @@ impl PredictionService {
                     self.configure(job, data_size_gb, context, &goals, machine_type.as_deref())?;
                 Ok(proto::config_choice_to_json(&choice))
             }
+            Op::ConfigureSearch { job, data_size_gb, context, deadline_s, confidence } => {
+                let goals = UserGoals { deadline_s, confidence };
+                let search = self.configure_search(job, data_size_gb, context, &goals)?;
+                Ok(proto::catalog_search_to_json(&search))
+            }
             Op::Shutdown => {
                 stop.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
             }
         }
+    }
+}
+
+/// [`GridSource`] over the service's fitted-model cache: one `fitted`
+/// resolution + one batch prediction per machine type. Warm entries make
+/// the whole grid zero-refit; cold types single-flight their fit on the
+/// service's engine. The `view` is the repository snapshot resolved at
+/// search start — per-type models may resolve a newer revision if a
+/// contribution lands mid-search, exactly as N separate `predict_batch`
+/// calls would.
+struct ServiceGridSource<'a> {
+    svc: &'a PredictionService,
+    job: JobKind,
+    view: Arc<FeatureMatrix>,
+}
+
+impl GridSource for ServiceGridSource<'_> {
+    fn runs(&self, machine_type: &str) -> usize {
+        self.view.rows(machine_type)
+    }
+
+    fn predict_grid(
+        &mut self,
+        machine_type: &str,
+        rows: &[Vec<f64>],
+    ) -> crate::Result<GridPrediction> {
+        let (fm, _cached) = self
+            .svc
+            .fitted(self.job, Some(machine_type))
+            .map_err(anyhow::Error::new)?;
+        let runtimes = rows
+            .iter()
+            .map(|row| fm.predictor.predict_one(row))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        Ok(GridPrediction {
+            model: fm.chosen.clone(),
+            resid_mu: fm.resid_mu,
+            resid_sigma: fm.resid_sigma,
+            runtimes,
+        })
     }
 }
 
@@ -652,6 +748,128 @@ mod tests {
         assert_eq!(remote.machine_type, local.machine_type);
         assert_eq!(remote.scale_out, local.scale_out);
         assert!((remote.predicted_runtime_s - local.predicted_runtime_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_configure_search_performs_zero_refits() {
+        use crate::configurator::TypeOutcome;
+        let svc = service_with_data();
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let s1 = svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+        let evaluated = s1
+            .types
+            .iter()
+            .filter(|t| matches!(t.outcome, TypeOutcome::Evaluated { .. }))
+            .count();
+        assert_eq!(evaluated, 2, "the default corpus covers m5.xlarge and c5.xlarge");
+        assert_eq!(svc.fit_stats().0 as usize, evaluated, "one cold fit per evaluated type");
+
+        // Second full-grid search: answered entirely from the cache.
+        let s2 = svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+        let (fits, hits, entries) = svc.fit_stats();
+        assert_eq!(fits as usize, evaluated, "warm full-grid search must not refit");
+        assert!(hits >= evaluated as u64);
+        assert_eq!(entries as usize, evaluated);
+        assert_eq!(s1.choice.machine_type, s2.choice.machine_type);
+        assert_eq!(s1.choice.scale_out, s2.choice.scale_out);
+        assert_eq!(s1.choice.est_cost_usd.to_bits(), s2.choice.est_cost_usd.to_bits());
+
+        // The search shares the cache with plain predict/predict_batch.
+        let p = svc.predict(JobKind::Sort, Some(&s1.choice.machine_type), &[4.0, 15.0]).unwrap();
+        assert!(p.cached, "search-fitted models serve later predicts warm");
+    }
+
+    #[test]
+    fn configure_search_error_paths_are_typed() {
+        let svc = service_with_data();
+        let goals = UserGoals::default();
+        // Unknown repository.
+        let e = svc
+            .configure_search(JobKind::PageRank, 0.25, vec![0.1, 0.001], &goals)
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::NotFound);
+        // Deadline-impossible grid: typed invalid_data, never an unwind.
+        let goals = UserGoals { deadline_s: Some(1.0), confidence: 0.95 };
+        let e = svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidData);
+        assert!(e.message.contains("none admissible"), "{}", e.message);
+    }
+
+    #[test]
+    fn data_starved_repo_search_is_unavailable() {
+        let state = Arc::new(HubState::new());
+        state.insert(Repository::new(JobKind::KMeans, "spark kmeans"));
+        let svc = PredictionService::new(
+            state,
+            Catalog::aws_like(),
+            ValidationPolicy::default(),
+            Arc::new(NativeBackend::new()),
+        );
+        let e = svc
+            .configure_search(JobKind::KMeans, 15.0, vec![5.0, 0.001], &UserGoals::default())
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::Unavailable);
+        assert!(e.message.contains("runs"), "{}", e.message);
+    }
+
+    #[test]
+    fn empty_catalog_search_is_unavailable() {
+        let catalog = Catalog::aws_like();
+        let state = Arc::new(HubState::new());
+        let mut repo = Repository::new(JobKind::Sort, "spark sort");
+        repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        state.insert(repo);
+        let svc = PredictionService::new(
+            state,
+            Catalog::custom(vec![], 0.0, vec![]),
+            ValidationPolicy::default(),
+            Arc::new(NativeBackend::new()),
+        );
+        let e = svc
+            .configure_search(JobKind::Sort, 15.0, vec![], &UserGoals::default())
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::Unavailable);
+        assert!(e.message.contains("no machine types"), "{}", e.message);
+    }
+
+    #[test]
+    fn degenerate_catalog_prices_yield_structured_error_not_panic() {
+        use crate::cloud::MachineType;
+        let catalog = Catalog::aws_like();
+        let state = Arc::new(HubState::new());
+        let mut repo = Repository::new(JobKind::Sort, "spark sort");
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        state.insert(repo);
+        let nan_catalog = Catalog::custom(
+            vec![MachineType {
+                name: "m5.xlarge".into(),
+                vcpus: 4,
+                memory_gb: 16.0,
+                cpu_factor: 1.0,
+                io_factor: 1.0,
+                price_per_hour: f64::NAN,
+                family: "general",
+            }],
+            420.0,
+            (2..=12).collect(),
+        );
+        let svc = PredictionService::new(
+            state,
+            nan_catalog,
+            ValidationPolicy::default(),
+            Arc::new(NativeBackend::new()),
+        );
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        // Every option costs NaN: the old no-deadline pick panicked on
+        // `partial_cmp().unwrap()` — a hub worker must answer an error
+        // frame instead of unwinding.
+        let e = svc.configure(JobKind::Sort, 15.0, vec![], &goals, None).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidData);
+        assert!(e.message.contains("finite positive"), "{}", e.message);
+        let e = svc.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidData);
+        assert!(e.message.contains("finite positive"), "{}", e.message);
     }
 
     #[test]

@@ -69,6 +69,18 @@ impl Catalog {
         }
     }
 
+    /// Build a custom catalog — alternative providers, or tests that need
+    /// degenerate offerings (empty type lists, absurd prices) to exercise
+    /// the configurator's error paths. `scale_outs` is the grid the
+    /// configurator evaluates.
+    pub fn custom(
+        types: Vec<MachineType>,
+        provisioning_delay_s: f64,
+        scale_outs: Vec<u32>,
+    ) -> Catalog {
+        Catalog { types, provisioning_delay_s, scale_outs }
+    }
+
     pub fn types(&self) -> &[MachineType] {
         &self.types
     }
@@ -139,5 +151,26 @@ mod tests {
     #[test]
     fn general_purpose_fallback_nonempty() {
         assert!(!Catalog::aws_like().general_purpose().is_empty());
+    }
+
+    #[test]
+    fn custom_catalog_round_trips_fields() {
+        let mt = MachineType {
+            name: "x1.test".into(),
+            vcpus: 2,
+            memory_gb: 4.0,
+            cpu_factor: 1.0,
+            io_factor: 1.0,
+            price_per_hour: 0.1,
+            family: "general",
+        };
+        let c = Catalog::custom(vec![mt], 60.0, vec![2, 4]);
+        assert_eq!(c.types().len(), 1);
+        assert_eq!(c.get("x1.test").unwrap().vcpus, 2);
+        assert_eq!(c.scale_outs, vec![2, 4]);
+        assert_eq!(c.provisioning_delay_s, 60.0);
+        let empty = Catalog::custom(vec![], 0.0, vec![]);
+        assert!(empty.types().is_empty());
+        assert!(empty.get("x1.test").is_err());
     }
 }

@@ -3,7 +3,9 @@
 //! The maintainer of a C3O repository designates a suitable machine type
 //! from test runs; users adopt it and only tune the scale-out. When no
 //! designation exists, the fallback "preferably chooses a general-purpose
-//! machine for which there is runtime data available".
+//! machine for which there is runtime data available" — most runs wins,
+//! ties go to the lexicographically smallest machine-type name (the one
+//! deterministic rule, applied by both fallback passes).
 //!
 //! Selection consumes a [`FeatureMatrix`] view, whose per-machine counts
 //! are already materialized — on the hub this is the repository
@@ -31,26 +33,45 @@ pub fn select_machine_type(
         return Ok(mt.to_string());
     }
 
-    // Fallback: general-purpose types with data, most data first.
-    let mut best: Option<(usize, String)> = None;
+    // Fallback: general-purpose types with data, most data first. Ties —
+    // here and in the last resort below — go to the lexicographically
+    // *smallest* machine-type name, so the pick is deterministic and
+    // independent of catalog or view iteration order (the two paths used
+    // to disagree: first-in-catalog-order vs last-in-sorted-order).
+    let mut best: Option<(usize, &str)> = None;
     for t in catalog.general_purpose() {
         let n = view.rows(&t.name);
-        if n > 0 && best.as_ref().map_or(true, |(bn, _)| n > *bn) {
-            best = Some((n, t.name.clone()));
+        if n == 0 {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((bn, bname)) => n > bn || (n == bn && t.name.as_str() < bname),
+        };
+        if better {
+            best = Some((n, t.name.as_str()));
         }
     }
     if let Some((_, name)) = best {
-        return Ok(name);
+        return Ok(name.to_string());
     }
-    // Last resort: any type with the most data (ties go to the
-    // lexicographically last type: `machines()` iterates sorted and
-    // `max_by_key` keeps the last maximum).
-    let name = view
-        .machines()
-        .max_by_key(|m| view.rows(m))
-        .expect("non-empty")
-        .to_string();
-    Ok(name)
+    // Last resort: any type with the most data. `machines()` iterates
+    // sorted ascending and only a strictly larger count replaces the
+    // incumbent, so ties keep the lexicographically smallest name — the
+    // same rule as the general-purpose pass.
+    let mut best: Option<(usize, &str)> = None;
+    for m in view.machines() {
+        let n = view.rows(m);
+        let better = match best {
+            None => true,
+            Some((bn, _)) => n > bn,
+        };
+        if better {
+            best = Some((n, m));
+        }
+    }
+    let (_, name) = best.expect("non-empty");
+    Ok(name.to_string())
 }
 
 #[cfg(test)]
@@ -112,6 +133,24 @@ mod tests {
         let view = view_with(&[("c5.xlarge", 3), ("r5.xlarge", 9)]);
         let mt = select_machine_type(&catalog, &view, None).unwrap();
         assert_eq!(mt, "r5.xlarge");
+    }
+
+    #[test]
+    fn general_purpose_tie_is_lexicographically_first() {
+        let catalog = Catalog::aws_like();
+        // m5.2xlarge and m5.xlarge tied on count; "m5.2xlarge" sorts first.
+        let view = view_with(&[("m5.xlarge", 7), ("m5.2xlarge", 7), ("c5.xlarge", 50)]);
+        let mt = select_machine_type(&catalog, &view, None).unwrap();
+        assert_eq!(mt, "m5.2xlarge");
+    }
+
+    #[test]
+    fn last_resort_tie_is_lexicographically_first() {
+        let catalog = Catalog::aws_like();
+        // No general-purpose data; c5 and r5 tied => lexicographic pick.
+        let view = view_with(&[("r5.xlarge", 9), ("c5.xlarge", 9)]);
+        let mt = select_machine_type(&catalog, &view, None).unwrap();
+        assert_eq!(mt, "c5.xlarge");
     }
 
     #[test]

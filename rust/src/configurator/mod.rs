@@ -13,9 +13,14 @@
 
 pub mod machine;
 pub mod scaleout;
+pub mod search;
 
 pub use machine::select_machine_type;
 pub use scaleout::{select_scale_out, ConfigChoice, ScaleOutOption, UserGoals};
+pub use search::{
+    configure_search, search_catalog, CatalogSearch, FitGridSource, FrontierEntry, GridPrediction,
+    GridSource, MIN_RUNS_PER_TYPE, NoTypesEvaluated, TypeOutcome, TypeReport,
+};
 
 use std::sync::Arc;
 

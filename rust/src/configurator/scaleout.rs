@@ -1,7 +1,12 @@
 //! Scale-out selection (paper §IV-B): the erf-confidence admission rule,
 //! bottleneck exclusion, and the runtime/cost pair view.
+//!
+//! The grid evaluation ([`build_options`]) and the pick rule
+//! ([`pick_option`]) are shared with the catalog-wide search in
+//! [`crate::configurator::search`], so a full-grid search is bit-identical
+//! to an exhaustive per-type [`select_scale_out`] loop.
 
-use crate::cloud::Catalog;
+use crate::cloud::{Catalog, MachineType};
 use crate::models::C3oPredictor;
 use crate::sim::JobInput;
 use crate::util::erf::confidence_multiplier;
@@ -53,25 +58,133 @@ pub struct ConfigChoice {
 /// scale-outs whose total usable memory cannot hold the working set.
 /// Mirrors the simulator's spill model conservatively (the configurator
 /// only sees dataset size, not the exact expansion factor).
-fn expect_bottleneck(
-    catalog: &Catalog,
-    machine_type: &str,
-    scale_out: u32,
-    input: &JobInput,
-) -> bool {
+///
+/// Takes the *resolved* [`MachineType`]: callers look the type up in the
+/// catalog and propagate the lookup error before any grid evaluation, so
+/// a catalog/view mismatch fails loudly — the old string-keyed variant
+/// swallowed the error as "no bottleneck", which under grid search would
+/// silently admit bottlenecked configurations.
+fn expect_bottleneck(mt: &MachineType, scale_out: u32, input: &JobInput) -> bool {
     if !input.job.is_iterative() {
         return false;
     }
-    let mt = match catalog.get(machine_type) {
-        Ok(mt) => mt,
-        Err(_) => return false,
-    };
     // Conservative working-set estimate: 1.25x the dataset (PageRank's
     // graph expansion is handled through its context feature by the
     // *predictor*; the exclusion rule is a guard rail, not the model).
     let working = 1.25 * input.data_size_gb;
     let usable = 0.55 * mt.memory_gb * scale_out as f64;
     working > usable
+}
+
+/// Feature rows `[scale_out, data_size, context...]` for the whole
+/// scale-out grid, in catalog order — the batch one fitted model answers
+/// per machine type (locally row by row, on the hub as one
+/// `predict_batch`).
+pub(crate) fn grid_rows(catalog: &Catalog, input: &JobInput) -> Vec<Vec<f64>> {
+    catalog
+        .scale_outs
+        .iter()
+        .map(|&s| {
+            let mut f = Vec::with_capacity(2 + input.context.len());
+            f.push(s as f64);
+            f.push(input.data_size_gb);
+            f.extend_from_slice(&input.context);
+            f
+        })
+        .collect()
+}
+
+/// Evaluate one machine type's scale-out grid from its model's raw
+/// runtime predictions (one per `catalog.scale_outs` entry, in order).
+/// The caller has already validated `goals.confidence` and resolved `mt`
+/// from the catalog.
+pub(crate) fn build_options(
+    catalog: &Catalog,
+    mt: &MachineType,
+    runtimes: &[f64],
+    input: &JobInput,
+    goals: &UserGoals,
+    resid_mu: f64,
+    resid_sigma: f64,
+) -> Vec<ScaleOutOption> {
+    let mult = confidence_multiplier(goals.confidence);
+    catalog
+        .scale_outs
+        .iter()
+        .zip(runtimes)
+        .map(|(&s, &raw)| {
+            let t = raw.max(0.0);
+            let ucb = t + resid_mu + mult * resid_sigma;
+            ScaleOutOption {
+                scale_out: s,
+                predicted_runtime_s: t,
+                runtime_ucb_s: ucb,
+                cost_usd: catalog.job_cost(mt, s, t),
+                bottleneck: expect_bottleneck(mt, s, input),
+                admissible: goals.deadline_s.map(|d| ucb <= d),
+            }
+        })
+        .collect()
+}
+
+/// A configuration a user could actually buy: finite positive predicted
+/// runtime, finite confidence bound, finite cost. A degenerate model
+/// predicting NaN / ∞ / ≤ 0 s yields a $0 or NaN cost that would
+/// otherwise win every cost comparison (or panic a `partial_cmp` pick).
+pub(crate) fn viable(o: &ScaleOutOption) -> bool {
+    o.predicted_runtime_s.is_finite()
+        && o.predicted_runtime_s > 0.0
+        && o.runtime_ucb_s.is_finite()
+        && o.cost_usd.is_finite()
+}
+
+/// The §IV-B pick over one machine type's evaluated grid. With a
+/// deadline: the smallest admissible scale-out. Without: the cheapest
+/// option (`total_cmp`, so NaN costs can never panic; ties go to the
+/// smaller scale-out). Non-viable options are disqualified outright;
+/// bottlenecked ones are admitted only when no clean option survives.
+/// `None` means nothing survived — callers turn that into a structured
+/// error, never an unwind (a hub worker must answer an error frame).
+pub(crate) fn pick_option<'a>(
+    options: &'a [ScaleOutOption],
+    goals: &UserGoals,
+) -> Option<&'a ScaleOutOption> {
+    fn pick_among<'a, I: Iterator<Item = &'a ScaleOutOption>>(
+        opts: I,
+        goals: &UserGoals,
+    ) -> Option<&'a ScaleOutOption> {
+        match goals.deadline_s {
+            Some(_) => opts.filter(|o| o.admissible == Some(true)).min_by_key(|o| o.scale_out),
+            None => opts.min_by(|a, b| {
+                a.cost_usd.total_cmp(&b.cost_usd).then(a.scale_out.cmp(&b.scale_out))
+            }),
+        }
+    }
+    pick_among(options.iter().filter(|o| viable(o) && !o.bottleneck), goals)
+        .or_else(|| pick_among(options.iter().filter(|o| viable(o)), goals))
+}
+
+/// Why a pick came up empty — a structured error the hub can answer as an
+/// error frame.
+pub(crate) fn no_pick_error(
+    options: &[ScaleOutOption],
+    machine_type: &str,
+    catalog: &Catalog,
+    goals: &UserGoals,
+) -> anyhow::Error {
+    if !options.iter().any(viable) {
+        anyhow::anyhow!(
+            "no scale-out of {machine_type} has a finite positive predicted runtime and \
+             cost (degenerate model or catalog entry)"
+        )
+    } else {
+        anyhow::anyhow!(
+            "no scale-out in {:?} meets the deadline {:?} at confidence {}",
+            catalog.scale_outs,
+            goals.deadline_s,
+            goals.confidence
+        )
+    }
 }
 
 /// Choose the §IV-B scale-out.
@@ -93,61 +206,20 @@ pub fn select_scale_out(
         "confidence must be in (0,1)"
     );
     let mt = catalog.get(machine_type)?;
-    let mult = confidence_multiplier(goals.confidence);
-
-    let mut options = Vec::with_capacity(catalog.scale_outs.len());
-    for &s in &catalog.scale_outs {
-        let mut features = vec![s as f64, input.data_size_gb];
-        features.extend_from_slice(&input.context);
-        let t = predictor.predict_one(&features)?.max(0.0);
-        let ucb = t + resid_mu + mult * resid_sigma;
-        let bottleneck = expect_bottleneck(catalog, machine_type, s, input);
-        options.push(ScaleOutOption {
-            scale_out: s,
-            predicted_runtime_s: t,
-            runtime_ucb_s: ucb,
-            cost_usd: catalog.job_cost(mt, s, t),
-            bottleneck,
-            admissible: goals.deadline_s.map(|d| ucb <= d),
-        });
-    }
-
-    let pick = |opts: &[ScaleOutOption]| -> Option<u32> {
-        match goals.deadline_s {
-            Some(_) => opts
-                .iter()
-                .filter(|o| o.admissible == Some(true))
-                .map(|o| o.scale_out)
-                .min(),
-            None => opts
-                .iter()
-                .min_by(|a, b| a.cost_usd.partial_cmp(&b.cost_usd).unwrap())
-                .map(|o| o.scale_out),
-        }
-    };
-
-    // First pass excludes bottlenecked scale-outs; §IV-B allows them only
-    // when nothing else is valid.
-    let clean: Vec<ScaleOutOption> =
-        options.iter().filter(|o| !o.bottleneck).cloned().collect();
-    let chosen = pick(&clean)
-        .or_else(|| pick(&options))
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "no scale-out in {:?} meets the deadline {:?} at confidence {}",
-                catalog.scale_outs,
-                goals.deadline_s,
-                goals.confidence
-            )
-        })?;
-
-    let opt = options.iter().find(|o| o.scale_out == chosen).unwrap().clone();
+    let runtimes = grid_rows(catalog, input)
+        .iter()
+        .map(|row| predictor.predict_one(row))
+        .collect::<crate::Result<Vec<f64>>>()?;
+    let options = build_options(catalog, mt, &runtimes, input, goals, resid_mu, resid_sigma);
+    let chosen = pick_option(&options, goals)
+        .ok_or_else(|| no_pick_error(&options, machine_type, catalog, goals))?
+        .clone();
     Ok(ConfigChoice {
         machine_type: machine_type.to_string(),
-        scale_out: opt.scale_out,
-        predicted_runtime_s: opt.predicted_runtime_s,
-        runtime_ucb_s: opt.runtime_ucb_s,
-        est_cost_usd: opt.cost_usd,
+        scale_out: chosen.scale_out,
+        predicted_runtime_s: chosen.predicted_runtime_s,
+        runtime_ucb_s: chosen.runtime_ucb_s,
+        est_cost_usd: chosen.cost_usd,
         options,
     })
 }
@@ -282,6 +354,68 @@ mod tests {
             let expect = o.predicted_runtime_s + 2.0 + 1.6448536269514722 * 10.0;
             assert!((o.runtime_ucb_s - expect).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn nan_and_zero_cost_options_never_win_or_panic() {
+        // Regression: the no-deadline pick used `partial_cmp().unwrap()`
+        // (panics on NaN cost) and a degenerate $0 option won every cost
+        // comparison.
+        let opt = |s: u32, t: f64, ucb: f64, cost: f64| ScaleOutOption {
+            scale_out: s,
+            predicted_runtime_s: t,
+            runtime_ucb_s: ucb,
+            cost_usd: cost,
+            bottleneck: false,
+            admissible: None,
+        };
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        let options = vec![
+            opt(2, 0.0, 5.0, 0.0),
+            opt(3, f64::NAN, f64::NAN, f64::NAN),
+            opt(4, 100.0, 110.0, 0.5),
+        ];
+        assert_eq!(pick_option(&options, &goals).unwrap().scale_out, 4);
+        // Nothing viable at all -> None; select_scale_out turns this into
+        // a structured error instead of unwinding a hub worker.
+        let degenerate = vec![
+            opt(2, 0.0, 5.0, 0.0),
+            opt(3, f64::INFINITY, f64::INFINITY, f64::INFINITY),
+        ];
+        assert!(pick_option(&degenerate, &goals).is_none());
+    }
+
+    #[test]
+    fn degenerate_predictor_errors_instead_of_free_cluster() {
+        // A model trained on negative runtimes predicts <= 0 everywhere;
+        // the clamped $0 options must be disqualified and the pick must
+        // return an error, not a zero-cost configuration.
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for s in 2..12 {
+            rows.push(vec![s as f64, 15.0]);
+            y.push(-5.0);
+        }
+        let data = TrainData::new(Matrix::from_rows(&rows).unwrap(), y).unwrap();
+        let mut p = C3oPredictor::new(Arc::new(NativeBackend::new()));
+        p.fit(&data).unwrap();
+        let catalog = Catalog::aws_like();
+        let goals = UserGoals { deadline_s: None, confidence: 0.95 };
+        let err = select_scale_out(&catalog, "m5.xlarge", &p, &sort_input(15.0), &goals, 0.0, 5.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("finite positive"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_machine_type_fails_loudly() {
+        // A catalog/view mismatch must surface the catalog error — never
+        // degrade to "no bottleneck" and admit the configuration.
+        let catalog = Catalog::aws_like();
+        let p = trained_predictor();
+        let goals = UserGoals::default();
+        let err = select_scale_out(&catalog, "z9.mega", &p, &sort_input(15.0), &goals, 0.0, 5.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown machine type"), "{err:#}");
     }
 
     #[test]

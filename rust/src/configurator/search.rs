@@ -1,0 +1,612 @@
+//! Catalog-wide configuration search: the full (machine type ×
+//! scale-out) grid.
+//!
+//! `configure` (paper §IV) pins one machine type — the maintainer
+//! designation or the §IV-A fallback — and only searches scale-outs for
+//! it. The paper's end goal, though, is a *choice*: the cheapest cluster
+//! configuration that meets the user's runtime target at the requested
+//! confidence (and Flora, arXiv 2502.21046, shows most of the win comes
+//! from searching resource *types*, not just scale-outs). This module
+//! evaluates every catalog machine type's scale-out grid and returns the
+//! cost-optimal admissible configuration plus the ranked runtime/cost
+//! frontier.
+//!
+//! The grid is answered through a [`GridSource`]: one model resolution +
+//! one batch prediction per machine type. Local mode fits each type's
+//! slice of the shared dataset ([`FitGridSource`], on the PR-3
+//! `FitEngine`); the hub's `PredictionService` resolves types through its
+//! revision-keyed fitted-model cache, so a warm hub answers the whole
+//! grid with **zero refits**. Both sources feed the same
+//! `build_options` / `pick_option` internals as
+//! [`super::select_scale_out`], so the search is bit-identical to an
+//! exhaustive per-type `select_scale_out` loop (asserted by the parity
+//! tests below and in `tests/api_v1.rs`).
+//!
+//! Machine types with fewer than [`MIN_RUNS_PER_TYPE`] runs are reported
+//! as [`TypeOutcome::InsufficientData`] — never silently skipped — and a
+//! type whose fit fails is reported as [`TypeOutcome::Failed`] without
+//! aborting the rest of the grid.
+
+use std::sync::Arc;
+
+use crate::cloud::Catalog;
+use crate::cv::parallel::FitEngine;
+use crate::data::{Dataset, FeatureMatrix};
+use crate::runtime::FitBackend;
+use crate::sim::JobInput;
+
+use super::fit_prepared_with;
+use super::scaleout::{
+    build_options, grid_rows, no_pick_error, pick_option, viable, ConfigChoice, ScaleOutOption,
+    UserGoals,
+};
+
+/// Minimum runs a machine type needs before the search will evaluate it —
+/// the `fit_prepared` training floor. Below it the type is reported as
+/// [`TypeOutcome::InsufficientData`].
+pub const MIN_RUNS_PER_TYPE: usize = 4;
+
+/// One machine type's fitted model, as the grid search consumes it: the
+/// selected model's name, its CV residual distribution (§IV-B), and the
+/// raw predicted runtimes for the whole scale-out grid.
+#[derive(Debug, Clone)]
+pub struct GridPrediction {
+    /// Winner of dynamic model selection (GBM | BOM | OGB | ...).
+    pub model: String,
+    /// CV residual mean μ.
+    pub resid_mu: f64,
+    /// CV residual std σ.
+    pub resid_sigma: f64,
+    /// Raw model outputs, one per `catalog.scale_outs` entry, in order.
+    pub runtimes: Vec<f64>,
+}
+
+/// Source of per-machine-type grid predictions: one model resolution and
+/// one batch prediction per type. `runs` feeds the data-sufficiency gate;
+/// `predict_grid` is only called for types at or above the floor.
+pub trait GridSource {
+    /// Runs available in the shared dataset for `machine_type`.
+    fn runs(&self, machine_type: &str) -> usize;
+    /// Resolve (fit or fetch) the type's model and predict `rows`.
+    fn predict_grid(
+        &mut self,
+        machine_type: &str,
+        rows: &[Vec<f64>],
+    ) -> crate::Result<GridPrediction>;
+}
+
+/// Per-machine-type outcome of the grid search, in catalog order.
+#[derive(Debug, Clone)]
+pub struct TypeReport {
+    pub machine_type: String,
+    /// Runs available in the shared dataset for this type.
+    pub runs: usize,
+    pub outcome: TypeOutcome,
+}
+
+/// What happened to one machine type during the search.
+#[derive(Debug, Clone)]
+pub enum TypeOutcome {
+    /// Model fitted (or fetched warm) and the grid evaluated. `pick` is
+    /// this type's §IV-B choice — `None` when no option survives
+    /// viability/admission.
+    Evaluated {
+        /// Winner of dynamic model selection for this type.
+        model: String,
+        /// The evaluated scale-out grid (the §IV-B runtime/cost pairs).
+        options: Vec<ScaleOutOption>,
+        /// The scale-out this type's §IV-B pick chose, if any survived.
+        pick: Option<u32>,
+    },
+    /// Fewer than the required number of runs; the type was not fitted.
+    InsufficientData { required: usize },
+    /// The fit or prediction for this type failed; the rest of the grid
+    /// is unaffected.
+    Failed { error: String },
+}
+
+/// Marker error: the search could evaluate *zero* machine types — every
+/// type sat below the data floor or failed its fit. A hub-side data /
+/// fitting condition, not a bad request: the service maps it to
+/// `unavailable` (where an impossible deadline on a fitted grid stays
+/// `invalid_data`). Carried as the source of the returned error chain;
+/// detect it with `err.downcast_ref::<NoTypesEvaluated>()`.
+#[derive(Debug, Clone, Copy)]
+pub struct NoTypesEvaluated;
+
+impl std::fmt::Display for NoTypesEvaluated {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("no machine type could be evaluated")
+    }
+}
+
+impl std::error::Error for NoTypesEvaluated {}
+
+/// One viable grid point in the ranked §IV-B runtime/cost view.
+#[derive(Debug, Clone)]
+pub struct FrontierEntry {
+    pub machine_type: String,
+    pub scale_out: u32,
+    pub predicted_runtime_s: f64,
+    pub runtime_ucb_s: f64,
+    pub cost_usd: f64,
+    pub bottleneck: bool,
+}
+
+/// Result of a catalog-wide search.
+#[derive(Debug, Clone)]
+pub struct CatalogSearch {
+    /// The winning configuration: cheapest across the per-type §IV-B
+    /// picks. Under a deadline each type contributes its *smallest*
+    /// admissible scale-out (the paper's guard against over-trusting
+    /// predicted speedups), so a larger-but-predicted-cheaper admissible
+    /// scale-out of the same type is deliberately not chosen — it is
+    /// still visible as `frontier[0]`, which is always the globally
+    /// cheapest admissible grid point. `options` are the winning machine
+    /// type's evaluated grid — the same data a single-type `configure`
+    /// returns.
+    pub choice: ConfigChoice,
+    /// Every viable grid point (admissible when a deadline is set) across
+    /// all evaluated types, ranked by cost — the §IV-B runtime/cost view
+    /// over the whole catalog. Bottlenecked points are flagged, not
+    /// hidden.
+    pub frontier: Vec<FrontierEntry>,
+    /// Per-machine-type outcome, in catalog order: evaluated,
+    /// `insufficient_data`, or failed.
+    pub types: Vec<TypeReport>,
+}
+
+/// Evaluate the full (machine type × scale-out) grid and pick the
+/// cheapest admissible per-type configuration.
+///
+/// Per type, the pick is exactly [`super::select_scale_out`]'s (smallest
+/// admissible scale-out under a deadline; cheapest non-bottlenecked
+/// otherwise). Across types the winner is the documented reduction an
+/// exhaustive per-type loop would apply: prefer non-bottlenecked picks,
+/// then minimum cost (`total_cmp`), ties to the lexicographically
+/// smaller machine-type name. See [`CatalogSearch::choice`] for why,
+/// under a deadline, this can differ from the globally cheapest
+/// admissible grid point (exposed as `frontier[0]`).
+pub fn search_catalog<S: GridSource>(
+    catalog: &Catalog,
+    source: &mut S,
+    input: &JobInput,
+    goals: &UserGoals,
+) -> crate::Result<CatalogSearch> {
+    anyhow::ensure!(
+        goals.confidence > 0.0 && goals.confidence < 1.0,
+        "confidence must be in (0,1)"
+    );
+    anyhow::ensure!(!catalog.types().is_empty(), "catalog has no machine types to search");
+    anyhow::ensure!(!catalog.scale_outs.is_empty(), "catalog offers no scale-outs");
+
+    let rows = grid_rows(catalog, input);
+    let mut types = Vec::with_capacity(catalog.types().len());
+    for mt in catalog.types() {
+        let runs = source.runs(&mt.name);
+        let outcome = if runs < MIN_RUNS_PER_TYPE {
+            TypeOutcome::InsufficientData { required: MIN_RUNS_PER_TYPE }
+        } else {
+            match source.predict_grid(&mt.name, &rows) {
+                Err(e) => TypeOutcome::Failed { error: format!("{e:#}") },
+                Ok(gp) if gp.runtimes.len() != rows.len() => TypeOutcome::Failed {
+                    error: format!(
+                        "grid prediction arity mismatch: {} runtimes for {} scale-outs",
+                        gp.runtimes.len(),
+                        rows.len()
+                    ),
+                },
+                Ok(gp) => {
+                    let options = build_options(
+                        catalog,
+                        mt,
+                        &gp.runtimes,
+                        input,
+                        goals,
+                        gp.resid_mu,
+                        gp.resid_sigma,
+                    );
+                    let pick = pick_option(&options, goals).map(|o| o.scale_out);
+                    TypeOutcome::Evaluated { model: gp.model, options, pick }
+                }
+            }
+        };
+        types.push(TypeReport { machine_type: mt.name.clone(), runs, outcome });
+    }
+
+    let (winner_type, winner_opt) = reduce(&types)
+        .ok_or_else(|| no_search_winner_error(catalog, &types, input, goals))?;
+    let options = match &winner_type.outcome {
+        TypeOutcome::Evaluated { options, .. } => options.clone(),
+        _ => unreachable!("winner comes from an evaluated type"),
+    };
+    let choice = ConfigChoice {
+        machine_type: winner_type.machine_type.clone(),
+        scale_out: winner_opt.scale_out,
+        predicted_runtime_s: winner_opt.predicted_runtime_s,
+        runtime_ucb_s: winner_opt.runtime_ucb_s,
+        est_cost_usd: winner_opt.cost_usd,
+        options,
+    };
+    let frontier = frontier(&types, goals);
+    Ok(CatalogSearch { choice, frontier, types })
+}
+
+/// The cross-type reduction: among per-type picks, prefer
+/// non-bottlenecked, then minimum cost, ties to the lexicographically
+/// smaller name. Shared semantics with the parity tests' exhaustive loop.
+fn reduce(types: &[TypeReport]) -> Option<(&TypeReport, &ScaleOutOption)> {
+    let mut winner: Option<(&TypeReport, &ScaleOutOption)> = None;
+    for tr in types {
+        let TypeOutcome::Evaluated { options, pick: Some(s), .. } = &tr.outcome else {
+            continue;
+        };
+        let Some(o) = options.iter().find(|o| o.scale_out == *s) else {
+            continue;
+        };
+        let better = match winner {
+            None => true,
+            Some((wt, wo)) => match (o.bottleneck, wo.bottleneck) {
+                (false, true) => true,
+                (true, false) => false,
+                _ => match o.cost_usd.total_cmp(&wo.cost_usd) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => tr.machine_type < wt.machine_type,
+                },
+            },
+        };
+        if better {
+            winner = Some((tr, o));
+        }
+    }
+    winner
+}
+
+/// The cost-ranked §IV-B view across every evaluated type: viable grid
+/// points, admissible ones only when a deadline is set.
+fn frontier(types: &[TypeReport], goals: &UserGoals) -> Vec<FrontierEntry> {
+    let mut out = Vec::new();
+    for tr in types {
+        let TypeOutcome::Evaluated { options, .. } = &tr.outcome else {
+            continue;
+        };
+        for o in options {
+            if !viable(o) || (goals.deadline_s.is_some() && o.admissible != Some(true)) {
+                continue;
+            }
+            out.push(FrontierEntry {
+                machine_type: tr.machine_type.clone(),
+                scale_out: o.scale_out,
+                predicted_runtime_s: o.predicted_runtime_s,
+                runtime_ucb_s: o.runtime_ucb_s,
+                cost_usd: o.cost_usd,
+                bottleneck: o.bottleneck,
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        a.cost_usd
+            .total_cmp(&b.cost_usd)
+            .then_with(|| a.machine_type.cmp(&b.machine_type))
+            .then_with(|| a.scale_out.cmp(&b.scale_out))
+    });
+    out
+}
+
+/// Structured whole-search failure: says *why* per machine type, so a
+/// deadline-impossible grid and a data-starved repository read
+/// differently on the wire.
+fn no_search_winner_error(
+    catalog: &Catalog,
+    types: &[TypeReport],
+    input: &JobInput,
+    goals: &UserGoals,
+) -> anyhow::Error {
+    let mut evaluated = 0usize;
+    let mut insufficient = 0usize;
+    let mut failed = 0usize;
+    for tr in types {
+        match tr.outcome {
+            TypeOutcome::Evaluated { .. } => evaluated += 1,
+            TypeOutcome::InsufficientData { .. } => insufficient += 1,
+            TypeOutcome::Failed { .. } => failed += 1,
+        }
+    }
+    if evaluated == 0 {
+        return anyhow::Error::new(NoTypesEvaluated).context(format!(
+            "no machine type could be evaluated for {}: {insufficient} below the \
+             {MIN_RUNS_PER_TYPE}-run data floor, {failed} failed to fit",
+            input.job
+        ));
+    }
+    // Some types were evaluated, so the first no-pick reason explains the
+    // grid-wide failure (degenerate predictions or an impossible deadline).
+    for tr in types {
+        if let TypeOutcome::Evaluated { options, pick: None, .. } = &tr.outcome {
+            return no_pick_error(options, &tr.machine_type, catalog, goals)
+                .context(format!("{} evaluated type(s), none admissible", evaluated));
+        }
+    }
+    anyhow::anyhow!("no admissible configuration across {} evaluated type(s)", evaluated)
+}
+
+/// Local-mode [`GridSource`]: fits one predictor per machine type from a
+/// shared columnar view, each fit on the given engine (`--fit-threads` /
+/// `--fit-budget` apply per fit).
+pub struct FitGridSource<'a> {
+    view: &'a FeatureMatrix,
+    backend: Arc<dyn FitBackend>,
+    engine: FitEngine,
+}
+
+impl<'a> FitGridSource<'a> {
+    pub fn new(view: &'a FeatureMatrix, backend: Arc<dyn FitBackend>, engine: FitEngine) -> Self {
+        FitGridSource { view, backend, engine }
+    }
+}
+
+impl GridSource for FitGridSource<'_> {
+    fn runs(&self, machine_type: &str) -> usize {
+        self.view.rows(machine_type)
+    }
+
+    fn predict_grid(
+        &mut self,
+        machine_type: &str,
+        rows: &[Vec<f64>],
+    ) -> crate::Result<GridPrediction> {
+        let (predictor, report) =
+            fit_prepared_with(self.view, machine_type, self.backend.clone(), &self.engine)?;
+        let runtimes = rows
+            .iter()
+            .map(|row| predictor.predict_one(row))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        Ok(GridPrediction {
+            model: report.chosen,
+            resid_mu: report.chosen_score.resid_mean,
+            resid_sigma: report.chosen_score.resid_std,
+            runtimes,
+        })
+    }
+}
+
+/// End-to-end local catalog search: build the columnar view once, fit
+/// each sufficiently-covered machine type, pick the cost-optimal
+/// admissible configuration (`c3o configure --search-catalog`).
+pub fn configure_search(
+    catalog: &Catalog,
+    shared: &Dataset,
+    input: &JobInput,
+    goals: &UserGoals,
+    backend: Arc<dyn FitBackend>,
+    engine: &FitEngine,
+) -> crate::Result<CatalogSearch> {
+    let view = shared.feature_view();
+    let mut source = FitGridSource::new(&view, backend, engine.clone());
+    search_catalog(catalog, &mut source, input, goals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configurator::select_scale_out;
+    use crate::data::JobKind;
+    use crate::runtime::NativeBackend;
+    use crate::sim::{generate_job, GeneratorConfig};
+
+    fn backend() -> Arc<dyn FitBackend> {
+        Arc::new(NativeBackend::new())
+    }
+
+    fn try_search(
+        catalog: &Catalog,
+        shared: &Dataset,
+        input: &JobInput,
+        goals: &UserGoals,
+    ) -> crate::Result<CatalogSearch> {
+        configure_search(catalog, shared, input, goals, backend(), &FitEngine::serial())
+    }
+
+    /// The reduction the parity tests apply over an exhaustive
+    /// per-type `select_scale_out` loop — written independently of
+    /// `reduce` on purpose.
+    fn exhaustive_loop(
+        catalog: &Catalog,
+        shared: &Dataset,
+        input: &JobInput,
+        goals: &UserGoals,
+    ) -> Option<ConfigChoice> {
+        let view = shared.feature_view();
+        let mut best: Option<ConfigChoice> = None;
+        for mt in catalog.types() {
+            if view.rows(&mt.name) < MIN_RUNS_PER_TYPE {
+                continue;
+            }
+            let (predictor, report) =
+                fit_prepared_with(&view, &mt.name, backend(), &FitEngine::serial()).unwrap();
+            let Ok(choice) = select_scale_out(
+                catalog,
+                &mt.name,
+                &predictor,
+                input,
+                goals,
+                report.chosen_score.resid_mean,
+                report.chosen_score.resid_std,
+            ) else {
+                continue;
+            };
+            let chosen_bottleneck = choice
+                .options
+                .iter()
+                .find(|o| o.scale_out == choice.scale_out)
+                .unwrap()
+                .bottleneck;
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    let b_bottleneck = b
+                        .options
+                        .iter()
+                        .find(|o| o.scale_out == b.scale_out)
+                        .unwrap()
+                        .bottleneck;
+                    match (chosen_bottleneck, b_bottleneck) {
+                        (false, true) => true,
+                        (true, false) => false,
+                        _ => match choice.est_cost_usd.total_cmp(&b.est_cost_usd) {
+                            std::cmp::Ordering::Less => true,
+                            std::cmp::Ordering::Greater => false,
+                            std::cmp::Ordering::Equal => choice.machine_type < b.machine_type,
+                        },
+                    }
+                }
+            };
+            if better {
+                best = Some(choice);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn grid_search_matches_exhaustive_per_type_loop_bit_identically() {
+        let catalog = Catalog::aws_like();
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        for goals in [
+            UserGoals { deadline_s: Some(900.0), confidence: 0.95 },
+            UserGoals { deadline_s: None, confidence: 0.95 },
+        ] {
+            let search = try_search(&catalog, &shared, &input, &goals).unwrap();
+            let exhaustive = exhaustive_loop(&catalog, &shared, &input, &goals).unwrap();
+            assert_eq!(search.choice.machine_type, exhaustive.machine_type);
+            assert_eq!(search.choice.scale_out, exhaustive.scale_out);
+            assert_eq!(
+                search.choice.predicted_runtime_s.to_bits(),
+                exhaustive.predicted_runtime_s.to_bits()
+            );
+            assert_eq!(search.choice.runtime_ucb_s.to_bits(), exhaustive.runtime_ucb_s.to_bits());
+            assert_eq!(search.choice.est_cost_usd.to_bits(), exhaustive.est_cost_usd.to_bits());
+            for (a, b) in search.choice.options.iter().zip(&exhaustive.options) {
+                assert_eq!(a.scale_out, b.scale_out);
+                assert_eq!(a.predicted_runtime_s.to_bits(), b.predicted_runtime_s.to_bits());
+                assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits());
+                assert_eq!(a.bottleneck, b.bottleneck);
+                assert_eq!(a.admissible, b.admissible);
+            }
+        }
+    }
+
+    #[test]
+    fn insufficient_types_reported_not_skipped() {
+        let catalog = Catalog::aws_like();
+        // The default corpus only covers m5.xlarge and c5.xlarge.
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let search = try_search(&catalog, &shared, &input, &goals).unwrap();
+        assert_eq!(search.types.len(), catalog.types().len(), "every type is reported");
+        let mut evaluated = 0;
+        let mut insufficient = 0;
+        for tr in &search.types {
+            match &tr.outcome {
+                TypeOutcome::Evaluated { options, .. } => {
+                    evaluated += 1;
+                    assert_eq!(options.len(), catalog.scale_outs.len());
+                }
+                TypeOutcome::InsufficientData { required } => {
+                    insufficient += 1;
+                    assert_eq!(*required, MIN_RUNS_PER_TYPE);
+                    assert!(tr.runs < MIN_RUNS_PER_TYPE);
+                }
+                TypeOutcome::Failed { error } => panic!("{}: {error}", tr.machine_type),
+            }
+        }
+        assert_eq!(evaluated, 2);
+        assert_eq!(insufficient, catalog.types().len() - 2);
+    }
+
+    #[test]
+    fn frontier_is_cost_ranked_and_admissible() {
+        let catalog = Catalog::aws_like();
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let search = try_search(&catalog, &shared, &input, &goals).unwrap();
+        assert!(!search.frontier.is_empty());
+        for w in search.frontier.windows(2) {
+            assert!(w[0].cost_usd <= w[1].cost_usd, "frontier must be cost-ranked");
+        }
+        for f in &search.frontier {
+            assert!(f.predicted_runtime_s > 0.0 && f.runtime_ucb_s <= 900.0);
+        }
+        // The winner is itself a frontier point, so it can never beat the
+        // frontier's cheapest entry.
+        assert!(search.choice.est_cost_usd >= search.frontier[0].cost_usd - 1e-12);
+    }
+
+    #[test]
+    fn empty_catalog_and_empty_data_are_structured_errors() {
+        let catalog = Catalog::aws_like();
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals::default();
+
+        let empty = Catalog::custom(vec![], 0.0, vec![]);
+        let err = try_search(&empty, &shared, &input, &goals).unwrap_err();
+        assert!(err.to_string().contains("no machine types"), "{err:#}");
+
+        let no_data = Dataset::new(JobKind::Sort);
+        let err = try_search(&catalog, &no_data, &input, &goals).unwrap_err();
+        assert!(err.to_string().contains("data floor"), "{err:#}");
+        assert!(
+            err.downcast_ref::<NoTypesEvaluated>().is_some(),
+            "zero-types-evaluated must be detectable for error-code mapping"
+        );
+    }
+
+    #[test]
+    fn impossible_deadline_is_structured_error() {
+        let catalog = Catalog::aws_like();
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(1.0), confidence: 0.95 };
+        let err = try_search(&catalog, &shared, &input, &goals).unwrap_err();
+        assert!(err.to_string().contains("none admissible"), "{err:#}");
+    }
+
+    #[test]
+    fn failed_type_does_not_abort_the_grid() {
+        struct HalfBroken<'a> {
+            inner: FitGridSource<'a>,
+        }
+        impl GridSource for HalfBroken<'_> {
+            fn runs(&self, machine_type: &str) -> usize {
+                self.inner.runs(machine_type)
+            }
+            fn predict_grid(
+                &mut self,
+                machine_type: &str,
+                rows: &[Vec<f64>],
+            ) -> crate::Result<GridPrediction> {
+                anyhow::ensure!(machine_type != "c5.xlarge", "injected c5 failure");
+                self.inner.predict_grid(machine_type, rows)
+            }
+        }
+        let catalog = Catalog::aws_like();
+        let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+        let view = shared.feature_view();
+        let mut source =
+            HalfBroken { inner: FitGridSource::new(&view, backend(), FitEngine::serial()) };
+        let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+        let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+        let search = search_catalog(&catalog, &mut source, &input, &goals).unwrap();
+        assert_eq!(search.choice.machine_type, "m5.xlarge");
+        let c5 = search.types.iter().find(|t| t.machine_type == "c5.xlarge").unwrap();
+        match &c5.outcome {
+            TypeOutcome::Failed { error } => assert!(error.contains("injected"), "{error}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+}

@@ -14,7 +14,7 @@ use crate::api::proto::{
     self, BatchPrediction, CatalogPayload, HubStats, Op, Prediction, Request, Response,
     SubmitOutcome,
 };
-use crate::configurator::{ConfigChoice, UserGoals};
+use crate::configurator::{CatalogSearch, ConfigChoice, UserGoals};
 use crate::data::{Dataset, JobKind};
 use crate::util::json::Json;
 use crate::util::tsv::Table;
@@ -185,6 +185,28 @@ impl HubClient {
             machine_type: machine_type.map(|s| s.to_string()),
         })?;
         proto::config_choice_from_json(&payload)
+    }
+
+    /// Catalog-wide configuration search on the hub: every machine type's
+    /// scale-out grid, answered from the hub's fitted-model cache, with
+    /// the cost-optimal admissible configuration, the ranked runtime/cost
+    /// frontier, and per-type outcomes (`insufficient_data` types are
+    /// reported, not silently skipped).
+    pub fn configure_search(
+        &mut self,
+        job: JobKind,
+        data_size_gb: f64,
+        context: Vec<f64>,
+        goals: &UserGoals,
+    ) -> crate::Result<CatalogSearch> {
+        let payload = self.call(Op::ConfigureSearch {
+            job,
+            data_size_gb,
+            context,
+            deadline_s: goals.deadline_s,
+            confidence: goals.confidence,
+        })?;
+        proto::catalog_search_from_json(&payload)
     }
 
     /// Ask the server to stop accepting connections.

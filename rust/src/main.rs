@@ -20,7 +20,12 @@
 //!                fits locally from --data (same --fit-threads /
 //!                --fit-budget / --fit-points knobs), or delegates to a
 //!                hub with --hub ADDR (no local fit, served from the
-//!                hub's cache)
+//!                hub's cache). With --search-catalog the whole
+//!                (machine type × scale-out) grid is searched — one
+//!                fitted model per sufficiently-covered type — and the
+//!                cost-optimal admissible configuration is returned with
+//!                the ranked runtime/cost frontier (types below the data
+//!                floor are reported as insufficient data)
 //!
 //! Examples:
 //!   c3o generate --out data/
@@ -32,6 +37,8 @@
 //!       --deadline 900 --confidence 0.95 --data data/
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
 //!       --deadline 900 --hub 127.0.0.1:7033
+//!   c3o configure --job sort --size 15 --deadline 900 \
+//!       --search-catalog --data data/
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -41,7 +48,9 @@ use anyhow::Context as _;
 
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
-use c3o::configurator::{configure_with, ConfigChoice, UserGoals};
+use c3o::configurator::{
+    configure_search, configure_with, CatalogSearch, ConfigChoice, TypeOutcome, UserGoals,
+};
 use c3o::cv::parallel::FitEngine;
 use c3o::data::{Dataset, JobKind};
 use c3o::eval::{self, Fig5Config, Table2Config};
@@ -282,7 +291,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     }
     println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
-         predict | predict_batch | configure | shutdown"
+         predict | predict_batch | configure | configure_search | shutdown"
     );
     // Serve until stdin closes (or forever under a service manager).
     let mut buf = String::new();
@@ -312,6 +321,28 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         confidence: flags.get("confidence").map(|s| s.parse()).transpose()?.unwrap_or(0.95),
     };
 
+    // Catalog-wide mode: search the full (machine type × scale-out) grid
+    // instead of pinning one §IV-A type (--machine is ignored here).
+    if flags.contains_key("search-catalog") {
+        let search = match flags.get("hub") {
+            Some(addr) => {
+                // The hub evaluates the grid from its fitted-model cache;
+                // a warm hub answers the whole catalog with zero refits.
+                let mut client = HubClient::connect(addr)?;
+                client.configure_search(job, size, ctx, &goals)?
+            }
+            None => {
+                let catalog = Catalog::aws_like();
+                let shared = load_shared(flags, job, &catalog)?;
+                let backend = backend(flags);
+                let input = JobInput::new(job, size, ctx);
+                configure_search(&catalog, &shared, &input, &goals, backend, &fit_engine(flags)?)?
+            }
+        };
+        print_search(job, size, &search);
+        return Ok(());
+    }
+
     let choice = match flags.get("hub") {
         Some(addr) => {
             // Hub mode: the server answers from its fitted-model cache —
@@ -327,15 +358,7 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         }
         None => {
             let catalog = Catalog::aws_like();
-            let shared = match flags.get("data") {
-                Some(dir) => {
-                    Dataset::load(job, &PathBuf::from(dir).join(format!("{job}.tsv")))?
-                }
-                None => {
-                    eprintln!("[c3o] no --data dir; generating the shared corpus in-memory");
-                    c3o::sim::generate_job(job, &GeneratorConfig::default(), &catalog)?
-                }
-            };
+            let shared = load_shared(flags, job, &catalog)?;
             let backend = backend(flags);
             let input = JobInput::new(job, size, ctx);
             configure_with(
@@ -351,6 +374,64 @@ fn cmd_configure(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     };
     print_choice(job, size, &choice);
     Ok(())
+}
+
+/// The job's shared runtime dataset: `--data DIR/<job>.tsv`, or the
+/// in-memory generated corpus when no directory is given.
+fn load_shared(
+    flags: &BTreeMap<String, String>,
+    job: JobKind,
+    catalog: &Catalog,
+) -> anyhow::Result<Dataset> {
+    match flags.get("data") {
+        Some(dir) => Dataset::load(job, &PathBuf::from(dir).join(format!("{job}.tsv"))),
+        None => {
+            eprintln!("[c3o] no --data dir; generating the shared corpus in-memory");
+            c3o::sim::generate_job(job, &GeneratorConfig::default(), catalog)
+        }
+    }
+}
+
+fn print_search(job: JobKind, size: f64, search: &CatalogSearch) {
+    print_choice(job, size, &search.choice);
+    println!("\n  per machine type (catalog-wide §IV grid):");
+    for t in &search.types {
+        match &t.outcome {
+            TypeOutcome::Evaluated { model, options, pick } => match pick {
+                Some(s) => {
+                    let cost = options
+                        .iter()
+                        .find(|o| o.scale_out == *s)
+                        .map_or(f64::NAN, |o| o.cost_usd);
+                    println!(
+                        "    {:<12} {model:<6} pick s={s:<3} cost ${cost:.3}",
+                        t.machine_type
+                    );
+                }
+                None => println!("    {:<12} no admissible scale-out", t.machine_type),
+            },
+            TypeOutcome::InsufficientData { required } => println!(
+                "    {:<12} insufficient data ({} run(s), need {required})",
+                t.machine_type, t.runs
+            ),
+            TypeOutcome::Failed { error } => {
+                println!("    {:<12} failed: {error}", t.machine_type)
+            }
+        }
+    }
+    println!("\n  cost-ranked frontier (top 10 of {}):", search.frontier.len());
+    for (i, f) in search.frontier.iter().take(10).enumerate() {
+        println!(
+            "    {:>2}. {:<12} s={:<3} t={:>7.0}s ucb={:>7.0}s cost=${:<8.3}{}",
+            i + 1,
+            f.machine_type,
+            f.scale_out,
+            f.predicted_runtime_s,
+            f.runtime_ucb_s,
+            f.cost_usd,
+            if f.bottleneck { "  [memory bottleneck]" } else { "" },
+        );
+    }
 }
 
 fn print_choice(job: JobKind, size: f64, choice: &ConfigChoice) {

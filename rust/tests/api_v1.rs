@@ -8,7 +8,11 @@ use std::sync::Arc;
 
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
-use c3o::configurator::{configure, UserGoals};
+use c3o::configurator::{
+    configure, fit_prepared_with, select_scale_out, ConfigChoice, MIN_RUNS_PER_TYPE, TypeOutcome,
+    UserGoals,
+};
+use c3o::cv::FitEngine;
 use c3o::data::JobKind;
 use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
 use c3o::runtime::NativeBackend;
@@ -242,6 +246,150 @@ fn hub_configure_matches_local_configure() {
         assert_eq!(r.bottleneck, l.bottleneck);
         assert_eq!(r.admissible, l.admissible);
     }
+    server.shutdown();
+}
+
+/// The documented cross-type reduction over an exhaustive per-type
+/// `select_scale_out` loop — the independent reference the grid search
+/// must match bit-for-bit.
+fn exhaustive_search(
+    catalog: &Catalog,
+    shared: &c3o::data::Dataset,
+    input: &JobInput,
+    goals: &UserGoals,
+) -> ConfigChoice {
+    let view = shared.feature_view();
+    let mut best: Option<ConfigChoice> = None;
+    for mt in catalog.types() {
+        if view.rows(&mt.name) < MIN_RUNS_PER_TYPE {
+            continue;
+        }
+        let (predictor, report) = fit_prepared_with(
+            &view,
+            &mt.name,
+            Arc::new(NativeBackend::new()),
+            &FitEngine::serial(),
+        )
+        .unwrap();
+        let Ok(choice) = select_scale_out(
+            catalog,
+            &mt.name,
+            &predictor,
+            input,
+            goals,
+            report.chosen_score.resid_mean,
+            report.chosen_score.resid_std,
+        ) else {
+            continue;
+        };
+        let bottleneck = |c: &ConfigChoice| {
+            c.options.iter().find(|o| o.scale_out == c.scale_out).unwrap().bottleneck
+        };
+        let better = match &best {
+            None => true,
+            Some(b) => match (bottleneck(&choice), bottleneck(b)) {
+                (false, true) => true,
+                (true, false) => false,
+                _ => match choice.est_cost_usd.total_cmp(&b.est_cost_usd) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => choice.machine_type < b.machine_type,
+                },
+            },
+        };
+        if better {
+            best = Some(choice);
+        }
+    }
+    best.expect("at least one admissible type")
+}
+
+#[test]
+fn configure_search_over_hub_matches_exhaustive_loop_with_zero_warm_refits() {
+    let server = start_hub();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+    let catalog = Catalog::aws_like();
+    let shared = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+    let input = JobInput::new(JobKind::Sort, 15.0, vec![]);
+
+    let remote = client.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+    let local = exhaustive_search(&catalog, &shared, &input, &goals);
+
+    // Bit-identical winner, grid search vs exhaustive per-type loop.
+    assert_eq!(remote.choice.machine_type, local.machine_type);
+    assert_eq!(remote.choice.scale_out, local.scale_out);
+    assert_eq!(remote.choice.predicted_runtime_s.to_bits(), local.predicted_runtime_s.to_bits());
+    assert_eq!(remote.choice.runtime_ucb_s.to_bits(), local.runtime_ucb_s.to_bits());
+    assert_eq!(remote.choice.est_cost_usd.to_bits(), local.est_cost_usd.to_bits());
+
+    // Every catalog type is accounted for: 2 evaluated (the corpus covers
+    // m5.xlarge and c5.xlarge), the rest reported insufficient_data.
+    assert_eq!(remote.types.len(), catalog.types().len());
+    let evaluated = remote
+        .types
+        .iter()
+        .filter(|t| matches!(t.outcome, TypeOutcome::Evaluated { .. }))
+        .count();
+    let insufficient = remote
+        .types
+        .iter()
+        .filter(|t| matches!(t.outcome, TypeOutcome::InsufficientData { .. }))
+        .count();
+    assert_eq!(evaluated, 2);
+    assert_eq!(insufficient, catalog.types().len() - 2);
+
+    // Frontier: cost-ranked, admissible under the deadline.
+    assert!(!remote.frontier.is_empty());
+    for w in remote.frontier.windows(2) {
+        assert!(w[0].cost_usd <= w[1].cost_usd);
+    }
+    for f in &remote.frontier {
+        assert!(f.runtime_ucb_s <= 900.0);
+    }
+
+    // The first grid search paid one cold fit per evaluated type; a warm
+    // repeat answers the whole catalog with ZERO refits (the service's
+    // fit counters are authoritative).
+    let s = client.stats().unwrap();
+    assert_eq!(s.fits as usize, evaluated, "one cold fit per evaluated type");
+    let again = client.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+    assert_eq!(again.choice.machine_type, remote.choice.machine_type);
+    assert_eq!(again.choice.scale_out, remote.choice.scale_out);
+    let s2 = client.stats().unwrap();
+    assert_eq!(s2.fits, s.fits, "warm full-grid search must perform zero refits");
+    assert!(s2.cache_hits >= s.cache_hits + evaluated as u64);
+    server.shutdown();
+}
+
+#[test]
+fn configure_search_error_paths_are_structured() {
+    let server = start_hub();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+
+    // Unknown repository -> not_found.
+    let err = client
+        .configure_search(JobKind::PageRank, 0.25, vec![0.1, 0.001], &UserGoals::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("not_found"), "{err:#}");
+
+    // Deadline-impossible grid -> invalid_data, connection survives.
+    let goals = UserGoals { deadline_s: Some(1.0), confidence: 0.95 };
+    let err = client.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap_err();
+    assert!(err.to_string().contains("invalid_data"), "{err:#}");
+    assert!(err.to_string().contains("none admissible"), "{err:#}");
+
+    // Out-of-range confidence -> invalid_data (over the raw frame, since
+    // the typed client cannot send one).
+    let replies = roundtrip_raw(
+        &server.addr.to_string(),
+        &[r#"{"v":1,"id":1,"op":"configure_search","job":"sort","data_size_gb":1,"confidence":9}"#],
+    );
+    assert!(replies[0].contains("\"ok\":false"), "{}", replies[0]);
+    assert!(replies[0].contains("invalid_data"), "{}", replies[0]);
+
+    // And the hub still serves after all of the above.
+    client.stats().unwrap();
     server.shutdown();
 }
 

@@ -319,6 +319,47 @@ fn stress_mixed_predicts_and_submits_across_jobs() {
 }
 
 #[test]
+fn catalog_search_over_live_hub() {
+    use c3o::configurator::{TypeOutcome, UserGoals};
+    let server = start_hub_with_data();
+    let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
+    let goals = UserGoals { deadline_s: Some(900.0), confidence: 0.95 };
+
+    let search = client.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+    // The winner is a real admissible configuration...
+    assert!(search.choice.runtime_ucb_s <= 900.0);
+    assert!(search.choice.est_cost_usd > 0.0);
+    // ...every catalog type is reported (evaluated or insufficient_data),
+    // and the frontier is cost-ranked.
+    assert_eq!(search.types.len(), client.catalog().unwrap().types.len());
+    let insufficient = search
+        .types
+        .iter()
+        .any(|t| matches!(t.outcome, TypeOutcome::InsufficientData { .. }));
+    assert!(insufficient, "types below the data floor must be reported");
+    for w in search.frontier.windows(2) {
+        assert!(w[0].cost_usd <= w[1].cost_usd);
+    }
+
+    // A contribution to the job invalidates the grid's models: the next
+    // search refits, revision-correctly, instead of serving stale models.
+    let fits_before = client.stats().unwrap().fits;
+    let verdict = client.submit_runs(&honest_runs(JobKind::Sort, 8, 99)).unwrap();
+    assert!(verdict.accepted, "{}", verdict.reason);
+    let after = client.configure_search(JobKind::Sort, 15.0, vec![], &goals).unwrap();
+    assert!(client.stats().unwrap().fits > fits_before, "stale grid must refit");
+    assert!(after.choice.runtime_ucb_s <= 900.0);
+
+    // The empty bootstrap repo (kmeans) is a typed `unavailable`, not a
+    // hang or a dropped connection.
+    let e = client.configure_search(JobKind::KMeans, 15.0, vec![5.0, 0.001], &goals).unwrap_err();
+    assert!(e.to_string().contains("unavailable"), "{e:#}");
+    // The connection survives the error.
+    client.stats().unwrap();
+    server.shutdown();
+}
+
+#[test]
 fn get_missing_repo_is_clean_error() {
     let server = start_hub_with_data();
     let mut client = HubClient::connect(&server.addr.to_string()).unwrap();
