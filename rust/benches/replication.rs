@@ -1,0 +1,184 @@
+//! E13 — hub replication: follower catch-up throughput and read scaling.
+//!
+//! Two measurements over real TCP (DESIGN.md §11):
+//!
+//!   * catch-up — a leader holds N WAL revisions; a fresh follower tails
+//!     the whole log through `repl_fetch` + the validation-free apply
+//!     path. Reported as WAL records/s and data rows/s.
+//!   * read scaling — warm `predict_batch` served by 1 leader alone vs
+//!     the same client load spread over 1 leader + 2 converged followers.
+//!     The fitted-model cache is revision-keyed, so every hub answers
+//!     from its own warm cache and read capacity should scale with hubs.
+//!
+//! Results merge into `BENCH_replication.json` (section `replication`).
+//! `C3O_BENCH_SMOKE=1` shrinks sizes for CI.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use c3o::api::service::PredictionService;
+use c3o::cloud::Catalog;
+use c3o::data::{Dataset, JobKind, RunRecord};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::replication::sync_once;
+use c3o::storage::{DurableStore, FsyncPolicy, StorageConfig};
+use c3o::util::json::Json;
+
+const RECORDS_PER_SUBMIT: usize = 4;
+
+/// Unique records per submission (bootstrap regime: the gate never arms,
+/// so the measured cost is replication, not GBM fits).
+fn contribution(i: usize) -> Dataset {
+    let mut ds = Dataset::new(JobKind::Sort);
+    for k in 0..RECORDS_PER_SUBMIT {
+        let n = (i * RECORDS_PER_SUBMIT + k) as f64;
+        ds.push(RunRecord {
+            machine_type: "m5.xlarge".into(),
+            scale_out: 2 + ((i * RECORDS_PER_SUBMIT + k) % 11) as u32,
+            data_size_gb: 10.0 + n * 1e-3,
+            context: vec![],
+            runtime_s: 100.0 + n * 1e-3,
+        })
+        .expect("valid record");
+    }
+    ds
+}
+
+fn policy() -> ValidationPolicy {
+    ValidationPolicy { min_existing: usize::MAX, ..Default::default() }
+}
+
+fn bench_state() -> Arc<HubState> {
+    let state = Arc::new(HubState::new());
+    let mut repo = Repository::new(JobKind::Sort, "replication bench repo");
+    repo.maintainer_machine = Some("m5.xlarge".to_string());
+    state.insert(repo);
+    state
+}
+
+fn service_on(state: Arc<HubState>) -> Arc<PredictionService> {
+    Arc::new(PredictionService::new(state, Catalog::aws_like(), policy(), common::backend()))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("c3o_bench_replication_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// An in-memory follower converged with `leader` by tailing its full log.
+fn converged_follower(leader: &str) -> Arc<PredictionService> {
+    let service = service_on(bench_state());
+    service.set_follower_of(leader);
+    let mut client = HubClient::connect(leader).expect("connect follower");
+    sync_once(&service, &mut client, 256).expect("follower sync");
+    service
+}
+
+/// `reqs` warm predict_batch calls per thread, spread round-robin over
+/// `targets`; returns aggregate requests/s.
+fn read_load(targets: &[String], threads: usize, reqs: usize) -> f64 {
+    let rows: Vec<Vec<f64>> = (2..=12).map(|s| vec![s as f64, 15.0]).collect();
+    // Warm every hub's fitted-model cache outside the timed window.
+    for addr in targets {
+        let mut c = HubClient::connect(addr).expect("warm connect");
+        c.predict_batch(JobKind::Sort, None, &rows).expect("warm predict");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let rows = &rows;
+            scope.spawn(move || {
+                let mut clients: Vec<HubClient> = targets
+                    .iter()
+                    .map(|a| HubClient::connect(a).expect("connect"))
+                    .collect();
+                for i in 0..reqs {
+                    // Offset by thread id so threads do not march in
+                    // lockstep over the same hub.
+                    let c = &mut clients[(i + t) % targets.len()];
+                    c.predict_batch(JobKind::Sort, None, rows).expect("predict");
+                }
+            });
+        }
+    });
+    (threads * reqs) as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let submits = if smoke { 16 } else { 200 };
+    let threads = if smoke { 2 } else { 8 };
+    let reqs = if smoke { 10 } else { 200 };
+    println!("== E13: hub replication — catch-up throughput and read scaling ==");
+    println!("   ({submits} leader revisions x {RECORDS_PER_SUBMIT} records)\n");
+
+    // Leader: durable store (the WAL is the replication log), real TCP.
+    let dir = fresh_dir("leader");
+    let state = bench_state();
+    let (store, recovered) =
+        DurableStore::open(&dir, StorageConfig { fsync: FsyncPolicy::Never, snapshot_every: 0 })
+            .expect("open store");
+    assert!(recovered.is_empty());
+    state.set_storage(Arc::new(store)).expect("attach store");
+    for i in 0..submits {
+        let (verdict, _) = state.submit(contribution(i), &policy()).expect("submit");
+        assert!(verdict.accepted, "{}", verdict.reason);
+    }
+    let leader = HubServer::start("127.0.0.1:0", service_on(state)).expect("start leader");
+    let leader_addr = leader.addr.to_string();
+
+    // Catch-up: a fresh follower tails the whole log over TCP.
+    let follower = service_on(bench_state());
+    follower.set_follower_of(leader_addr.as_str());
+    let mut client = HubClient::connect(&leader_addr).expect("connect");
+    let t0 = Instant::now();
+    let applied = sync_once(&follower, &mut client, 256).expect("catch-up sync");
+    let catch_up_s = t0.elapsed().as_secs_f64().max(1e-12);
+    assert_eq!(applied, submits as u64, "full log applied");
+    assert_eq!(follower.state().revision(JobKind::Sort), Some(submits as u64));
+    let records_per_s = submits as f64 / catch_up_s;
+    let rows_per_s = (submits * RECORDS_PER_SUBMIT) as f64 / catch_up_s;
+    println!("  catch-up: {submits} revisions in {catch_up_s:.3}s");
+    println!("            {records_per_s:>10.0} WAL records/s  {rows_per_s:>10.0} rows/s");
+
+    // Read scaling: leader alone vs leader + 2 converged followers.
+    let fa = HubServer::start("127.0.0.1:0", converged_follower(&leader_addr))
+        .expect("start follower A");
+    let fb = HubServer::start("127.0.0.1:0", converged_follower(&leader_addr))
+        .expect("start follower B");
+    let leader_only = vec![leader_addr.clone()];
+    let spread =
+        vec![leader_addr.clone(), fa.addr.to_string(), fb.addr.to_string()];
+    let solo_rps = read_load(&leader_only, threads, reqs);
+    let spread_rps = read_load(&spread, threads, reqs);
+    let scaling = spread_rps / solo_rps.max(1e-12);
+    println!("\n  reads ({threads} threads x {reqs} predict_batch):");
+    println!("  1 leader                       {solo_rps:>10.0} req/s");
+    println!("  1 leader + 2 followers         {spread_rps:>10.0} req/s  ({scaling:.2}x)");
+
+    common::write_bench_json_named(
+        "BENCH_replication.json",
+        "replication",
+        Json::obj(vec![
+            ("submits", Json::Num(submits as f64)),
+            ("records_per_submit", Json::Num(RECORDS_PER_SUBMIT as f64)),
+            ("catch_up_records_per_s", Json::Num(records_per_s)),
+            ("catch_up_rows_per_s", Json::Num(rows_per_s)),
+            ("read_threads", Json::Num(threads as f64)),
+            ("read_reqs_per_thread", Json::Num(reqs as f64)),
+            ("reads_leader_only_rps", Json::Num(solo_rps)),
+            ("reads_with_followers_rps", Json::Num(spread_rps)),
+            ("read_scaling_x", Json::Num(scaling)),
+        ]),
+    );
+
+    fa.shutdown();
+    fb.shutdown();
+    leader.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -19,7 +19,8 @@ pub mod service;
 
 pub use proto::{
     BatchPrediction, CatalogPayload, ErrorCode, HubStats, Op, Prediction, RepoList,
-    RepoPayload, RepoSummary, Request, Response, SubmitOutcome, WireError,
+    RepoPayload, RepoStats, RepoSummary, ReplHandshake, ReplPage, ReplRecordPayload,
+    ReplRepoImage, ReplSnapshotPayload, Request, Response, SubmitOutcome, WireError,
     PROTOCOL_VERSION,
 };
 pub use service::PredictionService;

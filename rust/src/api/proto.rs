@@ -45,6 +45,9 @@ pub enum ErrorCode {
     InvalidData,
     /// The hub cannot serve this yet (e.g. not enough runtime data to fit).
     Unavailable,
+    /// The hub is a read-only follower; writes must go to the leader
+    /// named in the error message (DESIGN.md §11).
+    NotLeader,
     /// Unexpected server-side failure.
     Internal,
 }
@@ -59,6 +62,7 @@ impl ErrorCode {
             ErrorCode::NotFound => "not_found",
             ErrorCode::InvalidData => "invalid_data",
             ErrorCode::Unavailable => "unavailable",
+            ErrorCode::NotLeader => "not_leader",
             ErrorCode::Internal => "internal",
         }
     }
@@ -74,6 +78,7 @@ impl ErrorCode {
             "not_found" => ErrorCode::NotFound,
             "invalid_data" => ErrorCode::InvalidData,
             "unavailable" => ErrorCode::Unavailable,
+            "not_leader" => ErrorCode::NotLeader,
             _ => ErrorCode::Internal,
         }
     }
@@ -141,6 +146,15 @@ fn opt_str(frame: &Json, key: &str) -> Option<String> {
 
 fn opt_f64(frame: &Json, key: &str) -> Option<f64> {
     frame.get(key).and_then(Json::as_f64)
+}
+
+fn need_u64(frame: &Json, key: &str) -> Result<u64, WireError> {
+    frame.get(key).and_then(Json::as_u64).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::MissingField,
+            format!("missing or non-integer field `{key}`"),
+        )
+    })
 }
 
 fn need_job(frame: &Json) -> Result<JobKind, WireError> {
@@ -303,6 +317,18 @@ pub enum Op {
         deadline_s: Option<f64>,
         confidence: f64,
     },
+    /// Replication handshake (DESIGN.md §11): a follower announces its
+    /// revision watermark for `job` and learns the leader's revision and
+    /// whether the watermark fell behind the leader's compaction horizon
+    /// (⇒ snapshot bootstrap required before tailing).
+    ReplSubscribe { job: JobKind, from_revision: u64 },
+    /// Ship up to `max` WAL records with `revision > from_revision` for
+    /// `job`, in append order — the log-shipping read.
+    ReplFetch { job: JobKind, from_revision: u64, max: u64 },
+    /// Cold-bootstrap transfer: every repository's current corpus image
+    /// (a superset of the latest compacted snapshot), serialized with the
+    /// same TSV codec the disk snapshots use.
+    ReplSnapshot,
     /// Ask the server to stop accepting connections and quiesce.
     Shutdown,
 }
@@ -319,13 +345,25 @@ impl Op {
             Op::PredictBatch { .. } => "predict_batch",
             Op::Configure { .. } => "configure",
             Op::ConfigureSearch { .. } => "configure_search",
+            Op::ReplSubscribe { .. } => "repl_subscribe",
+            Op::ReplFetch { .. } => "repl_fetch",
+            Op::ReplSnapshot => "repl_snapshot",
             Op::Shutdown => "shutdown",
         }
     }
 
     fn encode_fields(&self, pairs: &mut Vec<(&'static str, Json)>) {
         match self {
-            Op::ListRepos | Op::Catalog | Op::Stats | Op::Shutdown => {}
+            Op::ListRepos | Op::Catalog | Op::Stats | Op::ReplSnapshot | Op::Shutdown => {}
+            Op::ReplSubscribe { job, from_revision } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                pairs.push(("from_revision", Json::Num(*from_revision as f64)));
+            }
+            Op::ReplFetch { job, from_revision, max } => {
+                pairs.push(("job", Json::Str(job.to_string())));
+                pairs.push(("from_revision", Json::Num(*from_revision as f64)));
+                pairs.push(("max", Json::Num(*max as f64)));
+            }
             Op::GetRepo { job } => pairs.push(("job", Json::Str(job.to_string()))),
             Op::SubmitRuns { job, data_tsv } => {
                 pairs.push(("job", Json::Str(job.to_string())));
@@ -414,6 +452,16 @@ impl Op {
                 deadline_s: opt_f64(frame, "deadline_s"),
                 confidence: opt_f64(frame, "confidence").unwrap_or(0.95),
             },
+            "repl_subscribe" => Op::ReplSubscribe {
+                job: need_job(frame)?,
+                from_revision: need_u64(frame, "from_revision")?,
+            },
+            "repl_fetch" => Op::ReplFetch {
+                job: need_job(frame)?,
+                from_revision: need_u64(frame, "from_revision")?,
+                max: need_u64(frame, "max")?,
+            },
+            "repl_snapshot" => Op::ReplSnapshot,
             "shutdown" => Op::Shutdown,
             other => {
                 return Err(WireError::new(
@@ -807,9 +855,38 @@ impl CatalogPayload {
     }
 }
 
+/// One repository's replication-relevant state in a `stats` reply:
+/// comparing a follower's entry against the leader's gives the lag in
+/// revisions (and records).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepoStats {
+    pub job: JobKind,
+    pub revision: u64,
+    pub records: u64,
+}
+
+impl RepoStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("revision", Json::Num(self.revision as f64)),
+            ("records", Json::Num(self.records as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(RepoStats {
+            job: jstr(j, "job")?.parse()?,
+            revision: ju64(j, "revision")?,
+            records: ju64(j, "records")?,
+        })
+    }
+}
+
 /// `stats` payload: hub counters + prediction-service cache counters +
-/// durability counters (zero when the hub runs without a data dir).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// durability counters (zero when the hub runs without a data dir) +
+/// per-repo revision watermarks for replication-lag observability.
+#[derive(Debug, Clone, PartialEq)]
 pub struct HubStats {
     pub accepted: u64,
     pub rejected: u64,
@@ -826,6 +903,10 @@ pub struct HubStats {
     pub wal_appends: u64,
     /// Compacted snapshots written since start.
     pub snapshots: u64,
+    /// WAL backlog: appends not yet covered by a snapshot.
+    pub appends_since_snapshot: u64,
+    /// Per-repository `{revision, records}` watermarks.
+    pub per_repo: Vec<RepoStats>,
 }
 
 impl HubStats {
@@ -840,10 +921,27 @@ impl HubStats {
             ("durable", Json::Bool(self.durable)),
             ("wal_appends", Json::Num(self.wal_appends as f64)),
             ("snapshots", Json::Num(self.snapshots as f64)),
+            (
+                "appends_since_snapshot",
+                Json::Num(self.appends_since_snapshot as f64),
+            ),
+            (
+                "per_repo",
+                Json::Arr(self.per_repo.iter().map(|r| r.to_json()).collect()),
+            ),
         ])
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Self> {
+        // The per-repo array is additive within v1, like the durability
+        // counters: absent on older hubs ⇒ empty, not an error.
+        let per_repo = match j.get("per_repo").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(RepoStats::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(HubStats {
             accepted: ju64(j, "accepted")?,
             rejected: ju64(j, "rejected")?,
@@ -856,7 +954,172 @@ impl HubStats {
             durable: j.get("durable").and_then(Json::as_bool).unwrap_or(false),
             wal_appends: j.get("wal_appends").and_then(Json::as_u64).unwrap_or(0),
             snapshots: j.get("snapshots").and_then(Json::as_u64).unwrap_or(0),
+            appends_since_snapshot: j
+                .get("appends_since_snapshot")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            per_repo,
         })
+    }
+}
+
+/// `repl_subscribe` payload: the leader's answer to a follower's
+/// watermark announcement (DESIGN.md §11).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplHandshake {
+    pub job: JobKind,
+    /// The leader's current revision for `job`.
+    pub leader_revision: u64,
+    /// The follower's watermark predates the leader's compaction horizon:
+    /// tailing cannot be gap-free, bootstrap from `repl_snapshot` first.
+    pub compacted: bool,
+}
+
+impl ReplHandshake {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("leader_revision", Json::Num(self.leader_revision as f64)),
+            ("compacted", Json::Bool(self.compacted)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(ReplHandshake {
+            job: jstr(j, "job")?.parse()?,
+            leader_revision: ju64(j, "leader_revision")?,
+            compacted: jbool(j, "compacted")?,
+        })
+    }
+}
+
+/// One shipped WAL record in a `repl_fetch` page.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplRecordPayload {
+    /// The repository revision this contribution committed as.
+    pub revision: u64,
+    /// The contribution, TSV-encoded exactly as the leader's WAL holds it.
+    pub data_tsv: String,
+}
+
+impl ReplRecordPayload {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("revision", Json::Num(self.revision as f64)),
+            ("data_tsv", Json::Str(self.data_tsv.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(ReplRecordPayload { revision: ju64(j, "revision")?, data_tsv: jstr(j, "data_tsv")? })
+    }
+}
+
+/// `repl_fetch` payload: one page of WAL records above the follower's
+/// watermark, in append order, plus the leader-side context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplPage {
+    pub job: JobKind,
+    pub leader_revision: u64,
+    /// See [`ReplHandshake::compacted`]: when set, `records` is not
+    /// contiguous with the requested watermark and must not be applied.
+    pub compacted: bool,
+    pub records: Vec<ReplRecordPayload>,
+}
+
+impl ReplPage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("leader_revision", Json::Num(self.leader_revision as f64)),
+            ("compacted", Json::Bool(self.compacted)),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .context("payload missing array `records`")?
+            .iter()
+            .map(ReplRecordPayload::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ReplPage {
+            job: jstr(j, "job")?.parse()?,
+            leader_revision: ju64(j, "leader_revision")?,
+            compacted: jbool(j, "compacted")?,
+            records,
+        })
+    }
+}
+
+/// One repository's full corpus image in a `repl_snapshot` reply — the
+/// same TSV serialization the disk snapshots use, so a bootstrap lands
+/// bit-identical state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplRepoImage {
+    pub job: JobKind,
+    pub revision: u64,
+    pub description: String,
+    pub maintainer_machine: Option<String>,
+    pub data_tsv: String,
+}
+
+impl ReplRepoImage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("revision", Json::Num(self.revision as f64)),
+            ("description", Json::Str(self.description.clone())),
+            (
+                "maintainer_machine",
+                match &self.maintainer_machine {
+                    Some(m) => Json::Str(m.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("data_tsv", Json::Str(self.data_tsv.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(ReplRepoImage {
+            job: jstr(j, "job")?.parse()?,
+            revision: ju64(j, "revision")?,
+            description: jstr(j, "description")?,
+            maintainer_machine: opt_string(j, "maintainer_machine"),
+            data_tsv: jstr(j, "data_tsv")?,
+        })
+    }
+}
+
+/// `repl_snapshot` payload: every repository's current image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplSnapshotPayload {
+    pub repos: Vec<ReplRepoImage>,
+}
+
+impl ReplSnapshotPayload {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "repos",
+            Json::Arr(self.repos.iter().map(|r| r.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let repos = j
+            .get("repos")
+            .and_then(Json::as_arr)
+            .context("payload missing array `repos`")?
+            .iter()
+            .map(ReplRepoImage::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ReplSnapshotPayload { repos })
     }
 }
 
@@ -1145,7 +1408,65 @@ mod tests {
             deadline_s: None,
             confidence: 0.9,
         });
+        round_trip(Op::ReplSubscribe { job: JobKind::Sort, from_revision: 7 });
+        round_trip(Op::ReplFetch { job: JobKind::Grep, from_revision: 0, max: 64 });
+        round_trip(Op::ReplSnapshot);
         round_trip(Op::Shutdown);
+    }
+
+    #[test]
+    fn repl_fetch_requires_integer_fields() {
+        let e = Request::parse(r#"{"v":1,"id":3,"op":"repl_fetch","job":"sort"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::MissingField);
+        assert!(e.error.message.contains("from_revision"), "{}", e.error.message);
+    }
+
+    #[test]
+    fn not_leader_code_round_trips_on_the_wire() {
+        let r = Response::err(
+            4,
+            WireError::new(ErrorCode::NotLeader, "submit to the leader at 10.0.0.1:7033"),
+        );
+        let line = r.to_line();
+        assert!(line.contains(r#""code":"not_leader""#), "{line}");
+        let back = Response::parse(&line).unwrap();
+        match &back.result {
+            Err(e) => {
+                assert_eq!(e.code, ErrorCode::NotLeader);
+                assert!(e.message.contains("10.0.0.1:7033"), "{}", e.message);
+            }
+            Ok(_) => panic!("expected error result"),
+        }
+        assert_eq!(ErrorCode::from_wire("not_leader"), ErrorCode::NotLeader);
+    }
+
+    #[test]
+    fn repl_payloads_round_trip() {
+        let h = ReplHandshake { job: JobKind::Sort, leader_revision: 12, compacted: true };
+        assert_eq!(ReplHandshake::from_json(&h.to_json()).unwrap(), h);
+
+        let p = ReplPage {
+            job: JobKind::Grep,
+            leader_revision: 3,
+            compacted: false,
+            records: vec![
+                ReplRecordPayload { revision: 2, data_tsv: "h\t1\nr\t2\n".into() },
+                ReplRecordPayload { revision: 3, data_tsv: "h\t1\nr\t3\n".into() },
+            ],
+        };
+        assert_eq!(ReplPage::from_json(&p.to_json()).unwrap(), p);
+
+        let s = ReplSnapshotPayload {
+            repos: vec![ReplRepoImage {
+                job: JobKind::KMeans,
+                revision: 5,
+                description: "spark kmeans".into(),
+                maintainer_machine: Some("m5.xlarge".into()),
+                data_tsv: "h\t1\nr\t2\n".into(),
+            }],
+        };
+        let back = ReplSnapshotPayload::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
     }
 
     #[test]
@@ -1348,6 +1669,11 @@ mod tests {
             durable: true,
             wal_appends: 3,
             snapshots: 1,
+            appends_since_snapshot: 2,
+            per_repo: vec![
+                RepoStats { job: JobKind::Sort, revision: 2, records: 132 },
+                RepoStats { job: JobKind::Grep, revision: 1, records: 129 },
+            ],
         };
         assert_eq!(HubStats::from_json(&s.to_json()).unwrap(), s);
     }
@@ -1363,5 +1689,7 @@ mod tests {
         let s = HubStats::from_json(&j).unwrap();
         assert!(!s.durable);
         assert_eq!((s.wal_appends, s.snapshots), (0, 0));
+        assert_eq!(s.appends_since_snapshot, 0);
+        assert!(s.per_repo.is_empty(), "pre-replication hubs ship no per-repo stats");
     }
 }

@@ -39,8 +39,9 @@ use crate::util::tsv::Table;
 
 use super::proto::{
     self, BatchPrediction, CatalogPayload, ErrorCode, HubStats, MachineTypeInfo, Op,
-    Prediction, RepoList, RepoPayload, RepoSummary, Request, Response, SubmitOutcome,
-    WireError,
+    Prediction, RepoList, RepoPayload, RepoStats, RepoSummary, ReplHandshake, ReplPage,
+    ReplRecordPayload, ReplRepoImage, ReplSnapshotPayload, Request, Response,
+    SubmitOutcome, WireError,
 };
 
 /// A fitted predictor plus everything the configurator needs to reuse it.
@@ -91,6 +92,11 @@ pub struct PredictionService {
     /// `HubServer::start_with` can install `ServerConfig::fit_engine()`
     /// on the already-shared service.
     engine: RwLock<FitEngine>,
+    /// Set on follower hubs (DESIGN.md §11): the leader's address. A
+    /// follower refuses `submit_runs` with a typed `not_leader` error
+    /// naming this address; all read ops serve normally from the
+    /// replicated state.
+    follower_of: RwLock<Option<String>>,
     fits: AtomicU64,
     cache_hits: AtomicU64,
 }
@@ -110,9 +116,22 @@ impl PredictionService {
             cache: (0..CACHE_STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
             fit_gates: Mutex::new(HashMap::new()),
             engine: RwLock::new(FitEngine::default()),
+            follower_of: RwLock::new(None),
             fits: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
         }
+    }
+
+    /// Mark this hub a read-only follower of `leader` (DESIGN.md §11):
+    /// `submit_runs` is refused with `not_leader` naming that address,
+    /// while reads keep serving from the replicated state.
+    pub fn set_follower_of(&self, leader: impl Into<String>) {
+        *self.follower_of.write().unwrap() = Some(leader.into());
+    }
+
+    /// The leader this hub follows, if it is a follower.
+    pub fn follower_of(&self) -> Option<String> {
+        self.follower_of.read().unwrap().clone()
     }
 
     /// Replace the cold-fit execution engine (builder style). Note that
@@ -350,6 +369,19 @@ impl PredictionService {
         let (fits, cache_hits, cache_entries) = self.fit_stats();
         let storage = self.state.storage();
         let sstats = storage.as_ref().map(|s| s.stats()).unwrap_or_default();
+        // Per-repo revision/record watermarks: what a follower (or an
+        // operator watching replication lag) compares against the leader.
+        let per_repo = self
+            .state
+            .jobs()
+            .into_iter()
+            .filter_map(|job| self.state.get(job))
+            .map(|r| RepoStats {
+                job: r.job,
+                revision: r.revision,
+                records: r.data.len() as u64,
+            })
+            .collect();
         HubStats {
             accepted,
             rejected,
@@ -360,7 +392,118 @@ impl PredictionService {
             durable: storage.is_some(),
             wal_appends: sstats.wal_appends,
             snapshots: sstats.snapshots,
+            appends_since_snapshot: sstats.pending,
+            per_repo,
         }
+    }
+
+    // -- replication (leader side, DESIGN.md §11) ---------------------------
+
+    /// The durable store every repl op ships from; replication without one
+    /// is a typed `unavailable`, not a panic.
+    fn repl_store(&self) -> Result<Arc<crate::storage::DurableStore>, WireError> {
+        self.state.storage().ok_or_else(|| {
+            WireError::new(
+                ErrorCode::Unavailable,
+                "replication requires a durable store on the leader \
+                 (start it with --data-dir)",
+            )
+        })
+    }
+
+    /// Lag probe: the leader's current revision for `job` plus whether the
+    /// records right above `from_revision` are still in the WAL
+    /// (`compacted: false`) or only reachable via [`Self::repl_snapshot_payload`].
+    pub fn repl_subscribe(
+        &self,
+        job: JobKind,
+        from_revision: u64,
+    ) -> Result<ReplHandshake, WireError> {
+        let page = self.repl_fetch(job, from_revision, 1)?;
+        Ok(ReplHandshake {
+            job,
+            leader_revision: page.leader_revision,
+            compacted: page.compacted,
+        })
+    }
+
+    /// One page of WAL records with revisions strictly above
+    /// `from_revision`, oldest first. `compacted: true` means the page
+    /// does *not* start at `from_revision + 1` — the follower fell behind
+    /// the compaction horizon and must bootstrap from a snapshot.
+    pub fn repl_fetch(
+        &self,
+        job: JobKind,
+        from_revision: u64,
+        max: u64,
+    ) -> Result<ReplPage, WireError> {
+        let store = self.repl_store()?;
+        if self.state.get(job).is_none() {
+            return Err(WireError::new(
+                ErrorCode::NotFound,
+                format!("no repository for {job}"),
+            ));
+        }
+        let page = store
+            .tail(job, from_revision, max as usize)
+            .map_err(|e| WireError::internal(&e))?;
+        // The WAL watermark can momentarily trail the published state
+        // (coverage advances after the append's lock drops); advertise
+        // whichever is ahead so followers see monotone leader revisions.
+        let leader_revision =
+            self.state.revision(job).unwrap_or(0).max(page.durable_revision);
+        Ok(ReplPage {
+            job,
+            leader_revision,
+            compacted: page.compacted,
+            records: page
+                .records
+                .into_iter()
+                .map(|r| ReplRecordPayload { revision: r.revision, data_tsv: r.data_tsv })
+                .collect(),
+        })
+    }
+
+    /// Cold-bootstrap image: every repository's current corpus as TSV with
+    /// its revision watermark — the same serialization as on-disk
+    /// snapshots, so an installed image is bit-identical to the leader's
+    /// state (a superset of the latest compacted snapshot).
+    pub fn repl_snapshot_payload(&self) -> Result<ReplSnapshotPayload, WireError> {
+        let _store = self.repl_store()?;
+        let mut repos = Vec::new();
+        for job in self.state.jobs() {
+            let Some(repo) = self.state.get(job) else { continue };
+            let data_tsv = repo
+                .data
+                .to_table()
+                .and_then(|t| t.to_text())
+                .map_err(|e| WireError::internal(&e))?;
+            repos.push(ReplRepoImage {
+                job: repo.job,
+                revision: repo.revision,
+                description: repo.description.clone(),
+                maintainer_machine: repo.maintainer_machine.clone(),
+                data_tsv,
+            });
+        }
+        Ok(ReplSnapshotPayload { repos })
+    }
+
+    /// Follower-side apply (DESIGN.md §11): install one leader-committed
+    /// record via [`HubState::apply_replicated`] — gap-free, bit-identical,
+    /// WAL-logged locally before publish — then drop exactly this job's
+    /// fitted-model cache entries, as an accepted local submit would.
+    pub fn apply_replicated(
+        &self,
+        job: JobKind,
+        revision: u64,
+        data_tsv: &str,
+    ) -> crate::Result<u64> {
+        let applied = self.state.apply_replicated(job, revision, data_tsv)?;
+        for stripe in &self.cache {
+            stripe.write().unwrap().retain(|(j, _), _| *j != job);
+        }
+        Ok(applied)
     }
 
     pub fn predict(
@@ -500,7 +643,20 @@ impl PredictionService {
         match op {
             Op::ListRepos => Ok(self.list_repos().to_json()),
             Op::GetRepo { job } => Ok(self.get_repo(job)?.to_json()),
-            Op::SubmitRuns { job, data_tsv } => Ok(self.submit_tsv(job, &data_tsv)?.to_json()),
+            Op::SubmitRuns { job, data_tsv } => {
+                // Followers are read-only: route the writer to the leader
+                // with a typed error instead of diverging the replica.
+                if let Some(leader) = self.follower_of() {
+                    return Err(WireError::new(
+                        ErrorCode::NotLeader,
+                        format!(
+                            "this hub is a read-only follower; submit to the \
+                             leader at {leader}"
+                        ),
+                    ));
+                }
+                Ok(self.submit_tsv(job, &data_tsv)?.to_json())
+            }
             Op::Catalog => Ok(self.catalog_payload().to_json()),
             Op::Stats => Ok(self.stats_payload().to_json()),
             Op::Predict { job, machine_type, features } => {
@@ -527,6 +683,13 @@ impl PredictionService {
                 let search = self.configure_search(job, data_size_gb, context, &goals)?;
                 Ok(proto::catalog_search_to_json(&search))
             }
+            Op::ReplSubscribe { job, from_revision } => {
+                Ok(self.repl_subscribe(job, from_revision)?.to_json())
+            }
+            Op::ReplFetch { job, from_revision, max } => {
+                Ok(self.repl_fetch(job, from_revision, max)?.to_json())
+            }
+            Op::ReplSnapshot => Ok(self.repl_snapshot_payload()?.to_json()),
             Op::Shutdown => {
                 stop.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
@@ -888,5 +1051,94 @@ mod tests {
         let r = svc.handle_line(r#"{"v":1,"id":5,"op":"shutdown"}"#, &stop);
         assert!(r.to_line().contains(r#""ok":true"#));
         assert!(stop.load(Ordering::SeqCst), "shutdown op sets the stop flag");
+    }
+
+    #[test]
+    fn follower_refuses_submit_with_not_leader_naming_the_leader() {
+        let svc = service_with_data();
+        svc.set_follower_of("10.1.2.3:7033");
+        let stop = AtomicBool::new(false);
+        let req = Request::new(
+            8,
+            Op::SubmitRuns {
+                job: JobKind::Sort,
+                data_tsv: honest_tsv(JobKind::Sort, 4, 21),
+            },
+        );
+        let line = svc.handle_line(&req.to_line(), &stop).to_line();
+        assert!(line.contains(r#""ok":false"#), "{line}");
+        assert!(line.contains("not_leader"), "{line}");
+        assert!(line.contains("10.1.2.3:7033"), "follower names its leader: {line}");
+        assert_eq!(svc.state().revision(JobKind::Sort), Some(0), "nothing committed");
+
+        // Reads keep serving from the replicated state.
+        let p = svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        assert!(p.runtime_s.is_finite());
+    }
+
+    #[test]
+    fn repl_ops_without_a_store_are_unavailable() {
+        let svc = service_with_data();
+        assert!(svc.follower_of().is_none());
+        let e = svc.repl_fetch(JobKind::Sort, 0, 16).unwrap_err();
+        assert_eq!(e.code, ErrorCode::Unavailable);
+        assert!(e.message.contains("--data-dir"), "{}", e.message);
+        let e = svc.repl_snapshot_payload().unwrap_err();
+        assert_eq!(e.code, ErrorCode::Unavailable);
+    }
+
+    #[test]
+    fn repl_fetch_ships_submits_and_follower_applies_bit_identical() {
+        use crate::storage::{DurableStore, FsyncPolicy, StorageConfig};
+        let dir = std::env::temp_dir()
+            .join(format!("c3o_svc_repl_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let leader = service_with_data();
+        let config = StorageConfig { fsync: FsyncPolicy::Never, snapshot_every: 0 };
+        let (store, recovered) = DurableStore::open(&dir, config).unwrap();
+        assert!(recovered.is_empty());
+        let store = Arc::new(store);
+        // Baseline snapshot so the store covers the generated corpus.
+        leader.state().snapshot_to(&store).unwrap();
+        leader.state().set_storage(store).unwrap();
+
+        let out = leader.submit_tsv(JobKind::Sort, &honest_tsv(JobKind::Sort, 8, 11)).unwrap();
+        assert!(out.accepted, "{}", out.reason);
+
+        // Subscribe right at the follower's watermark: in reach of the WAL.
+        let hs = leader.repl_subscribe(JobKind::Sort, 0).unwrap();
+        assert_eq!(hs.leader_revision, 1);
+        assert!(!hs.compacted);
+
+        let page = leader.repl_fetch(JobKind::Sort, 0, 16).unwrap();
+        assert_eq!(page.records.len(), 1);
+        assert_eq!(page.records[0].revision, 1);
+
+        // A fresh follower with the same seed corpus converges
+        // bit-identically through the validation-free apply path.
+        let follower = service_with_data();
+        follower.set_follower_of("ignored:0");
+        let rec = &page.records[0];
+        assert_eq!(follower.apply_replicated(JobKind::Sort, rec.revision, &rec.data_tsv).unwrap(), 1);
+        let l = leader.get_repo(JobKind::Sort).unwrap();
+        let f = follower.get_repo(JobKind::Sort).unwrap();
+        assert_eq!(l.revision, f.revision);
+        assert_eq!(l.data_tsv, f.data_tsv, "replica corpus is byte-identical");
+
+        // The snapshot image carries the same bytes for cold bootstrap.
+        let snap = leader.repl_snapshot_payload().unwrap();
+        let image = snap.repos.iter().find(|r| r.job == JobKind::Sort).unwrap();
+        assert_eq!(image.revision, 1);
+        assert_eq!(image.data_tsv, l.data_tsv);
+
+        // Stats expose replication lag observables.
+        let stats = leader.stats_payload();
+        assert_eq!(stats.appends_since_snapshot, 1);
+        let sort = stats.per_repo.iter().find(|r| r.job == JobKind::Sort).unwrap();
+        assert_eq!(sort.revision, 1);
+        assert_eq!(sort.records as usize, f.data_tsv.lines().count() - 1);
+
+        drop(leader.state().detach_storage());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

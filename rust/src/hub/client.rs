@@ -8,15 +8,14 @@
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::TcpStream;
 
-use anyhow::Context;
-
 use crate::api::proto::{
-    self, BatchPrediction, CatalogPayload, HubStats, Op, Prediction, Request, Response,
-    SubmitOutcome,
+    self, BatchPrediction, CatalogPayload, HubStats, Op, Prediction, ReplHandshake,
+    ReplPage, ReplSnapshotPayload, Request, Response, SubmitOutcome,
 };
 use crate::configurator::{CatalogSearch, ConfigChoice, UserGoals};
 use crate::data::{Dataset, JobKind};
 use crate::util::json::Json;
+use crate::util::prng::Pcg;
 use crate::util::tsv::Table;
 
 /// Listing entry returned by `list_repos` (the wire payload type).
@@ -40,16 +39,45 @@ pub struct HubClient {
     next_id: u64,
 }
 
+/// Initial-connect retry budget: a hub that is still binding its listener
+/// (CLI `--hub` races, follower tailing a just-started leader) refuses the
+/// first attempt; a short bounded retry absorbs that without masking a
+/// genuinely absent hub.
+const CONNECT_ATTEMPTS: u32 = 3;
+
 impl HubClient {
+    /// Connect to a hub, retrying transient connect failures up to
+    /// [`CONNECT_ATTEMPTS`] times with jittered exponential backoff
+    /// (~50/100 ms between attempts). Only the initial TCP connect is
+    /// retried — an established session that later fails surfaces its
+    /// error immediately, so callers never see silently replayed ops.
     pub fn connect(addr: &str) -> crate::Result<HubClient> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to hub at {addr}"))?;
-        stream.set_nodelay(true).ok();
-        Ok(HubClient {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-            next_id: 1,
-        })
+        // Deterministic jitter (the crate never draws wall-clock entropy,
+        // DESIGN.md §2): seed from the target address, stream by process,
+        // so concurrent clients of one hub still spread their retries.
+        let seed = addr.bytes().fold(0xC30u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        let mut rng = Pcg::new(seed, std::process::id() as u64);
+        let mut last = None;
+        for attempt in 0..CONNECT_ATTEMPTS {
+            if attempt > 0 {
+                let base = 50u64 << (attempt - 1);
+                let jitter = rng.below((base / 2 + 1) as usize) as u64;
+                std::thread::sleep(std::time::Duration::from_millis(base + jitter));
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(HubClient {
+                        reader: BufReader::new(stream.try_clone()?),
+                        writer: stream,
+                        next_id: 1,
+                    });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(anyhow::Error::new(last.expect("at least one connect attempt ran"))
+            .context(format!("connecting to hub at {addr} ({CONNECT_ATTEMPTS} attempts)")))
     }
 
     /// Send one op, await its reply, verify the envelope (version, id,
@@ -207,6 +235,37 @@ impl HubClient {
             confidence: goals.confidence,
         })?;
         proto::catalog_search_from_json(&payload)
+    }
+
+    /// Replication lag probe (DESIGN.md §11): the leader's current
+    /// revision for `job` and whether records right above `from_revision`
+    /// are still WAL-reachable (`compacted: false`).
+    pub fn repl_subscribe(
+        &mut self,
+        job: JobKind,
+        from_revision: u64,
+    ) -> crate::Result<ReplHandshake> {
+        let payload = self.call(Op::ReplSubscribe { job, from_revision })?;
+        ReplHandshake::from_json(&payload)
+    }
+
+    /// One page of the leader's WAL for `job`: up to `max` records with
+    /// revisions strictly above `from_revision`, oldest first.
+    pub fn repl_fetch(
+        &mut self,
+        job: JobKind,
+        from_revision: u64,
+        max: u64,
+    ) -> crate::Result<ReplPage> {
+        let payload = self.call(Op::ReplFetch { job, from_revision, max })?;
+        ReplPage::from_json(&payload)
+    }
+
+    /// The leader's current corpus image per repository, for follower
+    /// cold bootstrap (or recovery from behind the compaction horizon).
+    pub fn repl_snapshot(&mut self) -> crate::Result<ReplSnapshotPayload> {
+        let payload = self.call(Op::ReplSnapshot)?;
+        ReplSnapshotPayload::from_json(&payload)
     }
 
     /// Ask the server to stop accepting connections.

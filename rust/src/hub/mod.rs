@@ -21,8 +21,10 @@
 //!   everything on graceful drain.
 //!
 //! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
-//! `stats`, `predict`, `predict_batch`, `configure`, `shutdown` —
-//! specified in DESIGN.md §4.
+//! `stats`, `predict`, `predict_batch`, `configure`, `configure_search`,
+//! `repl_subscribe`, `repl_fetch`, `repl_snapshot`, `shutdown` — specified
+//! in DESIGN.md §4. The `repl_*` ops ship the WAL to follower hubs
+//! ([`crate::replication`], DESIGN.md §11).
 
 pub mod client;
 pub mod repo;

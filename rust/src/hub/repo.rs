@@ -384,6 +384,68 @@ impl HubState {
         Ok((verdict, revision))
     }
 
+    /// Validation-free replication apply (DESIGN.md §11): install one
+    /// leader-committed WAL record into this hub's state, bit-identical
+    /// and gap-free. Used by follower hubs tailing a leader's log — the
+    /// record already passed the leader's §III-C-b gate, so re-validating
+    /// here could only *diverge* the replica (e.g. a policy difference
+    /// rejecting what the leader accepted).
+    ///
+    /// Refuses any record that is not exactly `local revision + 1`: a gap
+    /// means the follower fell behind the leader's compaction horizon (or
+    /// the feed is corrupt) and must re-bootstrap from a snapshot instead
+    /// of silently skipping revisions. With a durable store attached the
+    /// record is WAL-appended before the publish, exactly like
+    /// [`HubState::submit`] — so a follower is itself durable and a
+    /// restart resumes from its own watermark. Returns the post-apply
+    /// revision (always `revision`).
+    ///
+    /// The accepted counter advances like a local submit, mirroring the
+    /// leader's count for the replicated records.
+    pub fn apply_replicated(
+        &self,
+        job: JobKind,
+        revision: u64,
+        data_tsv: &str,
+    ) -> crate::Result<u64> {
+        // Same lock discipline as submit(): clone the per-job lock handle
+        // out of the map, then acquire it — never hold the map lock while
+        // waiting.
+        let lock = {
+            let repos = self.repos.read().unwrap();
+            repos
+                .get(&job)
+                .with_context(|| format!("no repository for {job}"))?
+                .submit_lock
+                .clone()
+        };
+        let _guard = lock.lock().unwrap();
+        let repo = self
+            .get(job)
+            .with_context(|| format!("no repository for {job}"))?;
+        anyhow::ensure!(
+            revision == repo.revision + 1,
+            "replication gap for {job}: local revision {}, record claims {} — \
+             refusing to apply out of order",
+            repo.revision,
+            revision
+        );
+        let contribution = crate::util::tsv::Table::parse(data_tsv)
+            .and_then(|t| Dataset::from_table(job, &t))
+            .with_context(|| format!("parsing replicated record {revision} for {job}"))?;
+        // Durability before visibility, as in submit(): log the record
+        // verbatim so the follower's own WAL stays byte-compatible with
+        // the leader's.
+        if let Some(store) = self.storage() {
+            store.append(job, revision, data_tsv)?;
+        }
+        let mut merged = repo.data.clone();
+        for rec in contribution.records {
+            merged.push(rec)?;
+        }
+        self.commit_data(job, merged)
+    }
+
     pub fn counters(&self) -> (u64, u64) {
         (self.accepted.load(Ordering::Relaxed), self.rejected.load(Ordering::Relaxed))
     }
@@ -644,6 +706,63 @@ mod tests {
         ds.push(rec(6)).unwrap();
         hub.commit_data(JobKind::Sort, ds).unwrap();
         assert_eq!(hub.revision(JobKind::Sort), Some(6));
+    }
+
+    #[test]
+    fn apply_replicated_lands_exact_revision_bit_identical() {
+        let leader = HubState::new();
+        let follower = HubState::new();
+        for hub in [&leader, &follower] {
+            hub.insert(Repository::new(JobKind::Sort, "sort"));
+        }
+        // Two "submits" on the leader, shipped to the follower as TSV.
+        for batch in 0..2u32 {
+            let mut ds = Dataset::new(JobKind::Sort);
+            ds.push(rec(2 + 4 * batch)).unwrap();
+            ds.push(rec(4 + 4 * batch)).unwrap();
+            let tsv = ds.to_table().unwrap().to_text().unwrap();
+            let mut merged = leader.get(JobKind::Sort).unwrap().data.clone();
+            for r in ds.records {
+                merged.push(r).unwrap();
+            }
+            let rev = leader.commit_data(JobKind::Sort, merged).unwrap();
+            let applied = follower.apply_replicated(JobKind::Sort, rev, &tsv).unwrap();
+            assert_eq!(applied, rev, "replica lands exactly the leader's revision");
+        }
+        let l = leader.get(JobKind::Sort).unwrap();
+        let f = follower.get(JobKind::Sort).unwrap();
+        assert_eq!(l.revision, f.revision);
+        assert_eq!(l.data.len(), f.data.len());
+        for (a, b) in l.data.records.iter().zip(f.data.records.iter()) {
+            assert_eq!(a.fingerprint(), b.fingerprint(), "bit-identical records");
+        }
+        // The accepted counter mirrors the leader's.
+        assert_eq!(follower.counters(), (2, 0));
+    }
+
+    #[test]
+    fn apply_replicated_refuses_gaps_and_replays() {
+        let hub = HubState::new();
+        hub.insert(Repository::new(JobKind::Sort, ""));
+        let mut ds = Dataset::new(JobKind::Sort);
+        ds.push(rec(2)).unwrap();
+        let tsv = ds.to_table().unwrap().to_text().unwrap();
+
+        // Gap: revision 3 onto revision 0.
+        let err = hub.apply_replicated(JobKind::Sort, 3, &tsv).unwrap_err();
+        assert!(err.to_string().contains("replication gap"), "{err}");
+        assert_eq!(hub.revision(JobKind::Sort), Some(0), "nothing applied");
+
+        // In-order apply lands.
+        assert_eq!(hub.apply_replicated(JobKind::Sort, 1, &tsv).unwrap(), 1);
+
+        // Replay of the same revision is refused (no double-apply).
+        let err = hub.apply_replicated(JobKind::Sort, 1, &tsv).unwrap_err();
+        assert!(err.to_string().contains("replication gap"), "{err}");
+        assert_eq!(hub.get(JobKind::Sort).unwrap().data.len(), 1);
+
+        // Unknown repository is an error, not a panic.
+        assert!(hub.apply_replicated(JobKind::KMeans, 1, &tsv).is_err());
     }
 
     #[test]

@@ -116,6 +116,10 @@ pub struct HubServer {
     accept_thread: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     durability_thread: Option<JoinHandle<()>>,
+    /// Follower mode (DESIGN.md §11): the replication tailer keeping this
+    /// hub converged with its leader. Stopped (and joined) first during
+    /// shutdown, so no apply races the final drain flush.
+    tailer: Option<crate::replication::Tailer>,
     /// Set once `stop_and_join` completed, so an explicit `shutdown`
     /// followed by `Drop` does not drain (or snapshot) twice.
     drained: bool,
@@ -203,8 +207,16 @@ impl HubServer {
             accept_thread: Some(accept_thread),
             workers,
             durability_thread,
+            tailer: None,
             drained: false,
         })
+    }
+
+    /// Attach the replication tailer that keeps this (follower) hub
+    /// converged with its leader; the server owns it from here and stops
+    /// it first during shutdown.
+    pub fn attach_tailer(&mut self, tailer: crate::replication::Tailer) {
+        self.tailer = Some(tailer);
     }
 
     pub fn service(&self) -> &Arc<PredictionService> {
@@ -230,6 +242,9 @@ impl HubServer {
         if self.drained {
             return;
         }
+        // Stop tailing before draining: the final flush below must cover
+        // the last applied record, with no apply landing after it.
+        drop(self.tailer.take());
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so `incoming()` returns.
         let _ = TcpStream::connect(self.addr);

@@ -30,6 +30,7 @@ pub mod eval;
 pub mod hub;
 pub mod linalg;
 pub mod models;
+pub mod replication;
 pub mod runtime;
 pub mod sim;
 pub mod storage;

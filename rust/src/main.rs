@@ -15,7 +15,14 @@
 //!                acknowledged, snapshots compact the logs
 //!                (--snapshot-every N appends), crashes recover on the
 //!                next start, and --fsync {always,interval,never} picks
-//!                the durability/throughput trade-off
+//!                the durability/throughput trade-off.
+//!                With --follow LEADER-ADDR the hub runs as a read-only
+//!                *follower* (DESIGN.md §11): it bootstraps from the
+//!                leader's snapshot, tails its WAL into the local state
+//!                (and local --data-dir, making the follower itself
+//!                durable), serves all read ops from the replicated
+//!                corpus, and refuses submit_runs with a typed
+//!                `not_leader` error naming the leader
 //!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
 //!                fits locally from --data (same --fit-threads /
 //!                --fit-budget / --fit-points knobs), or delegates to a
@@ -33,6 +40,8 @@
 //!   c3o serve --addr 127.0.0.1:7033 --data data/
 //!   c3o serve --addr 127.0.0.1:7033 --data-dir hub-state/ \
 //!       --fsync interval --snapshot-every 64
+//!   c3o serve --addr 127.0.0.1:7034 --data-dir follower-state/ \
+//!       --follow 127.0.0.1:7033
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
 //!       --deadline 900 --confidence 0.95 --data data/
 //!   c3o configure --job kmeans --size 15 --ctx 5,0.001 \
@@ -257,7 +266,19 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         ValidationPolicy::default(),
         backend(flags),
     ));
-    let server = HubServer::start_with(&addr, service, config.clone())?;
+    // Follower mode: mark the service read-only *before* serving, so no
+    // submit can slip in ahead of the first replication pass.
+    if let Some(leader) = flags.get("follow") {
+        service.set_follower_of(leader.clone());
+    }
+    let mut server = HubServer::start_with(&addr, service, config.clone())?;
+    if let Some(leader) = flags.get("follow") {
+        let tailer = c3o::replication::Tailer::start(
+            server.service().clone(),
+            c3o::replication::FollowerConfig::new(leader.clone()),
+        );
+        server.attach_tailer(tailer);
+    }
     // NOTE: keep the addr as the last token of the first line — clients
     // (and tests/cli_e2e.rs) parse it from there.
     println!("C3O Hub listening on {}", server.addr);
@@ -289,9 +310,16 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         ),
         None => println!("durability: OFF (in-memory only; pass --data-dir to persist)"),
     }
+    match flags.get("follow") {
+        Some(leader) => println!(
+            "replication: FOLLOWER of {leader} (read-only; submit_runs → not_leader)"
+        ),
+        None => println!("replication: leader-capable (repl ops require --data-dir)"),
+    }
     println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
-         predict | predict_batch | configure | configure_search | shutdown"
+         predict | predict_batch | configure | configure_search | \
+         repl_subscribe | repl_fetch | repl_snapshot | shutdown"
     );
     // Serve until stdin closes (or forever under a service manager).
     let mut buf = String::new();

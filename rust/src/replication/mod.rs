@@ -1,0 +1,296 @@
+//! Hub replication: leader-side log shipping + follower tailing
+//! (DESIGN.md §11).
+//!
+//! The per-repo WAL (DESIGN.md §9) doubles as a replication log: every
+//! accepted submission is one framed record carrying its commit revision,
+//! so a follower hub replicates a leader by tailing each repository's log
+//! and applying records through the validation-free fast path
+//! ([`HubState::apply_replicated`]) — gap-free, in revision order, and
+//! bit-identical (TSV round-trips `f64` via shortest representation, and
+//! the fit path is deterministic, so a converged follower serves
+//! bit-identical `predict_batch` answers).
+//!
+//! Protocol (all plain v1 ops, served by the leader's
+//! [`PredictionService`]):
+//!
+//! * `repl_subscribe { job, from_revision }` — lag probe: the leader's
+//!   current revision plus whether records right above `from_revision`
+//!   are still in the WAL (`compacted: false`) or only reachable through
+//!   a snapshot (`compacted: true`).
+//! * `repl_fetch { job, from_revision, max }` — one page of WAL records
+//!   with revisions in `(from_revision, from_revision + ..]`, oldest
+//!   first.
+//! * `repl_snapshot` — the leader's current corpus image per repository
+//!   (a superset of its latest compacted snapshot), for cold bootstrap
+//!   or for a follower that fell behind the compaction horizon.
+//!
+//! The follower side is [`Tailer`]: a poll/backoff loop owned by the
+//! follower's `HubServer` that keeps its `HubState` converged with the
+//! leader. Because applies reuse `DurableStore::append`, a follower is
+//! itself durable: kill -9 it mid-tail, reopen the same data dir, and it
+//! resumes from its own watermark with no gaps and no double-applies.
+//!
+//! [`HubState::apply_replicated`]: crate::hub::HubState::apply_replicated
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::api::PredictionService;
+use crate::data::Dataset;
+use crate::hub::HubClient;
+use crate::storage::RecoveredRepo;
+use crate::util::tsv::Table;
+
+/// How a follower tails its leader.
+#[derive(Debug, Clone)]
+pub struct FollowerConfig {
+    /// Leader hub address (`host:port`).
+    pub leader: String,
+    /// Idle delay between polls once caught up.
+    pub poll_interval: Duration,
+    /// Max records per `repl_fetch` page.
+    pub max_batch: u64,
+    /// Backoff ceiling after leader errors (exponential from
+    /// `poll_interval` up to this cap; reset on the next success).
+    pub max_backoff: Duration,
+}
+
+impl FollowerConfig {
+    pub fn new(leader: impl Into<String>) -> FollowerConfig {
+        FollowerConfig {
+            leader: leader.into(),
+            poll_interval: Duration::from_millis(200),
+            max_batch: 256,
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One full catch-up pass against a connected leader: for every local
+/// repository, page `repl_fetch` until the leader has nothing newer,
+/// applying each record through the validation-free fast path. A page
+/// flagged `compacted` (the follower fell behind the leader's compaction
+/// horizon — or is cold-starting against a compacted log) triggers a
+/// snapshot re-bootstrap, then the fetch loop resumes from the new
+/// watermark. Returns the number of records applied.
+pub fn sync_once(
+    service: &PredictionService,
+    client: &mut HubClient,
+    max_batch: u64,
+) -> crate::Result<u64> {
+    let state = service.state().clone();
+    let mut applied = 0u64;
+    for job in state.jobs() {
+        let mut bootstrapped = false;
+        loop {
+            let local = state.revision(job).unwrap_or(0);
+            let page = client.repl_fetch(job, local, max_batch)?;
+            if page.compacted {
+                // Records right above our watermark are gone from the
+                // leader's WAL; a snapshot carries us past the horizon.
+                anyhow::ensure!(
+                    !bootstrapped,
+                    "leader reports {job} compacted above revision {local} even \
+                     after a snapshot bootstrap"
+                );
+                install_snapshot(service, client)?;
+                bootstrapped = true;
+                continue;
+            }
+            if page.records.is_empty() {
+                break;
+            }
+            for rec in &page.records {
+                service
+                    .apply_replicated(job, rec.revision, &rec.data_tsv)
+                    .with_context(|| format!("applying leader record for {job}"))?;
+                applied += 1;
+            }
+        }
+    }
+    Ok(applied)
+}
+
+/// Cold-bootstrap (or horizon-recovery) path: pull the leader's corpus
+/// image and install every repository that is ahead of ours, exactly as
+/// crash recovery installs a snapshot — data and revision watermark land
+/// verbatim, so revisions stay monotone and the follower's model cache
+/// goes stale by revision comparison. With a durable store attached, a
+/// baseline snapshot is written afterwards so the store covers the
+/// installed state and subsequent WAL appends stay contiguous. Returns
+/// the number of repositories installed.
+pub fn install_snapshot(
+    service: &PredictionService,
+    client: &mut HubClient,
+) -> crate::Result<usize> {
+    let snap = client.repl_snapshot()?;
+    let state = service.state().clone();
+    let mut installed = 0usize;
+    for image in snap.repos {
+        let local = state.revision(image.job).unwrap_or(0);
+        if image.revision <= local {
+            continue;
+        }
+        let data = Table::parse(&image.data_tsv)
+            .and_then(|t| Dataset::from_table(image.job, &t))
+            .with_context(|| {
+                format!("parsing leader snapshot image for {}", image.job)
+            })?;
+        state.install_recovered(RecoveredRepo {
+            job: image.job,
+            revision: image.revision,
+            description: Some(image.description),
+            maintainer_machine: image.maintainer_machine,
+            data,
+            replayed: 0,
+        });
+        installed += 1;
+    }
+    if installed > 0 {
+        if let Some(store) = state.storage() {
+            state
+                .snapshot_to(&store)
+                .context("writing baseline snapshot after leader bootstrap")?;
+        }
+    }
+    Ok(installed)
+}
+
+/// Background follower loop: connects to the leader, then alternates
+/// [`sync_once`] with an idle sleep, backing off exponentially (up to
+/// `max_backoff`) while the leader is unreachable and resetting on the
+/// next successful pass. Dropping the `Tailer` stops the loop and joins
+/// the thread.
+#[derive(Debug)]
+pub struct Tailer {
+    stop: Arc<AtomicBool>,
+    applied: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Tailer {
+    pub fn start(service: Arc<PredictionService>, config: FollowerConfig) -> Tailer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let applied = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let stop = stop.clone();
+            let applied = applied.clone();
+            std::thread::Builder::new()
+                .name("c3o-repl-tailer".into())
+                .spawn(move || run_loop(&service, &config, &stop, &applied))
+                .expect("spawning replication tailer thread")
+        };
+        Tailer { stop, applied, handle: Some(handle) }
+    }
+
+    /// Total records applied by this tailer since it started.
+    pub fn applied(&self) -> u64 {
+        self.applied.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Tailer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            handle.join().ok();
+        }
+    }
+}
+
+fn run_loop(
+    service: &PredictionService,
+    config: &FollowerConfig,
+    stop: &AtomicBool,
+    applied: &AtomicU64,
+) {
+    let mut client: Option<HubClient> = None;
+    let mut backoff = config.poll_interval;
+    while !stop.load(Ordering::Relaxed) {
+        let tick = (|| -> crate::Result<u64> {
+            if client.is_none() {
+                client = Some(HubClient::connect(&config.leader)?);
+            }
+            sync_once(service, client.as_mut().unwrap(), config.max_batch)
+        })();
+        match tick {
+            Ok(n) => {
+                applied.fetch_add(n, Ordering::Relaxed);
+                backoff = config.poll_interval;
+                // Caught up (or applied a page): brief idle before the
+                // next poll. A page-full tick polls again immediately.
+                if n == 0 {
+                    sleep_checked(stop, config.poll_interval);
+                }
+            }
+            Err(e) => {
+                // Leader unreachable or mid-restart: drop the session and
+                // retry with capped exponential backoff. The follower
+                // keeps serving reads from its last-applied state.
+                eprintln!("[c3o follower] sync with {} failed: {e:#}", config.leader);
+                client = None;
+                sleep_checked(stop, backoff);
+                backoff = (backoff * 2).min(config.max_backoff);
+            }
+        }
+    }
+}
+
+/// Sleep in small slices so a stop request interrupts promptly.
+fn sleep_checked(stop: &AtomicBool, total: Duration) {
+    let slice = Duration::from_millis(10);
+    let mut remaining = total;
+    while !stop.load(Ordering::Relaxed) && remaining > Duration::ZERO {
+        let step = remaining.min(slice);
+        std::thread::sleep(step);
+        remaining = remaining.saturating_sub(step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Catalog;
+    use crate::hub::{HubState, Repository, ValidationPolicy};
+    use crate::runtime::NativeBackend;
+
+    fn idle_service() -> Arc<PredictionService> {
+        let state = Arc::new(HubState::new());
+        state.insert(Repository::new(crate::data::JobKind::Sort, "sort"));
+        Arc::new(PredictionService::new(
+            state,
+            Catalog::aws_like(),
+            ValidationPolicy::default(),
+            Arc::new(NativeBackend::new()),
+        ))
+    }
+
+    #[test]
+    fn tailer_stops_promptly_while_leader_is_unreachable() {
+        // Port 1 is reserved and refused immediately on loopback; the
+        // tailer must stay in its backoff loop without panicking and
+        // join as soon as it is dropped.
+        let tailer =
+            Tailer::start(idle_service(), FollowerConfig::new("127.0.0.1:1"));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(tailer.applied(), 0);
+        let started = std::time::Instant::now();
+        drop(tailer);
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "drop must interrupt the backoff sleep"
+        );
+    }
+
+    #[test]
+    fn follower_config_defaults_are_sane() {
+        let cfg = FollowerConfig::new("127.0.0.1:7033");
+        assert_eq!(cfg.leader, "127.0.0.1:7033");
+        assert!(cfg.max_batch > 0);
+        assert!(cfg.max_backoff >= cfg.poll_interval);
+    }
+}

@@ -129,6 +129,21 @@ pub struct StorageStats {
     pub pending: u64,
 }
 
+/// One page of WAL records shipped to a follower, with the leader-side
+/// context it needs to interpret them ([`DurableStore::tail`]).
+#[derive(Debug)]
+pub struct WalTailPage {
+    /// Records with `revision > from_revision`, in append order.
+    pub records: Vec<WalRecord>,
+    /// The repo's durable revision watermark at read time.
+    pub durable_revision: u64,
+    /// The requested watermark predates the log's horizon: compaction
+    /// dropped records the reader still needs, so the page is not
+    /// contiguous with `from_revision` and the reader must snapshot-
+    /// bootstrap instead of applying it.
+    pub compacted: bool,
+}
+
 /// Best-effort directory fsync so a create/rename survives power loss —
 /// shared by the WAL and snapshot layers.
 pub(crate) fn sync_dir(path: &Path) {
@@ -488,6 +503,44 @@ impl DurableStore {
         self.coverage.lock().unwrap().get(&job).copied()
     }
 
+    /// Read up to `max` WAL records with `revision > from_revision` —
+    /// the leader side of log shipping (DESIGN.md §11). Holds the job's
+    /// WAL lock for the read, so a page can never interleave with a
+    /// concurrent append or compaction. `compacted` tells a follower its
+    /// watermark fell behind the log's horizon (snapshot compaction
+    /// dropped the records it still needs): the page cannot be applied
+    /// contiguously and the follower must bootstrap from a snapshot
+    /// instead.
+    pub fn tail(
+        &self,
+        job: JobKind,
+        from_revision: u64,
+        max: usize,
+    ) -> crate::Result<WalTailPage> {
+        let wal = self
+            .wals
+            .get(&job)
+            .with_context(|| format!("no WAL for {job}"))?;
+        let records = {
+            let wal = wal.lock().unwrap();
+            wal::read_tail(wal.path(), from_revision, max)?
+        };
+        // Coverage advances just after the WAL lock drops, so a record we
+        // read may be newer than the watermark; report whichever is ahead.
+        let durable_revision = self
+            .coverage(job)
+            .map_or(0, |(rev, _)| rev)
+            .max(records.last().map_or(0, |rec| rec.revision));
+        // Contiguity check: the first shipped record must be exactly
+        // `from_revision + 1`; with no records at all, a durable watermark
+        // past the follower's proves the gap was compacted away.
+        let compacted = match records.first() {
+            Some(rec) => rec.revision > from_revision + 1,
+            None => durable_revision > from_revision,
+        };
+        Ok(WalTailPage { records, durable_revision, compacted })
+    }
+
     /// Whether the automatic snapshot threshold has been reached.
     pub fn should_snapshot(&self) -> bool {
         self.config.snapshot_every > 0
@@ -719,6 +772,69 @@ mod tests {
             .unwrap();
         assert!(store.append(JobKind::Grep, 5, &tsv(&contribution(JobKind::Grep, 10))).is_err());
         store.append(JobKind::Grep, 6, &tsv(&contribution(JobKind::Grep, 10))).unwrap();
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tail_pages_are_contiguous_with_the_watermark() {
+        let dir = temp_dir("tailpage");
+        let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        for rev in 1..=4u64 {
+            store
+                .append(JobKind::Sort, rev, &tsv(&contribution(JobKind::Sort, rev as u32 * 10)))
+                .unwrap();
+        }
+        // A follower at revision 1 pages the rest, two records at a time.
+        let page = store.tail(JobKind::Sort, 1, 2).unwrap();
+        assert!(!page.compacted);
+        assert_eq!(page.durable_revision, 4);
+        assert_eq!(page.records.iter().map(|r| r.revision).collect::<Vec<_>>(), vec![2, 3]);
+        let page = store.tail(JobKind::Sort, 3, 2).unwrap();
+        assert_eq!(page.records.len(), 1);
+        assert_eq!(page.records[0].revision, 4);
+        // Caught up: empty page, not compacted.
+        let page = store.tail(JobKind::Sort, 4, 2).unwrap();
+        assert!(page.records.is_empty());
+        assert!(!page.compacted);
+        assert_eq!(page.durable_revision, 4);
+        // A repo the store has never seen tails as an empty, fresh log.
+        let page = store.tail(JobKind::Grep, 0, 10).unwrap();
+        assert!(page.records.is_empty());
+        assert!(!page.compacted);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tail_behind_the_compaction_horizon_reports_compacted() {
+        let dir = temp_dir("tailhorizon");
+        let (store, _) = DurableStore::open(&dir, StorageConfig::default()).unwrap();
+        let c1 = contribution(JobKind::Sort, 0);
+        store.append(JobKind::Sort, 1, &tsv(&c1)).unwrap();
+        store.append(JobKind::Sort, 2, &tsv(&contribution(JobKind::Sort, 10))).unwrap();
+        let mut full = c1.clone();
+        for r in contribution(JobKind::Sort, 10).records {
+            full.push(r).unwrap();
+        }
+        store
+            .snapshot(&[RepoImage {
+                job: JobKind::Sort,
+                revision: 2,
+                description: "sorting",
+                maintainer_machine: None,
+                data: &full,
+            }])
+            .unwrap();
+        store.append(JobKind::Sort, 3, &tsv(&contribution(JobKind::Sort, 20))).unwrap();
+        // A follower at revision 0 or 1 needs records the compaction
+        // dropped: the page says so instead of shipping a gapped tail.
+        let page = store.tail(JobKind::Sort, 0, 10).unwrap();
+        assert!(page.compacted);
+        assert_eq!(page.records.first().map(|r| r.revision), Some(3));
+        // A follower at the snapshot watermark tails contiguously.
+        let page = store.tail(JobKind::Sort, 2, 10).unwrap();
+        assert!(!page.compacted);
+        assert_eq!(page.records.len(), 1);
+        assert_eq!(page.durable_revision, 3);
         fs::remove_dir_all(&dir).ok();
     }
 

@@ -312,6 +312,64 @@ impl Wal {
     }
 }
 
+/// Stream the log at `path` frame by frame and return up to `max` records
+/// with `revision > from_revision`, in append order — the log-shipping
+/// read (DESIGN.md §11). Unlike [`scan`], this never loads the whole file:
+/// memory is bounded by one frame plus the returned page. Every frame is
+/// CRC-verified, *including skipped ones*, so the scan invariant holds:
+/// nothing at or past the first bad frame is ever yielded. A bad or short
+/// frame ends the read silently — with a live writer it is simply an
+/// append racing us, and the durable prefix we already decoded is exactly
+/// what a follower may consume.
+pub fn read_tail(
+    path: &Path,
+    from_revision: u64,
+    max: usize,
+) -> crate::Result<Vec<WalRecord>> {
+    use std::io::BufReader;
+    let file = match File::open(path) {
+        Ok(f) => f,
+        // A WAL that was never created is an empty log, not an error:
+        // compaction can legitimately leave nothing behind.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(anyhow::Error::new(e)
+                .context(format!("opening WAL {} for tail read", path.display())))
+        }
+    };
+    let mut reader = BufReader::new(file);
+    let mut out = Vec::new();
+    let mut header = [0u8; HEADER_BYTES];
+    while out.len() < max {
+        // EOF (possibly mid-header: a torn tail or a racing append).
+        if reader.read_exact(&mut header).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if !(REVISION_BYTES..=MAX_RECORD_BYTES).contains(&len) {
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        if reader.read_exact(&mut payload).is_err() {
+            break;
+        }
+        if crc32(&payload) != crc {
+            break;
+        }
+        let revision = u64::from_le_bytes(payload[..REVISION_BYTES].try_into().unwrap());
+        if revision <= from_revision {
+            continue;
+        }
+        let tsv = match std::str::from_utf8(&payload[REVISION_BYTES..]) {
+            Ok(tsv) => tsv,
+            Err(_) => break,
+        };
+        out.push(WalRecord { revision, data_tsv: tsv.to_string() });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -425,6 +483,60 @@ mod tests {
         let (mut wal, _) = Wal::open(&path).unwrap();
         wal.compact(4).unwrap();
         assert_eq!(fs::metadata(&path).unwrap().len(), 0);
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn read_tail_pages_above_the_watermark() {
+        let path = temp_wal("tail");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        for rev in 1..=5u64 {
+            wal.append(rev, &format!("a\t{rev}\n")).unwrap();
+        }
+        wal.sync().unwrap();
+
+        // Everything above revision 2, capped at 2 records per page.
+        let page = read_tail(&path, 2, 2).unwrap();
+        assert_eq!(
+            page.iter().map(|r| r.revision).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+        assert_eq!(page[0].data_tsv, "a\t3\n");
+        // Next page from the last revision served.
+        let page = read_tail(&path, 4, 100).unwrap();
+        assert_eq!(page.len(), 1);
+        assert_eq!(page[0].revision, 5);
+        // A caught-up reader gets an empty page, as does max == 0.
+        assert!(read_tail(&path, 5, 100).unwrap().is_empty());
+        assert!(read_tail(&path, 0, 0).unwrap().is_empty());
+        // A missing file is an empty log (post-compaction state).
+        assert!(read_tail(&path.with_extension("nope"), 0, 10).unwrap().is_empty());
+        fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn read_tail_stops_at_corruption_even_while_skipping() {
+        let path = temp_wal("tailcorrupt");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(1, "a\t1\n").unwrap();
+        wal.append(2, "a\t2\n").unwrap();
+        wal.append(3, "a\t3\n").unwrap();
+        wal.sync().unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        // Corrupt record 2's payload. A tail read from revision 2 would
+        // *skip* records 1 and 2 — but the bad frame must still end the
+        // read before record 3, exactly like `scan`.
+        let rec_len = encode(1, "a\t1\n").unwrap().len();
+        bytes[rec_len + HEADER_BYTES + 2] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(read_tail(&path, 2, 100).unwrap().is_empty());
+        // A torn final frame likewise ends the read silently.
+        let mut torn = fs::read(&path).unwrap()[..rec_len].to_vec();
+        torn.extend_from_slice(&encode(9, "a\t9\n").unwrap()[..7]);
+        fs::write(&path, &torn).unwrap();
+        let page = read_tail(&path, 0, 100).unwrap();
+        assert_eq!(page.len(), 1);
+        assert_eq!(page[0].revision, 1);
         fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 

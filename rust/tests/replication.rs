@@ -1,0 +1,334 @@
+//! Integration: leader + follower hubs over real TCP (DESIGN.md §11).
+//!
+//! Covers the tentpole end-to-end scenarios: a leader and two follower
+//! hubs converge to bit-identical `predict_batch` answers after submits
+//! land on the leader only; `submit_runs` on a follower is refused with a
+//! typed `not_leader` error naming the leader; a follower killed without
+//! any graceful drain (kill -9 equivalent) reopens its own durable state
+//! and resumes tailing from its watermark with no gaps and no
+//! double-applies; and a cold follower behind the leader's compaction
+//! horizon bootstraps from the snapshot image.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use c3o::api::service::PredictionService;
+use c3o::cloud::Catalog;
+use c3o::data::{Dataset, JobKind};
+use c3o::hub::{HubClient, HubServer, HubState, Repository, ValidationPolicy};
+use c3o::replication::{install_snapshot, sync_once, FollowerConfig, Tailer};
+use c3o::runtime::NativeBackend;
+use c3o::sim::{JobInput, WorkloadModel};
+use c3o::storage::{DurableStore, FsyncPolicy, StorageConfig};
+use c3o::util::prng::Pcg;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("c3o_repl_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn open_store(dir: &Path) -> (Arc<DurableStore>, Vec<c3o::storage::RecoveredRepo>) {
+    let config = StorageConfig { fsync: FsyncPolicy::Never, snapshot_every: 0 };
+    let (store, recovered) = DurableStore::open(dir, config).unwrap();
+    (Arc::new(store), recovered)
+}
+
+/// Hub state the CLI way: empty registered repositories (data arrives via
+/// submits or replication — revision 0 always means an empty corpus, so
+/// every record the leader holds is reachable through WAL revisions).
+fn empty_state() -> Arc<HubState> {
+    let state = Arc::new(HubState::new());
+    for job in [JobKind::Sort, JobKind::Grep] {
+        let mut repo = Repository::new(job, &format!("spark {job}"));
+        repo.maintainer_machine = Some("m5.xlarge".to_string());
+        state.insert(repo);
+    }
+    state
+}
+
+fn service_on(state: Arc<HubState>) -> Arc<PredictionService> {
+    // Replication semantics are under test, not the §III-C-b gate: with
+    // `min_existing: usize::MAX` every honest submit bootstrap-accepts
+    // deterministically, so acceptance never depends on corpus shape.
+    let policy = ValidationPolicy { min_existing: usize::MAX, ..Default::default() };
+    Arc::new(PredictionService::new(
+        state,
+        Catalog::aws_like(),
+        policy,
+        Arc::new(NativeBackend::new()),
+    ))
+}
+
+/// A durable leader hub serving on an ephemeral port.
+fn start_leader(dir: &Path) -> HubServer {
+    let state = empty_state();
+    let (store, recovered) = open_store(dir);
+    for r in recovered {
+        state.install_recovered(r);
+    }
+    state.set_storage(store).unwrap();
+    HubServer::start("127.0.0.1:0", service_on(state)).unwrap()
+}
+
+/// A durable follower hub: recovers its own state, marks itself read-only,
+/// and tails `leader` in the background exactly as `c3o serve --follow`.
+fn start_follower(dir: &Path, leader: &str) -> HubServer {
+    let state = empty_state();
+    let (store, recovered) = open_store(dir);
+    for r in recovered {
+        state.install_recovered(r);
+    }
+    state.set_storage(store).unwrap();
+    let service = service_on(state);
+    service.set_follower_of(leader);
+    let mut server = HubServer::start("127.0.0.1:0", service).unwrap();
+    let tailer = Tailer::start(server.service().clone(), FollowerConfig::new(leader));
+    server.attach_tailer(tailer);
+    server
+}
+
+fn honest_runs(job: JobKind, n: usize, seed: u64) -> Dataset {
+    let catalog = Catalog::aws_like();
+    let model = WorkloadModel::default();
+    let mt = catalog.get("m5.xlarge").unwrap();
+    let mut rng = Pcg::seed(seed);
+    let mut ds = Dataset::new(job);
+    for _ in 0..n {
+        let s = rng.range(2, 13) as u32;
+        let (d, ctx) = match job {
+            JobKind::Sort => (rng.range_f64(10.0, 20.0), vec![]),
+            JobKind::KMeans => (rng.range_f64(10.0, 20.0), vec![5.0, 0.001]),
+            _ => (rng.range_f64(10.0, 20.0), vec![0.01]),
+        };
+        let input = JobInput::new(job, d, ctx);
+        ds.push(model.observe(mt, s, &input, &mut rng)).unwrap();
+    }
+    ds
+}
+
+fn wait_until(timeout: Duration, mut ready: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    loop {
+        if ready() {
+            return true;
+        }
+        if start.elapsed() >= timeout {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Canonical corpus bytes, for bit-identity comparisons.
+fn corpus_tsv(client: &mut HubClient, job: JobKind) -> (u64, String) {
+    let repo = client.get_repo(job).unwrap();
+    (repo.revision, repo.data.to_table().unwrap().to_text().unwrap())
+}
+
+#[test]
+fn leader_and_two_followers_converge_bit_identically() {
+    let ldir = fresh_dir("leader");
+    let adir = fresh_dir("follower_a");
+    let bdir = fresh_dir("follower_b");
+    let leader = start_leader(&ldir);
+    let leader_addr = leader.addr.to_string();
+
+    // Submits land on the leader only.
+    let mut lc = HubClient::connect(&leader_addr).unwrap();
+    for (n, seed) in [(30, 1), (20, 2)] {
+        let out = lc.submit_runs(&honest_runs(JobKind::Sort, n, seed)).unwrap();
+        assert!(out.accepted, "{}", out.reason);
+    }
+    assert!(lc.submit_runs(&honest_runs(JobKind::Grep, 30, 3)).unwrap().accepted);
+
+    let fa = start_follower(&adir, &leader_addr);
+    let fb = start_follower(&bdir, &leader_addr);
+    let mut ca = HubClient::connect(&fa.addr.to_string()).unwrap();
+    let mut cb = HubClient::connect(&fb.addr.to_string()).unwrap();
+
+    // Both followers converge to the leader's per-repo watermarks ...
+    let lstats = lc.stats().unwrap();
+    assert_eq!(
+        lstats.per_repo.iter().find(|r| r.job == JobKind::Sort).unwrap().revision,
+        2
+    );
+    let converged = wait_until(Duration::from_secs(30), || {
+        [&mut ca, &mut cb]
+            .into_iter()
+            .all(|c| c.stats().unwrap().per_repo == lstats.per_repo)
+    });
+    assert!(converged, "followers did not reach the leader's watermarks");
+
+    // ... with byte-identical corpora ...
+    for job in [JobKind::Sort, JobKind::Grep] {
+        let want = corpus_tsv(&mut lc, job);
+        assert_eq!(corpus_tsv(&mut ca, job), want, "follower A diverged on {job}");
+        assert_eq!(corpus_tsv(&mut cb, job), want, "follower B diverged on {job}");
+    }
+
+    // ... and bit-identical predict_batch answers (each hub fits its own
+    // model on its replicated revision — determinism does the rest).
+    let rows: Vec<Vec<f64>> = (2..=12).map(|s| vec![s as f64, 15.0]).collect();
+    let want = lc.predict_batch(JobKind::Sort, None, &rows).unwrap();
+    for (name, c) in [("A", &mut ca), ("B", &mut cb)] {
+        let got = c.predict_batch(JobKind::Sort, None, &rows).unwrap();
+        assert_eq!(got.model, want.model, "follower {name} chose another model");
+        for (g, w) in got.runtimes.iter().zip(want.runtimes.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "follower {name} prediction differs");
+        }
+    }
+
+    // Writes on a follower are refused with a typed not_leader error
+    // naming the leader.
+    let err = ca.submit_runs(&honest_runs(JobKind::Sort, 4, 9)).unwrap_err().to_string();
+    assert!(err.contains("not_leader"), "{err}");
+    assert!(err.contains(&leader_addr), "error must name the leader: {err}");
+    // The refused follower still serves reads.
+    ca.stats().unwrap();
+
+    // A later submit on the leader reaches both followers too.
+    assert!(lc.submit_runs(&honest_runs(JobKind::Sort, 6, 4)).unwrap().accepted);
+    let caught_up = wait_until(Duration::from_secs(30), || {
+        [&mut ca, &mut cb]
+            .into_iter()
+            .all(|c| c.get_repo(JobKind::Sort).unwrap().revision == 3)
+    });
+    assert!(caught_up, "followers missed the post-convergence submit");
+    let want = corpus_tsv(&mut lc, JobKind::Sort);
+    assert_eq!(corpus_tsv(&mut ca, JobKind::Sort), want);
+    assert_eq!(corpus_tsv(&mut cb, JobKind::Sort), want);
+
+    fa.shutdown();
+    fb.shutdown();
+    leader.shutdown();
+    for dir in [ldir, adir, bdir] {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn follower_killed_mid_tail_resumes_from_its_watermark() {
+    let ldir = fresh_dir("kill_leader");
+    let fdir = fresh_dir("kill_follower");
+    let leader = start_leader(&ldir);
+    let leader_addr = leader.addr.to_string();
+    let mut lc = HubClient::connect(&leader_addr).unwrap();
+    for (n, seed) in [(10, 21), (8, 22), (6, 23)] {
+        assert!(lc.submit_runs(&honest_runs(JobKind::Sort, n, seed)).unwrap().accepted);
+    }
+
+    // First follower incarnation: apply only part of the log (a tailer
+    // interrupted mid-page), then die with no drain, no sync, no snapshot
+    // — the kill -9 equivalent for in-process state.
+    {
+        let state = empty_state();
+        let (store, recovered) = open_store(&fdir);
+        assert!(recovered.is_empty());
+        state.set_storage(store).unwrap();
+        let service = service_on(state);
+        let mut repl = HubClient::connect(&leader_addr).unwrap();
+        let page = repl.repl_fetch(JobKind::Sort, 0, 2).unwrap();
+        assert_eq!(page.records.len(), 2, "mid-tail: two of three revisions applied");
+        for rec in &page.records {
+            service.apply_replicated(JobKind::Sort, rec.revision, &rec.data_tsv).unwrap();
+        }
+        drop(service.state().detach_storage());
+        // Everything (state, service, store Arc) drops here unsynced.
+    }
+
+    // Reopen the same data dir: recovery replays the follower's own WAL.
+    let state = empty_state();
+    let (store, recovered) = open_store(&fdir);
+    let sort = recovered.into_iter().find(|r| r.job == JobKind::Sort).unwrap();
+    assert_eq!(sort.revision, 2, "watermark survived the crash");
+    assert_eq!(sort.replayed, 2, "both applied records replay from the WAL");
+    let expected_records = sort.data.len();
+    state.install_recovered(sort);
+    state.set_storage(store).unwrap();
+    assert_eq!(state.get(JobKind::Sort).unwrap().data.len(), expected_records);
+    let service = service_on(state);
+    service.set_follower_of(leader_addr.as_str());
+
+    // Re-applying an already-applied revision is refused: no double-apply
+    // after the restart.
+    let mut repl = HubClient::connect(&leader_addr).unwrap();
+    let replay = repl.repl_fetch(JobKind::Sort, 0, 1).unwrap();
+    let err = service
+        .apply_replicated(JobKind::Sort, replay.records[0].revision, &replay.records[0].data_tsv)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("replication gap"), "{err}");
+
+    // Resuming from the watermark closes the gap left by the crash.
+    let applied = sync_once(&service, &mut repl, 64).unwrap();
+    assert_eq!(applied, 1, "exactly the missing revision is fetched");
+    assert_eq!(service.state().revision(JobKind::Sort), Some(3));
+    let follower_tsv = {
+        let repo = service.state().get(JobKind::Sort).unwrap();
+        repo.data.to_table().unwrap().to_text().unwrap()
+    };
+    assert_eq!(corpus_tsv(&mut lc, JobKind::Sort), (3, follower_tsv));
+
+    drop(service.state().detach_storage());
+    leader.shutdown();
+    for dir in [ldir, fdir] {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn cold_follower_behind_the_compaction_horizon_bootstraps_from_snapshot() {
+    let ldir = fresh_dir("snap_leader");
+    let leader = start_leader(&ldir);
+    let leader_addr = leader.addr.to_string();
+    let mut lc = HubClient::connect(&leader_addr).unwrap();
+    for (n, seed) in [(10, 31), (8, 32)] {
+        assert!(lc.submit_runs(&honest_runs(JobKind::Sort, n, seed)).unwrap().accepted);
+    }
+    // Compact the leader's WAL: revisions 1-2 now exist only in the
+    // snapshot, so a cold follower cannot tail from revision 0.
+    let store = leader.state().storage().unwrap();
+    leader.state().snapshot_to(&store).unwrap();
+
+    let state = empty_state();
+    let service = service_on(state);
+    service.set_follower_of(leader_addr.as_str());
+    let mut repl = HubClient::connect(&leader_addr).unwrap();
+    let hs = repl.repl_subscribe(JobKind::Sort, 0).unwrap();
+    assert_eq!(hs.leader_revision, 2);
+    assert!(hs.compacted, "cold start behind the horizon must be flagged");
+
+    // sync_once detects the horizon itself and falls back to the
+    // snapshot image; install_snapshot is also callable directly.
+    let applied = sync_once(&service, &mut repl, 64).unwrap();
+    assert_eq!(applied, 0, "bootstrap installs the image; no WAL records to apply");
+    assert_eq!(service.state().revision(JobKind::Sort), Some(2));
+    assert_eq!(install_snapshot(&service, &mut repl).unwrap(), 0, "already current");
+    let follower_tsv = {
+        let repo = service.state().get(JobKind::Sort).unwrap();
+        repo.data.to_table().unwrap().to_text().unwrap()
+    };
+    assert_eq!(corpus_tsv(&mut lc, JobKind::Sort), (2, follower_tsv));
+
+    // Post-bootstrap submits replicate incrementally through the WAL.
+    assert!(lc.submit_runs(&honest_runs(JobKind::Sort, 6, 33)).unwrap().accepted);
+    assert_eq!(sync_once(&service, &mut repl, 64).unwrap(), 1);
+    assert_eq!(service.state().revision(JobKind::Sort), Some(3));
+    assert_eq!(
+        corpus_tsv(&mut lc, JobKind::Sort).1,
+        service
+            .state()
+            .get(JobKind::Sort)
+            .unwrap()
+            .data
+            .to_table()
+            .unwrap()
+            .to_text()
+            .unwrap()
+    );
+
+    leader.shutdown();
+    std::fs::remove_dir_all(&ldir).ok();
+}
