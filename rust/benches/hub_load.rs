@@ -1,30 +1,38 @@
-//! E9 — hub load: requests/sec through the TCP worker-pool server.
+//! E9 — hub load: requests/sec through the reactor-transport TCP server.
 //!
-//! Drives a live [`HubServer`] with K concurrent clients issuing
-//! `predict_batch` frames and reports aggregate throughput:
+//! Drives a live [`HubServer`] and reports, per phase:
 //!
 //!   * cold — fresh server per sample: the first request pays the full
 //!     dynamic model-selection fit,
 //!   * warm — one long-lived server, primed once: every request is
 //!     answered from the sharded fitted-model cache (asserted: zero
-//!     refits), measured at 1, 2, 4 and 8 concurrent clients.
+//!     refits), measured at 1, 2, 4 and 8 concurrent clients,
+//!   * pipelined — one connection keeping a sliding window of requests
+//!     in flight vs the strict write→read roundtrip of `HubClient`,
+//!   * idle connections — hundreds of mostly-idle pipelined connections
+//!     parked on the reactor while a handful of active clients measure
+//!     warm-predict p50/p99 latency and aggregate throughput,
+//!   * coalescing — concurrent single-row `predict`s folded into batched
+//!     model calls under a small coalescing window.
 //!
-//! A single client is latency-bound (write → server → read ping-pong);
-//! the worker pool + striped cache let K clients overlap those cycles, so
-//! warm throughput should scale with the client count. Results land in
-//! `BENCH_hub_load.json` (section `hub_load`) so the perf trajectory is
-//! tracked across PRs.
+//! A single roundtrip client is latency-bound; the reactor + worker pool
+//! let concurrent clients (or one pipelined connection) overlap those
+//! cycles. Results land in `BENCH_hub_load.json` (section `hub_load`) so
+//! the perf trajectory is tracked across PRs; `C3O_BENCH_SMOKE=1` shrinks
+//! request counts (but keeps the full idle-connection herd) for CI.
 
 mod common;
 
+use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use c3o::api::proto::{BatchPrediction, Op};
 use c3o::api::service::PredictionService;
 use c3o::cloud::Catalog;
 use c3o::data::JobKind;
 use c3o::hub::{
-    HubClient, HubServer, HubState, Repository, ServerConfig, ValidationPolicy,
+    HubClient, HubServer, HubState, PipelinedClient, Repository, ServerConfig, ValidationPolicy,
 };
 use c3o::runtime::FitBackend;
 use c3o::sim::{generate_job, GeneratorConfig};
@@ -33,6 +41,8 @@ use c3o::util::json::Json;
 const ROWS_PER_REQUEST: usize = 8;
 const WARM_TOTAL_REQS: usize = 400;
 const CLIENT_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const PIPELINE_DEPTH: usize = 32;
+const IDLE_CONNS: usize = 256;
 
 fn service(backend: Arc<dyn FitBackend>) -> Arc<PredictionService> {
     let catalog = Catalog::aws_like();
@@ -52,7 +62,7 @@ fn rows() -> Vec<Vec<f64>> {
 }
 
 /// Drive `reqs_per_client` warm `predict_batch` requests from `clients`
-/// concurrent connections; returns aggregate requests/sec.
+/// concurrent roundtrip connections; returns aggregate requests/sec.
 fn drive(addr: &str, clients: usize, reqs_per_client: usize) -> f64 {
     let rows = rows();
     let t0 = Instant::now();
@@ -70,13 +80,45 @@ fn drive(addr: &str, clients: usize, reqs_per_client: usize) -> f64 {
     (clients * reqs_per_client) as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Drive `total` warm `predict_batch` requests through ONE pipelined
+/// connection with a sliding window of `depth` in-flight requests;
+/// returns requests/sec.
+fn drive_pipelined(addr: &str, total: usize, depth: usize) -> f64 {
+    let rows = rows();
+    let mut p = PipelinedClient::connect(addr).expect("connect");
+    let mut pending = VecDeque::new();
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < total {
+        while sent < total && pending.len() < depth {
+            let id = p
+                .send(Op::PredictBatch {
+                    job: JobKind::Sort,
+                    machine_type: None,
+                    rows: rows.clone(),
+                })
+                .expect("send");
+            pending.push_back(id);
+            sent += 1;
+        }
+        let id = pending.pop_front().expect("pipeline not empty");
+        let b = BatchPrediction::from_json(&p.wait(id).expect("wait")).expect("payload");
+        assert!(b.cached, "pipelined load loop must stay on the warm path");
+        done += 1;
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     let backend = common::backend();
-    println!("== E9: hub load — worker-pool throughput over TCP ==\n");
+    let smoke = common::smoke();
+    println!("== E9: hub load — reactor-transport throughput over TCP ==\n");
 
     // Cold: fresh server per sample; the first predict_batch pays the fit.
+    let cold_samples = if smoke { 1 } else { 3 };
     let mut cold = Vec::new();
-    for _ in 0..3 {
+    for _ in 0..cold_samples {
         let svc = service(backend.clone());
         let server = HubServer::start_with(
             "127.0.0.1:0",
@@ -99,6 +141,7 @@ fn main() {
     );
 
     // Warm: one server, primed once, then driven at increasing K.
+    let warm_total = if smoke { 80 } else { WARM_TOTAL_REQS };
     let svc = service(backend.clone());
     let server = HubServer::start_with(
         "127.0.0.1:0",
@@ -110,11 +153,11 @@ fn main() {
     let mut prime = HubClient::connect(&addr).expect("connect");
     prime.predict_batch(JobKind::Sort, None, &rows()).expect("prime");
     drop(prime);
-    drive(&addr, 1, 50); // unmeasured warmup of the whole path
+    drive(&addr, 1, if smoke { 10 } else { 50 }); // unmeasured warmup of the whole path
 
     let mut per_k: Vec<(usize, f64)> = Vec::new();
     for &k in &CLIENT_COUNTS {
-        let rps = drive(&addr, k, WARM_TOTAL_REQS / k);
+        let rps = drive(&addr, k, warm_total / k);
         println!("  warm predict_batch, {k:>2} client(s)  {rps:>10.0} req/s");
         per_k.push((k, rps));
     }
@@ -123,10 +166,121 @@ fn main() {
     let scaling = rps_max / rps1.max(1e-12);
     println!("\n  -> warm scaling, {} clients vs 1: {scaling:.2}x", CLIENT_COUNTS[3]);
 
-    // The whole warm phase must have been served by the single primed fit.
+    // Pipelined vs roundtrip, same warm server, ONE connection: a sliding
+    // window of in-flight requests hides the per-request RTT behind
+    // server-side processing.
+    let pipe_total = if smoke { 200 } else { 2000 };
+    let pipe_rps = drive_pipelined(&addr, pipe_total, PIPELINE_DEPTH);
+    let speedup = pipe_rps / rps1.max(1e-12);
+    println!(
+        "  pipelined depth {PIPELINE_DEPTH}, 1 conn     {pipe_rps:>10.0} req/s  \
+         ({speedup:.2}x vs roundtrip)"
+    );
+
+    // The whole warm + pipelined phase was served by the single primed fit.
     let mut c = HubClient::connect(&addr).expect("connect");
     let stats = c.stats().expect("stats");
     assert_eq!(stats.fits, 1, "warm load loop must never refit");
+    server.shutdown();
+
+    // Idle-connection herd: IDLE_CONNS mostly-idle pipelined connections
+    // parked on the reactor (one fd each, no worker held) while 8 active
+    // clients measure warm single-row predict latency.
+    let svc = service(backend.clone());
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        svc,
+        ServerConfig {
+            workers: 4,
+            max_conns: 512,
+            idle_timeout: Duration::from_secs(3600),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("start hub");
+    let addr = server.addr.to_string();
+    let mut probe = HubClient::connect(&addr).expect("connect");
+    probe.predict_batch(JobKind::Sort, None, &rows()).expect("prime");
+
+    let mut idle: Vec<PipelinedClient> = Vec::new();
+    for _ in 0..IDLE_CONNS {
+        let mut p = PipelinedClient::connect(&addr).expect("idle connect");
+        let id = p.send_stats().expect("send");
+        p.wait_stats(id).expect("stats");
+        idle.push(p);
+    }
+    let open = probe.stats().expect("stats").open_connections;
+    assert!(open >= IDLE_CONNS as u64, "hub reports only {open} open connections");
+
+    let active = 8;
+    let idle_per_client = if smoke { 25 } else { 200 };
+    let t0 = Instant::now();
+    let mut lat_ms: Vec<f64> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..active {
+            let addr = addr.clone();
+            handles.push(scope.spawn(move || {
+                let mut c = HubClient::connect(&addr).expect("connect");
+                let mut lat = Vec::with_capacity(idle_per_client);
+                for i in 0..idle_per_client {
+                    let row = [2.0 + (i % 11) as f64, 10.0 + (i % 20) as f64];
+                    let t = Instant::now();
+                    let p = c.predict(JobKind::Sort, None, &row).expect("predict");
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    assert!(p.cached, "active clients must stay on the warm path");
+                }
+                lat
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("active client")).collect()
+    });
+    let idle_rps = (active * idle_per_client) as f64 / t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat_ms[lat_ms.len() / 2];
+    let p99 = lat_ms[(lat_ms.len() * 99 / 100).min(lat_ms.len() - 1)];
+    println!(
+        "  {IDLE_CONNS} idle conns + {active} active   p50 {p50:>6.2} ms  p99 {p99:>6.2} ms  \
+         ({idle_rps:>7.0} req/s)"
+    );
+    drop(idle);
+    server.shutdown();
+
+    // Coalescing: concurrent single-row predicts of the same
+    // (job, machine_type) folded into batched model calls.
+    let svc = service(backend.clone());
+    let window = Duration::from_millis(2);
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        svc,
+        ServerConfig { workers: 16, coalesce_window: window, ..ServerConfig::default() },
+    )
+    .expect("start hub");
+    let addr = server.addr.to_string();
+    let mut probe = HubClient::connect(&addr).expect("connect");
+    probe.predict_batch(JobKind::Sort, None, &rows()).expect("prime");
+
+    let co_clients = 8;
+    let co_per_client = if smoke { 30 } else { 150 };
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..co_clients {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut c = HubClient::connect(&addr).expect("connect");
+                for i in 0..co_per_client {
+                    let row = [2.0 + ((t + i) % 11) as f64, 15.0];
+                    let p = c.predict(JobKind::Sort, None, &row).expect("predict");
+                    assert!(p.runtime_s.is_finite() && p.runtime_s > 0.0);
+                }
+            });
+        }
+    });
+    let co_rps = (co_clients * co_per_client) as f64 / t0.elapsed().as_secs_f64();
+    let coalesced = probe.stats().expect("stats").coalesced_predicts;
+    println!(
+        "  coalescing {window:?}, {co_clients} clients     {co_rps:>10.0} req/s  \
+         ({coalesced} predicts coalesced)"
+    );
     server.shutdown();
 
     let warm: Vec<Json> = per_k
@@ -147,6 +301,34 @@ fn main() {
             ("cold_rps", Json::Num(1.0 / cold_mean)),
             ("warm", Json::Arr(warm)),
             ("warm_scaling_8_vs_1", Json::Num(scaling)),
+            (
+                "pipelined",
+                Json::obj(vec![
+                    ("depth", Json::Num(PIPELINE_DEPTH as f64)),
+                    ("rps", Json::Num(pipe_rps)),
+                    ("sync_rps", Json::Num(rps1)),
+                    ("speedup", Json::Num(speedup)),
+                ]),
+            ),
+            (
+                "idle_conns",
+                Json::obj(vec![
+                    ("idle", Json::Num(IDLE_CONNS as f64)),
+                    ("active", Json::Num(active as f64)),
+                    ("open_connections", Json::Num(open as f64)),
+                    ("p50_ms", Json::Num(p50)),
+                    ("p99_ms", Json::Num(p99)),
+                    ("rps", Json::Num(idle_rps)),
+                ]),
+            ),
+            (
+                "coalesce",
+                Json::obj(vec![
+                    ("window_us", Json::Num(window.as_micros() as f64)),
+                    ("rps", Json::Num(co_rps)),
+                    ("coalesced", Json::Num(coalesced as f64)),
+                ]),
+            ),
         ]),
     );
 }

@@ -119,6 +119,129 @@ impl std::fmt::Display for WireError {
 impl std::error::Error for WireError {}
 
 // ---------------------------------------------------------------------------
+// Incremental frame decoding (reactor read path)
+// ---------------------------------------------------------------------------
+
+/// Hard cap on a single wire frame. Far above any legitimate request
+/// (the largest — a full-corpus `submit_runs` — is a few MiB) yet small
+/// enough that one misbehaving peer cannot buffer the hub into the
+/// ground.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Incremental newline-frame assembler for the non-blocking read path.
+///
+/// The reactor hands this whatever `read(2)` produced — frames split at
+/// arbitrary byte boundaries, several frames per chunk, interleaved
+/// arrival across connections (one decoder per connection) — and pulls
+/// out complete lines via [`FrameDecoder::next_frame`].
+///
+/// The length cap is enforced **before** buffering: a segment that would
+/// push the current partial frame past `max_frame` is rejected without
+/// copying it in, and the decoder poisons itself (the connection is
+/// protocol-broken — resynchronizing on the next newline would mis-frame
+/// whatever follows).
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`; compacted opportunistically.
+    start: usize,
+    /// Bytes of the trailing partial frame (after the last newline).
+    tail_len: usize,
+    max_frame: usize,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame: usize) -> FrameDecoder {
+        FrameDecoder { buf: Vec::new(), start: 0, tail_len: 0, max_frame, poisoned: false }
+    }
+
+    /// Append raw bytes from the socket. `Err` means the peer sent a
+    /// frame longer than `max_frame`; the oversized bytes were *not*
+    /// buffered and the decoder yields no further frames.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<(), WireError> {
+        if self.poisoned {
+            return Err(self.overflow());
+        }
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            match rest.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.tail_len + pos > self.max_frame {
+                        self.poisoned = true;
+                        return Err(self.overflow());
+                    }
+                    self.buf.extend_from_slice(&rest[..=pos]);
+                    self.tail_len = 0;
+                    rest = &rest[pos + 1..];
+                }
+                None => {
+                    if self.tail_len + rest.len() > self.max_frame {
+                        self.poisoned = true;
+                        return Err(self.overflow());
+                    }
+                    self.buf.extend_from_slice(rest);
+                    self.tail_len += rest.len();
+                    rest = &[];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The next complete frame, if one is buffered. Strips the trailing
+    /// `\n` (and one `\r` before it, for telnet-style peers). Returns
+    /// `None` once poisoned — even for frames completed before the
+    /// overflow — because the connection is being torn down anyway.
+    pub fn next_frame(&mut self) -> Option<String> {
+        if self.poisoned {
+            return None;
+        }
+        let pos = self.buf[self.start..].iter().position(|&b| b == b'\n')?;
+        let nl = self.start + pos;
+        let mut end = nl;
+        if end > self.start && self.buf[end - 1] == b'\r' {
+            end -= 1;
+        }
+        let line = String::from_utf8_lossy(&self.buf[self.start..end]).into_owned();
+        self.start = nl + 1;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 64 * 1024 {
+            // Keep the consumed prefix from growing unboundedly under a
+            // firehose of small frames.
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Some(line)
+    }
+
+    /// Bytes buffered but not yet returned (bounded by `max_frame` plus
+    /// completed-but-unpulled frames).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    fn overflow(&self) -> WireError {
+        WireError::new(
+            ErrorCode::BadRequest,
+            format!("frame exceeds {} bytes", self.max_frame),
+        )
+    }
+}
+
+impl Default for FrameDecoder {
+    fn default() -> FrameDecoder {
+        FrameDecoder::new(MAX_FRAME_BYTES)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Field helpers (server-side decode -> WireError)
 // ---------------------------------------------------------------------------
 
@@ -905,6 +1028,14 @@ pub struct HubStats {
     pub snapshots: u64,
     /// WAL backlog: appends not yet covered by a snapshot.
     pub appends_since_snapshot: u64,
+    /// Transport: currently open connections (0 when the service is
+    /// driven in-process without the event-loop transport).
+    pub open_connections: u64,
+    /// Transport: deepest per-connection request pipeline observed.
+    pub peak_pipeline_depth: u64,
+    /// Predicts answered through a coalesced `predict_batch` instead of
+    /// individually (0 when the coalescing window is disabled).
+    pub coalesced_predicts: u64,
     /// Per-repository `{revision, records}` watermarks.
     pub per_repo: Vec<RepoStats>,
 }
@@ -924,6 +1055,15 @@ impl HubStats {
             (
                 "appends_since_snapshot",
                 Json::Num(self.appends_since_snapshot as f64),
+            ),
+            ("open_connections", Json::Num(self.open_connections as f64)),
+            (
+                "peak_pipeline_depth",
+                Json::Num(self.peak_pipeline_depth as f64),
+            ),
+            (
+                "coalesced_predicts",
+                Json::Num(self.coalesced_predicts as f64),
             ),
             (
                 "per_repo",
@@ -956,6 +1096,20 @@ impl HubStats {
             snapshots: j.get("snapshots").and_then(Json::as_u64).unwrap_or(0),
             appends_since_snapshot: j
                 .get("appends_since_snapshot")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            // Transport counters are additive too: absent from hubs that
+            // predate the event-loop transport.
+            open_connections: j
+                .get("open_connections")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            peak_pipeline_depth: j
+                .get("peak_pipeline_depth")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            coalesced_predicts: j
+                .get("coalesced_predicts")
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
             per_repo,
@@ -1670,6 +1824,9 @@ mod tests {
             wal_appends: 3,
             snapshots: 1,
             appends_since_snapshot: 2,
+            open_connections: 9,
+            peak_pipeline_depth: 32,
+            coalesced_predicts: 17,
             per_repo: vec![
                 RepoStats { job: JobKind::Sort, revision: 2, records: 132 },
                 RepoStats { job: JobKind::Grep, revision: 1, records: 129 },
@@ -1691,5 +1848,51 @@ mod tests {
         assert_eq!((s.wal_appends, s.snapshots), (0, 0));
         assert_eq!(s.appends_since_snapshot, 0);
         assert!(s.per_repo.is_empty(), "pre-replication hubs ship no per-repo stats");
+        let transport =
+            (s.open_connections, s.peak_pipeline_depth, s.coalesced_predicts);
+        assert_eq!(transport, (0, 0, 0), "transport counters are additive in v1");
+    }
+
+    #[test]
+    fn frame_decoder_reassembles_split_frames() {
+        let mut d = FrameDecoder::default();
+        d.feed(b"{\"a\":1}\n{\"b\"").unwrap();
+        assert_eq!(d.next_frame().as_deref(), Some("{\"a\":1}"));
+        assert_eq!(d.next_frame(), None, "second frame still partial");
+        d.feed(b":2}\n").unwrap();
+        assert_eq!(d.next_frame().as_deref(), Some("{\"b\":2}"));
+        assert_eq!(d.next_frame(), None);
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_decoder_strips_crlf_and_keeps_empty_lines() {
+        let mut d = FrameDecoder::default();
+        d.feed(b"hello\r\n\nworld\n").unwrap();
+        assert_eq!(d.next_frame().as_deref(), Some("hello"));
+        assert_eq!(d.next_frame().as_deref(), Some(""));
+        assert_eq!(d.next_frame().as_deref(), Some("world"));
+        assert_eq!(d.next_frame(), None);
+    }
+
+    #[test]
+    fn frame_decoder_rejects_oversized_frames_without_buffering() {
+        let mut d = FrameDecoder::new(8);
+        // A complete small frame in the same chunk still doesn't save the
+        // oversized one that follows.
+        let err = d.feed(b"ok\nthis frame is way past eight bytes").unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("exceeds 8 bytes"), "{}", err.message);
+        assert!(d.is_poisoned());
+        assert_eq!(d.next_frame(), None, "poisoned decoders yield nothing");
+        assert!(d.buffered() <= 8 + 1, "oversized bytes were not buffered");
+        // Drip-fed oversize (no newline ever) is caught at the cap too.
+        let mut d = FrameDecoder::new(8);
+        for _ in 0..4 {
+            if d.feed(b"abc").is_err() {
+                break;
+            }
+        }
+        assert!(d.is_poisoned());
     }
 }

@@ -21,7 +21,8 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::cloud::Catalog;
 use crate::configurator::{
@@ -30,6 +31,7 @@ use crate::configurator::{
 };
 use crate::cv::parallel::FitEngine;
 use crate::data::{Dataset, FeatureMatrix, JobKind};
+use crate::hub::transport::TransportStats;
 use crate::hub::{HubState, ValidationPolicy};
 use crate::models::C3oPredictor;
 use crate::runtime::FitBackend;
@@ -72,6 +74,49 @@ type CacheKey = (JobKind, String);
 /// short walk.
 const CACHE_STRIPES: usize = 16;
 
+/// Coalescing groups key on the *request's* `(job, machine_type)` pair —
+/// before maintainer-default resolution — so grouping never changes which
+/// model a request resolves to.
+type CoalesceKey = (JobKind, Option<String>);
+
+/// One open micro-batch of concurrent `predict` requests (DESIGN.md §7).
+/// The first arrival becomes the *leader*: it sleeps out the coalescing
+/// window, closes the group, runs one batched prediction over every
+/// gathered row and publishes the result; *followers* append their row
+/// and park on the condvar. The leader never waits on followers, so the
+/// scheme cannot deadlock.
+struct CoalesceGroup {
+    state: Mutex<GroupState>,
+    done: Condvar,
+}
+
+struct GroupState {
+    rows: Vec<Vec<f64>>,
+    /// Set by the leader when it departs with the rows; guarded by the
+    /// group-map lock, so joiners never see a closed group in the map.
+    closed: bool,
+    result: Option<Result<GroupResult, WireError>>,
+}
+
+/// The leader's batched outcome, fanned back out by row index.
+struct GroupResult {
+    machine_type: String,
+    model: String,
+    cached: bool,
+    runtimes: Vec<f64>,
+}
+
+impl GroupResult {
+    fn prediction(&self, index: usize) -> Prediction {
+        Prediction {
+            machine_type: self.machine_type.clone(),
+            model: self.model.clone(),
+            cached: self.cached,
+            runtime_s: self.runtimes[index],
+        }
+    }
+}
+
 /// The hub's stateful prediction engine.
 pub struct PredictionService {
     state: Arc<HubState>,
@@ -99,6 +144,21 @@ pub struct PredictionService {
     follower_of: RwLock<Option<String>>,
     fits: AtomicU64,
     cache_hits: AtomicU64,
+    /// How long the first `predict` of a micro-batch waits for company
+    /// before fitting alone. Zero (the default) disables coalescing:
+    /// every predict takes the direct path.
+    coalesce_window: RwLock<Duration>,
+    /// Open coalescing groups by request key. Entries live only for the
+    /// duration of one window; the leader removes its group under this
+    /// lock before closing it.
+    coalesce_groups: Mutex<HashMap<CoalesceKey, Arc<CoalesceGroup>>>,
+    /// Predicts answered through a coalesced batch (counted only when a
+    /// group actually merged ≥ 2 requests).
+    coalesced_predicts: AtomicU64,
+    /// Transport-layer counters, installed by [`crate::hub::HubServer`]
+    /// so the `stats` op can report them. `None` for embedded
+    /// (service-only) uses.
+    transport: RwLock<Option<Arc<TransportStats>>>,
 }
 
 impl PredictionService {
@@ -119,7 +179,21 @@ impl PredictionService {
             follower_of: RwLock::new(None),
             fits: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            coalesce_window: RwLock::new(Duration::ZERO),
+            coalesce_groups: Mutex::new(HashMap::new()),
+            coalesced_predicts: AtomicU64::new(0),
+            transport: RwLock::new(None),
         }
+    }
+
+    /// Set the predict-coalescing window. Zero disables coalescing.
+    pub fn set_coalesce_window(&self, window: Duration) {
+        *self.coalesce_window.write().unwrap() = window;
+    }
+
+    /// Install the transport counters reported by the `stats` op.
+    pub fn set_transport_stats(&self, stats: Arc<TransportStats>) {
+        *self.transport.write().unwrap() = Some(stats);
     }
 
     /// Mark this hub a read-only follower of `leader` (DESIGN.md §11):
@@ -382,6 +456,18 @@ impl PredictionService {
                 records: r.data.len() as u64,
             })
             .collect();
+        let (open_connections, peak_pipeline_depth) = self
+            .transport
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|t| {
+                (
+                    t.open_connections.load(Ordering::Relaxed),
+                    t.peak_pipeline_depth.load(Ordering::Relaxed),
+                )
+            })
+            .unwrap_or((0, 0));
         HubStats {
             accepted,
             rejected,
@@ -393,6 +479,9 @@ impl PredictionService {
             wal_appends: sstats.wal_appends,
             snapshots: sstats.snapshots,
             appends_since_snapshot: sstats.pending,
+            open_connections,
+            peak_pipeline_depth,
+            coalesced_predicts: self.coalesced_predicts.load(Ordering::Relaxed),
             per_repo,
         }
     }
@@ -513,16 +602,134 @@ impl PredictionService {
         features: &[f64],
     ) -> Result<Prediction, WireError> {
         self.check_arity(job, features.len(), "features")?;
+        let window = *self.coalesce_window.read().unwrap();
+        if window.is_zero() {
+            let res = self.predict_rows(job, machine_type, &[features.to_vec()])?;
+            return Ok(res.prediction(0));
+        }
+        self.predict_coalesced(job, machine_type, features, window)
+    }
+
+    /// Micro-batching `predict` path: concurrent requests for the same
+    /// `(job, machine_type)` within `window` are folded into one batched
+    /// prediction against the cached model and fanned back out. Runtimes
+    /// are **bit-identical** to the direct path — the batch resolves the
+    /// same model through [`PredictionService::fitted`] and runs the same
+    /// `predict_one` per row; coalescing only changes *when* rows are
+    /// evaluated, never *how*.
+    fn predict_coalesced(
+        &self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        features: &[f64],
+        window: Duration,
+    ) -> Result<Prediction, WireError> {
+        let key: CoalesceKey = (job, machine_type.map(str::to_string));
+        // Join an open group or found one. Lock order is group map →
+        // group state, everywhere, and the leader removes its group from
+        // the map in the same critical section that closes it — so a
+        // group found in the map is always still accepting rows.
+        let (group, index) = {
+            let mut groups = self.coalesce_groups.lock().unwrap();
+            if let Some(g) = groups.get(&key) {
+                let g = g.clone();
+                let mut st = g.state.lock().unwrap();
+                debug_assert!(!st.closed, "closed group left in the map");
+                st.rows.push(features.to_vec());
+                let index = st.rows.len() - 1;
+                drop(st);
+                (g, index)
+            } else {
+                let g = Arc::new(CoalesceGroup {
+                    state: Mutex::new(GroupState {
+                        rows: vec![features.to_vec()],
+                        closed: false,
+                        result: None,
+                    }),
+                    done: Condvar::new(),
+                });
+                groups.insert(key.clone(), g.clone());
+                (g, 0)
+            }
+        };
+
+        if index == 0 {
+            // Leader: wait out the window on this worker thread (the
+            // reactor is unaffected — only one worker idles, briefly),
+            // then close the group and answer for everyone.
+            std::thread::sleep(window);
+            let rows = {
+                let mut groups = self.coalesce_groups.lock().unwrap();
+                let mut st = group.state.lock().unwrap();
+                st.closed = true;
+                groups.remove(&key);
+                std::mem::take(&mut st.rows)
+            };
+            let merged = rows.len();
+            let outcome = self.predict_rows(job, machine_type, &rows);
+            if merged > 1 {
+                self.coalesced_predicts.fetch_add(merged as u64, Ordering::Relaxed);
+            }
+            let mut st = group.state.lock().unwrap();
+            st.result = Some(outcome);
+            self.done_extract(st, &group.done, index)
+        } else {
+            // Follower: park until the leader publishes. The generous
+            // timeout only guards against a leader dying mid-fit (worker
+            // panic); falling back to the direct path keeps the request
+            // correct either way.
+            let deadline = Instant::now() + window + Duration::from_secs(60);
+            let mut st = group.state.lock().unwrap();
+            while st.result.is_none() {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    drop(st);
+                    let res = self.predict_rows(job, machine_type, &[features.to_vec()])?;
+                    return Ok(res.prediction(0));
+                }
+                st = group.done.wait_timeout(st, left).unwrap().0;
+            }
+            self.done_extract(st, &group.done, index)
+        }
+    }
+
+    /// Pull row `index`'s prediction out of a finished group (the result
+    /// is present by construction on both caller paths) and pass the
+    /// wake-up along so every parked follower gets a turn.
+    fn done_extract(
+        &self,
+        st: std::sync::MutexGuard<'_, GroupState>,
+        done: &Condvar,
+        index: usize,
+    ) -> Result<Prediction, WireError> {
+        let out = match st.result.as_ref().expect("group result published") {
+            Ok(res) => Ok(res.prediction(index)),
+            Err(e) => Err(e.clone()),
+        };
+        drop(st);
+        done.notify_all();
+        out
+    }
+
+    /// Shared model-resolution + per-row prediction core for `predict`,
+    /// the coalescer and `predict_batch`.
+    fn predict_rows(
+        &self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        rows: &[Vec<f64>],
+    ) -> Result<GroupResult, WireError> {
         let (fm, cached) = self.fitted(job, machine_type)?;
-        let runtime_s = fm
-            .predictor
-            .predict_one(features)
+        let runtimes = rows
+            .iter()
+            .map(|row| fm.predictor.predict_one(row))
+            .collect::<crate::Result<Vec<f64>>>()
             .map_err(|e| WireError::internal(&e))?;
-        Ok(Prediction {
+        Ok(GroupResult {
             machine_type: fm.machine_type.clone(),
             model: fm.chosen.clone(),
             cached,
-            runtime_s,
+            runtimes,
         })
     }
 
@@ -535,17 +742,12 @@ impl PredictionService {
         for row in rows {
             self.check_arity(job, row.len(), "features per row")?;
         }
-        let (fm, cached) = self.fitted(job, machine_type)?;
-        let runtimes = rows
-            .iter()
-            .map(|row| fm.predictor.predict_one(row))
-            .collect::<crate::Result<Vec<f64>>>()
-            .map_err(|e| WireError::internal(&e))?;
+        let res = self.predict_rows(job, machine_type, rows)?;
         Ok(BatchPrediction {
-            machine_type: fm.machine_type.clone(),
-            model: fm.chosen.clone(),
-            cached,
-            runtimes,
+            machine_type: res.machine_type,
+            model: res.model,
+            cached: res.cached,
+            runtimes: res.runtimes,
         })
     }
 
@@ -1140,5 +1342,62 @@ mod tests {
 
         drop(leader.state().detach_storage());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn coalesced_predicts_are_bit_identical_and_counted() {
+        let svc = Arc::new(service_with_data());
+        // Reference runtimes from the direct path (window disabled).
+        let rows: Vec<Vec<f64>> = (2..=9).map(|s| vec![s as f64, 15.0]).collect();
+        let direct: Vec<Prediction> =
+            rows.iter().map(|r| svc.predict(JobKind::Sort, None, r).unwrap()).collect();
+        // Re-run the same predicts coalesced: all threads release into
+        // the same window together.
+        svc.set_coalesce_window(Duration::from_millis(150));
+        let barrier = Arc::new(std::sync::Barrier::new(rows.len()));
+        let handles: Vec<_> = rows
+            .iter()
+            .cloned()
+            .map(|row| {
+                let svc = svc.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    svc.predict(JobKind::Sort, None, &row).unwrap()
+                })
+            })
+            .collect();
+        let coalesced: Vec<Prediction> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (d, c) in direct.iter().zip(&coalesced) {
+            assert_eq!(
+                d.runtime_s.to_bits(),
+                c.runtime_s.to_bits(),
+                "coalesced runtime must be bit-identical to the direct path"
+            );
+            assert_eq!(d.machine_type, c.machine_type);
+            assert_eq!(d.model, c.model);
+        }
+        let stats = svc.stats_payload();
+        assert!(
+            stats.coalesced_predicts >= 2,
+            "barrier-released predicts must merge at least one group, got {}",
+            stats.coalesced_predicts
+        );
+        assert_eq!(svc.fit_stats().0, 1, "coalesced predicts never refit a warm model");
+        assert!(
+            svc.coalesce_groups.lock().unwrap().is_empty(),
+            "departed groups must leave the map"
+        );
+    }
+
+    #[test]
+    fn zero_window_predicts_take_the_direct_path() {
+        let svc = service_with_data();
+        svc.predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        let stats = svc.stats_payload();
+        assert_eq!(stats.coalesced_predicts, 0);
+        let transport = (stats.open_connections, stats.peak_pipeline_depth);
+        assert_eq!(transport, (0, 0), "no transport attached in embedded use");
     }
 }

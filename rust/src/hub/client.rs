@@ -4,7 +4,13 @@
 //! Every call goes through the typed [`crate::api::proto`] layer: the
 //! client assigns a fresh correlation id per request, and rejects replies
 //! whose `id` or protocol version do not match.
+//!
+//! [`HubClient`] is strictly request-per-roundtrip. [`PipelinedClient`]
+//! keeps many requests in flight on one connection and matches replies by
+//! correlation id, tolerating out-of-order completion — the server
+//! answers cheap warm-cache frames ahead of expensive cold fits.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::TcpStream;
 
@@ -272,5 +278,166 @@ impl HubClient {
     pub fn shutdown(&mut self) -> crate::Result<()> {
         self.call(Op::Shutdown)?;
         Ok(())
+    }
+
+    /// Switch this connection into pipelined mode: many requests in
+    /// flight, replies matched by correlation id.
+    pub fn pipelined(self) -> PipelinedClient {
+        PipelinedClient {
+            reader: self.reader,
+            writer: self.writer,
+            next_id: self.next_id,
+            stash: HashMap::new(),
+            outstanding: HashSet::new(),
+        }
+    }
+}
+
+/// Pipelined hub client: [`PipelinedClient::send`] fires a request
+/// without waiting, [`PipelinedClient::wait`] blocks for one specific
+/// reply — stashing any other replies that arrive first, so out-of-order
+/// completion on the server (warm hits overtaking a cold fit) is
+/// transparent to callers.
+pub struct PipelinedClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+    /// Replies that arrived while waiting for a different id.
+    stash: HashMap<u64, Response>,
+    /// Ids sent but not yet returned by `wait`.
+    outstanding: HashSet<u64>,
+}
+
+impl PipelinedClient {
+    /// Connect in pipelined mode (same retry policy as
+    /// [`HubClient::connect`]).
+    pub fn connect(addr: &str) -> crate::Result<PipelinedClient> {
+        Ok(HubClient::connect(addr)?.pipelined())
+    }
+
+    /// Requests sent but not yet waited for.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Whether `id`'s reply has already been *received* (while waiting
+    /// for another id). Purely local — never touches the socket — so a
+    /// `false` after other replies were waited out proves the server
+    /// really answered those first.
+    pub fn has_reply(&self, id: u64) -> bool {
+        self.stash.contains_key(&id)
+    }
+
+    /// Fire one op without waiting for its reply; returns the
+    /// correlation id to later [`PipelinedClient::wait`] on.
+    pub fn send(&mut self, op: Op) -> crate::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::new(id, op);
+        let io = (|| -> std::io::Result<()> {
+            self.writer.write_all(req.to_line().as_bytes())?;
+            self.writer.write_all(b"\n")?;
+            self.writer.flush()
+        })();
+        match io {
+            Ok(()) => {
+                self.outstanding.insert(id);
+                Ok(id)
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::BrokenPipe
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                ) =>
+            {
+                anyhow::bail!("hub closed the connection")
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Block until `id`'s reply arrives (or is already stashed), verify
+    /// the envelope, and return its payload. Replies for *other*
+    /// outstanding ids that arrive meanwhile are stashed for their own
+    /// `wait`.
+    pub fn wait(&mut self, id: u64) -> crate::Result<Json> {
+        anyhow::ensure!(
+            self.outstanding.contains(&id) || self.stash.contains_key(&id),
+            "correlation id {id} is not in flight (never sent, or already waited)"
+        );
+        loop {
+            if let Some(resp) = self.stash.remove(&id) {
+                self.outstanding.remove(&id);
+                return resp.payload(id);
+            }
+            let resp = self.read_reply()?;
+            if resp.id == 0 {
+                // Connection-scoped error channel (flood refusal,
+                // oversized frame): surface it — the connection is dead.
+                if let Err(e) = &resp.result {
+                    anyhow::bail!("hub error {e}");
+                }
+                continue;
+            }
+            if self.outstanding.contains(&resp.id) {
+                self.stash.insert(resp.id, resp);
+            }
+            // Replies for unknown ids are dropped: correlation already
+            // failed once for them (or the caller abandoned the id).
+        }
+    }
+
+    fn read_reply(&mut self) -> crate::Result<Response> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => anyhow::bail!("hub closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::UnexpectedEof
+                        | ErrorKind::BrokenPipe
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                ) =>
+            {
+                anyhow::bail!("hub closed the connection")
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Response::parse(&line)
+    }
+
+    /// Typed `predict` send: one feature row, reply via
+    /// [`PipelinedClient::wait_predict`].
+    pub fn send_predict(
+        &mut self,
+        job: JobKind,
+        machine_type: Option<&str>,
+        features: &[f64],
+    ) -> crate::Result<u64> {
+        self.send(Op::Predict {
+            job,
+            machine_type: machine_type.map(|s| s.to_string()),
+            features: features.to_vec(),
+        })
+    }
+
+    pub fn wait_predict(&mut self, id: u64) -> crate::Result<Prediction> {
+        let payload = self.wait(id)?;
+        Prediction::from_json(&payload)
+    }
+
+    /// Typed `stats` send, for transport-counter probes that ride an
+    /// existing pipeline.
+    pub fn send_stats(&mut self) -> crate::Result<u64> {
+        self.send(Op::Stats)
+    }
+
+    pub fn wait_stats(&mut self, id: u64) -> crate::Result<HubStats> {
+        let payload = self.wait(id)?;
+        HubStats::from_json(&payload)
     }
 }

@@ -12,13 +12,18 @@
 //! * [`validate`] — the §III-C-b contribution gate: retrain with the new
 //!   data and reject it if held-out prediction error degrades (plus
 //!   schema and duplicate-replay defenses).
-//! * [`server`] / [`client`] — newline-delimited-JSON transport over TCP
-//!   (a bounded worker pool of blocking threads; the offline crate cache
-//!   has no tokio, see DESIGN.md §2 and §7). All frames are typed by
-//!   [`crate::api::proto`] (wire protocol v1) and served by
-//!   [`crate::api::service::PredictionService`]. The server also owns the
-//!   durability thread (interval fsync, automatic snapshots) and flushes
-//!   everything on graceful drain.
+//! * [`transport`] — hand-rolled readiness polling (epoll on Linux,
+//!   poll(2) elsewhere; the offline crate cache has no tokio or mio, see
+//!   DESIGN.md §2 and §7) plus the reactor wake channel and transport
+//!   counters.
+//! * [`server`] / [`client`] — newline-delimited-JSON transport over TCP:
+//!   one non-blocking reactor thread owns every socket (frame assembly,
+//!   buffered writes, pipelining, idle reaping) and dispatches decoded
+//!   frames to a bounded worker pool, so CPU-heavy fits never stall I/O.
+//!   All frames are typed by [`crate::api::proto`] (wire protocol v1) and
+//!   served by [`crate::api::service::PredictionService`]. The server
+//!   also owns the durability thread (interval fsync, automatic
+//!   snapshots) and flushes everything on graceful drain.
 //!
 //! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
 //! `stats`, `predict`, `predict_batch`, `configure`, `configure_search`,
@@ -29,9 +34,10 @@
 pub mod client;
 pub mod repo;
 pub mod server;
+pub mod transport;
 pub mod validate;
 
-pub use client::HubClient;
+pub use client::{HubClient, PipelinedClient};
 pub use repo::{HubState, Repository};
 pub use server::{HubServer, ServerConfig};
 pub use validate::{

@@ -1,62 +1,91 @@
-//! Hub server: newline-delimited JSON over TCP, served by a **bounded
-//! worker pool** (DESIGN.md §7).
+//! Hub server: newline-delimited JSON over TCP, served by a
+//! **non-blocking reactor + bounded worker pool** (DESIGN.md §7).
 //!
-//! The accept thread only enqueues connections; `workers` threads each
-//! own one connection at a time and serve its requests to completion.
-//! At most `max_conns` accepted connections may wait for a free worker —
-//! beyond that the hub answers a structured `unavailable` error frame and
-//! closes, so a connection flood cannot exhaust the process with one OS
-//! thread per socket.
+//! One reactor thread owns every socket: it accepts connections,
+//! registers them non-blocking with the [`super::transport`] readiness
+//! poller (epoll on Linux, poll(2) elsewhere), assembles frames from
+//! partial reads with [`FrameDecoder`], and buffers replies through
+//! bounded per-connection write queues. Decoded frames are dispatched to
+//! `workers` CPU threads, so an expensive cold fit never stalls I/O —
+//! warm-cache replies for other frames (even on the *same* connection,
+//! when the client pipelines) overtake it. At most `max_conns`
+//! connections may be open; beyond that the hub answers a structured
+//! `unavailable` error frame and closes. Idle connections are reaped
+//! after `idle_timeout` unconditionally.
 //!
 //! This layer only frames lines. Every request is parsed, dispatched and
 //! answered by [`PredictionService::handle_line`] through the typed
 //! [`crate::api::proto`] v1 protocol — no ad-hoc JSON is built here.
 
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::api::proto::{ErrorCode, Response, WireError};
+use crate::api::proto::{ErrorCode, FrameDecoder, Response, WireError};
 use crate::api::service::PredictionService;
 use crate::cv::parallel::{FitEngine, SelectionBudget};
 use crate::storage::{DurableStore, FsyncPolicy};
 
 use super::repo::HubState;
+use super::transport::{wake_channel, Event, Interest, Poller, TransportStats, WakeReceiver, Waker};
 
-/// How often a parked worker re-checks the stop flag — bounds both
-/// shutdown-drain latency and the stop-observation delay of an idle
-/// connection.
+/// Upper bound on parked waits everywhere (reactor poll, worker condvar,
+/// durability sleeps) — bounds shutdown-observation latency.
 const POLL_INTERVAL: Duration = Duration::from_millis(100);
 
-/// Per-syscall response-write timeout. A peer that stops reading (full
-/// receive window, no progress) errors the write and frees the worker;
-/// since shutdown joins workers, an unbounded write would otherwise let
-/// one never-reading client wedge `HubServer::shutdown`/`Drop` forever.
-/// Slow-but-reading peers are unaffected: the timeout applies per write
-/// call, and partial progress restarts it.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// How long the shutdown drain keeps trying to deliver already-computed
+/// replies to peers that have stopped reading. Slow-but-reading peers
+/// drain long before this; a dead one cannot wedge `shutdown`/`Drop`.
+const WRITE_GRACE: Duration = Duration::from_secs(5);
+
+/// Per-connection write-queue cap: a peer that stops reading while
+/// pipelined replies accumulate is disconnected once this much reply
+/// data is buffered, instead of growing the queue without bound.
+const MAX_WRITE_BUFFER: usize = 64 << 20;
+
+/// Read-syscall chunk size for the reactor's shared read buffer.
+const READ_CHUNK: usize = 64 * 1024;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
 
 /// Transport tuning for [`HubServer`].
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Worker threads. Each worker serves one connection at a time, so
-    /// this bounds the number of concurrently served clients.
+    /// Worker threads executing decoded frames (fits, predictions,
+    /// submits). I/O is not bounded by this — the reactor multiplexes
+    /// every connection — so it sizes for CPU, not for concurrency.
     pub workers: usize,
-    /// Accepted connections allowed to queue for a free worker. Beyond
-    /// this the hub refuses with an `unavailable` error frame.
+    /// Open connections allowed at once. Beyond this the hub refuses
+    /// with an `unavailable` error frame and closes. (Under the old
+    /// blocking transport this bounded connections *queued for a
+    /// worker*; the reactor has no such queue, so it now bounds open
+    /// sockets directly.)
     pub max_conns: usize,
-    /// How long a connection may sit idle (no request in flight) while
-    /// other connections are queued for a worker, before it is closed to
-    /// free its worker. Only enforced under queue pressure — with free
-    /// capacity, idle connections live forever — so `workers` silent
-    /// sockets cannot starve the pool.
+    /// A connection idle (no request in flight, nothing buffered) for
+    /// this long is closed — unconditionally. The blocking transport
+    /// reaped idle connections only while others queued for a worker;
+    /// with a reactor a parked socket costs one fd and nothing else, but
+    /// unconditional reaping keeps fd accounting predictable and frees
+    /// abandoned peers promptly.
     pub idle_timeout: Duration,
+    /// Deepest request pipeline served per connection: frames beyond
+    /// this many in flight stay buffered (and eventually push back on
+    /// the socket) until replies drain.
+    pub max_pipeline: usize,
+    /// Micro-batch window for concurrent `predict` frames of the same
+    /// `(job, machine_type)`: the first arrival waits this long for
+    /// company, then answers everyone through one batched prediction.
+    /// Zero (default) disables coalescing.
+    pub coalesce_window: Duration,
     /// CV worker threads for one cold fit's candidate × split fan-out
     /// (`c3o serve --fit-threads N`; 0 ⇒ available parallelism). Several
     /// concurrent cold fits may oversubscribe briefly — acceptable, since
@@ -93,6 +122,8 @@ impl Default for ServerConfig {
             workers,
             max_conns: 128,
             idle_timeout: Duration::from_secs(10),
+            max_pipeline: 32,
+            coalesce_window: Duration::ZERO,
             fit_threads: 0,
             fit_budget: SelectionBudget::default(),
             flush_interval: Duration::from_millis(200),
@@ -100,11 +131,43 @@ impl Default for ServerConfig {
     }
 }
 
-/// Accepted-but-unserved connections, handed from the accept thread to
-/// the workers.
-struct ConnQueue {
-    pending: Mutex<VecDeque<TcpStream>>,
+/// One decoded frame on its way to a worker.
+struct Job {
+    token: u64,
+    gen: u64,
+    line: String,
+}
+
+/// Reactor → workers: decoded frames awaiting execution. `in_flight`
+/// counts dispatched jobs whose replies have not yet reached the outbox;
+/// workers push the reply *before* decrementing, so once the reactor
+/// reads zero, one final outbox drain observes every reply.
+struct JobQueue {
+    jobs: Mutex<VecDeque<Job>>,
     ready: Condvar,
+    in_flight: AtomicU64,
+}
+
+/// Workers → reactor: completed reply frames, matched back to their
+/// connection by `(token, gen)` — `gen` disambiguates a reused slot.
+struct Reply {
+    token: u64,
+    gen: u64,
+    bytes: Vec<u8>,
+}
+
+struct Outbox {
+    replies: Mutex<Vec<Reply>>,
+}
+
+/// Decrements the dispatch counter on drop, so a panicking request
+/// cannot leave the shutdown drain waiting forever.
+struct InFlightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// A running hub server.
@@ -112,8 +175,10 @@ pub struct HubServer {
     pub addr: SocketAddr,
     service: Arc<PredictionService>,
     stop: Arc<AtomicBool>,
-    queue: Arc<ConnQueue>,
-    accept_thread: Option<JoinHandle<()>>,
+    queue: Arc<JobQueue>,
+    waker: Waker,
+    transport: Arc<TransportStats>,
+    reactor_thread: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     durability_thread: Option<JoinHandle<()>>,
     /// Follower mode (DESIGN.md §11): the replication tailer keeping this
@@ -136,34 +201,49 @@ impl HubServer {
         HubServer::start_with(addr, service, ServerConfig::default())
     }
 
-    /// [`HubServer::start`] with explicit worker-pool tuning.
+    /// [`HubServer::start`] with explicit transport and worker tuning.
     pub fn start_with(
         addr: &str,
         service: Arc<PredictionService>,
         config: ServerConfig,
     ) -> crate::Result<HubServer> {
         anyhow::ensure!(config.workers >= 1, "server needs at least one worker");
-        // The server config is authoritative for cold-fit execution:
-        // install its engine so `fit_threads`/`fit_budget` take effect
-        // however the service was constructed.
+        // The server config is authoritative for cold-fit execution and
+        // coalescing: install both so they take effect however the
+        // service was constructed.
         service.set_engine(config.fit_engine());
+        service.set_coalesce_window(config.coalesce_window);
+        let transport = Arc::new(TransportStats::default());
+        service.set_transport_stats(transport.clone());
+
         let listener = TcpListener::bind(addr).context("binding hub listener")?;
         let local = listener.local_addr()?;
+        listener.set_nonblocking(true).context("marking hub listener non-blocking")?;
+        let mut poller = Poller::new().context("creating readiness poller")?;
+        let (waker, wake_rx) = wake_channel().context("creating reactor waker")?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .context("registering hub listener")?;
+        poller
+            .register(wake_rx.fd(), TOKEN_WAKER, Interest::READ)
+            .context("registering reactor waker")?;
+
         let stop = Arc::new(AtomicBool::new(false));
-        let queue = Arc::new(ConnQueue {
-            pending: Mutex::new(VecDeque::new()),
+        let queue = Arc::new(JobQueue {
+            jobs: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
+            in_flight: AtomicU64::new(0),
         });
+        let outbox = Arc::new(Outbox { replies: Mutex::new(Vec::new()) });
 
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers {
             let svc = service.clone();
             let stp = stop.clone();
             let q = queue.clone();
-            let idle_timeout = config.idle_timeout;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(&q, &svc, &stp, idle_timeout)
-            }));
+            let ob = outbox.clone();
+            let wk = waker.clone();
+            workers.push(std::thread::spawn(move || worker_loop(&q, &ob, &svc, &stp, &wk)));
         }
 
         // Durability thread: periodic WAL fsync (Interval policy) and
@@ -177,34 +257,34 @@ impl HubServer {
             std::thread::spawn(move || durability_loop(&state, &store, &stp, interval))
         });
 
-        let t_stop = stop.clone();
-        let t_queue = queue.clone();
-        let max_conns = config.max_conns.max(1);
-        let accept_thread = std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                if t_stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => enqueue(&t_queue, s, max_conns),
-                    // Accept errors are transient (ECONNABORTED from a
-                    // peer that reset while queued, EMFILE under fd
-                    // pressure — exactly the flood this pool defends
-                    // against). Back off briefly and keep accepting
-                    // instead of going permanently deaf.
-                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
-                }
-            }
-            // Wake parked workers so they observe the stop flag promptly.
-            t_queue.ready.notify_all();
-        });
+        let reactor = Reactor {
+            poller,
+            listener,
+            wake_rx,
+            queue: queue.clone(),
+            outbox,
+            stop: stop.clone(),
+            stats: transport.clone(),
+            max_conns: config.max_conns.max(1),
+            max_pipeline: config.max_pipeline.max(1),
+            idle_timeout: config.idle_timeout,
+            conns: Vec::new(),
+            free: Vec::new(),
+            open: 0,
+            next_gen: 0,
+            read_buf: vec![0u8; READ_CHUNK],
+            events: Vec::new(),
+        };
+        let reactor_thread = std::thread::spawn(move || reactor.run());
 
         Ok(HubServer {
             addr: local,
             service,
             stop,
             queue,
-            accept_thread: Some(accept_thread),
+            waker,
+            transport,
+            reactor_thread: Some(reactor_thread),
             workers,
             durability_thread,
             tailer: None,
@@ -227,13 +307,18 @@ impl HubServer {
         self.service.state()
     }
 
-    /// Graceful drain: stop accepting, join the accept loop, then join
-    /// every worker. In-flight connections see the flag at their next
-    /// request boundary (or within [`POLL_INTERVAL`] when idle) and
-    /// close; queued-but-unserved connections are dropped (peer sees
-    /// EOF). With a durable store attached, the drain ends with a WAL
-    /// fsync plus a final compacted snapshot, so a clean shutdown leaves
-    /// nothing to replay.
+    /// Live transport counters (also exposed via the `stats` op).
+    pub fn transport(&self) -> &Arc<TransportStats> {
+        &self.transport
+    }
+
+    /// Graceful drain: stop accepting, let dispatched requests finish and
+    /// their replies flush (undispatched frames are dropped; the peer
+    /// sees EOF, exactly as queued-but-unserved connections did under the
+    /// blocking transport), then join the reactor, workers and the
+    /// durability thread. With a durable store attached, the drain ends
+    /// with a WAL fsync plus a final compacted snapshot, so a clean
+    /// shutdown leaves nothing to replay.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
@@ -246,9 +331,9 @@ impl HubServer {
         // the last applied record, with no apply landing after it.
         drop(self.tailer.take());
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the listener so `incoming()` returns.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_thread.take() {
+        // Interrupt the reactor's parked wait so it starts draining now.
+        self.waker.wake();
+        if let Some(h) = self.reactor_thread.take() {
             let _ = h.join();
         }
         self.queue.ready.notify_all();
@@ -283,33 +368,462 @@ impl Drop for HubServer {
     }
 }
 
-/// Hand a fresh connection to the pool, or refuse it when `max_conns`
-/// connections are already waiting.
-fn enqueue(queue: &ConnQueue, stream: TcpStream, max_conns: usize) {
-    let mut pending = queue.pending.lock().unwrap();
-    if pending.len() >= max_conns {
-        drop(pending);
-        refuse(stream);
-        return;
+// ---------------------------------------------------------------------------
+// Reactor
+// ---------------------------------------------------------------------------
+
+/// Per-connection reactor state: the non-blocking socket, its incremental
+/// frame decoder, the bounded outgoing reply buffer (`out[out_pos..]` is
+/// unwritten), and pipeline accounting.
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    decoder: FrameDecoder,
+    out: Vec<u8>,
+    out_pos: usize,
+    in_flight: usize,
+    last_activity: Instant,
+    read_closed: bool,
+    interest: Interest,
+}
+
+impl Conn {
+    fn drained(&self) -> bool {
+        self.in_flight == 0 && self.out_pos >= self.out.len()
     }
-    pending.push_back(stream);
-    drop(pending);
-    queue.ready.notify_one();
+}
+
+struct Reactor {
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: WakeReceiver,
+    queue: Arc<JobQueue>,
+    outbox: Arc<Outbox>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
+    max_conns: usize,
+    max_pipeline: usize,
+    idle_timeout: Duration,
+    /// Slab of connections; the poller token is `slot + TOKEN_BASE`.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    open: usize,
+    next_gen: u64,
+    read_buf: Vec<u8>,
+    events: Vec<Event>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            self.tick();
+        }
+        self.drain();
+    }
+
+    /// One reactor iteration: wait for readiness, accept, read/decode/
+    /// dispatch, deliver finished replies, flush, reap idle connections.
+    fn tick(&mut self) {
+        let mut events = std::mem::take(&mut self.events);
+        events.clear();
+        if let Err(e) = self.poller.wait(&mut events, Some(POLL_INTERVAL)) {
+            eprintln!("[hub] readiness wait failed: {e}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for ev in &events {
+            match ev.token {
+                TOKEN_LISTENER => self.accept_ready(),
+                TOKEN_WAKER => self.wake_rx.drain(),
+                token => self.conn_event(token, *ev),
+            }
+        }
+        self.events = events;
+        self.drain_outbox();
+        self.sweep();
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.open >= self.max_conns {
+                        refuse(stream, &self.stats);
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let slot = match self.free.pop() {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let fd = stream.as_raw_fd();
+                    if self.poller.register(fd, TOKEN_BASE + slot as u64, Interest::READ).is_err()
+                    {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.next_gen += 1;
+                    self.conns[slot] = Some(Conn {
+                        stream,
+                        gen: self.next_gen,
+                        decoder: FrameDecoder::default(),
+                        out: Vec::new(),
+                        out_pos: 0,
+                        in_flight: 0,
+                        last_activity: Instant::now(),
+                        read_closed: false,
+                        interest: Interest::READ,
+                    });
+                    self.open += 1;
+                    self.stats.open_connections.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // Accept errors are transient (ECONNABORTED from a peer
+                // that reset while queued, EMFILE under fd pressure).
+                // Back off briefly instead of spinning on a level-
+                // triggered listener that stays "ready".
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        let slot = (token - TOKEN_BASE) as usize;
+        if self.conns.get(slot).map(|c| c.is_none()).unwrap_or(true) {
+            return; // closed earlier this tick; stale event
+        }
+        if ev.readable || ev.hangup {
+            self.handle_readable(slot);
+        }
+        if ev.hangup {
+            // Peer is gone (or half-closed): no more frames will arrive.
+            // Pending replies still flush; the sweep closes once drained.
+            if let Some(c) = self.conns[slot].as_mut() {
+                c.read_closed = true;
+            }
+        }
+        if ev.writable {
+            self.flush_and_update(slot);
+        }
+    }
+
+    /// Read until the socket would block (or the pipeline cap pauses
+    /// reads), feeding the frame decoder and dispatching complete frames.
+    fn handle_readable(&mut self, slot: usize) {
+        loop {
+            self.pump_frames(slot);
+            let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            if conn.read_closed || conn.in_flight >= self.max_pipeline {
+                break;
+            }
+            match conn.stream.read(&mut self.read_buf[..]) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.last_activity = Instant::now();
+                    if let Err(e) = conn.decoder.feed(&self.read_buf[..n]) {
+                        // Absurd frame length: answer on the connection-
+                        // scoped id-0 channel, stop reading, close once
+                        // the error (and any pending replies) flushed.
+                        let frame = Response::err(0, e).to_line();
+                        conn.out.extend_from_slice(frame.as_bytes());
+                        conn.out.push(b'\n');
+                        conn.read_closed = true;
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(slot);
+                    return;
+                }
+            }
+        }
+        self.pump_frames(slot);
+        self.flush_and_update(slot);
+    }
+
+    /// Dispatch buffered complete frames to the worker pool, up to the
+    /// per-connection pipeline cap. No-op once the stop flag is set:
+    /// workers are exiting, and a frame dispatched now would hang the
+    /// drain's in-flight accounting.
+    fn pump_frames(&mut self, slot: usize) {
+        if self.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut new_jobs: Vec<Job> = Vec::new();
+        {
+            let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            while conn.in_flight < self.max_pipeline {
+                match conn.decoder.next_frame() {
+                    Some(line) => {
+                        conn.in_flight += 1;
+                        new_jobs.push(Job {
+                            token: TOKEN_BASE + slot as u64,
+                            gen: conn.gen,
+                            line,
+                        });
+                    }
+                    None => break,
+                }
+            }
+            if !new_jobs.is_empty() {
+                self.stats
+                    .peak_pipeline_depth
+                    .fetch_max(conn.in_flight as u64, Ordering::Relaxed);
+            }
+        }
+        if new_jobs.is_empty() {
+            return;
+        }
+        let n = new_jobs.len();
+        self.queue.in_flight.fetch_add(n as u64, Ordering::SeqCst);
+        self.queue.jobs.lock().unwrap().extend(new_jobs);
+        if n == 1 {
+            self.queue.ready.notify_one();
+        } else {
+            self.queue.ready.notify_all();
+        }
+    }
+
+    /// Move finished replies from the outbox into their connections'
+    /// write buffers, then resume those connections (paused reads may
+    /// unblock, buffered frames may dispatch, replies flush).
+    fn drain_outbox(&mut self) {
+        let replies = std::mem::take(&mut *self.outbox.replies.lock().unwrap());
+        if replies.is_empty() {
+            return;
+        }
+        let mut touched = Vec::new();
+        for r in replies {
+            let slot = (r.token - TOKEN_BASE) as usize;
+            if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                // `gen` mismatch ⇒ the request's connection died and the
+                // slot was reused: drop the reply, never cross-deliver.
+                if c.gen == r.gen {
+                    c.in_flight -= 1;
+                    c.last_activity = Instant::now();
+                    c.out.extend_from_slice(&r.bytes);
+                    touched.push(slot);
+                }
+            }
+        }
+        let stopping = self.stop.load(Ordering::SeqCst);
+        touched.sort_unstable();
+        touched.dedup();
+        for slot in touched {
+            if stopping {
+                self.flush_and_update(slot);
+            } else {
+                self.handle_readable(slot);
+            }
+        }
+    }
+
+    /// Write as much buffered reply data as the socket accepts, enforce
+    /// the slow-reader cap, and update poller interest.
+    fn flush_and_update(&mut self, slot: usize) {
+        let mut dead = false;
+        let mut overflow = false;
+        {
+            let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            while conn.out_pos < conn.out.len() {
+                match conn.stream.write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.out_pos += n;
+                        conn.last_activity = Instant::now();
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if !dead {
+                if conn.out_pos == conn.out.len() {
+                    conn.out.clear();
+                    conn.out_pos = 0;
+                } else if conn.out_pos > 64 * 1024 {
+                    conn.out.drain(..conn.out_pos);
+                    conn.out_pos = 0;
+                }
+                overflow = conn.out.len() - conn.out_pos > MAX_WRITE_BUFFER;
+            }
+        }
+        if dead {
+            self.close_conn(slot);
+            return;
+        }
+        if overflow {
+            let n = self.stats.slow_reader_disconnects.fetch_add(1, Ordering::Relaxed) + 1;
+            eprintln!(
+                "[hub] disconnecting slow reader: > {MAX_WRITE_BUFFER} reply bytes \
+                 buffered ({n} total)"
+            );
+            self.close_conn(slot);
+            return;
+        }
+        self.update_interest(slot);
+    }
+
+    fn update_interest(&mut self, slot: usize) {
+        let (fd, want, current) = match self.conns.get(slot).and_then(Option::as_ref) {
+            Some(c) => (
+                c.stream.as_raw_fd(),
+                Interest {
+                    readable: !c.read_closed && c.in_flight < self.max_pipeline,
+                    writable: c.out_pos < c.out.len(),
+                },
+                c.interest,
+            ),
+            None => return,
+        };
+        if want != current
+            && self.poller.modify(fd, TOKEN_BASE + slot as u64, want).is_ok()
+        {
+            if let Some(c) = self.conns[slot].as_mut() {
+                c.interest = want;
+            }
+        }
+    }
+
+    /// Close connections that are finished (peer EOF / decoder poisoned,
+    /// everything in flight answered and flushed) or idle past
+    /// `idle_timeout` — the latter unconditionally: under the reactor an
+    /// idle socket no longer occupies a worker, but reaping keeps fd
+    /// accounting predictable and frees abandoned peers promptly.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let to_close: Vec<usize> = self
+            .conns
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, c)| {
+                let c = c.as_ref()?;
+                let done = c.drained()
+                    && (c.read_closed
+                        || now.duration_since(c.last_activity) >= self.idle_timeout);
+                done.then_some(slot)
+            })
+            .collect();
+        for slot in to_close {
+            self.close_conn(slot);
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.free.push(slot);
+            self.open -= 1;
+            self.stats.open_connections.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Shutdown drain. Phase 1 (no deadline — the blocking transport
+    /// likewise joined workers mid-request): discard undispatched frames,
+    /// then wait for every dispatched request to finish and its reply to
+    /// flush. Phase 2: peers that stop reading get [`WRITE_GRACE`] for
+    /// the remaining bytes, then everything closes.
+    fn drain(&mut self) {
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        let discarded: Vec<Job> = self.queue.jobs.lock().unwrap().drain(..).collect();
+        if !discarded.is_empty() {
+            self.queue.in_flight.fetch_sub(discarded.len() as u64, Ordering::SeqCst);
+            for job in &discarded {
+                let slot = (job.token - TOKEN_BASE) as usize;
+                if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    if c.gen == job.gen {
+                        c.in_flight -= 1;
+                    }
+                }
+            }
+        }
+        let mut grace: Option<Instant> = None;
+        loop {
+            // Read the dispatch counter *before* draining the outbox:
+            // workers push the reply before decrementing, so a zero read
+            // here guarantees the drain below saw every reply.
+            let pending = self.queue.in_flight.load(Ordering::SeqCst);
+            self.drain_outbox();
+            let open: Vec<usize> = (0..self.conns.len())
+                .filter(|&s| self.conns[s].is_some())
+                .collect();
+            for slot in open {
+                self.flush_and_update(slot);
+            }
+            let unflushed =
+                self.conns.iter().flatten().any(|c| c.out_pos < c.out.len());
+            if pending == 0 && !unflushed {
+                break;
+            }
+            if pending == 0 {
+                let deadline = *grace.get_or_insert_with(|| Instant::now() + WRITE_GRACE);
+                if Instant::now() >= deadline {
+                    break;
+                }
+            }
+            let mut events = std::mem::take(&mut self.events);
+            events.clear();
+            let _ = self.poller.wait(&mut events, Some(Duration::from_millis(20)));
+            for ev in &events {
+                if ev.token == TOKEN_WAKER {
+                    self.wake_rx.drain();
+                }
+            }
+            self.events = events;
+        }
+        for slot in 0..self.conns.len() {
+            self.close_conn(slot);
+        }
+    }
 }
 
 /// Best-effort structured refusal: flood control answers with a normal v1
 /// error frame, so well-behaved clients see `unavailable` instead of a
-/// silent hangup. Bounded write timeout — a peer that never reads cannot
-/// stall the accept thread.
-fn refuse(stream: TcpStream) {
+/// silent hangup. The accepted socket is still in blocking mode, so a
+/// short write timeout bounds how long a never-reading peer can hold the
+/// reactor; failures are counted and logged instead of silently ignored.
+fn refuse(stream: TcpStream, stats: &TransportStats) {
+    stats.refused_connections.fetch_add(1, Ordering::Relaxed);
     let mut stream = stream;
     let _ = stream.set_write_timeout(Some(POLL_INTERVAL));
     let reply = Response::err(
         0,
         WireError::new(ErrorCode::Unavailable, "hub at connection capacity, retry later"),
     );
-    let _ = stream.write_all(reply.to_line().as_bytes());
-    let _ = stream.write_all(b"\n");
+    let frame = format!("{}\n", reply.to_line());
+    if let Err(e) = stream.write_all(frame.as_bytes()) {
+        let n = stats.refusal_write_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        eprintln!("[hub] refusal frame write failed ({n} total): {e}");
+    }
 }
 
 /// Background durability pass (DESIGN.md §9): under
@@ -342,96 +856,38 @@ fn durability_loop(
     }
 }
 
-/// Worker: pop one connection at a time and serve it to completion. Exits
-/// as soon as the stop flag is set; connections still queued are dropped.
+/// Worker: pop one decoded frame at a time, execute it against the
+/// service, and hand the reply frame back to the reactor. Exits as soon
+/// as the stop flag is set; the reactor discards whatever is still
+/// queued.
 fn worker_loop(
-    queue: &ConnQueue,
+    queue: &JobQueue,
+    outbox: &Outbox,
     service: &PredictionService,
     stop: &AtomicBool,
-    idle_timeout: Duration,
+    waker: &Waker,
 ) {
     loop {
-        let conn = {
-            let mut pending = queue.pending.lock().unwrap();
+        let job = {
+            let mut jobs = queue.jobs.lock().unwrap();
             loop {
                 if stop.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(s) = pending.pop_front() {
-                    break s;
+                if let Some(j) = jobs.pop_front() {
+                    break j;
                 }
                 // Timed wait so a lost wakeup can never stall shutdown.
-                let (guard, _) = queue
-                    .ready
-                    .wait_timeout(pending, POLL_INTERVAL)
-                    .unwrap();
-                pending = guard;
+                jobs = queue.ready.wait_timeout(jobs, POLL_INTERVAL).unwrap().0;
             }
         };
-        let _ = serve_conn(conn, service, stop, queue, idle_timeout);
-    }
-}
-
-fn serve_conn(
-    stream: TcpStream,
-    service: &PredictionService,
-    stop: &AtomicBool,
-    queue: &ConnQueue,
-    idle_timeout: Duration,
-) -> crate::Result<()> {
-    stream.set_nodelay(true).ok();
-    // Bounded read timeout: a worker parked on an idle connection must
-    // re-check the stop flag instead of blocking shutdown forever.
-    stream.set_read_timeout(Some(POLL_INTERVAL)).ok();
-    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    let mut last_activity = Instant::now();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // peer closed
-            Ok(_) => {}
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
-                ) =>
-            {
-                // Partial data read before the timeout stays buffered in
-                // `line`; the next read_line appends the rest.
-                if stop.load(Ordering::SeqCst) {
-                    return Ok(());
-                }
-                // Under queue pressure, yield this worker: an idle peer
-                // (no request even started) must not starve connections
-                // waiting for a worker. With free capacity, idle
-                // connections live on.
-                if line.is_empty()
-                    && last_activity.elapsed() >= idle_timeout
-                    && !queue.pending.lock().unwrap().is_empty()
-                {
-                    return Ok(());
-                }
-                continue;
-            }
-            Err(e) => return Err(e.into()),
-        }
-        last_activity = Instant::now();
-        // Check per request, not just at accept time: once `shutdown` is
-        // requested, in-flight connections must quiesce instead of serving
-        // forever (closing drops the request; the peer sees EOF).
-        if stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        let reply = service.handle_line(&line, stop);
-        writer.write_all(reply.to_line().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        // The request we just served may itself have been `shutdown`.
-        if stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        line.clear();
+        let guard = InFlightGuard(&queue.in_flight);
+        let reply = service.handle_line(&job.line, stop);
+        let mut bytes = reply.to_line().into_bytes();
+        bytes.push(b'\n');
+        // Push before the guard decrements (see JobQueue::in_flight).
+        outbox.replies.lock().unwrap().push(Reply { token: job.token, gen: job.gen, bytes });
+        drop(guard);
+        waker.wake();
     }
 }

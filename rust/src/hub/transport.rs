@@ -1,0 +1,572 @@
+//! Readiness polling for the hub's event-loop transport (DESIGN.md §7).
+//!
+//! The offline crate cache has neither `mio` nor `libc`, so the OS
+//! interface is hand-rolled `extern "C"` FFI against the C runtime std
+//! already links: **epoll(7)** on Linux (the fast path — one O(ready)
+//! syscall regardless of how many connections are registered) and
+//! portable **poll(2)** everywhere else on unix (O(registered) per wait,
+//! fine for the fallback). Both backends compile on Linux so tests
+//! exercise the portable path too.
+//!
+//! The abstraction is deliberately tiny — register/modify/deregister a
+//! raw fd with a `u64` token and level-triggered [`Interest`], then
+//! [`Poller::wait`] for [`Event`]s — because the reactor in
+//! [`crate::hub::server`] owns all buffering and framing itself.
+//!
+//! [`Waker`] is a nonblocking socketpair (`UnixStream::pair`): worker
+//! threads write one byte to interrupt a parked `wait`, the reactor
+//! drains it. No FFI needed there.
+
+#[cfg(not(unix))]
+compile_error!(
+    "the c3o hub transport requires a unix platform (epoll on Linux, poll(2) elsewhere)"
+);
+
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::AtomicU64;
+use std::time::Duration;
+
+/// Level-triggered readiness interest for one registered fd.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Read-only interest (the common case for a parked connection).
+    pub const READ: Interest = Interest { readable: true, writable: false };
+}
+
+/// One readiness event. `hangup` covers error/peer-closed conditions
+/// (`EPOLLERR|EPOLLHUP|EPOLLRDHUP`, `POLLERR|POLLHUP|POLLNVAL`); callers
+/// should attempt a final read — pending bytes may still be buffered —
+/// and let the read path discover the EOF.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+/// Transport-layer counters, shared with the prediction service so the
+/// `stats` op can report them (additive v1 fields).
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    /// Currently open (accepted and registered) connections.
+    pub open_connections: AtomicU64,
+    /// Highwater mark of requests in flight on any single connection —
+    /// the deepest pipelining any client actually used.
+    pub peak_pipeline_depth: AtomicU64,
+    /// Connections refused at capacity since start.
+    pub refused_connections: AtomicU64,
+    /// Refusal frames that could not be written to the refused peer
+    /// (previously silently ignored; now counted and logged).
+    pub refusal_write_failures: AtomicU64,
+    /// Connections dropped because their bounded write queue overflowed
+    /// (a peer that stopped reading while replies kept accumulating).
+    pub slow_reader_disconnects: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// epoll backend (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys_epoll {
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    use super::{Event, Interest};
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    /// `O_CLOEXEC`: 0o2000000 on every Linux arch this crate targets.
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    /// Kernel ABI: `struct epoll_event` is packed on x86-64 only.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn cvt(ret: c_int) -> io::Result<c_int> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub struct EpollPoller {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl EpollPoller {
+        pub fn new() -> io::Result<EpollPoller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(EpollPoller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut bits = EPOLLRDHUP;
+            if interest.readable {
+                bits |= EPOLLIN;
+            }
+            if interest.writable {
+                bits |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events: bits, data: token };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels required a non-null event for DEL; passing
+            // one is free and keeps the call portable.
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
+            };
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
+            };
+            let n = match cvt(n) {
+                Ok(n) => n as usize,
+                // A signal interrupting the wait is a spurious wakeup, not
+                // an error.
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => 0,
+                Err(e) => return Err(e),
+            };
+            for raw in &self.buf[..n] {
+                // Copy out of the (possibly packed) struct before use.
+                let bits = raw.events;
+                let token = raw.data;
+                events.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for EpollPoller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) backend (portable unix fallback)
+// ---------------------------------------------------------------------------
+
+mod sys_poll {
+    use std::io;
+    use std::os::raw::{c_int, c_short};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    use super::{Event, Interest};
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    #[cfg(target_os = "macos")]
+    type NfdsT = std::os::raw::c_uint;
+    #[cfg(not(target_os = "macos"))]
+    type NfdsT = std::os::raw::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    /// poll(2) rebuilds its fd array per wait from a linear registry —
+    /// O(registered) per call, acceptable for a fallback measured in
+    /// hundreds of connections.
+    pub struct PollPoller {
+        registered: Vec<(RawFd, u64, Interest)>,
+        scratch: Vec<PollFd>,
+    }
+
+    impl PollPoller {
+        pub fn new() -> PollPoller {
+            PollPoller { registered: Vec::new(), scratch: Vec::new() }
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            if self.registered.iter().any(|&(f, _, _)| f == fd) {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    format!("fd {fd} already registered"),
+                ));
+            }
+            self.registered.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            for entry in &mut self.registered {
+                if entry.0 == fd {
+                    *entry = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, format!("fd {fd} not registered")))
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let before = self.registered.len();
+            self.registered.retain(|&(f, _, _)| f != fd);
+            if self.registered.len() == before {
+                return Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("fd {fd} not registered"),
+                ));
+            }
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            self.scratch.clear();
+            for &(fd, _, interest) in &self.registered {
+                let mut bits: c_short = 0;
+                if interest.readable {
+                    bits |= POLLIN;
+                }
+                if interest.writable {
+                    bits |= POLLOUT;
+                }
+                self.scratch.push(PollFd { fd, events: bits, revents: 0 });
+            }
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
+            };
+            let n = unsafe { poll(self.scratch.as_mut_ptr(), self.scratch.len() as NfdsT, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (slot, &(_, token, _)) in self.scratch.iter().zip(&self.registered) {
+                let r = slot.revents;
+                if r == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: r & POLLIN != 0,
+                    writable: r & POLLOUT != 0,
+                    hangup: r & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend-selecting facade
+// ---------------------------------------------------------------------------
+
+/// Readiness poller: epoll on Linux, poll(2) elsewhere. Construct the
+/// default backend with [`Poller::new`]; [`Poller::poll_fallback`] forces
+/// the portable backend (tests exercise it on Linux too).
+pub enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(sys_epoll::EpollPoller),
+    Poll(sys_poll::PollPoller),
+}
+
+impl Poller {
+    /// The platform-default backend.
+    #[cfg(target_os = "linux")]
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller::Epoll(sys_epoll::EpollPoller::new()?))
+    }
+
+    /// The platform-default backend.
+    #[cfg(not(target_os = "linux"))]
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller::Poll(sys_poll::PollPoller::new()))
+    }
+
+    /// Force the portable poll(2) backend.
+    pub fn poll_fallback() -> Poller {
+        Poller::Poll(sys_poll::PollPoller::new())
+    }
+
+    /// Which backend this poller runs on ("epoll" or "poll").
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(_) => "epoll",
+            Poller::Poll(_) => "poll",
+        }
+    }
+
+    /// The backend [`Poller::new`] would pick on this platform.
+    pub fn default_backend_name() -> &'static str {
+        if cfg!(target_os = "linux") {
+            "epoll"
+        } else {
+            "poll"
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.register(fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.modify(fd, token, interest),
+            Poller::Poll(p) => p.modify(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.deregister(fd),
+            Poller::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Block for up to `timeout` (forever when `None`) and append ready
+    /// [`Event`]s. A signal-interrupted wait returns cleanly with no
+    /// events — callers already loop.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(events, timeout),
+            Poller::Poll(p) => p.wait(events, timeout),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-thread wakeup
+// ---------------------------------------------------------------------------
+
+/// Write half of the reactor wakeup channel. Cheaply cloneable across
+/// worker threads; `wake` is async-signal-ish safe: one nonblocking
+/// one-byte write, and a full pipe simply means a wakeup is already
+/// pending.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1]);
+    }
+}
+
+impl Clone for Waker {
+    fn clone(&self) -> Waker {
+        // Falling back to a second pair would silently disconnect the
+        // waker; try_clone on a socketpair only fails under fd
+        // exhaustion, where the process is lost anyway.
+        Waker { tx: self.tx.try_clone().expect("cloning waker fd") }
+    }
+}
+
+/// Read half of the wakeup channel: register `fd()` with the poller and
+/// `drain()` on readiness.
+pub struct WakeReceiver {
+    rx: UnixStream,
+}
+
+impl WakeReceiver {
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Consume every pending wakeup byte.
+    pub fn drain(&mut self) {
+        let mut buf = [0u8; 64];
+        while matches!(self.rx.read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// A connected (waker, receiver) pair, both ends nonblocking.
+pub fn wake_channel() -> io::Result<(Waker, WakeReceiver)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { tx }, WakeReceiver { rx }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn backends() -> Vec<Poller> {
+        vec![Poller::new().unwrap(), Poller::poll_fallback()]
+    }
+
+    #[test]
+    fn accept_readiness_is_reported_with_the_right_token() {
+        for mut poller in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            poller.register(listener.as_raw_fd(), 7, Interest::READ).unwrap();
+
+            // Nothing pending: a short wait yields no events.
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "[{}] {events:?}", poller.backend_name());
+
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                events.iter().any(|e| e.token == 7 && e.readable),
+                "[{}] {events:?}",
+                poller.backend_name()
+            );
+        }
+    }
+
+    #[test]
+    fn write_interest_and_modify_and_deregister() {
+        for mut poller in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            client.set_nonblocking(true).unwrap();
+            let fd = client.as_raw_fd();
+
+            // A fresh connection with read-only interest is quiet...
+            poller.register(fd, 1, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "[{}] {events:?}", poller.backend_name());
+
+            // ...and immediately writable once write interest is added.
+            poller.modify(fd, 1, Interest { readable: true, writable: true }).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                events.iter().any(|e| e.token == 1 && e.writable),
+                "[{}] {events:?}",
+                poller.backend_name()
+            );
+
+            poller.deregister(fd).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "[{}] {events:?}", poller.backend_name());
+        }
+    }
+
+    #[test]
+    fn waker_interrupts_a_parked_wait() {
+        for mut poller in backends() {
+            let (waker, mut rx) = wake_channel().unwrap();
+            poller.register(rx.fd(), 2, Interest::READ).unwrap();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                waker.wake();
+            });
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+            assert!(
+                events.iter().any(|e| e.token == 2 && e.readable),
+                "[{}] {events:?}",
+                poller.backend_name()
+            );
+            rx.drain();
+            // Drained: the next wait is quiet again.
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "[{}] {events:?}", poller.backend_name());
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn cloned_wakers_share_the_channel() {
+        let (waker, mut rx) = wake_channel().unwrap();
+        let w2 = waker.clone();
+        w2.wake();
+        waker.wake();
+        let mut poller = Poller::new().unwrap();
+        poller.register(rx.fd(), 3, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.readable), "{events:?}");
+        rx.drain();
+    }
+}

@@ -5,11 +5,15 @@
 //!   eval       — run the Table II / Fig. 5 harnesses
 //!   serve      — run a C3O Hub speaking wire protocol v1 (DESIGN.md §4):
 //!                repositories + server-side PredictionService with a
-//!                fitted-model cache, served by a bounded worker pool
-//!                (--workers N, --max-conns Q; alias: `c3o hub`). Cold
-//!                fits run on the fit-path engine: --fit-threads T CV
-//!                workers (0 = all cores), --fit-budget SECS and/or
-//!                --fit-points N selection budget (DESIGN.md §8).
+//!                fitted-model cache, served by a non-blocking reactor
+//!                (every socket on one event loop) that dispatches frames
+//!                to a bounded worker pool (--workers N CPU workers,
+//!                --max-conns Q open sockets, --max-pipeline D in-flight
+//!                requests per connection, --coalesce-window MS predict
+//!                micro-batching; alias: `c3o hub`). Cold fits run on the
+//!                fit-path engine: --fit-threads T CV workers (0 = all
+//!                cores), --fit-budget SECS and/or --fit-points N
+//!                selection budget (DESIGN.md §8).
 //!                With --data-dir DIR the hub is *durable* (DESIGN.md §9):
 //!                accepted contributions are WAL-logged before they are
 //!                acknowledged, snapshots compact the logs
@@ -246,15 +250,22 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         }
         state.set_storage(store.clone())?;
     }
-    // Worker-pool + fit-engine tuning: defaults derive from available
-    // parallelism; --workers/--max-conns/--fit-threads/--fit-budget/
-    // --fit-points override.
+    // Transport + fit-engine tuning: defaults derive from available
+    // parallelism; --workers/--max-conns/--max-pipeline/--coalesce-window/
+    // --fit-threads/--fit-budget/--fit-points override.
     let mut config = ServerConfig::default();
     if let Some(w) = flags.get("workers") {
         config.workers = w.parse().context("--workers")?;
     }
     if let Some(q) = flags.get("max-conns") {
         config.max_conns = q.parse().context("--max-conns")?;
+    }
+    if let Some(p) = flags.get("max-pipeline") {
+        config.max_pipeline = p.parse().context("--max-pipeline")?;
+    }
+    if let Some(ms) = flags.get("coalesce-window") {
+        config.coalesce_window =
+            std::time::Duration::from_millis(ms.parse().context("--coalesce-window")?);
     }
     let engine = fit_engine(flags)?;
     config.fit_threads = engine.threads;
@@ -283,8 +294,17 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     // (and tests/cli_e2e.rs) parse it from there.
     println!("C3O Hub listening on {}", server.addr);
     println!(
-        "worker pool: {} workers, {} queued connections max",
-        config.workers, config.max_conns
+        "transport: reactor ({}) + {} workers, {} open connections max, \
+         pipeline depth {}, coalescing {}",
+        c3o::hub::transport::Poller::default_backend_name(),
+        config.workers,
+        config.max_conns,
+        config.max_pipeline,
+        if config.coalesce_window.is_zero() {
+            "off".to_string()
+        } else {
+            format!("{:?} window", config.coalesce_window)
+        },
     );
     println!(
         "fit engine: {} CV threads, budget {}s / {} points",

@@ -30,6 +30,14 @@
 //! itself durable: kill -9 it mid-tail, reopen the same data dir, and it
 //! resumes from its own watermark with no gaps and no double-applies.
 //!
+//! Replication is transport-independent: the tailer is an ordinary
+//! roundtrip [`HubClient`] of the leader, so the reactor transport
+//! (DESIGN.md §7) required no changes here. The default
+//! `poll_interval` (200 ms) keeps each tailer connection well inside
+//! the leader's idle deadline (`idle_timeout`, default 10 s) while
+//! caught up — and even a reaped connection only costs the tailer one
+//! reconnect on its next poll.
+//!
 //! [`HubState::apply_replicated`]: crate::hub::HubState::apply_replicated
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

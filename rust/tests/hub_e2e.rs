@@ -385,22 +385,21 @@ fn connection_flood_is_refused_with_structured_unavailable() {
         service,
         ServerConfig {
             workers: 1,
-            max_conns: 1,
-            // Generous idle deadline: connection `a` below sits idle under
-            // queue pressure on purpose and must not be reaped mid-test.
+            // `max_conns` bounds *open* connections at accept time (the
+            // reactor has no per-connection worker to queue for; an idle
+            // socket costs one slot regardless of worker load).
+            max_conns: 2,
             idle_timeout: std::time::Duration::from_secs(300),
             ..ServerConfig::default()
         },
     )
     .unwrap();
 
-    // Occupy the single worker (a served connection is held until the
-    // client hangs up)...
+    // Fill both slots: a served client and a raw idle socket.
     let mut a = HubClient::connect(&server.addr.to_string()).unwrap();
     a.stats().unwrap();
-    // ...and the single queue slot.
-    let _b = std::net::TcpStream::connect(server.addr).unwrap();
-    std::thread::sleep(std::time::Duration::from_millis(50));
+    let b = std::net::TcpStream::connect(server.addr).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(80));
 
     // The flood overflow gets a structured v1 error frame, not a hangup.
     let c = std::net::TcpStream::connect(server.addr).unwrap();
@@ -411,13 +410,28 @@ fn connection_flood_is_refused_with_structured_unavailable() {
     assert!(line.contains("unavailable"), "{line}");
     assert!(line.contains("connection capacity"), "{line}");
 
-    // The served connection keeps working through the flood.
+    // The served connection keeps working through the flood...
     a.stats().unwrap();
+
+    // ...and hanging up frees the slot for a fresh connection (the
+    // reactor notices the hangup on its next tick).
+    drop(b);
+    let mut freed = None;
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut cand = HubClient::connect(&server.addr.to_string()).unwrap();
+        if let Ok(s) = cand.stats() {
+            assert_eq!(s.repos, 1);
+            freed = Some(cand);
+            break;
+        }
+    }
+    assert!(freed.is_some(), "freed connection slot was never accepted");
     server.shutdown();
 }
 
 #[test]
-fn idle_connection_is_reaped_only_under_queue_pressure() {
+fn idle_connection_is_reaped_unconditionally() {
     let state = Arc::new(HubState::new());
     state.insert(Repository::new(JobKind::Sort, "spark sort"));
     let service = Arc::new(PredictionService::new(
@@ -430,7 +444,7 @@ fn idle_connection_is_reaped_only_under_queue_pressure() {
         "127.0.0.1:0",
         service,
         ServerConfig {
-            workers: 1,
+            workers: 2,
             max_conns: 8,
             idle_timeout: std::time::Duration::from_millis(200),
             ..ServerConfig::default()
@@ -439,22 +453,128 @@ fn idle_connection_is_reaped_only_under_queue_pressure() {
     .unwrap();
     let addr = server.addr.to_string();
 
-    // `a` holds the only worker and goes idle. With no queue pressure it
-    // survives well past the idle deadline.
+    // A connection idle past the deadline is closed even on an otherwise
+    // empty hub — no queue-pressure precondition. (The blocking transport
+    // reaped idle connections only while others queued for a worker; the
+    // reactor reaps on the idle clock alone, so fd accounting stays
+    // predictable and abandoned peers are freed promptly.)
     let mut a = HubClient::connect(&addr).unwrap();
     a.stats().unwrap();
-    std::thread::sleep(std::time::Duration::from_millis(600));
-    a.stats().unwrap();
-
-    // `b` queues behind it; the pressure starts the idle clock on `a`,
-    // so `b` must eventually be served on the freed worker.
-    let mut b = HubClient::connect(&addr).unwrap();
-    let s = b.stats().unwrap();
-    assert_eq!(s.repos, 1);
-
-    // `a` was closed to free the worker.
+    std::thread::sleep(std::time::Duration::from_millis(700));
     let err = a.stats().unwrap_err();
     assert!(err.to_string().contains("closed"), "{err:#}");
+
+    // Fresh connections are unaffected.
+    let mut b = HubClient::connect(&addr).unwrap();
+    assert_eq!(b.stats().unwrap().repos, 1);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_requests_complete_out_of_order_and_resolve_by_id() {
+    use c3o::hub::PipelinedClient;
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+
+    // Warm the Sort model — and grab reference predictions — through a
+    // plain roundtrip client.
+    let mut reference = HubClient::connect(&addr).unwrap();
+    let rows: Vec<Vec<f64>> = (2..=6u32).map(|s| vec![s as f64, 15.0]).collect();
+    let expect = reference.predict_batch(JobKind::Sort, None, &rows).unwrap();
+    assert!(reference.stats().unwrap().fits >= 1);
+
+    let mut p = PipelinedClient::connect(&addr).unwrap();
+    // A cold Grep fit first (expensive: CV model selection over the
+    // repo)...
+    let cold = p.send_predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+    // ...then warm Sort hits queued behind it on the same connection.
+    let warm: Vec<u64> =
+        rows.iter().map(|r| p.send_predict(JobKind::Sort, None, r).unwrap()).collect();
+    assert_eq!(p.in_flight(), rows.len() + 1);
+
+    // The warm replies overtake the cold fit: waiting them out succeeds
+    // while the cold reply has not arrived (`has_reply` never touches
+    // the socket, so observing `false` after the warm waits proves true
+    // server-side reordering, not client-side shuffling).
+    for (i, id) in warm.iter().enumerate() {
+        let pred = p.wait_predict(*id).unwrap();
+        assert_eq!(pred.runtime_s.to_bits(), expect.runtimes[i].to_bits(), "row {i}");
+        assert_eq!(pred.machine_type, expect.machine_type);
+    }
+    assert!(
+        !p.has_reply(cold),
+        "cold Grep fit finished before {} warm Sort hits — reordering unobservable",
+        rows.len()
+    );
+
+    // The cold reply still resolves, correctly correlated.
+    let coldp = p.wait_predict(cold).unwrap();
+    assert!(!coldp.cached, "first Grep predict must be a cold fit");
+    assert!(coldp.runtime_s.is_finite() && coldp.runtime_s > 0.0);
+    assert_eq!(p.in_flight(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn coalesced_predicts_match_individual_predicts_bit_for_bit() {
+    let state = Arc::new(HubState::new());
+    let catalog = Catalog::aws_like();
+    let mut repo = Repository::new(JobKind::Sort, "spark sort");
+    repo.maintainer_machine = Some("m5.xlarge".to_string());
+    repo.data = generate_job(JobKind::Sort, &GeneratorConfig::default(), &catalog).unwrap();
+    state.insert(repo);
+    let service = Arc::new(PredictionService::new(
+        state,
+        catalog,
+        ValidationPolicy::default(),
+        Arc::new(NativeBackend::new()),
+    ));
+    let server = HubServer::start_with(
+        "127.0.0.1:0",
+        service,
+        ServerConfig {
+            workers: 8,
+            coalesce_window: std::time::Duration::from_millis(150),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    // Reference rows via `predict_batch`, which bypasses the coalescer
+    // but shares the same fitted-model path (and pays the one cold fit).
+    let rows: Vec<Vec<f64>> = (2..=9u32).map(|s| vec![s as f64, 15.0]).collect();
+    let mut c0 = HubClient::connect(&addr).unwrap();
+    let expect = c0.predict_batch(JobKind::Sort, None, &rows).unwrap();
+
+    // Barrier-released concurrent single-row predicts land inside one
+    // coalescing window and are answered by one batched prediction.
+    let barrier = Arc::new(std::sync::Barrier::new(rows.len()));
+    let mut handles = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let addr = addr.clone();
+        let row = row.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = HubClient::connect(&addr).unwrap();
+            barrier.wait();
+            (i, c.predict(JobKind::Sort, None, &row).unwrap())
+        }));
+    }
+    for h in handles {
+        let (i, pred) = h.join().unwrap();
+        assert_eq!(
+            pred.runtime_s.to_bits(),
+            expect.runtimes[i].to_bits(),
+            "row {i}: coalesced predict must be bit-identical to the individual path"
+        );
+        assert_eq!(pred.machine_type, expect.machine_type);
+        assert_eq!(pred.model, expect.model);
+    }
+
+    let s = c0.stats().unwrap();
+    assert!(s.coalesced_predicts >= 2, "no coalescing observed: {}", s.coalesced_predicts);
+    assert_eq!(s.fits, 1, "coalesced predicts reuse the one fitted model");
     server.shutdown();
 }
 

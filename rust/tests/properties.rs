@@ -288,6 +288,158 @@ fn prop_loo_is_permutation_invariant_for_ernest() {
 }
 
 #[test]
+fn prop_frame_decoder_reassembles_every_byte_boundary_split() {
+    use c3o::api::proto::FrameDecoder;
+
+    // A fixed multi-frame stream with the awkward cases — an empty frame,
+    // a CRLF-terminated frame, JSON punctuation — split exhaustively at
+    // every byte boundary. Frames are pulled between the two feeds so the
+    // partial-tail state is exercised, and the exact sequence must come
+    // back regardless of where the cut lands.
+    let frames = ["{\"v\":1,\"id\":7,\"op\":\"stats\"}", "", "crlf line", "tail"];
+    let mut stream = Vec::new();
+    for (i, f) in frames.iter().enumerate() {
+        stream.extend_from_slice(f.as_bytes());
+        if i == 2 {
+            stream.push(b'\r');
+        }
+        stream.push(b'\n');
+    }
+    for cut in 0..=stream.len() {
+        let mut d = FrameDecoder::default();
+        d.feed(&stream[..cut]).unwrap();
+        let mut out = Vec::new();
+        while let Some(f) = d.next_frame() {
+            out.push(f);
+        }
+        d.feed(&stream[cut..]).unwrap();
+        while let Some(f) = d.next_frame() {
+            out.push(f);
+        }
+        assert_eq!(out, frames, "split at byte {cut}");
+        assert_eq!(d.buffered(), 0, "split at byte {cut}");
+        assert!(!d.is_poisoned());
+    }
+}
+
+#[test]
+fn prop_frame_decoder_interleaved_connections_never_misframe() {
+    use c3o::api::proto::FrameDecoder;
+
+    // The reactor keeps one decoder per connection and feeds each whatever
+    // read(2) produced, in arbitrary interleaving across connections. Each
+    // decoder must emit exactly its own stream's frames, in order, holding
+    // no more than one partial frame between feeds.
+    forall_res(
+        "interleaved chunked frames reassemble per connection",
+        150,
+        |rng| {
+            let conns = rng.range(2, 4);
+            let mut frames = Vec::new();
+            let mut per_conn_chunks = Vec::new();
+            for _ in 0..conns {
+                let n = rng.range(1, 7);
+                let fs: Vec<String> = (0..n)
+                    .map(|_| {
+                        // Printable ASCII: no '\n' or '\r' and valid UTF-8,
+                        // so the round trip must be byte-exact.
+                        let len = rng.range(0, 40);
+                        (0..len).map(|_| (b' ' + rng.below(95) as u8) as char).collect()
+                    })
+                    .collect();
+                let bytes: Vec<u8> = fs
+                    .iter()
+                    .flat_map(|f| f.bytes().chain(std::iter::once(b'\n')))
+                    .collect();
+                let mut chunks = Vec::new();
+                let mut pos = 0;
+                while pos < bytes.len() {
+                    let take = rng.range(1, 8).min(bytes.len() - pos);
+                    chunks.push(bytes[pos..pos + take].to_vec());
+                    pos += take;
+                }
+                frames.push(fs);
+                per_conn_chunks.push(chunks);
+            }
+            // Random order-preserving merge of the per-connection chunk
+            // sequences (chunks of one connection never reorder).
+            let mut cursors = vec![0usize; conns];
+            let mut merged = Vec::new();
+            loop {
+                let alive: Vec<usize> = (0..conns)
+                    .filter(|&c| cursors[c] < per_conn_chunks[c].len())
+                    .collect();
+                if alive.is_empty() {
+                    break;
+                }
+                let c = *rng.choose(&alive);
+                merged.push((c, per_conn_chunks[c][cursors[c]].clone()));
+                cursors[c] += 1;
+            }
+            (frames, merged)
+        },
+        |(frames, merged)| {
+            let mut decoders: Vec<FrameDecoder> =
+                (0..frames.len()).map(|_| FrameDecoder::default()).collect();
+            let mut got: Vec<Vec<String>> = vec![Vec::new(); frames.len()];
+            for (conn, chunk) in merged {
+                decoders[*conn].feed(chunk)?;
+                while let Some(f) = decoders[*conn].next_frame() {
+                    got[*conn].push(f);
+                }
+                // Once drained, only the partial tail remains (frames in
+                // this test are at most 40 bytes long).
+                anyhow::ensure!(decoders[*conn].buffered() <= 40);
+            }
+            anyhow::ensure!(&got == frames, "mis-framed: {got:?} != {frames:?}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frame_decoder_rejects_absurd_lengths_without_buffering() {
+    use c3o::api::proto::FrameDecoder;
+
+    // A peer claiming an absurdly long frame must be refused *before* the
+    // bytes are copied in: `buffered()` stays at the pre-burst level, the
+    // decoder poisons itself, and nothing is ever framed again.
+    forall_res(
+        "oversized frames are refused before they are buffered",
+        120,
+        |rng| {
+            let max_frame = rng.range(4, 64);
+            // A legitimate partial frame may already be sitting in the
+            // buffer when the oversized burst arrives.
+            let prefix_len = rng.below(max_frame + 1);
+            let burst = max_frame + 1 - prefix_len + rng.below(4 * max_frame);
+            let newline_terminated = rng.f64() < 0.5;
+            (max_frame, prefix_len, burst, newline_terminated)
+        },
+        |&(max_frame, prefix_len, burst, newline_terminated)| {
+            let mut d = FrameDecoder::new(max_frame);
+            let prefix = vec![b'a'; prefix_len];
+            d.feed(&prefix)?;
+            anyhow::ensure!(d.buffered() == prefix_len);
+            let mut bytes = vec![b'x'; burst];
+            if newline_terminated {
+                bytes.push(b'\n');
+            }
+            anyhow::ensure!(d.feed(&bytes).is_err(), "oversized burst was accepted");
+            anyhow::ensure!(
+                d.buffered() == prefix_len,
+                "oversized bytes were buffered: {} > {prefix_len}",
+                d.buffered()
+            );
+            anyhow::ensure!(d.is_poisoned());
+            anyhow::ensure!(d.next_frame().is_none());
+            anyhow::ensure!(d.feed(b"ok\n").is_err(), "poisoned decoder accepted bytes");
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_wal_scan_survives_flips_and_truncations() {
     use c3o::storage::wal::{crc32, scan};
 
