@@ -1,0 +1,314 @@
+//! Minimal Rust lexer for the `c3o lint` analyzer.
+//!
+//! Produces a flat token stream with line numbers plus a separate list
+//! of comments — the rules need comment *text* to audit `// SAFETY:`
+//! justifications (L3) and `// lint: allow(...)` markers. This is not a
+//! full Rust lexer; it understands exactly enough to keep the
+//! structural scanner honest about braces and identifiers: line and
+//! nested block comments, plain / raw / byte string literals, char
+//! literals vs lifetimes after `'`, and numeric literals (so `0..n`
+//! does not read as a float).
+//!
+//! Everything the rules never look at (operator composition, keyword
+//! classification) is left as single-character `Punct` tokens; patterns
+//! like `::` are matched as two adjacent `:` tokens by the consumers.
+
+/// Lexical class of a [`Token`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `unwrap`, ...).
+    Ident,
+    /// Numeric literal (integers, floats; suffix glued on).
+    Num,
+    /// String literal (plain, raw, or byte); `text` is the interior.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`); `text` excludes the quote.
+    Lifetime,
+    /// Any other single character (`{`, `.`, `[`, `#`, ...).
+    Punct,
+}
+
+/// One token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// True when the token is exactly the punct/ident `s`.
+    pub fn is(&self, s: &str) -> bool {
+        self.text == s
+    }
+}
+
+/// One comment with the 1-based line it starts on; `text` is the
+/// interior (after `//`, or between `/*` and `*/`).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Tokenize `src`. Infallible by construction: unterminated constructs
+/// run to end-of-file rather than erroring, which is the right behavior
+/// for a linter that must never panic on the tree it audits.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let count_lines = |s: &[char]| s.iter().filter(|&&c| c == '\n').count() as u32;
+
+    'outer: while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // Line comment (also doc comments `///`, `//!`).
+        if c == '/' && next == Some('/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < chars.len() && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: chars[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+
+        // Block comment, nested.
+        if c == '/' && next == Some('*') {
+            let start_line = line;
+            let start = i + 2;
+            let mut depth = 1usize;
+            let mut j = start;
+            while j < chars.len() && depth > 0 {
+                if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = j.saturating_sub(2).max(start);
+            line += count_lines(&chars[i..j]);
+            comments.push(Comment { line: start_line, text: chars[start..end].iter().collect() });
+            i = j;
+            continue;
+        }
+
+        // Raw / byte string prefixes: r"...", r#"..."#, b"...", br#"..."#.
+        if (c == 'r' || c == 'b') && matches!(next, Some('"') | Some('#') | Some('\'')) {
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && chars.get(j) == Some(&'r') {
+                raw = true;
+                j += 1;
+            }
+            if c == 'b' && chars.get(j) == Some(&'\'') {
+                // Byte char literal b'x'.
+                let (tok, adv, nl) = lex_char(&chars, j, line);
+                toks.push(Token { kind: tok.0, text: tok.1, line });
+                line += nl;
+                i = j + adv;
+                continue;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while chars.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'"') {
+                    let start_line = line;
+                    let body_start = j + 1;
+                    let mut k = body_start;
+                    while k < chars.len() {
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while chars.get(k + 1 + h) == Some(&'#') {
+                                h += 1;
+                            }
+                            if h >= hashes {
+                                line += count_lines(&chars[i..k]);
+                                toks.push(Token {
+                                    kind: TokKind::Str,
+                                    text: chars[body_start..k].iter().collect(),
+                                    line: start_line,
+                                });
+                                i = k + 1 + hashes;
+                                continue 'outer;
+                            }
+                        }
+                        k += 1;
+                    }
+                    // Unterminated: consume to EOF.
+                    toks.push(Token {
+                        kind: TokKind::Str,
+                        text: chars[body_start..].iter().collect(),
+                        line: start_line,
+                    });
+                    i = chars.len();
+                    continue;
+                }
+                // `r` / `br` not followed by a string: plain ident path.
+            }
+            // `b"..."`: fall through to the string case below from j.
+            if chars.get(j) == Some(&'"') {
+                let start_line = line;
+                let (text, adv, nl) = lex_quoted(&chars, j);
+                line += nl;
+                toks.push(Token { kind: TokKind::Str, text, line: start_line });
+                i = j + adv;
+                continue;
+            }
+        }
+
+        // Identifier / keyword.
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            let mut j = i;
+            while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Ident, text: chars[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+
+        // Number. Consume digits + ident-continue (hex, suffixes), plus
+        // one `.fraction` only when a digit follows the dot — so range
+        // expressions like `0..n` stay three tokens.
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
+                j += 1;
+            }
+            if chars.get(j) == Some(&'.') && chars.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+                j += 1;
+                while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: TokKind::Num, text: chars[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            let (text, adv, nl) = lex_quoted(&chars, i);
+            line += nl;
+            toks.push(Token { kind: TokKind::Str, text, line: start_line });
+            i += adv;
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let (tok, adv, nl) = lex_char(&chars, i, line);
+            toks.push(Token { kind: tok.0, text: tok.1, line });
+            line += nl;
+            i += adv;
+            continue;
+        }
+
+        toks.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+
+    (toks, comments)
+}
+
+/// Lex a `"..."` string starting at `chars[at] == '"'`. Returns the
+/// interior text, chars consumed, and newlines crossed.
+fn lex_quoted(chars: &[char], at: usize) -> (String, usize, u32) {
+    let mut j = at + 1;
+    let mut nl = 0u32;
+    let mut text = String::new();
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => {
+                // Keep escapes verbatim; rules only compare literals
+                // that contain none.
+                if let Some(&e) = chars.get(j + 1) {
+                    text.push('\\');
+                    text.push(e);
+                    if e == '\n' {
+                        nl += 1;
+                    }
+                }
+                j += 2;
+            }
+            '"' => return (text, j + 1 - at, nl),
+            ch => {
+                if ch == '\n' {
+                    nl += 1;
+                }
+                text.push(ch);
+                j += 1;
+            }
+        }
+    }
+    (text, chars.len() - at, nl)
+}
+
+/// Lex from a `'` at `chars[at]`: either a char literal or a lifetime.
+/// Returns ((kind, text), chars consumed, newlines crossed).
+fn lex_char(chars: &[char], at: usize, _line: u32) -> ((TokKind, String), usize, u32) {
+    let next = chars.get(at + 1).copied();
+    // Lifetime: `'ident` not closed by a quote right after.
+    if let Some(n) = next {
+        if (n == '_' || n.is_alphabetic()) && chars.get(at + 2) != Some(&'\'') {
+            let mut j = at + 1;
+            while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
+                j += 1;
+            }
+            return ((TokKind::Lifetime, chars[at + 1..j].iter().collect()), j - at, 0);
+        }
+    }
+    // Char literal: consume to the closing quote, honoring escapes.
+    let mut j = at + 1;
+    let mut nl = 0u32;
+    let mut text = String::new();
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => {
+                if let Some(&e) = chars.get(j + 1) {
+                    text.push('\\');
+                    text.push(e);
+                }
+                j += 2;
+            }
+            '\'' => return ((TokKind::Char, text), j + 1 - at, nl),
+            ch => {
+                if ch == '\n' {
+                    nl += 1;
+                }
+                text.push(ch);
+                j += 1;
+            }
+        }
+    }
+    ((TokKind::Char, text), chars.len() - at, nl)
+}

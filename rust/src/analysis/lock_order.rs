@@ -1,0 +1,577 @@
+//! L1 — lock-order analysis.
+//!
+//! Extracts `lock()/read()/write()` acquisition sites per function,
+//! tracks which guards are *held* (a `let`-bound guard lives to the end
+//! of its block or an explicit `drop(guard)`; a chained temporary lives
+//! to the end of its statement), propagates one call-graph level
+//! through receiver-gated calls, and checks every "acquired B while
+//! holding A" edge against the project's total lock order. Any
+//! inversion or cycle is a finding.
+//!
+//! The order is the one DESIGN.md §7–§11 prescribe in prose, now
+//! codified (lower rank = acquired first):
+//!
+//! | rank | class             | site |
+//! |------|-------------------|------|
+//! | 10   | `submit_lock`     | per-job submit serialization (`hub/repo.rs`) |
+//! | 12   | `fit_gates`       | fit-gate map (`api/service.rs`) |
+//! | 15   | `fit_gate`        | one job's cold-fit gate |
+//! | 20   | `repos`           | hub repository map (`hub/repo.rs`) |
+//! | 30   | `storage`         | durable-store handle slot (`hub/repo.rs`) |
+//! | 50   | `cache_stripe`    | 16-stripe fitted-model cache (`api/service.rs`) |
+//! | 55   | `engine`          | fit-engine config slot |
+//! | 56   | `follower_of`     | replication role slot |
+//! | 57   | `coalesce_window` | predict-coalescing window knob |
+//! | 60   | `coalesce_groups` | coalesce group map |
+//! | 65   | `group_state`     | one coalesce group's state |
+//! | 70   | `queue_jobs`      | reactor worker queue (`hub/server.rs`) |
+//! | 75   | `outbox_replies`  | reactor reply outbox (`hub/server.rs`) |
+//! | 80   | `snapshots`       | snapshot serialization (`storage/mod.rs`) |
+//! | 85   | `coverage`        | contribution coverage map (`storage/mod.rs`) |
+//! | 90   | `wal`             | per-repo WAL handle (`storage/mod.rs`) |
+//!
+//! Receivers not in the registry (io handles, bench scratch, fixture
+//! code) are ignored — the rule audits the named hub/storage locks, not
+//! every `RwLock` in existence.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::TokKind;
+use super::scanner::{FnSpan, SourceFile};
+use super::Finding;
+
+/// Classify a lock receiver name into (class, rank). `None` = not a
+/// registered lock; the acquisition is ignored.
+pub fn classify(receiver: &str) -> Option<(&'static str, u32)> {
+    Some(match receiver {
+        "lock" | "submit_lock" => ("submit_lock", 10),
+        "fit_gates" => ("fit_gates", 12),
+        "gate" => ("fit_gate", 15),
+        "repos" => ("repos", 20),
+        "storage" => ("storage", 30),
+        "cache" | "stripe" => ("cache_stripe", 50),
+        "engine" => ("engine", 55),
+        "follower_of" => ("follower_of", 56),
+        "coalesce_window" => ("coalesce_window", 57),
+        "coalesce_groups" | "groups" => ("coalesce_groups", 60),
+        "state" | "st" => ("group_state", 65),
+        "jobs" => ("queue_jobs", 70),
+        "replies" => ("outbox_replies", 75),
+        "snapshots" | "latest" => ("snapshots", 80),
+        "coverage" => ("coverage", 85),
+        "wals" | "wal" => ("wal", 90),
+        _ => return None,
+    })
+}
+
+/// Method-call receivers resolved across files (one call-graph level):
+/// the named component handles that hop between hub / storage layers.
+fn component_file(receiver: &str) -> Option<&'static str> {
+    Some(match receiver {
+        "state" => "hub/repo.rs",
+        "store" | "storage" => "storage/mod.rs",
+        "service" | "svc" => "api/service.rs",
+        "wal" => "storage/wal.rs",
+        _ => return None,
+    })
+}
+
+/// Method names never treated as cross-component calls.
+fn never_a_call(name: &str) -> bool {
+    matches!(
+        name,
+        "lock" | "read" | "write" | "unwrap" | "expect" | "clone" | "drop"
+    )
+}
+
+/// A currently-held guard during the interval walk.
+#[derive(Debug, Clone)]
+struct Hold {
+    class: &'static str,
+    rank: u32,
+    binding: Option<String>,
+    depth: usize,
+}
+
+/// An observed "acquired `to` while holding `from`" edge.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub from: &'static str,
+    pub from_rank: u32,
+    pub to: &'static str,
+    pub to_rank: u32,
+    pub file: String,
+    pub line: u32,
+    /// Set when the inner acquisition came from a called function.
+    pub via: Option<String>,
+}
+
+/// Run L1 over all files. Returns raw findings (marker filtering is
+/// the caller's job) at the line of each offending inner acquisition.
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let observed = edges(files);
+    let mut findings = Vec::new();
+    let mut seen: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for e in &observed {
+        if e.from_rank < e.to_rank {
+            continue;
+        }
+        let via = match &e.via {
+            Some(c) => format!(" (via call to `{c}`)"),
+            None => String::new(),
+        };
+        let msg = if e.from == e.to {
+            format!(
+                "re-entrant acquisition of `{}`{via} — self-deadlock risk",
+                e.from
+            )
+        } else {
+            format!(
+                "lock-order inversion: `{}` (rank {}) acquired while \
+                 holding `{}` (rank {}){via}; the project order requires \
+                 `{}` before `{}`",
+                e.to, e.to_rank, e.from, e.from_rank, e.to, e.from
+            )
+        };
+        if seen.insert((e.file.clone(), e.line, msg.clone())) {
+            findings.push(Finding {
+                file: e.file.clone(),
+                line: e.line,
+                rule: "lock_order",
+                message: msg,
+            });
+        }
+    }
+
+    // Cycle check over the class digraph. With a total rank order every
+    // cycle contains an inversion already reported above, but the graph
+    // check keeps the rule honest if ranks are ever made partial.
+    if findings.is_empty() {
+        if let Some(cycle) = find_cycle(&observed) {
+            let at = observed.first();
+            findings.push(Finding {
+                file: at.map(|e| e.file.clone()).unwrap_or_default(),
+                line: at.map(|e| e.line).unwrap_or(1),
+                rule: "lock_order",
+                message: format!("lock graph contains a cycle: {}", cycle.join(" -> ")),
+            });
+        }
+    }
+
+    findings
+}
+
+/// All observed inter-lock edges (also drives the `--fix-report` DAG
+/// dump).
+pub fn edges(files: &[SourceFile]) -> Vec<Edge> {
+    // Pass 1: direct acquisition classes per (file rel, fn name).
+    let mut direct: BTreeMap<(String, String), Vec<(&'static str, u32)>> = BTreeMap::new();
+    for sf in files {
+        for span in &sf.fns {
+            if span.is_test {
+                continue;
+            }
+            direct
+                .entry((sf.rel.clone(), span.name.clone()))
+                .or_default()
+                .extend(direct_classes(sf, span));
+        }
+    }
+    // Pass 2: interval walk per fn.
+    let mut out = Vec::new();
+    for sf in files {
+        for span in &sf.fns {
+            if span.is_test {
+                continue;
+            }
+            walk_fn(sf, span, files, &direct, &mut out);
+        }
+    }
+    out
+}
+
+/// Lightweight scan: every registered acquisition class in a fn body,
+/// ignoring hold intervals (the pass-1 callee summaries).
+fn direct_classes(sf: &SourceFile, span: &FnSpan) -> Vec<(&'static str, u32)> {
+    let nested = nested_spans(sf, span);
+    let mut out = Vec::new();
+    let mut i = span.body_start + 1;
+    while i < span.body_end {
+        if let Some(end) = nested.iter().find_map(|&(s, e)| (s == i).then_some(e)) {
+            i = end + 1;
+            continue;
+        }
+        if let Some((class, rank)) = acquisition_at(sf, i) {
+            out.push((class, rank));
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Body token ranges of fns nested inside `span` (closures are *not*
+/// masked — a closure runs under whatever its caller holds; a nested
+/// `fn` does not).
+fn nested_spans(sf: &SourceFile, span: &FnSpan) -> Vec<(usize, usize)> {
+    sf.fns
+        .iter()
+        .filter(|f| f.body_start > span.body_start && f.body_end < span.body_end)
+        .map(|f| (f.body_start, f.body_end))
+        .collect()
+}
+
+/// Is token `i` the `lock/read/write` ident of a registered
+/// `receiver.lock().unwrap()`-shaped acquisition? Returns its class.
+fn acquisition_at(sf: &SourceFile, i: usize) -> Option<(&'static str, u32)> {
+    let t = &sf.tokens;
+    let m = t.get(i)?;
+    if m.kind != TokKind::Ident || !matches!(m.text.as_str(), "lock" | "read" | "write") {
+        return None;
+    }
+    if !t.get(i.checked_sub(1)?)?.is(".") {
+        return None;
+    }
+    if !(t.get(i + 1)?.is("(") && t.get(i + 2)?.is(")") && t.get(i + 3)?.is(".")) {
+        return None;
+    }
+    let u = t.get(i + 4)?;
+    if !(u.kind == TokKind::Ident && matches!(u.text.as_str(), "unwrap" | "expect")) {
+        return None;
+    }
+    let recv = receiver_name(sf, i.checked_sub(2)?)?;
+    classify(&recv)
+}
+
+/// Walk back from token `j` (the token just before the `.` of a method
+/// chain) to the receiver's base name, skipping one balanced `(...)` or
+/// `[...]` group: `self.stripe(&key).write()` → `stripe`.
+fn receiver_name(sf: &SourceFile, j: usize) -> Option<String> {
+    let t = &sf.tokens;
+    let tok = t.get(j)?;
+    if tok.kind == TokKind::Ident {
+        return Some(tok.text.clone());
+    }
+    let (close, open) = match tok.text.as_str() {
+        ")" => (")", "("),
+        "]" => ("]", "["),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    let mut k = j;
+    loop {
+        let tk = t.get(k)?;
+        if tk.is(close) {
+            depth += 1;
+        } else if tk.is(open) {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                break;
+            }
+        }
+        k = k.checked_sub(1)?;
+    }
+    let prev = t.get(k.checked_sub(1)?)?;
+    if prev.kind == TokKind::Ident {
+        Some(prev.text.clone())
+    } else {
+        None
+    }
+}
+
+/// Full interval walk of one fn: tracks held guards and statement
+/// temporaries, emits an edge for every acquisition (or registered
+/// cross-component call) that happens under a hold.
+fn walk_fn(
+    sf: &SourceFile,
+    span: &FnSpan,
+    files: &[SourceFile],
+    direct: &BTreeMap<(String, String), Vec<(&'static str, u32)>>,
+    edges: &mut Vec<Edge>,
+) {
+    let t = &sf.tokens;
+    let nested = nested_spans(sf, span);
+    let mut holds: Vec<Hold> = Vec::new();
+    let mut temps: Vec<Hold> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_start = span.body_start + 1;
+    let mut i = span.body_start + 1;
+
+    while i < span.body_end {
+        if let Some(end) = nested.iter().find_map(|&(s, e)| (s == i).then_some(e)) {
+            i = end + 1;
+            stmt_start = i;
+            continue;
+        }
+        let tok = &t[i];
+        if tok.kind == TokKind::Punct {
+            match tok.text.as_str() {
+                "{" => {
+                    depth += 1;
+                    stmt_start = i + 1;
+                    i += 1;
+                    continue;
+                }
+                "}" => {
+                    holds.retain(|h| h.depth != depth);
+                    depth = depth.saturating_sub(1);
+                    stmt_start = i + 1;
+                    i += 1;
+                    continue;
+                }
+                ";" => {
+                    temps.clear();
+                    stmt_start = i + 1;
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+
+        // Explicit `drop(guard)` releases the named hold early.
+        if tok.kind == TokKind::Ident
+            && tok.is("drop")
+            && t.get(i + 1).is_some_and(|x| x.is("("))
+            && t.get(i + 3).is_some_and(|x| x.is(")"))
+        {
+            if let Some(name) = t.get(i + 2).filter(|x| x.kind == TokKind::Ident) {
+                holds.retain(|h| h.binding.as_deref() != Some(name.text.as_str()));
+            }
+        }
+
+        // Acquisition site.
+        if let Some((class, rank)) = acquisition_at(sf, i) {
+            for h in holds.iter().chain(temps.iter()) {
+                edges.push(Edge {
+                    from: h.class,
+                    from_rank: h.rank,
+                    to: class,
+                    to_rank: rank,
+                    file: sf.rel.clone(),
+                    line: tok.line,
+                    via: None,
+                });
+            }
+            match held_binding(sf, span, i, stmt_start) {
+                Some(binding) => holds.push(Hold {
+                    class,
+                    rank,
+                    binding,
+                    depth,
+                }),
+                None => temps.push(Hold {
+                    class,
+                    rank,
+                    binding: None,
+                    depth,
+                }),
+            }
+            i += 1;
+            continue;
+        }
+
+        // One-level call propagation, only while something is held.
+        if (!holds.is_empty() || !temps.is_empty()) && tok.kind == TokKind::Ident {
+            if let Some((callee_file, callee)) = resolve_call(sf, i) {
+                let classes = lookup_direct(files, direct, &callee_file, &callee);
+                for (c, r) in classes {
+                    for h in holds.iter().chain(temps.iter()) {
+                        edges.push(Edge {
+                            from: h.class,
+                            from_rank: h.rank,
+                            to: c,
+                            to_rank: r,
+                            file: sf.rel.clone(),
+                            line: tok.line,
+                            via: Some(callee.clone()),
+                        });
+                    }
+                }
+            }
+        }
+
+        i += 1;
+    }
+}
+
+/// Does the acquisition at token `i` produce a held guard? Yes when the
+/// statement is `let <pat> = <chain>.unwrap();` — the guard is bound —
+/// and the initializer is not a `*`-deref copy (which releases at the
+/// semicolon). Returns `Some(binding)` for a held guard, `None` for a
+/// temporary.
+fn held_binding(
+    sf: &SourceFile,
+    span: &FnSpan,
+    i: usize,
+    stmt_start: usize,
+) -> Option<Option<String>> {
+    let t = &sf.tokens;
+    // Find the end of the `.unwrap(...)` / `.expect(...)` call.
+    let call_open = i + 5;
+    if !t.get(call_open)?.is("(") {
+        return None;
+    }
+    let mut d = 0usize;
+    let mut k = call_open;
+    while k < span.body_end {
+        if t[k].is("(") {
+            d += 1;
+        } else if t[k].is(")") {
+            d = d.saturating_sub(1);
+            if d == 0 {
+                break;
+            }
+        }
+        k += 1;
+    }
+    if !t.get(k + 1)?.is(";") {
+        return None; // chained further: a temporary
+    }
+    if !t.get(stmt_start)?.is("let") {
+        return None; // bare expression statement: a temporary
+    }
+    // `let x = *guard.read().unwrap();` copies out and releases.
+    let mut e = stmt_start;
+    while e < i {
+        if t[e].is("=") && !t.get(e + 1).is_some_and(|x| x.is("=")) {
+            if t.get(e + 1).is_some_and(|x| x.is("*")) {
+                return None;
+            }
+            break;
+        }
+        e += 1;
+    }
+    // Binding: first ident after `let` that isn't `mut`.
+    let mut b = stmt_start + 1;
+    let binding = loop {
+        let tok = t.get(b)?;
+        if tok.kind == TokKind::Ident && !tok.is("mut") {
+            break Some(tok.text.clone());
+        }
+        if tok.is("=") {
+            break None;
+        }
+        b += 1;
+    };
+    Some(binding)
+}
+
+/// Resolve a call at token `i` (a method or path-fn name ident) to
+/// (callee file rel-suffix, callee fn name). Receiver-gated: only
+/// `self.`, registered component handles, and `module::` paths resolve
+/// — generic method names on arbitrary receivers do not.
+fn resolve_call(sf: &SourceFile, i: usize) -> Option<(String, String)> {
+    let t = &sf.tokens;
+    let name = t.get(i)?;
+    if name.kind != TokKind::Ident || !t.get(i + 1)?.is("(") {
+        return None;
+    }
+    if never_a_call(&name.text) {
+        return None;
+    }
+    // `receiver.name(...)`.
+    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(".")) {
+        let recv = t.get(i.checked_sub(2)?)?;
+        if recv.kind != TokKind::Ident {
+            return None;
+        }
+        if recv.is("self") {
+            return Some((sf.rel.clone(), name.text.clone()));
+        }
+        if let Some(file) = component_file(&recv.text) {
+            return Some((file.to_string(), name.text.clone()));
+        }
+        return None;
+    }
+    // `module::name(...)`.
+    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(":"))
+        && t.get(i.wrapping_sub(2)).is_some_and(|x| x.is(":"))
+    {
+        let m = t.get(i.checked_sub(3)?)?;
+        if m.kind == TokKind::Ident && m.text.chars().next().is_some_and(char::is_lowercase) {
+            return Some((format!("{}.rs", m.text), name.text.clone()));
+        }
+    }
+    None
+}
+
+/// Direct classes of a callee referenced by rel-suffix (`callee_file`
+/// may be a bare `module.rs` from a path call; match by suffix, with
+/// `module/mod.rs` as the fallback spelling).
+fn lookup_direct(
+    files: &[SourceFile],
+    direct: &BTreeMap<(String, String), Vec<(&'static str, u32)>>,
+    callee_file: &str,
+    callee: &str,
+) -> Vec<(&'static str, u32)> {
+    let stem = callee_file.trim_end_matches(".rs");
+    let sf = files.iter().find(|f| {
+        f.rel == callee_file
+            || f.rel.ends_with(&format!("/{callee_file}"))
+            || f.rel == format!("{stem}/mod.rs")
+            || f.rel.ends_with(&format!("/{stem}/mod.rs"))
+    });
+    match sf {
+        Some(sf) => direct
+            .get(&(sf.rel.clone(), callee.to_string()))
+            .cloned()
+            .unwrap_or_default(),
+        None => Vec::new(),
+    }
+}
+
+/// DFS cycle detection over the deduped class digraph.
+fn find_cycle(edges: &[Edge]) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        if e.from != e.to {
+            adj.entry(e.from).or_default().insert(e.to);
+        }
+    }
+    fn dfs<'a>(
+        n: &'a str,
+        adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        state: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        state.insert(n, 1);
+        stack.push(n);
+        if let Some(next) = adj.get(n) {
+            for &m in next {
+                match state.get(m).copied().unwrap_or(0) {
+                    1 => {
+                        let pos = stack.iter().position(|&x| x == m).unwrap_or(0);
+                        let mut cyc: Vec<String> = stack
+                            .get(pos..)
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|s| s.to_string())
+                            .collect();
+                        cyc.push(m.to_string());
+                        return Some(cyc);
+                    }
+                    0 => {
+                        if let Some(c) = dfs(m, adj, state, stack) {
+                            return Some(c);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        stack.pop();
+        state.insert(n, 2);
+        None
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    let mut state: BTreeMap<&str, u8> = BTreeMap::new();
+    let mut stack: Vec<&str> = Vec::new();
+    for n in nodes {
+        if state.get(n).copied().unwrap_or(0) == 0 {
+            if let Some(c) = dfs(n, &adj, &mut state, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,330 @@
+//! `c3o lint` — a project-invariant static analyzer for the hub tree.
+//!
+//! DESIGN.md §7–§11 grew a set of correctness invariants that used to
+//! live only in prose: the lock acquisition order across submit locks /
+//! cache stripes / coalesce groups / reactor queues, panic-freedom on
+//! the reactor and WAL hot paths, `SAFETY` justification for the epoll
+//! FFI, and fsync-before-rename durability discipline. This module
+//! machine-checks them on every build (`.github/workflows/ci.yml` runs
+//! `c3o lint rust/src` as a blocking step).
+//!
+//! The analyzer is deliberately self-contained: a hand-rolled lexer
+//! ([`lexer`]) and a brace/function-aware scanner ([`scanner`]) over
+//! the project's own sources — no syn, no rustc internals, no external
+//! crates — because the crate builds against an offline cache. It is a
+//! *project* linter, not a general one: the lock registry in
+//! [`lock_order`] names this codebase's locks, and the hot-path list in
+//! [`rules`] names this codebase's reactor files. See DESIGN.md §12 for
+//! the rule catalog and the allow-marker grammar.
+//!
+//! Escape hatch: a deliberate violation carries, on its line or the
+//! comment block right above it,
+//!
+//! ```text
+//! // lint: allow(<rule>, reason = "<why this is sound>")
+//! ```
+//!
+//! where `<rule>` is one of `lock_order`, `panics`, `safety`,
+//! `durability`, `protocol`. A marker with a missing or empty reason is
+//! itself a finding — the escape hatch documents, it does not silence.
+
+pub mod lexer;
+pub mod lock_order;
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use scanner::SourceFile;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// The result of linting a tree.
+#[derive(Debug)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub fns_scanned: usize,
+    /// Observed inter-lock edges (for the `--fix-report` DAG dump).
+    pub lock_edges: Vec<lock_order::Edge>,
+}
+
+/// Lint every `.rs` file under `root`. Findings already filtered
+/// through allow markers and sorted by (file, line, rule).
+pub fn lint_dir(root: &Path) -> crate::Result<LintReport> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::new();
+    for path in paths {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = rel_path(root, &path);
+        files.push(SourceFile::parse(path, rel, &src));
+    }
+
+    let mut findings = Vec::new();
+    findings.extend(lock_order::check(&files));
+    for sf in &files {
+        findings.extend(rules::panic_freedom(sf));
+        findings.extend(rules::unsafe_audit(sf));
+        findings.extend(rules::durability(sf));
+    }
+    findings.extend(rules::protocol(&files));
+
+    // Apply allow markers; malformed / reasonless markers are findings.
+    let markers: BTreeMap<&str, FileMarkers> =
+        files.iter().map(|sf| (sf.rel.as_str(), file_markers(sf))).collect();
+    findings.retain(|f| {
+        markers
+            .get(f.file.as_str())
+            .is_none_or(|m| !m.allows(f.line, f.rule))
+    });
+    for (rel, m) in &markers {
+        for &(line, ref msg) in &m.bad {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: "marker",
+                message: msg.clone(),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    findings.dedup();
+
+    Ok(LintReport {
+        findings,
+        files_scanned: files.len(),
+        fns_scanned: files.iter().map(|f| f.fns.len()).sum(),
+        lock_edges: lock_order::edges(&files),
+    })
+}
+
+/// Render the report for the CLI. One `file:line: [rule] message` per
+/// finding plus a summary line; `fix_report` appends per-rule
+/// remediation notes and the observed lock DAG.
+pub fn render(report: &LintReport, root: &Path, fix_report: bool) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "{}/{}:{}: [{}] {}\n",
+            root.display(),
+            f.file,
+            f.line,
+            f.rule,
+            f.message
+        ));
+    }
+    if report.findings.is_empty() {
+        out.push_str(&format!(
+            "c3o lint: clean — {} files, {} fns, 0 findings\n",
+            report.files_scanned, report.fns_scanned
+        ));
+    } else {
+        out.push_str(&format!(
+            "c3o lint: {} finding(s) in {} files scanned\n",
+            report.findings.len(),
+            report.files_scanned
+        ));
+    }
+    if fix_report {
+        out.push_str(&fix_notes(report));
+    }
+    out
+}
+
+fn fix_notes(report: &LintReport) -> String {
+    let mut out = String::from("\n== fix report ==\n");
+    let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in &report.findings {
+        *by_rule.entry(f.rule).or_insert(0) += 1;
+    }
+    let hint = |rule: &str| -> &str {
+        match rule {
+            "lock_order" => {
+                "reorder the acquisitions to follow the rank table in \
+                 DESIGN.md §12, or shrink the outer guard's scope \
+                 (drop(guard) / a `{}` block) so the locks never overlap"
+            }
+            "panics" => {
+                "return a structured error (WireError / io::Error) for \
+                 anything reachable from peer or disk input; annotate \
+                 deliberate mutex-poisoning unwraps with \
+                 `// lint: allow(panics, reason = \"...\")`"
+            }
+            "safety" => {
+                "add `// SAFETY:` immediately above the unsafe block, \
+                 stating the preconditions and why the surrounding code \
+                 establishes them"
+            }
+            "durability" => {
+                "call `sync_dir` on the parent directory after the \
+                 rename (see storage/mod.rs), or justify with \
+                 `// lint: allow(durability, ...)`"
+            }
+            "protocol" => {
+                "wire the op through Op::decode, the service dispatch \
+                 and HubClient together — partial plumbing drifts"
+            }
+            _ => "write the marker as // lint: allow(rule, reason = \"...\")",
+        }
+    };
+    for (rule, n) in &by_rule {
+        out.push_str(&format!("[{rule}] {n} finding(s): {}\n", hint(rule)));
+    }
+    out.push_str("\nobserved lock DAG (acquired-before edges):\n");
+    let mut seen = std::collections::BTreeSet::new();
+    for e in &report.lock_edges {
+        if seen.insert((e.from, e.to)) {
+            out.push_str(&format!(
+                "  {} (rank {}) -> {} (rank {})\n",
+                e.from, e.from_rank, e.to, e.to_rank
+            ));
+        }
+    }
+    if seen.is_empty() {
+        out.push_str("  (none observed)\n");
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Allow markers
+// ---------------------------------------------------------------------------
+
+/// Markers of one file: `line -> rules allowed there`, plus malformed
+/// marker findings.
+struct FileMarkers {
+    allow: BTreeMap<u32, Vec<String>>,
+    bad: Vec<(u32, String)>,
+}
+
+impl FileMarkers {
+    /// Is `(line, rule)` covered? Coverage (same line, or the first
+    /// source line below the marker's comment block) was expanded into
+    /// the map at parse time, so this is a lookup.
+    fn allows(&self, line: u32, rule: &str) -> bool {
+        self.allow
+            .get(&line)
+            .is_some_and(|rules| rules.iter().any(|r| r == rule))
+    }
+}
+
+/// Parse every `// lint: allow(...)` marker in a file. A marker on
+/// comment line L covers L and the next source line below the comment
+/// block it belongs to (computed here so `allows` is a map lookup).
+fn file_markers(sf: &SourceFile) -> FileMarkers {
+    let mut allow: BTreeMap<u32, Vec<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    for c in &sf.comments {
+        let text = c.text.trim_start();
+        if !text.starts_with("lint:") {
+            continue;
+        }
+        match parse_marker(text) {
+            Ok((rule, reason)) => {
+                if reason.trim().is_empty() {
+                    bad.push((
+                        c.line,
+                        format!(
+                            "allow({rule}) marker without a reason — write \
+                             `// lint: allow({rule}, reason = \"...\")`"
+                        ),
+                    ));
+                    continue;
+                }
+                // The marker covers its own line and every line of the
+                // comment/blank block below it up to and including the
+                // first source line.
+                let mut l = c.line;
+                loop {
+                    allow.entry(l).or_default().push(rule.clone());
+                    l += 1;
+                    let s = sf.line(l);
+                    let trimmed = s.trim();
+                    let is_gap = trimmed.is_empty()
+                        || trimmed.starts_with("//")
+                        || trimmed.starts_with('#');
+                    if !is_gap {
+                        allow.entry(l).or_default().push(rule.clone());
+                        break;
+                    }
+                    if l as usize > sf.lines.len() {
+                        break;
+                    }
+                }
+            }
+            Err(msg) => bad.push((c.line, msg)),
+        }
+    }
+    FileMarkers { allow, bad }
+}
+
+/// Parse `lint: allow(rule, reason = "...")`. Returns (rule, reason).
+fn parse_marker(text: &str) -> Result<(String, String), String> {
+    let malformed =
+        || "malformed lint marker — write `// lint: allow(rule, reason = \"...\")`".to_string();
+    let rest = text.strip_prefix("lint:").ok_or_else(malformed)?.trim_start();
+    let rest = rest.strip_prefix("allow(").ok_or_else(malformed)?;
+    let close = rest.rfind(')').ok_or_else(malformed)?;
+    let inner = rest.get(..close).ok_or_else(malformed)?;
+    let (rule, reason) = match inner.split_once(',') {
+        Some((r, rest)) => {
+            let rest = rest.trim_start();
+            let reason = rest
+                .strip_prefix("reason")
+                .map(|r| r.trim_start())
+                .and_then(|r| r.strip_prefix('='))
+                .map(|r| r.trim().trim_matches('"').to_string())
+                .ok_or_else(malformed)?;
+            (r.trim().to_string(), reason)
+        }
+        None => (inner.trim().to_string(), String::new()),
+    };
+    const RULES: &[&str] = &["lock_order", "panics", "safety", "durability", "protocol"];
+    if !RULES.contains(&rule.as_str()) {
+        return Err(format!(
+            "unknown rule `{rule}` in lint marker (known: {})",
+            RULES.join(", ")
+        ));
+    }
+    Ok((rule, reason))
+}
+
+// ---------------------------------------------------------------------------
+// File walking
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -1,0 +1,321 @@
+//! L2–L5: panic-freedom, unsafe audit, durability discipline, protocol
+//! exhaustiveness. (L1 lock-order lives in [`super::lock_order`].)
+
+use std::collections::BTreeSet;
+
+use super::lexer::TokKind;
+use super::scanner::SourceFile;
+use super::Finding;
+
+/// Modules where a panic kills a reactor or worker mid-frame: the L2
+/// deny-list. Matched as `/`-separated rel-path suffixes.
+const HOT_PATH: &[&str] = &[
+    "api/proto.rs",
+    "hub/transport.rs",
+    "hub/server.rs",
+    "storage/wal.rs",
+];
+
+fn is_hot(rel: &str) -> bool {
+    HOT_PATH.iter().any(|h| rel == *h || rel.ends_with(&format!("/{h}")))
+}
+
+/// L2 — panic-freedom on hot paths: no `.unwrap()` / `.expect(` /
+/// `panic!`-family macros / fallible slice indexing outside tests.
+/// Deliberate sites carry `// lint: allow(panics, reason = "...")`.
+pub fn panic_freedom(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !is_hot(&sf.rel) {
+        return out;
+    }
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.in_test(i) {
+            continue;
+        }
+        let tok = &t[i];
+        if tok.kind == TokKind::Ident
+            && matches!(tok.text.as_str(), "unwrap" | "expect")
+            && i > 0
+            && t[i - 1].is(".")
+            && t.get(i + 1).is_some_and(|x| x.is("("))
+        {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: tok.line,
+                rule: "panics",
+                message: format!(
+                    "`.{}(` on a hot path — return a structured error or annotate \
+                     with `// lint: allow(panics, reason = \"...\")`",
+                    tok.text
+                ),
+            });
+            continue;
+        }
+        if tok.kind == TokKind::Ident
+            && matches!(
+                tok.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            )
+            && t.get(i + 1).is_some_and(|x| x.is("!"))
+        {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: tok.line,
+                rule: "panics",
+                message: format!("`{}!` on a hot path", tok.text),
+            });
+            continue;
+        }
+        // Fallible slice/array indexing: `expr[...]` where expr ends in
+        // an ident, `)` or `]`. The infallible full-range form `[..]`
+        // is exempt; macro (`vec![`) and attribute (`#[`) brackets are
+        // naturally excluded because their previous token is `!` / `#`.
+        if tok.is("[") && i > 0 {
+            let prev = &t[i - 1];
+            let indexes = prev.kind == TokKind::Ident || prev.is(")") || prev.is("]");
+            let full_range = t.get(i + 1).is_some_and(|x| x.is("."))
+                && t.get(i + 2).is_some_and(|x| x.is("."))
+                && t.get(i + 3).is_some_and(|x| x.is("]"));
+            if indexes && !full_range {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line: tok.line,
+                    rule: "panics",
+                    message: "direct slice indexing on a hot path — use `.get(..)` \
+                              or annotate with `// lint: allow(panics, ...)`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// L3 — unsafe audit: every `unsafe` token must be covered by a
+/// `// SAFETY:` comment on the same line or the contiguous comment /
+/// attribute block immediately above it.
+pub fn unsafe_audit(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut seen_lines = BTreeSet::new();
+    for (i, tok) in sf.tokens.iter().enumerate() {
+        if tok.kind != TokKind::Ident || !tok.is("unsafe") || sf.in_test(i) {
+            continue;
+        }
+        if !seen_lines.insert(tok.line) {
+            continue;
+        }
+        if !has_safety_comment(sf, tok.line) {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: tok.line,
+                rule: "safety",
+                message: "`unsafe` without an immediately preceding `// SAFETY:` \
+                          comment justifying its preconditions"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+fn has_safety_comment(sf: &SourceFile, line: u32) -> bool {
+    if sf.line(line).contains("SAFETY:") {
+        return true;
+    }
+    let mut k = line.saturating_sub(1);
+    while k >= 1 {
+        let s = sf.line(k).trim();
+        if s.is_empty() || s.starts_with('#') {
+            // Blank spacing or attributes between the comment and the
+            // item are tolerated.
+        } else if s.starts_with("//") {
+            if s.contains("SAFETY:") {
+                return true;
+            }
+        } else {
+            return false;
+        }
+        k -= 1;
+    }
+    false
+}
+
+/// L4 — durability discipline: inside `storage/`, a `fs::rename` must
+/// be paired with a `sync_dir` call in the same function (the rename is
+/// not durable until the directory entry is fsynced), or carry
+/// `// lint: allow(durability, ...)`.
+pub fn durability(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_storage = sf.rel.starts_with("storage/") || sf.rel.contains("/storage/");
+    if !in_storage {
+        return out;
+    }
+    let t = &sf.tokens;
+    for span in &sf.fns {
+        if span.is_test {
+            continue;
+        }
+        let body = span.body_start..=span.body_end;
+        let mut rename_lines = Vec::new();
+        let mut has_sync = false;
+        for i in body {
+            let tok = &t[i];
+            if tok.kind != TokKind::Ident {
+                continue;
+            }
+            if tok.is("sync_dir") {
+                has_sync = true;
+            }
+            if tok.is("rename")
+                && t.get(i + 1).is_some_and(|x| x.is("("))
+                && i >= 3
+                && t[i - 1].is(":")
+                && t[i - 2].is(":")
+                && t[i - 3].is("fs")
+            {
+                rename_lines.push(tok.line);
+            }
+        }
+        if !has_sync {
+            for line in rename_lines {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line,
+                    rule: "durability",
+                    message: format!(
+                        "`fs::rename` in `{}` without a `sync_dir` in the same \
+                         function — the rename is not durable until the parent \
+                         directory entry is fsynced",
+                        span.name
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// L5 — protocol exhaustiveness: every op-name string returned by
+/// `Op::name()` in `api/proto.rs` must be matched in `Op::decode`,
+/// dispatched in `api/service.rs`, and exercised by `HubClient`
+/// (`hub/client.rs`) — an op added to one side cannot silently drift.
+pub fn protocol(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let find = |suffix: &str| {
+        files
+            .iter()
+            .find(|f| f.rel == suffix || f.rel.ends_with(&format!("/{suffix}")))
+    };
+    let (Some(proto), Some(service), Some(client)) = (
+        find("api/proto.rs"),
+        find("api/service.rs"),
+        find("hub/client.rs"),
+    ) else {
+        return out; // not linting the full tree: rule does not apply
+    };
+
+    // (variant, op string, line) triples from `fn name`.
+    let mut ops: Vec<(String, String, u32)> = Vec::new();
+    if let Some(span) = proto.fns.iter().find(|f| f.name == "name" && !f.is_test) {
+        let t = &proto.tokens;
+        let mut variant: Option<String> = None;
+        for i in span.body_start..=span.body_end {
+            let tok = &t[i];
+            if tok.kind == TokKind::Ident
+                && tok.is("Op")
+                && t.get(i + 1).is_some_and(|x| x.is(":"))
+                && t.get(i + 2).is_some_and(|x| x.is(":"))
+            {
+                if let Some(v) = t.get(i + 3).filter(|x| x.kind == TokKind::Ident) {
+                    variant = Some(v.text.clone());
+                }
+            }
+            if tok.kind == TokKind::Str {
+                if let Some(v) = variant.take() {
+                    ops.push((v, tok.text.clone(), tok.line));
+                }
+            }
+        }
+    }
+
+    let decode_strs: BTreeSet<&str> = proto
+        .fns
+        .iter()
+        .filter(|f| f.name == "decode" && !f.is_test)
+        .flat_map(|span| {
+            proto.tokens[span.body_start..=span.body_end]
+                .iter()
+                .filter(|t| t.kind == TokKind::Str)
+                .map(|t| t.text.as_str())
+        })
+        .collect();
+
+    let variants_in = |sf: &SourceFile, only_fn: Option<&str>| -> BTreeSet<String> {
+        let ranges: Vec<(usize, usize)> = match only_fn {
+            Some(name) => sf
+                .fns
+                .iter()
+                .filter(|f| f.name == name && !f.is_test)
+                .map(|f| (f.body_start, f.body_end))
+                .collect(),
+            None => vec![(0, sf.tokens.len().saturating_sub(1))],
+        };
+        let mut set = BTreeSet::new();
+        for (s, e) in ranges {
+            for i in s..=e.min(sf.tokens.len().saturating_sub(1)) {
+                if sf.in_test(i) {
+                    continue;
+                }
+                let t = &sf.tokens;
+                if t[i].kind == TokKind::Ident
+                    && t[i].is("Op")
+                    && t.get(i + 1).is_some_and(|x| x.is(":"))
+                    && t.get(i + 2).is_some_and(|x| x.is(":"))
+                {
+                    if let Some(v) = t.get(i + 3).filter(|x| x.kind == TokKind::Ident) {
+                        set.insert(v.text.clone());
+                    }
+                }
+            }
+        }
+        set
+    };
+
+    let has_dispatch = service.fns.iter().any(|f| f.name == "dispatch" && !f.is_test);
+    let dispatched = variants_in(service, has_dispatch.then_some("dispatch"));
+    let client_ops = variants_in(client, None);
+
+    for (variant, op, line) in &ops {
+        if !decode_strs.contains(op.as_str()) {
+            out.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                rule: "protocol",
+                message: format!("op \"{op}\" is named but never matched in `Op::decode`"),
+            });
+        }
+        if !dispatched.contains(variant) {
+            out.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                rule: "protocol",
+                message: format!(
+                    "`Op::{variant}` (\"{op}\") is not dispatched in `api/service.rs`"
+                ),
+            });
+        }
+        if !client_ops.contains(variant) {
+            out.push(Finding {
+                file: proto.rel.clone(),
+                line: *line,
+                rule: "protocol",
+                message: format!(
+                    "`Op::{variant}` (\"{op}\") is not exercised by `HubClient` \
+                     (`hub/client.rs`)"
+                ),
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,186 @@
+//! Structural pass over the token stream: function spans, test-only
+//! regions, and the loaded per-file view ([`SourceFile`]) every rule
+//! consumes.
+
+use std::path::PathBuf;
+
+use super::lexer::{self, Comment, TokKind, Token};
+
+/// One `fn` item with the token range of its body.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token index of the body `{`.
+    pub body_start: usize,
+    /// Token index of the matching `}`.
+    pub body_end: usize,
+    /// Inside a `#[cfg(test)]` / `#[test]` region — exempt from rules.
+    pub is_test: bool,
+}
+
+/// A parsed source file plus everything the rules need: raw lines (for
+/// marker / SAFETY adjacency), tokens, comments, fn spans, test spans.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub path: PathBuf,
+    /// Path relative to the lint root, `/`-separated — rules gate on
+    /// suffixes like `hub/server.rs`.
+    pub rel: String,
+    pub lines: Vec<String>,
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+    pub fns: Vec<FnSpan>,
+    test_regions: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: PathBuf, rel: String, src: &str) -> SourceFile {
+        let (tokens, comments) = lexer::lex(src);
+        let test_regions = test_regions(&tokens);
+        let fns = functions(&tokens, &test_regions);
+        SourceFile {
+            path,
+            rel,
+            lines: src.lines().map(str::to_string).collect(),
+            tokens,
+            comments,
+            fns,
+            test_regions,
+        }
+    }
+
+    /// True when token index `i` falls inside a test-only region.
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_regions.iter().any(|&(s, e)| i >= s && i <= e)
+    }
+
+    /// Raw text of 1-based line `n`, or `""` past EOF.
+    pub fn line(&self, n: u32) -> &str {
+        self.lines.get(n as usize - 1).map_or("", String::as_str)
+    }
+}
+
+/// Find the token index of the `}` matching the `{` at `open`.
+/// Returns the last token index when unbalanced (EOF recovery).
+pub fn matching_brace(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    tokens.len().saturating_sub(1)
+}
+
+/// Token ranges covered by `#[test]` / `#[cfg(test)]`-attributed items
+/// (most importantly each file's `mod tests { ... }` block).
+fn test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < tokens.len() {
+        if !(tokens[i].is("#") && tokens[i + 1].is("[")) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute's bracket group.
+        let mut j = i + 1;
+        let mut depth = 0usize;
+        let mut saw_test = false;
+        let mut saw_not = false;
+        while j < tokens.len() {
+            let t = &tokens[j];
+            if t.is("[") {
+                depth += 1;
+            } else if t.is("]") {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "test" => saw_test = true,
+                    "not" => saw_not = true,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if !(saw_test && !saw_not) {
+            i = j + 1;
+            continue;
+        }
+        // Attributed item: skip any further attributes, then the region
+        // runs to the item's closing brace (or ends at `;`).
+        let mut k = j + 1;
+        while k + 1 < tokens.len() && tokens[k].is("#") && tokens[k + 1].is("[") {
+            let mut d = 0usize;
+            while k < tokens.len() {
+                if tokens[k].is("[") {
+                    d += 1;
+                } else if tokens[k].is("]") {
+                    d = d.saturating_sub(1);
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        while k < tokens.len() && !tokens[k].is("{") && !tokens[k].is(";") {
+            k += 1;
+        }
+        if k < tokens.len() && tokens[k].is("{") {
+            let end = matching_brace(tokens, k);
+            regions.push((i, end));
+            i = end + 1;
+        } else {
+            i = k + 1;
+        }
+    }
+    regions
+}
+
+/// All `fn` items (free fns, methods, nested fns — each gets its own
+/// span; consumers mask inner spans when walking an outer body).
+fn functions(tokens: &[Token], test_regions: &[(usize, usize)]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    for i in 0..tokens.len() {
+        if !(tokens[i].kind == TokKind::Ident && tokens[i].is("fn")) {
+            continue;
+        }
+        let Some(name_tok) = tokens.get(i + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue; // `fn(` in a fn-pointer type
+        }
+        // Body `{` or declaration `;` — whichever comes first.
+        let mut j = i + 2;
+        while j < tokens.len() && !tokens[j].is("{") && !tokens[j].is(";") {
+            j += 1;
+        }
+        if j >= tokens.len() || tokens[j].is(";") {
+            continue;
+        }
+        let end = matching_brace(tokens, j);
+        let is_test = test_regions.iter().any(|&(s, e)| i >= s && i <= e);
+        fns.push(FnSpan {
+            name: name_tok.text.clone(),
+            line: tokens[i].line,
+            body_start: j,
+            body_end: end,
+            is_test,
+        });
+    }
+    fns
+}

@@ -171,9 +171,12 @@ impl FrameDecoder {
                         self.poisoned = true;
                         return Err(self.overflow());
                     }
-                    self.buf.extend_from_slice(&rest[..=pos]);
+                    // `pos < rest.len()` from `position`, so the split
+                    // point is in range.
+                    let (frame, after) = rest.split_at(pos + 1);
+                    self.buf.extend_from_slice(frame);
                     self.tail_len = 0;
-                    rest = &rest[pos + 1..];
+                    rest = after;
                 }
                 None => {
                     if self.tail_len + rest.len() > self.max_frame {
@@ -197,14 +200,14 @@ impl FrameDecoder {
         if self.poisoned {
             return None;
         }
-        let pos = self.buf[self.start..].iter().position(|&b| b == b'\n')?;
-        let nl = self.start + pos;
-        let mut end = nl;
-        if end > self.start && self.buf[end - 1] == b'\r' {
-            end -= 1;
+        let pending = self.buf.get(self.start..)?;
+        let pos = pending.iter().position(|&b| b == b'\n')?;
+        let mut frame = pending.get(..pos)?;
+        if let Some((&b'\r', head)) = frame.split_last() {
+            frame = head;
         }
-        let line = String::from_utf8_lossy(&self.buf[self.start..end]).into_owned();
-        self.start = nl + 1;
+        let line = String::from_utf8_lossy(frame).into_owned();
+        self.start += pos + 1;
         if self.start == self.buf.len() {
             self.buf.clear();
             self.start = 0;

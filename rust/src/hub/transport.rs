@@ -132,6 +132,9 @@ mod sys_epoll {
 
     impl EpollPoller {
         pub fn new() -> io::Result<EpollPoller> {
+            // SAFETY: epoll_create1 takes no pointers; EPOLL_CLOEXEC is
+            // the only documented flag. A negative return is routed to
+            // io::Error by cvt before the fd is ever used.
             let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
             Ok(EpollPoller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
         }
@@ -145,6 +148,10 @@ mod sys_epoll {
                 bits |= EPOLLOUT;
             }
             let mut ev = EpollEvent { events: bits, data: token };
+            // SAFETY: `ev` is a live stack value for the whole call and
+            // matches the kernel's struct epoll_event ABI (repr above);
+            // self.epfd was obtained from epoll_create1 and lives until
+            // Drop. The kernel only reads `ev` during the syscall.
             cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
         }
 
@@ -160,6 +167,10 @@ mod sys_epoll {
             // Pre-2.6.9 kernels required a non-null event for DEL; passing
             // one is free and keeps the call portable.
             let mut ev = EpollEvent { events: 0, data: 0 };
+            // SAFETY: same contract as `ctl` — `ev` outlives the call
+            // and self.epfd is a valid epoll fd; DEL ignores the event
+            // except on pre-2.6.9 kernels, which only require it
+            // non-null (it is: a stack address).
             cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) }).map(|_| ())
         }
 
@@ -172,6 +183,11 @@ mod sys_epoll {
                 None => -1,
                 Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
             };
+            // SAFETY: the pointer/len pair describes self.buf's owned,
+            // initialized allocation (1024 elements, never resized while
+            // borrowed); the kernel writes at most `maxevents` entries
+            // into it and epoll_wait returns how many. self.epfd is
+            // valid until Drop.
             let n = unsafe {
                 epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
             };
@@ -182,7 +198,10 @@ mod sys_epoll {
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => 0,
                 Err(e) => return Err(e),
             };
-            for raw in &self.buf[..n] {
+            // `n <= buf.len()`: epoll_wait never reports more events
+            // than maxevents, so take(n) covers exactly the entries the
+            // kernel wrote.
+            for raw in self.buf.iter().take(n) {
                 // Copy out of the (possibly packed) struct before use.
                 let bits = raw.events;
                 let token = raw.data;
@@ -199,6 +218,9 @@ mod sys_epoll {
 
     impl Drop for EpollPoller {
         fn drop(&mut self) {
+            // SAFETY: self.epfd came from epoll_create1, is owned
+            // exclusively by this poller, and is closed exactly once
+            // (Drop runs once; no other path closes it).
             unsafe { close(self.epfd) };
         }
     }
@@ -305,6 +327,10 @@ mod sys_poll {
                 None => -1,
                 Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
             };
+            // SAFETY: scratch was just rebuilt above, so the pointer/len
+            // pair describes its owned, initialized allocation; poll(2)
+            // only mutates the revents field of those entries, which
+            // PollFd declares with the kernel's layout.
             let n = unsafe { poll(self.scratch.as_mut_ptr(), self.scratch.len() as NfdsT, ms) };
             if n < 0 {
                 let e = io::Error::last_os_error();
@@ -438,6 +464,7 @@ impl Clone for Waker {
         // Falling back to a second pair would silently disconnect the
         // waker; try_clone on a socketpair only fails under fd
         // exhaustion, where the process is lost anyway.
+        // lint: allow(panics, reason = "dup(2) fails only on fd exhaustion; a waker that cannot clone must not silently disconnect")
         Waker { tx: self.tx.try_clone().expect("cloning waker fd") }
     }
 }

@@ -20,6 +20,7 @@
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index.
 
+pub mod analysis;
 pub mod api;
 pub mod bench;
 pub mod cloud;

@@ -37,6 +37,13 @@
 //!                cost-optimal admissible configuration is returned with
 //!                the ranked runtime/cost frontier (types below the data
 //!                floor are reported as insufficient data)
+//!   lint       — run the project-invariant static analyzer (DESIGN.md
+//!                §12) over a source tree: lock-order (L1), hot-path
+//!                panic-freedom (L2), unsafe audit (L3), storage
+//!                durability discipline (L4), protocol exhaustiveness
+//!                (L5). --fix-report appends per-rule remediation notes
+//!                and the observed lock DAG. Exit 0 = clean; CI runs
+//!                this blocking on rust/src
 //!
 //! Examples:
 //!   c3o generate --out data/
@@ -52,6 +59,8 @@
 //!       --deadline 900 --hub 127.0.0.1:7033
 //!   c3o configure --job sort --size 15 --deadline 900 \
 //!       --search-catalog --data data/
+//!   c3o lint rust/src
+//!   c3o lint --fix-report rust/src
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -509,6 +518,29 @@ fn print_choice(job: JobKind, size: f64, choice: &ConfigChoice) {
     }
 }
 
+/// `c3o lint [--fix-report] <src-dir>` — run the project-invariant
+/// static analyzer (DESIGN.md §12) over a source tree. Exits 0 when the
+/// tree is clean, 1 with `file:line: [rule] message` findings otherwise.
+fn cmd_lint(rest: &[String]) -> anyhow::Result<()> {
+    let mut fix_report = false;
+    let mut dir: Option<&str> = None;
+    for arg in rest {
+        match arg.as_str() {
+            "--fix-report" => fix_report = true,
+            other if !other.starts_with("--") => dir = Some(other),
+            other => anyhow::bail!("unknown lint flag {other}"),
+        }
+    }
+    let root = PathBuf::from(dir.unwrap_or("rust/src"));
+    let report = c3o::analysis::lint_dir(&root)
+        .with_context(|| format!("linting {}", root.display()))?;
+    print!("{}", c3o::analysis::render(&report, &root, fix_report));
+    if !report.findings.is_empty() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -519,9 +551,10 @@ fn main() {
         "eval" => cmd_eval(&rest),
         "serve" | "hub" => cmd_serve(&flags),
         "configure" => cmd_configure(&flags),
+        "lint" => cmd_lint(&rest),
         _ => {
             eprintln!(
-                "usage: c3o <generate|eval|serve|configure> [flags]\n\
+                "usage: c3o <generate|eval|serve|configure|lint> [flags]\n\
                  see rust/src/main.rs header for examples"
             );
             std::process::exit(2);

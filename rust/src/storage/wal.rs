@@ -49,6 +49,7 @@ const fn crc_table() -> [u32; 256] {
             c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
             k += 1;
         }
+        // lint: allow(panics, reason = "const-eval: i < 256 by the loop bound, so an OOB index would be a compile error, not a runtime panic")
         table[i] = c;
         i += 1;
     }
@@ -59,9 +60,24 @@ const fn crc_table() -> [u32; 256] {
 pub fn crc32(bytes: &[u8]) -> u32 {
     let mut c = 0xFFFF_FFFFu32;
     for &b in bytes {
+        // lint: allow(panics, reason = "index is masked to 0..=255 and the table has 256 entries — infallible")
         c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     c ^ 0xFFFF_FFFF
+}
+
+/// Little-endian `u32` at byte offset `pos`, `None` past the end.
+fn le_u32_at(bytes: &[u8], pos: usize) -> Option<u32> {
+    let raw = bytes.get(pos..pos.checked_add(4)?)?;
+    Some(u32::from_le_bytes(raw.try_into().ok()?))
+}
+
+/// Split a record payload into (revision, TSV bytes); `None` when the
+/// payload is shorter than the revision prefix.
+fn split_payload(payload: &[u8]) -> Option<(u64, &[u8])> {
+    let head = payload.get(..REVISION_BYTES)?;
+    let tail = payload.get(REVISION_BYTES..)?;
+    Some((u64::from_le_bytes(head.try_into().ok()?), tail))
 }
 
 /// One decoded WAL record: an accepted contribution and the repository
@@ -95,8 +111,10 @@ pub fn scan(bytes: &[u8]) -> WalScan {
         if pos + HEADER_BYTES > bytes.len() {
             break;
         }
-        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        let (len, crc) = match (le_u32_at(bytes, pos), le_u32_at(bytes, pos + 4)) {
+            (Some(len), Some(crc)) => (len as usize, crc),
+            _ => break,
+        };
         if len < REVISION_BYTES || len > MAX_RECORD_BYTES {
             break;
         }
@@ -105,12 +123,16 @@ pub fn scan(bytes: &[u8]) -> WalScan {
             Some(end) if end <= bytes.len() => end,
             _ => break,
         };
-        let payload = &bytes[start..end];
+        let Some(payload) = bytes.get(start..end) else {
+            break;
+        };
         if crc32(payload) != crc {
             break;
         }
-        let revision = u64::from_le_bytes(payload[..REVISION_BYTES].try_into().unwrap());
-        let tsv = match std::str::from_utf8(&payload[REVISION_BYTES..]) {
+        let Some((revision, tsv_bytes)) = split_payload(payload) else {
+            break;
+        };
+        let tsv = match std::str::from_utf8(tsv_bytes) {
             Ok(tsv) => tsv,
             Err(_) => break,
         };
@@ -345,8 +367,10 @@ pub fn read_tail(
         if reader.read_exact(&mut header).is_err() {
             break;
         }
-        let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let (len, crc) = match (le_u32_at(&header, 0), le_u32_at(&header, 4)) {
+            (Some(len), Some(crc)) => (len as usize, crc),
+            _ => break,
+        };
         if !(REVISION_BYTES..=MAX_RECORD_BYTES).contains(&len) {
             break;
         }
@@ -357,11 +381,13 @@ pub fn read_tail(
         if crc32(&payload) != crc {
             break;
         }
-        let revision = u64::from_le_bytes(payload[..REVISION_BYTES].try_into().unwrap());
+        let Some((revision, tsv_bytes)) = split_payload(&payload) else {
+            break;
+        };
         if revision <= from_revision {
             continue;
         }
-        let tsv = match std::str::from_utf8(&payload[REVISION_BYTES..]) {
+        let tsv = match std::str::from_utf8(tsv_bytes) {
             Ok(tsv) => tsv,
             Err(_) => break,
         };

@@ -1,0 +1,421 @@
+//! Fixture tests for `c3o lint` (`c3o::analysis`): each rule gets a
+//! bad fixture that must fire and a good fixture that must stay silent,
+//! plus a self-check pinning the project tree itself at zero findings.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use c3o::analysis::{lint_dir, LintReport};
+
+/// A throwaway source tree under the system temp dir.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(tag: &str) -> Self {
+        let root = std::env::temp_dir().join(format!("c3o_lint_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        Fixture { root }
+    }
+
+    fn file(&self, rel: &str, src: &str) -> &Self {
+        let path = self.root.join(rel);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, src).unwrap();
+        self
+    }
+
+    fn lint(&self) -> LintReport {
+        lint_dir(&self.root).unwrap()
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn rules_fired(report: &LintReport) -> Vec<&str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// L1 — lock order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_order_inversion_fires() {
+    let fx = Fixture::new("l1_bad");
+    fx.file(
+        "hub/repo.rs",
+        r#"
+use std::sync::{Mutex, RwLock};
+
+pub fn inverted(wal: &Mutex<u32>, repos: &RwLock<u32>) {
+    let w = wal.lock().unwrap();
+    let r = repos.read().unwrap();
+    drop(r);
+    drop(w);
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(
+        rules_fired(&report).contains(&"lock_order"),
+        "expected a lock_order finding, got: {:?}",
+        report.findings
+    );
+    let f = report.findings.iter().find(|f| f.rule == "lock_order").unwrap();
+    assert!(f.message.contains("inversion"), "message: {}", f.message);
+    assert_eq!(f.file, "hub/repo.rs");
+}
+
+#[test]
+fn lock_order_forward_edges_are_clean() {
+    let fx = Fixture::new("l1_good");
+    fx.file(
+        "hub/repo.rs",
+        r#"
+use std::sync::{Mutex, RwLock};
+
+pub fn forward(wal: &Mutex<u32>, repos: &RwLock<u32>) {
+    let r = repos.read().unwrap();
+    let w = wal.lock().unwrap();
+    drop(w);
+    drop(r);
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(
+        report.findings.is_empty(),
+        "forward acquisition must be clean, got: {:?}",
+        report.findings
+    );
+    assert!(
+        report.lock_edges.iter().any(|e| e.from == "repos" && e.to == "wal"),
+        "expected an observed repos -> wal edge, got: {:?}",
+        report.lock_edges
+    );
+}
+
+// ---------------------------------------------------------------------------
+// L2 — panic-freedom on hot paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_freedom_fires_on_hot_path() {
+    let fx = Fixture::new("l2_bad");
+    fx.file(
+        "api/proto.rs",
+        r#"
+pub fn first(v: &[u8]) -> u8 {
+    v[0]
+}
+
+pub fn parse(s: &str) -> u32 {
+    s.parse().unwrap()
+}
+"#,
+    );
+    let report = fx.lint();
+    let fired = rules_fired(&report);
+    assert_eq!(
+        fired.iter().filter(|r| **r == "panics").count(),
+        2,
+        "expected indexing + unwrap findings, got: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn panic_freedom_ignores_cold_modules_and_allow_markers() {
+    let fx = Fixture::new("l2_good");
+    // Same panicky code in a non-hot module: out of scope for L2.
+    fx.file(
+        "models/fit.rs",
+        r#"
+pub fn parse(s: &str) -> u32 {
+    s.parse().unwrap()
+}
+"#,
+    );
+    // Hot module, but every site is either structural or annotated.
+    fx.file(
+        "api/proto.rs",
+        r#"
+pub fn first(v: &[u8]) -> Option<u8> {
+    v.first().copied()
+}
+
+pub fn parse(s: &str) -> u32 {
+    // lint: allow(panics, reason = "fixture: demonstrating the escape hatch")
+    s.parse().unwrap()
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+#[test]
+fn reasonless_marker_is_itself_a_finding() {
+    let fx = Fixture::new("marker_bad");
+    fx.file(
+        "api/proto.rs",
+        r#"
+pub fn parse(s: &str) -> u32 {
+    // lint: allow(panics)
+    s.parse().unwrap()
+}
+"#,
+    );
+    let report = fx.lint();
+    let fired = rules_fired(&report);
+    assert!(fired.contains(&"marker"), "got: {:?}", report.findings);
+    // A reasonless marker does not suppress the underlying finding.
+    assert!(fired.contains(&"panics"), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// L3 — unsafe audit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let fx = Fixture::new("l3_bad");
+    fx.file(
+        "hub/ffi.rs",
+        r#"
+pub fn raw() -> i32 {
+    unsafe { ffi_call() }
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(rules_fired(&report).contains(&"safety"), "got: {:?}", report.findings);
+}
+
+#[test]
+fn unsafe_with_safety_comment_is_clean() {
+    let fx = Fixture::new("l3_good");
+    fx.file(
+        "hub/ffi.rs",
+        r#"
+pub fn raw() -> i32 {
+    // SAFETY: fixture — ffi_call has no preconditions.
+    unsafe { ffi_call() }
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// L4 — durability discipline in storage/
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rename_without_sync_dir_fires_in_storage() {
+    let fx = Fixture::new("l4_bad");
+    fx.file(
+        "storage/publish.rs",
+        r#"
+use std::fs;
+use std::path::Path;
+
+pub fn publish(a: &Path, b: &Path) -> std::io::Result<()> {
+    fs::rename(a, b)
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(rules_fired(&report).contains(&"durability"), "got: {:?}", report.findings);
+}
+
+#[test]
+fn rename_paired_with_sync_dir_is_clean() {
+    let fx = Fixture::new("l4_good");
+    fx.file(
+        "storage/publish.rs",
+        r#"
+use std::fs;
+use std::path::Path;
+
+pub fn publish(a: &Path, b: &Path) -> std::io::Result<()> {
+    fs::rename(a, b)?;
+    sync_dir(b)?;
+    Ok(())
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// L5 — protocol exhaustiveness
+// ---------------------------------------------------------------------------
+
+const PROTO_PARTIAL: &str = r#"
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Predict => "predict",
+            Op::Submit => "submit",
+        }
+    }
+
+    pub fn decode(s: &str) -> Option<Op> {
+        match s {
+            "predict" => Some(Op::Predict),
+            _ => None,
+        }
+    }
+}
+"#;
+
+const SERVICE_PARTIAL: &str = r#"
+pub fn dispatch(op: &Op) -> u32 {
+    match op {
+        Op::Predict => 1,
+        _ => 0,
+    }
+}
+"#;
+
+const CLIENT_PARTIAL: &str = r#"
+pub fn call() -> Op {
+    Op::Predict
+}
+"#;
+
+#[test]
+fn half_plumbed_op_fires_three_ways() {
+    let fx = Fixture::new("l5_bad");
+    fx.file("api/proto.rs", PROTO_PARTIAL)
+        .file("api/service.rs", SERVICE_PARTIAL)
+        .file("hub/client.rs", CLIENT_PARTIAL);
+    let report = fx.lint();
+    let msgs: Vec<&str> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "protocol")
+        .map(|f| f.message.as_str())
+        .collect();
+    assert_eq!(msgs.len(), 3, "got: {:?}", report.findings);
+    assert!(msgs.iter().any(|m| m.contains("never matched in `Op::decode`")));
+    assert!(msgs.iter().any(|m| m.contains("not dispatched")));
+    assert!(msgs.iter().any(|m| m.contains("not exercised by `HubClient`")));
+}
+
+#[test]
+fn fully_plumbed_ops_are_clean() {
+    let fx = Fixture::new("l5_good");
+    fx.file(
+        "api/proto.rs",
+        r#"
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Predict => "predict",
+            Op::Submit => "submit",
+        }
+    }
+
+    pub fn decode(s: &str) -> Option<Op> {
+        match s {
+            "predict" => Some(Op::Predict),
+            "submit" => Some(Op::Submit),
+            _ => None,
+        }
+    }
+}
+"#,
+    )
+    .file(
+        "api/service.rs",
+        r#"
+pub fn dispatch(op: &Op) -> u32 {
+    match op {
+        Op::Predict => 1,
+        Op::Submit => 2,
+    }
+}
+"#,
+    )
+    .file(
+        "hub/client.rs",
+        r#"
+pub fn predict() -> Op {
+    Op::Predict
+}
+
+pub fn submit() -> Op {
+    Op::Submit
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// Test-code exemption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn test_modules_are_exempt_from_hot_path_rules() {
+    let fx = Fixture::new("test_exempt");
+    fx.file(
+        "api/proto.rs",
+        r#"
+pub fn first(v: &[u8]) -> Option<u8> {
+    v.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_here_is_fine() {
+        let v = vec![1u8];
+        assert_eq!(v[0], 1);
+        let _ = "7".parse::<u32>().unwrap();
+    }
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// Self-check: the project tree itself must be clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn project_tree_is_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = lint_dir(&src).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "rust/src must stay lint-clean; findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 50, "scanned only {} files", report.files_scanned);
+    // The analyzer is live, not vacuous: the tree's real forward lock
+    // edges (submit_lock -> wal, fit_gate -> cache_stripe, ...) show up.
+    assert!(
+        !report.lock_edges.is_empty(),
+        "expected observed lock-order edges in the project tree"
+    );
+}
