@@ -13,7 +13,12 @@
 //!     parked on the reactor while a handful of active clients measure
 //!     warm-predict p50/p99 latency and aggregate throughput,
 //!   * coalescing — concurrent single-row `predict`s folded into batched
-//!     model calls under a small coalescing window.
+//!     model calls under a small coalescing window,
+//!   * telemetry — after the herd run, the `metrics` op must return
+//!     internally consistent per-stage histograms (nonzero counts,
+//!     disjoint stage sums ≤ end-to-end); the rendered Prometheus text
+//!     lands in `BENCH_hub_metrics.prom` for the CI artifact, plus a
+//!     per-record cost probe of the histogram instrument itself.
 //!
 //! A single roundtrip client is latency-bound; the reactor + worker pool
 //! let concurrent clients (or one pipelined connection) overlap those
@@ -242,8 +247,52 @@ fn main() {
         "  {IDLE_CONNS} idle conns + {active} active   p50 {p50:>6.2} ms  p99 {p99:>6.2} ms  \
          ({idle_rps:>7.0} req/s)"
     );
+
+    // Telemetry after the herd: the `metrics` op must come back with
+    // internally consistent per-stage histograms — nonzero counts for
+    // every reactor stage the herd exercised, and disjoint stage sums
+    // bounded by the end-to-end time.
+    let m = probe.metrics().expect("metrics");
+    let stage = |name: &str| {
+        let h = m.histogram(name).unwrap_or_else(|| panic!("missing histogram `{name}`"));
+        assert!(h.count > 0, "{name}: zero count after the herd run");
+        h
+    };
+    let parts = stage("stage_decode").sum_us
+        + stage("stage_queue_wait").sum_us
+        + stage("stage_service").sum_us
+        + stage("stage_dispatch").sum_us
+        + stage("stage_reply_write").sum_us;
+    let total = stage("stage_request_total");
+    assert!(
+        parts <= total.sum_us,
+        "stage sums exceed end-to-end time: {parts} > {}",
+        total.sum_us
+    );
+    let (total_count, total_p50, total_p99) = (total.count, total.p50_us, total.p99_us);
+    let stage_frac = parts as f64 / total.sum_us.max(1) as f64;
+    println!(
+        "  metrics: request_total n={total_count}  p50 {total_p50} us  p99 {total_p99} us  \
+         (stages cover {:.0}% of e2e)",
+        stage_frac * 100.0
+    );
+    let prom = m.render_prometheus();
+    std::fs::write("BENCH_hub_metrics.prom", &prom).expect("write metrics text");
+    println!("[bench] wrote BENCH_hub_metrics.prom ({} bytes)", prom.len());
     drop(idle);
     server.shutdown();
+
+    // Idle-telemetry overhead proxy: the per-record cost of the hot-path
+    // histogram instrument (two shard-local relaxed RMWs). This is the
+    // only cost the serving path pays when nobody polls `metrics`.
+    let hist = c3o::obs::Histogram::new();
+    let probe_n = 1_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..probe_n {
+        hist.record(i & 0xFFFF);
+    }
+    let record_ns = t0.elapsed().as_nanos() as f64 / probe_n as f64;
+    println!("  histogram record cost            {record_ns:>8.1} ns/record");
 
     // Coalescing: concurrent single-row predicts of the same
     // (job, machine_type) folded into batched model calls.
@@ -327,6 +376,16 @@ fn main() {
                     ("window_us", Json::Num(window.as_micros() as f64)),
                     ("rps", Json::Num(co_rps)),
                     ("coalesced", Json::Num(coalesced as f64)),
+                ]),
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("request_total_count", Json::Num(total_count as f64)),
+                    ("request_total_p50_us", Json::Num(total_p50 as f64)),
+                    ("request_total_p99_us", Json::Num(total_p99 as f64)),
+                    ("stage_coverage_of_e2e", Json::Num(stage_frac)),
+                    ("record_ns", Json::Num(record_ns)),
                 ]),
             ),
         ]),

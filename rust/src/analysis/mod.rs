@@ -25,8 +25,9 @@
 //! ```
 //!
 //! where `<rule>` is one of `lock_order`, `panics`, `safety`,
-//! `durability`, `protocol`. A marker with a missing or empty reason is
-//! itself a finding — the escape hatch documents, it does not silence.
+//! `durability`, `protocol`, `logging`. A marker with a missing or
+//! empty reason is itself a finding — the escape hatch documents, it
+//! does not silence.
 
 pub mod lexer;
 pub mod lock_order;
@@ -78,6 +79,7 @@ pub fn lint_dir(root: &Path) -> crate::Result<LintReport> {
         findings.extend(rules::panic_freedom(sf));
         findings.extend(rules::unsafe_audit(sf));
         findings.extend(rules::durability(sf));
+        findings.extend(rules::logging(sf));
     }
     findings.extend(rules::protocol(&files));
 
@@ -178,6 +180,12 @@ fn fix_notes(report: &LintReport) -> String {
             "protocol" => {
                 "wire the op through Op::decode, the service dispatch \
                  and HubClient together — partial plumbing drifts"
+            }
+            "logging" => {
+                "route the diagnostic through the structured logger \
+                 (`crate::obs::log::{error,warn,info,debug}`) so it \
+                 respects --log-level and test capture, or justify with \
+                 `// lint: allow(logging, ...)`"
             }
             _ => "write the marker as // lint: allow(rule, reason = \"...\")",
         }
@@ -294,7 +302,8 @@ fn parse_marker(text: &str) -> Result<(String, String), String> {
         }
         None => (inner.trim().to_string(), String::new()),
     };
-    const RULES: &[&str] = &["lock_order", "panics", "safety", "durability", "protocol"];
+    const RULES: &[&str] =
+        &["lock_order", "panics", "safety", "durability", "protocol", "logging"];
     if !RULES.contains(&rule.as_str()) {
         return Err(format!(
             "unknown rule `{rule}` in lint marker (known: {})",

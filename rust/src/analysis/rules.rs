@@ -1,5 +1,6 @@
-//! L2–L5: panic-freedom, unsafe audit, durability discipline, protocol
-//! exhaustiveness. (L1 lock-order lives in [`super::lock_order`].)
+//! L2–L6: panic-freedom, unsafe audit, durability discipline, protocol
+//! exhaustiveness, logging discipline. (L1 lock-order lives in
+//! [`super::lock_order`].)
 
 use std::collections::BTreeSet;
 
@@ -191,6 +192,41 @@ pub fn durability(sf: &SourceFile) -> Vec<Finding> {
                     ),
                 });
             }
+        }
+    }
+    out
+}
+
+/// L6 — logging discipline: library code reports diagnostics through
+/// the structured logger ([`crate::obs::log`]), never bare `eprintln!`,
+/// so every message respects `--log-level` and test capture. `main.rs`
+/// is exempt (the CLI's terminal output is its interface), as are
+/// tests; deliberate sites carry `// lint: allow(logging, reason =
+/// "...")` — the logger's own stderr sink is the one such site.
+pub fn logging(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if sf.rel == "main.rs" || sf.rel.ends_with("/main.rs") {
+        return out;
+    }
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.in_test(i) {
+            continue;
+        }
+        let tok = &t[i];
+        if tok.kind == TokKind::Ident
+            && tok.is("eprintln")
+            && t.get(i + 1).is_some_and(|x| x.is("!"))
+        {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: tok.line,
+                rule: "logging",
+                message: "bare `eprintln!` in library code — use \
+                          `crate::obs::log::{error,warn,info,debug}` or annotate \
+                          with `// lint: allow(logging, reason = \"...\")`"
+                    .to_string(),
+            });
         }
     }
     out

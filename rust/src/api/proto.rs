@@ -410,6 +410,9 @@ pub enum Op {
     Catalog,
     /// Hub + prediction-service counters.
     Stats,
+    /// Full telemetry snapshot (DESIGN.md §13): per-stage latency
+    /// histograms, counters, and gauges. Additive within v1.
+    Metrics,
     /// Server-side prediction for one feature row.
     Predict {
         job: JobKind,
@@ -467,6 +470,7 @@ impl Op {
             Op::SubmitRuns { .. } => "submit_runs",
             Op::Catalog => "catalog",
             Op::Stats => "stats",
+            Op::Metrics => "metrics",
             Op::Predict { .. } => "predict",
             Op::PredictBatch { .. } => "predict_batch",
             Op::Configure { .. } => "configure",
@@ -480,7 +484,12 @@ impl Op {
 
     fn encode_fields(&self, pairs: &mut Vec<(&'static str, Json)>) {
         match self {
-            Op::ListRepos | Op::Catalog | Op::Stats | Op::ReplSnapshot | Op::Shutdown => {}
+            Op::ListRepos
+            | Op::Catalog
+            | Op::Stats
+            | Op::Metrics
+            | Op::ReplSnapshot
+            | Op::Shutdown => {}
             Op::ReplSubscribe { job, from_revision } => {
                 pairs.push(("job", Json::Str(job.to_string())));
                 pairs.push(("from_revision", Json::Num(*from_revision as f64)));
@@ -553,6 +562,7 @@ impl Op {
             },
             "catalog" => Op::Catalog,
             "stats" => Op::Stats,
+            "metrics" => Op::Metrics,
             "predict" => Op::Predict {
                 job: need_job(frame)?,
                 machine_type: opt_str(frame, "machine_type"),
@@ -1009,6 +1019,41 @@ impl RepoStats {
     }
 }
 
+/// One repository's replication lag as seen by a follower: the
+/// leader's revision watermark from the last sync versus the revision
+/// the follower has applied locally. Revisions advance by one per
+/// accepted contribution, so the difference is the lag in records.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplLagStats {
+    pub job: JobKind,
+    pub leader_revision: u64,
+    pub applied_revision: u64,
+}
+
+impl ReplLagStats {
+    /// Lag in records (0 when caught up; saturates if the leader answer
+    /// raced an apply).
+    pub fn lag(&self) -> u64 {
+        self.leader_revision.saturating_sub(self.applied_revision)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Str(self.job.to_string())),
+            ("leader_revision", Json::Num(self.leader_revision as f64)),
+            ("applied_revision", Json::Num(self.applied_revision as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(ReplLagStats {
+            job: jstr(j, "job")?.parse()?,
+            leader_revision: ju64(j, "leader_revision")?,
+            applied_revision: ju64(j, "applied_revision")?,
+        })
+    }
+}
+
 /// `stats` payload: hub counters + prediction-service cache counters +
 /// durability counters (zero when the hub runs without a data dir) +
 /// per-repo revision watermarks for replication-lag observability.
@@ -1041,11 +1086,18 @@ pub struct HubStats {
     pub coalesced_predicts: u64,
     /// Per-repository `{revision, records}` watermarks.
     pub per_repo: Vec<RepoStats>,
+    /// Follower-only: per-repo replication lag from the last tail sync.
+    /// Empty on leaders and on hubs that predate this field.
+    pub repl_lag: Vec<ReplLagStats>,
+    /// Follower-only: milliseconds since the last successful tail sync
+    /// (`None` on leaders, or before the first sync completes — a
+    /// wedged tailer shows up as this value growing without bound).
+    pub repl_tail_age_ms: Option<u64>,
 }
 
 impl HubStats {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("accepted", Json::Num(self.accepted as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
             ("repos", Json::Num(self.repos as f64)),
@@ -1072,10 +1124,42 @@ impl HubStats {
                 "per_repo",
                 Json::Arr(self.per_repo.iter().map(|r| r.to_json()).collect()),
             ),
-        ])
+        ];
+        // Follower-only fields stay off leader payloads entirely so a
+        // leader's stats line is byte-identical to pre-telemetry hubs.
+        if !self.repl_lag.is_empty() {
+            pairs.push((
+                "repl_lag",
+                Json::Arr(self.repl_lag.iter().map(|r| r.to_json()).collect()),
+            ));
+        }
+        if let Some(age) = self.repl_tail_age_ms {
+            pairs.push(("repl_tail_age_ms", Json::Num(age as f64)));
+        }
+        Json::obj(pairs)
     }
 
+    /// Decode, routing any field-level decode warnings through the
+    /// structured logger. See [`HubStats::from_json_with_warnings`].
     pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let (stats, warnings) = Self::from_json_with_warnings(j)?;
+        for w in &warnings {
+            crate::obs::log::warn(
+                "api.proto",
+                "stats payload decode warning",
+                &[("detail", w.clone())],
+            );
+        }
+        Ok(stats)
+    }
+
+    /// Decode a `stats` payload. Fields that are additive within v1 may
+    /// be *absent* (older hub) and silently default — but a field that
+    /// is *present with the wrong type* (e.g. a string-encoded counter)
+    /// is data being lost, so it produces a warning instead of being
+    /// silently zeroed.
+    pub fn from_json_with_warnings(j: &Json) -> crate::Result<(Self, Vec<String>)> {
+        let mut warnings = Vec::new();
         // The per-repo array is additive within v1, like the durability
         // counters: absent on older hubs ⇒ empty, not an error.
         let per_repo = match j.get("per_repo").and_then(Json::as_arr) {
@@ -1085,7 +1169,14 @@ impl HubStats {
                 .collect::<crate::Result<Vec<_>>>()?,
             None => Vec::new(),
         };
-        Ok(HubStats {
+        let repl_lag = match j.get("repl_lag").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(ReplLagStats::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let stats = HubStats {
             accepted: ju64(j, "accepted")?,
             rejected: ju64(j, "rejected")?,
             repos: ju64(j, "repos")?,
@@ -1094,29 +1185,209 @@ impl HubStats {
             cache_entries: ju64(j, "cache_entries")?,
             // Additive within protocol v1: absent on pre-durability hubs,
             // so default instead of erroring (old hub ⇒ not durable).
-            durable: j.get("durable").and_then(Json::as_bool).unwrap_or(false),
-            wal_appends: j.get("wal_appends").and_then(Json::as_u64).unwrap_or(0),
-            snapshots: j.get("snapshots").and_then(Json::as_u64).unwrap_or(0),
-            appends_since_snapshot: j
-                .get("appends_since_snapshot")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
+            durable: lenient_bool(j, "durable", &mut warnings),
+            wal_appends: lenient_u64(j, "wal_appends", &mut warnings),
+            snapshots: lenient_u64(j, "snapshots", &mut warnings),
+            appends_since_snapshot: lenient_u64(j, "appends_since_snapshot", &mut warnings),
             // Transport counters are additive too: absent from hubs that
             // predate the event-loop transport.
-            open_connections: j
-                .get("open_connections")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            peak_pipeline_depth: j
-                .get("peak_pipeline_depth")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            coalesced_predicts: j
-                .get("coalesced_predicts")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
+            open_connections: lenient_u64(j, "open_connections", &mut warnings),
+            peak_pipeline_depth: lenient_u64(j, "peak_pipeline_depth", &mut warnings),
+            coalesced_predicts: lenient_u64(j, "coalesced_predicts", &mut warnings),
             per_repo,
+            repl_lag,
+            repl_tail_age_ms: match j.get("repl_tail_age_ms") {
+                None => None,
+                Some(v) => {
+                    let parsed = v.as_u64();
+                    if parsed.is_none() {
+                        warnings.push(mistyped("repl_tail_age_ms", v));
+                    }
+                    parsed
+                }
+            },
+        };
+        Ok((stats, warnings))
+    }
+}
+
+/// v1-additive u64 field: absent ⇒ 0 silently, present-but-mistyped ⇒
+/// 0 plus a decode warning (the value was on the wire and got lost).
+fn lenient_u64(j: &Json, key: &str, warnings: &mut Vec<String>) -> u64 {
+    match j.get(key) {
+        None => 0,
+        Some(v) => match v.as_u64() {
+            Some(n) => n,
+            None => {
+                warnings.push(mistyped(key, v));
+                0
+            }
+        },
+    }
+}
+
+/// v1-additive bool field, with the same absent/mistyped split.
+fn lenient_bool(j: &Json, key: &str, warnings: &mut Vec<String>) -> bool {
+    match j.get(key) {
+        None => false,
+        Some(v) => match v.as_bool() {
+            Some(b) => b,
+            None => {
+                warnings.push(mistyped(key, v));
+                false
+            }
+        },
+    }
+}
+
+fn mistyped(key: &str, got: &Json) -> String {
+    format!("field `{key}` present but mistyped (got {got}); value dropped")
+}
+
+/// One histogram's summary in a `metrics` payload: total count/sum,
+/// the exact observed max, and bucket-resolution percentiles
+/// (microseconds, ≤ 6.25% relative error — DESIGN.md §13).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSummary {
+    pub name: String,
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl HistogramSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("count", Json::Num(self.count as f64)),
+            ("sum_us", Json::Num(self.sum_us as f64)),
+            ("max_us", Json::Num(self.max_us as f64)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(HistogramSummary {
+            name: jstr(j, "name")?,
+            count: ju64(j, "count")?,
+            sum_us: ju64(j, "sum_us")?,
+            max_us: ju64(j, "max_us")?,
+            p50_us: ju64(j, "p50_us")?,
+            p95_us: ju64(j, "p95_us")?,
+            p99_us: ju64(j, "p99_us")?,
         })
+    }
+}
+
+/// `metrics` payload (DESIGN.md §13): the full telemetry snapshot.
+/// Deliberately generic — histograms, counters and gauges are named
+/// lists, so new instruments are additive without protocol changes.
+/// Gauge/counter names may carry Prometheus-style labels
+/// (`repl_lag_records{repo="sort"}`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsPayload {
+    pub histograms: Vec<HistogramSummary>,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+}
+
+impl MetricsPayload {
+    /// Find one histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSummary> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    /// Find one counter value by exact name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Find one gauge value by exact name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let named = |xs: &[(String, u64)]| {
+            Json::Arr(
+                xs.iter()
+                    .map(|(name, value)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.clone())),
+                            ("value", Json::Num(*value as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            (
+                "histograms",
+                Json::Arr(self.histograms.iter().map(|h| h.to_json()).collect()),
+            ),
+            ("counters", named(&self.counters)),
+            ("gauges", named(&self.gauges)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let named = |key: &'static str| -> crate::Result<Vec<(String, u64)>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("payload missing array `{key}`"))?
+                .iter()
+                .map(|x| Ok((jstr(x, "name")?, ju64(x, "value")?)))
+                .collect()
+        };
+        let histograms = j
+            .get("histograms")
+            .and_then(Json::as_arr)
+            .context("payload missing array `histograms`")?
+            .iter()
+            .map(HistogramSummary::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(MetricsPayload {
+            histograms,
+            counters: named("counters")?,
+            gauges: named("gauges")?,
+        })
+    }
+
+    /// Render as Prometheus-style text exposition: each histogram is a
+    /// `summary` named `c3o_<name>_us` (quantile labels plus
+    /// `_sum`/`_count`/`_max`); counters and gauges keep their names
+    /// (labels included) under a `c3o_` prefix.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for h in &self.histograms {
+            let n = format!("c3o_{}_us", h.name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (q, v) in [("0.5", h.p50_us), ("0.95", h.p95_us), ("0.99", h.p99_us)] {
+                out.push_str(&format!("{n}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("{n}_sum {}\n", h.sum_us));
+            out.push_str(&format!("{n}_count {}\n", h.count));
+            out.push_str(&format!("{n}_max {}\n", h.max_us));
+        }
+        let mut render_named = |xs: &[(String, u64)], kind: &str| {
+            let mut last_base = String::new();
+            for (name, value) in xs {
+                let base = name.split('{').next().unwrap_or(name);
+                if base != last_base {
+                    out.push_str(&format!("# TYPE c3o_{base} {kind}\n"));
+                    last_base = base.to_string();
+                }
+                out.push_str(&format!("c3o_{name} {value}\n"));
+            }
+        };
+        render_named(&self.counters, "counter");
+        render_named(&self.gauges, "gauge");
+        out
     }
 }
 
@@ -1540,6 +1811,7 @@ mod tests {
         });
         round_trip(Op::Catalog);
         round_trip(Op::Stats);
+        round_trip(Op::Metrics);
         round_trip(Op::Predict {
             job: JobKind::KMeans,
             machine_type: Some("m5.xlarge".into()),
@@ -1834,8 +2106,37 @@ mod tests {
                 RepoStats { job: JobKind::Sort, revision: 2, records: 132 },
                 RepoStats { job: JobKind::Grep, revision: 1, records: 129 },
             ],
+            repl_lag: vec![ReplLagStats {
+                job: JobKind::Sort,
+                leader_revision: 9,
+                applied_revision: 2,
+            }],
+            repl_tail_age_ms: Some(120),
         };
-        assert_eq!(HubStats::from_json(&s.to_json()).unwrap(), s);
+        assert_eq!(s.repl_lag[0].lag(), 7);
+        let (back, warnings) = HubStats::from_json_with_warnings(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(warnings.is_empty(), "clean payload must not warn: {warnings:?}");
+    }
+
+    #[test]
+    fn stats_decode_warns_on_mistyped_additive_fields() {
+        // A string-encoded counter is data on the wire being lost: the
+        // decode still succeeds (additive-field tolerance) but surfaces
+        // a warning instead of silently zeroing the value.
+        let j = Json::parse(
+            r#"{"accepted":1,"rejected":0,"repos":2,"fits":1,"cache_hits":3,
+                "cache_entries":1,"wal_appends":"17","durable":"yes"}"#,
+        )
+        .unwrap();
+        let (s, warnings) = HubStats::from_json_with_warnings(&j).unwrap();
+        assert_eq!(s.wal_appends, 0);
+        assert!(!s.durable);
+        assert_eq!(warnings.len(), 2, "{warnings:?}");
+        assert!(warnings.iter().any(|w| w.contains("`wal_appends`")), "{warnings:?}");
+        assert!(warnings.iter().any(|w| w.contains("`durable`")), "{warnings:?}");
+        // The logging front door still decodes.
+        assert_eq!(HubStats::from_json(&j).unwrap(), s);
     }
 
     #[test]
@@ -1854,6 +2155,43 @@ mod tests {
         let transport =
             (s.open_connections, s.peak_pipeline_depth, s.coalesced_predicts);
         assert_eq!(transport, (0, 0, 0), "transport counters are additive in v1");
+        assert!(s.repl_lag.is_empty());
+        assert_eq!(s.repl_tail_age_ms, None);
+    }
+
+    #[test]
+    fn metrics_payload_round_trips_and_renders() {
+        let m = MetricsPayload {
+            histograms: vec![HistogramSummary {
+                name: "stage_queue_wait".into(),
+                count: 10,
+                sum_us: 1000,
+                max_us: 400,
+                p50_us: 90,
+                p95_us: 380,
+                p99_us: 400,
+            }],
+            counters: vec![("cache_hits".into(), 7), ("refused_connections".into(), 1)],
+            gauges: vec![
+                ("open_connections".into(), 3),
+                ("repl_lag_records{repo=\"grep\"}".into(), 4),
+                ("repl_lag_records{repo=\"sort\"}".into(), 0),
+            ],
+        };
+        assert_eq!(MetricsPayload::from_json(&m.to_json()).unwrap(), m);
+        assert_eq!(m.histogram("stage_queue_wait").map(|h| h.count), Some(10));
+        assert_eq!(m.counter("cache_hits"), Some(7));
+        assert_eq!(m.gauge("open_connections"), Some(3));
+
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE c3o_stage_queue_wait_us summary\n"), "{text}");
+        assert!(text.contains("c3o_stage_queue_wait_us{quantile=\"0.99\"} 400\n"), "{text}");
+        assert!(text.contains("c3o_stage_queue_wait_us_count 10\n"), "{text}");
+        assert!(text.contains("# TYPE c3o_cache_hits counter\n"), "{text}");
+        assert!(text.contains("c3o_repl_lag_records{repo=\"sort\"} 0\n"), "{text}");
+        // One TYPE line covers both labeled repl_lag_records gauges.
+        let type_lines = text.matches("# TYPE c3o_repl_lag_records gauge").count();
+        assert_eq!(type_lines, 1, "{text}");
     }
 
     #[test]

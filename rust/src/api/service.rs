@@ -39,11 +39,13 @@ use crate::sim::JobInput;
 use crate::util::json::Json;
 use crate::util::tsv::Table;
 
+use crate::obs::{self, Stage};
+
 use super::proto::{
-    self, BatchPrediction, CatalogPayload, ErrorCode, HubStats, MachineTypeInfo, Op,
-    Prediction, RepoList, RepoPayload, RepoStats, RepoSummary, ReplHandshake, ReplPage,
-    ReplRecordPayload, ReplRepoImage, ReplSnapshotPayload, Request, Response,
-    SubmitOutcome, WireError,
+    self, BatchPrediction, CatalogPayload, ErrorCode, HistogramSummary, HubStats,
+    MachineTypeInfo, MetricsPayload, Op, Prediction, RepoList, RepoPayload, RepoStats,
+    RepoSummary, ReplHandshake, ReplLagStats, ReplPage, ReplRecordPayload, ReplRepoImage,
+    ReplSnapshotPayload, Request, Response, SubmitOutcome, WireError,
 };
 
 /// A fitted predictor plus everything the configurator needs to reuse it.
@@ -117,6 +119,17 @@ impl GroupResult {
     }
 }
 
+/// Follower-side replication progress (DESIGN.md §13): the leader's
+/// revision watermark per repo from the most recent sync that touched
+/// it, plus when the last fully successful tail pass completed. Lag is
+/// computed at report time against the *current* local revision, so an
+/// applying tailer drives it back to zero without another sync.
+#[derive(Default)]
+struct ReplProgress {
+    leader_watermarks: HashMap<JobKind, u64>,
+    last_tail: Option<Instant>,
+}
+
 /// The hub's stateful prediction engine.
 pub struct PredictionService {
     state: Arc<HubState>,
@@ -144,6 +157,15 @@ pub struct PredictionService {
     follower_of: RwLock<Option<String>>,
     fits: AtomicU64,
     cache_hits: AtomicU64,
+    /// Lookups that missed the fitted-model cache (cold or stale entry).
+    cache_misses: AtomicU64,
+    /// Cold requests that parked on another request's in-flight fit and
+    /// reused its result instead of fitting themselves.
+    single_flight_waits: AtomicU64,
+    /// Follower-side replication progress, fed by the tailer
+    /// ([`Self::note_repl_progress`]) so `stats`/`metrics` can report
+    /// lag and a wedged tailer is observable.
+    repl_progress: Mutex<ReplProgress>,
     /// How long the first `predict` of a micro-batch waits for company
     /// before fitting alone. Zero (the default) disables coalescing:
     /// every predict takes the direct path.
@@ -179,6 +201,9 @@ impl PredictionService {
             follower_of: RwLock::new(None),
             fits: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            single_flight_waits: AtomicU64::new(0),
+            repl_progress: Mutex::new(ReplProgress::default()),
             coalesce_window: RwLock::new(Duration::ZERO),
             coalesce_groups: Mutex::new(HashMap::new()),
             coalesced_predicts: AtomicU64::new(0),
@@ -206,6 +231,43 @@ impl PredictionService {
     /// The leader this hub follows, if it is a follower.
     pub fn follower_of(&self) -> Option<String> {
         self.follower_of.read().unwrap().clone()
+    }
+
+    /// Record the leader's revision watermark for `job` as seen by the
+    /// follower's tailer. Called once per synced repo per tail pass.
+    pub fn note_repl_progress(&self, job: JobKind, leader_revision: u64) {
+        let mut progress = self.repl_progress.lock().unwrap();
+        progress.leader_watermarks.insert(job, leader_revision);
+    }
+
+    /// Record a fully successful tail pass (every repo synced without
+    /// error). `stats`/`metrics` report the age of this timestamp; a
+    /// wedged tailer shows up as the age growing without bound.
+    pub fn note_tail_success(&self) {
+        self.repl_progress.lock().unwrap().last_tail = Some(Instant::now());
+    }
+
+    /// Follower lag view for `stats`/`metrics`: per-repo lag entries
+    /// (leader watermark from the last sync vs the revision applied
+    /// locally right now) and the age of the last successful tail pass.
+    /// Empty/`None` on leaders.
+    fn repl_status(&self) -> (Vec<ReplLagStats>, Option<u64>) {
+        if self.follower_of.read().unwrap().is_none() {
+            return (Vec::new(), None);
+        }
+        let progress = self.repl_progress.lock().unwrap();
+        let mut lag: Vec<ReplLagStats> = progress
+            .leader_watermarks
+            .iter()
+            .map(|(&job, &leader_revision)| ReplLagStats {
+                job,
+                leader_revision,
+                applied_revision: self.state.get(job).map(|r| r.revision).unwrap_or(0),
+            })
+            .collect();
+        lag.sort_by_key(|r| r.job.to_string());
+        let age_ms = progress.last_tail.map(|t| t.elapsed().as_millis() as u64);
+        (lag, age_ms)
     }
 
     /// Replace the cold-fit execution engine (builder style). Note that
@@ -289,6 +351,7 @@ impl PredictionService {
         if let Some(model) = self.lookup(&key, repo.revision) {
             return Ok((model, true));
         }
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
 
         // Cold or stale. Single-flight: serialize fits per key so N
         // concurrent cold requests pay for one fit, not N.
@@ -309,6 +372,7 @@ impl PredictionService {
             WireError::new(ErrorCode::NotFound, format!("no repository for {job}"))
         })?;
         if let Some(model) = self.lookup(&key, repo.revision) {
+            self.single_flight_waits.fetch_add(1, Ordering::Relaxed);
             return Ok((model, true));
         }
 
@@ -319,9 +383,11 @@ impl PredictionService {
         // (`max_seconds`) plans from timed probes and may legitimately
         // pick different plans under different machine load.
         let engine = self.engine.read().unwrap().clone();
+        let fit_start = obs::now_us();
         let (predictor, report) =
             fit_prepared_with(repo.view(), &machine, self.backend.clone(), &engine)
                 .map_err(|e| WireError::new(ErrorCode::Unavailable, format!("{e:#}")))?;
+        obs::metrics().record_since(Stage::Fit, fit_start);
         self.fits.fetch_add(1, Ordering::Relaxed);
         let model = Arc::new(FittedModel {
             machine_type: machine.clone(),
@@ -468,6 +534,7 @@ impl PredictionService {
                 )
             })
             .unwrap_or((0, 0));
+        let (repl_lag, repl_tail_age_ms) = self.repl_status();
         HubStats {
             accepted,
             rejected,
@@ -483,7 +550,84 @@ impl PredictionService {
             peak_pipeline_depth,
             coalesced_predicts: self.coalesced_predicts.load(Ordering::Relaxed),
             per_repo,
+            repl_lag,
+            repl_tail_age_ms,
         }
+    }
+
+    /// The `metrics` op (DESIGN.md §13): every stage histogram from the
+    /// global telemetry registry plus the service, transport, storage
+    /// and replication counters/gauges, in one generic payload.
+    pub fn metrics_payload(&self) -> MetricsPayload {
+        let reg = obs::metrics();
+        let histograms = Stage::ALL
+            .iter()
+            .map(|&stage| {
+                let snap = reg.stage(stage).snapshot();
+                HistogramSummary {
+                    name: format!("stage_{}", stage.name()),
+                    count: snap.count,
+                    sum_us: snap.sum,
+                    max_us: snap.max,
+                    p50_us: snap.p50(),
+                    p95_us: snap.p95(),
+                    p99_us: snap.p99(),
+                }
+            })
+            .collect();
+
+        let stats = self.stats_payload();
+        let mut counters: Vec<(String, u64)> = vec![
+            ("accepted_submits".into(), stats.accepted),
+            ("rejected_submits".into(), stats.rejected),
+            ("fits".into(), stats.fits),
+            ("cache_hits".into(), stats.cache_hits),
+            ("cache_misses".into(), self.cache_misses.load(Ordering::Relaxed)),
+            (
+                "single_flight_waits".into(),
+                self.single_flight_waits.load(Ordering::Relaxed),
+            ),
+            ("coalesced_predicts".into(), stats.coalesced_predicts),
+            ("wal_appends".into(), stats.wal_appends),
+            ("snapshots".into(), stats.snapshots),
+            ("traces_completed".into(), reg.traces.completed()),
+            ("slow_requests".into(), reg.traces.slow()),
+        ];
+        if let Some(t) = self.transport.read().unwrap().as_ref() {
+            counters.push((
+                "refused_connections".into(),
+                t.refused_connections.load(Ordering::Relaxed),
+            ));
+            counters.push((
+                "refusal_write_failures".into(),
+                t.refusal_write_failures.load(Ordering::Relaxed),
+            ));
+            counters.push((
+                "slow_reader_disconnects".into(),
+                t.slow_reader_disconnects.load(Ordering::Relaxed),
+            ));
+            counters.push((
+                "idle_reaped_connections".into(),
+                t.idle_reaped_connections.load(Ordering::Relaxed),
+            ));
+        }
+
+        let mut gauges: Vec<(String, u64)> = vec![
+            ("open_connections".into(), stats.open_connections),
+            ("peak_pipeline_depth".into(), stats.peak_pipeline_depth),
+            ("cache_entries".into(), stats.cache_entries),
+            ("wal_backlog".into(), stats.appends_since_snapshot),
+            ("busy_workers".into(), reg.busy_workers.load(Ordering::Relaxed)),
+            ("workers_total".into(), reg.workers_total.load(Ordering::Relaxed)),
+        ];
+        for lag in &stats.repl_lag {
+            gauges.push((format!("repl_lag_records{{repo=\"{}\"}}", lag.job), lag.lag()));
+        }
+        if let Some(age) = stats.repl_tail_age_ms {
+            gauges.push(("repl_tail_age_ms".into(), age));
+        }
+
+        MetricsPayload { histograms, counters, gauges }
     }
 
     // -- replication (leader side, DESIGN.md §11) ---------------------------
@@ -720,11 +864,13 @@ impl PredictionService {
         rows: &[Vec<f64>],
     ) -> Result<GroupResult, WireError> {
         let (fm, cached) = self.fitted(job, machine_type)?;
+        let predict_start = obs::now_us();
         let runtimes = rows
             .iter()
             .map(|row| fm.predictor.predict_one(row))
             .collect::<crate::Result<Vec<f64>>>()
             .map_err(|e| WireError::internal(&e))?;
+        obs::metrics().record_since(Stage::Predict, predict_start);
         Ok(GroupResult {
             machine_type: fm.machine_type.clone(),
             model: fm.chosen.clone(),
@@ -829,15 +975,24 @@ impl PredictionService {
     /// Handle one wire line and produce the response frame. Never panics on
     /// untrusted input; every failure is a structured `error{code}`.
     pub fn handle_line(&self, line: &str, stop: &AtomicBool) -> Response {
+        self.handle_line_traced(line, stop).0
+    }
+
+    /// [`Self::handle_line`] plus the decoded op name — the server's
+    /// request tracing wants the label without re-parsing the line.
+    /// Empty when the frame failed to parse.
+    pub fn handle_line_traced(&self, line: &str, stop: &AtomicBool) -> (Response, &'static str) {
         match Request::parse(line) {
             Ok(req) => {
                 let id = req.id;
-                match self.dispatch(req.op, stop) {
+                let op_name = req.op.name();
+                let response = match self.dispatch(req.op, stop) {
                     Ok(payload) => Response::ok(id, payload),
                     Err(e) => Response::err(id, e),
-                }
+                };
+                (response, op_name)
             }
-            Err(e) => Response::err(e.id, e.error),
+            Err(e) => (Response::err(e.id, e.error), ""),
         }
     }
 
@@ -861,6 +1016,7 @@ impl PredictionService {
             }
             Op::Catalog => Ok(self.catalog_payload().to_json()),
             Op::Stats => Ok(self.stats_payload().to_json()),
+            Op::Metrics => Ok(self.metrics_payload().to_json()),
             Op::Predict { job, machine_type, features } => {
                 Ok(self.predict(job, machine_type.as_deref(), &features)?.to_json())
             }

@@ -156,10 +156,12 @@ impl FitEngine {
             }
             None => data,
         };
+        let score_start = crate::obs::now_us();
         let scores = match plan.method {
             CvMethod::Loo => self.loo_scores(candidates, cv_data),
             CvMethod::KFold(k) => self.kfold_scores(candidates, cv_data, k, seed),
         };
+        crate::obs::metrics().record_since(crate::obs::Stage::CvScore, score_start);
         Ok((plan, scores))
     }
 

@@ -126,9 +126,15 @@ pub fn eval_job_scenario(
                 // A model that cannot fit this split (e.g. BOM-degenerate
                 // local pools) is excluded from that split's average.
                 Err(e) => {
-                    if std::env::var_os("C3O_EVAL_DEBUG").is_some() {
-                        eprintln!("[eval] split {sid}: {} fit failed: {e:#}", model.name());
-                    }
+                    crate::obs::log::debug(
+                        "eval.table2",
+                        "model fit failed on split",
+                        &[
+                            ("split", sid.to_string()),
+                            ("model", model.name().to_string()),
+                            ("error", format!("{e:#}")),
+                        ],
+                    );
                     f64::NAN
                 }
             };

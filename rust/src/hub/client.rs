@@ -15,8 +15,8 @@ use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::TcpStream;
 
 use crate::api::proto::{
-    self, BatchPrediction, CatalogPayload, HubStats, Op, Prediction, ReplHandshake,
-    ReplPage, ReplSnapshotPayload, Request, Response, SubmitOutcome,
+    self, BatchPrediction, CatalogPayload, HubStats, MetricsPayload, Op, Prediction,
+    ReplHandshake, ReplPage, ReplSnapshotPayload, Request, Response, SubmitOutcome,
 };
 use crate::configurator::{CatalogSearch, ConfigChoice, UserGoals};
 use crate::data::{Dataset, JobKind};
@@ -166,6 +166,14 @@ impl HubClient {
     pub fn stats(&mut self) -> crate::Result<HubStats> {
         let payload = self.call(Op::Stats)?;
         HubStats::from_json(&payload)
+    }
+
+    /// Full telemetry snapshot (DESIGN.md §13): per-stage latency
+    /// histograms, counters and gauges, renderable as Prometheus text
+    /// via [`MetricsPayload::render_prometheus`].
+    pub fn metrics(&mut self) -> crate::Result<MetricsPayload> {
+        let payload = self.call(Op::Metrics)?;
+        MetricsPayload::from_json(&payload)
     }
 
     /// Server-side prediction for one feature row
@@ -439,5 +447,16 @@ impl PipelinedClient {
     pub fn wait_stats(&mut self, id: u64) -> crate::Result<HubStats> {
         let payload = self.wait(id)?;
         HubStats::from_json(&payload)
+    }
+
+    /// Typed `metrics` send, so telemetry snapshots can ride an existing
+    /// pipeline (the bench uses this after its herd phase).
+    pub fn send_metrics(&mut self) -> crate::Result<u64> {
+        self.send(Op::Metrics)
+    }
+
+    pub fn wait_metrics(&mut self, id: u64) -> crate::Result<MetricsPayload> {
+        let payload = self.wait(id)?;
+        MetricsPayload::from_json(&payload)
     }
 }

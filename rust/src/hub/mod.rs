@@ -26,10 +26,11 @@
 //!   snapshots) and flushes everything on graceful drain.
 //!
 //! Protocol v1 ops: `list_repos`, `get_repo`, `submit_runs`, `catalog`,
-//! `stats`, `predict`, `predict_batch`, `configure`, `configure_search`,
-//! `repl_subscribe`, `repl_fetch`, `repl_snapshot`, `shutdown` — specified
-//! in DESIGN.md §4. The `repl_*` ops ship the WAL to follower hubs
-//! ([`crate::replication`], DESIGN.md §11).
+//! `stats`, `metrics`, `predict`, `predict_batch`, `configure`,
+//! `configure_search`, `repl_subscribe`, `repl_fetch`, `repl_snapshot`,
+//! `shutdown` — specified in DESIGN.md §4. The `repl_*` ops ship the WAL
+//! to follower hubs ([`crate::replication`], DESIGN.md §11); `metrics`
+//! snapshots the telemetry registry ([`crate::obs`], DESIGN.md §13).
 
 pub mod client;
 pub mod repo;

@@ -31,6 +31,7 @@ use anyhow::Context;
 use crate::api::proto::{ErrorCode, FrameDecoder, Response, WireError};
 use crate::api::service::PredictionService;
 use crate::cv::parallel::{FitEngine, SelectionBudget};
+use crate::obs::{self, log, Span, Stage};
 use crate::storage::{DurableStore, FsyncPolicy};
 
 use super::repo::HubState;
@@ -99,6 +100,12 @@ pub struct ServerConfig {
     /// `HubState` has a [`DurableStore`] attached): WAL fsync under
     /// `FsyncPolicy::Interval`, and snapshot-threshold checks.
     pub flush_interval: Duration,
+    /// Slow-request threshold (`c3o serve --slow-ms N`): a request whose
+    /// end-to-end time reaches this many milliseconds is promoted to a
+    /// structured warn-level log line with its stage breakdown. Zero
+    /// (default) disables the slow-request log; traces are still
+    /// retained in the in-memory ring either way (DESIGN.md §13).
+    pub slow_ms: u64,
 }
 
 impl ServerConfig {
@@ -127,6 +134,7 @@ impl Default for ServerConfig {
             fit_threads: 0,
             fit_budget: SelectionBudget::default(),
             flush_interval: Duration::from_millis(200),
+            slow_ms: 0,
         }
     }
 }
@@ -136,6 +144,12 @@ struct Job {
     token: u64,
     gen: u64,
     line: String,
+    /// [`obs::now_us`] when the reactor began extracting this frame.
+    recv_us: u64,
+    /// Frame extraction time in the reactor (µs).
+    decode_us: u64,
+    /// [`obs::now_us`] when the job entered the dispatch queue.
+    enqueued_us: u64,
 }
 
 /// Reactor → workers: decoded frames awaiting execution. `in_flight`
@@ -154,6 +168,13 @@ struct Reply {
     token: u64,
     gen: u64,
     bytes: Vec<u8>,
+    /// Trace span under construction: stages through `service` are
+    /// filled in by the worker; the reactor adds dispatch/reply/total
+    /// when the reply bytes reach the socket.
+    span: Span,
+    /// [`obs::now_us`] when the worker pushed this reply — outbox
+    /// residency (the `dispatch` stage) is measured from here.
+    pushed_us: u64,
 }
 
 struct Outbox {
@@ -236,6 +257,10 @@ impl HubServer {
         });
         let outbox = Arc::new(Outbox { replies: Mutex::new(Vec::new()) });
 
+        // Telemetry gauge: pool size of the most recently started hub
+        // (the registry is process-wide; see `obs` module docs).
+        obs::metrics().workers_total.store(config.workers as u64, Ordering::Relaxed);
+
         let mut workers = Vec::with_capacity(config.workers);
         for _ in 0..config.workers {
             let svc = service.clone();
@@ -268,6 +293,7 @@ impl HubServer {
             max_conns: config.max_conns.max(1),
             max_pipeline: config.max_pipeline.max(1),
             idle_timeout: config.idle_timeout,
+            slow_ms: config.slow_ms,
             conns: Vec::new(),
             free: Vec::new(),
             open: 0,
@@ -350,11 +376,19 @@ impl HubServer {
         // shutdown.
         if let Some(store) = self.service.state().storage() {
             if let Err(e) = store.sync() {
-                eprintln!("[hub] shutdown WAL flush failed: {e:#}");
+                log::error(
+                    "hub.server",
+                    "shutdown WAL flush failed",
+                    &[("error", format!("{e:#}"))],
+                );
             }
             if store.stats().pending > 0 {
                 if let Err(e) = self.service.state().snapshot_to(&store) {
-                    eprintln!("[hub] shutdown snapshot failed: {e:#}");
+                    log::error(
+                        "hub.server",
+                        "shutdown snapshot failed",
+                        &[("error", format!("{e:#}"))],
+                    );
                 }
             }
         }
@@ -385,6 +419,15 @@ struct Conn {
     last_activity: Instant,
     read_closed: bool,
     interest: Interest,
+    /// Cumulative bytes ever flushed to the socket. Trace completion is
+    /// keyed off this stream offset, so compacting `out` (which shifts
+    /// buffer indices) never corrupts span accounting.
+    written_total: u64,
+    /// Replies buffered but not yet fully flushed, oldest first:
+    /// `(absolute stream offset of the reply's last byte, write-buffer
+    /// entry timestamp, span)`. A span completes once `written_total`
+    /// reaches its end offset.
+    pending_spans: VecDeque<(u64, u64, Span)>,
 }
 
 impl Conn {
@@ -404,6 +447,8 @@ struct Reactor {
     max_conns: usize,
     max_pipeline: usize,
     idle_timeout: Duration,
+    /// Slow-request log threshold in milliseconds (0 = disabled).
+    slow_ms: u64,
     /// Slab of connections; the poller token is `slot + TOKEN_BASE`.
     conns: Vec<Option<Conn>>,
     free: Vec<usize>,
@@ -427,7 +472,7 @@ impl Reactor {
         let mut events = std::mem::take(&mut self.events);
         events.clear();
         if let Err(e) = self.poller.wait(&mut events, Some(POLL_INTERVAL)) {
-            eprintln!("[hub] readiness wait failed: {e}");
+            log::error("hub.server", "readiness wait failed", &[("error", e.to_string())]);
             std::thread::sleep(Duration::from_millis(10));
         }
         for ev in &events {
@@ -479,6 +524,8 @@ impl Reactor {
                         last_activity: Instant::now(),
                         read_closed: false,
                         interest: Interest::READ,
+                        written_total: 0,
+                        pending_spans: VecDeque::new(),
                     });
                     self.open += 1;
                     self.stats.open_connections.fetch_add(1, Ordering::Relaxed);
@@ -575,6 +622,7 @@ impl Reactor {
                 None => return,
             };
             while conn.in_flight < self.max_pipeline {
+                let recv_us = obs::now_us();
                 match conn.decoder.next_frame() {
                     Some(line) => {
                         conn.in_flight += 1;
@@ -582,6 +630,9 @@ impl Reactor {
                             token: TOKEN_BASE + slot as u64,
                             gen: conn.gen,
                             line,
+                            recv_us,
+                            decode_us: obs::now_us().saturating_sub(recv_us),
+                            enqueued_us: 0,
                         });
                     }
                     None => break,
@@ -597,6 +648,10 @@ impl Reactor {
             return;
         }
         let n = new_jobs.len();
+        let enqueued_us = obs::now_us();
+        for job in &mut new_jobs {
+            job.enqueued_us = enqueued_us;
+        }
         self.queue.in_flight.fetch_add(n as u64, Ordering::SeqCst);
         // lint: allow(panics, reason = "mutex poisoning is fatal by design: a thread that panicked holding the job queue already broke the dispatch invariants")
         self.queue.jobs.lock().unwrap().extend(new_jobs);
@@ -626,6 +681,11 @@ impl Reactor {
                     c.in_flight -= 1;
                     c.last_activity = Instant::now();
                     c.out.extend_from_slice(&r.bytes);
+                    let now = obs::now_us();
+                    let mut span = r.span;
+                    span.dispatch_us = now.saturating_sub(r.pushed_us);
+                    let abs_end = c.written_total + (c.out.len() - c.out_pos) as u64;
+                    c.pending_spans.push_back((abs_end, now, span));
                     touched.push(slot);
                 }
             }
@@ -661,6 +721,7 @@ impl Reactor {
                     }
                     Ok(n) => {
                         conn.out_pos += n;
+                        conn.written_total += n as u64;
                         conn.last_activity = Instant::now();
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => break,
@@ -680,6 +741,21 @@ impl Reactor {
                     conn.out_pos = 0;
                 }
                 overflow = conn.out.len() - conn.out_pos > MAX_WRITE_BUFFER;
+                // Complete every span whose reply bytes are now fully on
+                // the wire (compaction above is safe: completion is keyed
+                // on the cumulative stream offset, not buffer indices).
+                let now = obs::now_us();
+                while conn
+                    .pending_spans
+                    .front()
+                    .is_some_and(|(end, _, _)| *end <= conn.written_total)
+                {
+                    if let Some((_, entered_us, mut span)) = conn.pending_spans.pop_front() {
+                        span.reply_us = now.saturating_sub(entered_us);
+                        span.total_us = now.saturating_sub(span.recv_us);
+                        complete_span(span, self.slow_ms);
+                    }
+                }
             }
         }
         if dead {
@@ -688,9 +764,13 @@ impl Reactor {
         }
         if overflow {
             let n = self.stats.slow_reader_disconnects.fetch_add(1, Ordering::Relaxed) + 1;
-            eprintln!(
-                "[hub] disconnecting slow reader: > {MAX_WRITE_BUFFER} reply bytes \
-                 buffered ({n} total)"
+            log::warn(
+                "hub.transport",
+                "disconnecting slow reader",
+                &[
+                    ("buffered_over", MAX_WRITE_BUFFER.to_string()),
+                    ("total_disconnects", n.to_string()),
+                ],
             );
             self.close_conn(slot);
             return;
@@ -726,19 +806,26 @@ impl Reactor {
     /// accounting predictable and frees abandoned peers promptly.
     fn sweep(&mut self) {
         let now = Instant::now();
-        let to_close: Vec<usize> = self
+        let to_close: Vec<(usize, bool)> = self
             .conns
             .iter()
             .enumerate()
             .filter_map(|(slot, c)| {
                 let c = c.as_ref()?;
-                let done = c.drained()
-                    && (c.read_closed
-                        || now.duration_since(c.last_activity) >= self.idle_timeout);
-                done.then_some(slot)
+                if !c.drained() {
+                    return None;
+                }
+                if c.read_closed {
+                    return Some((slot, false));
+                }
+                let idle = now.duration_since(c.last_activity) >= self.idle_timeout;
+                idle.then_some((slot, true))
             })
             .collect();
-        for slot in to_close {
+        for (slot, idle_reap) in to_close {
+            if idle_reap {
+                self.stats.idle_reaped_connections.fetch_add(1, Ordering::Relaxed);
+            }
             self.close_conn(slot);
         }
     }
@@ -831,8 +918,32 @@ fn refuse(stream: TcpStream, stats: &TransportStats) {
     let frame = format!("{}\n", reply.to_line());
     if let Err(e) = stream.write_all(frame.as_bytes()) {
         let n = stats.refusal_write_failures.fetch_add(1, Ordering::Relaxed) + 1;
-        eprintln!("[hub] refusal frame write failed ({n} total): {e}");
+        log::warn(
+            "hub.transport",
+            "refusal frame write failed",
+            &[("total_failures", n.to_string()), ("error", e.to_string())],
+        );
     }
+}
+
+/// Record a completed request trace: every reactor-measured stage goes
+/// into its histogram, and the span lands in the trace ring (promoting
+/// to the slow-request log past `slow_ms`). Stages recorded here are
+/// disjoint sub-intervals of the request lifetime, so the per-stage
+/// histograms stay internally consistent with `request_total` —
+/// identical counts, and stage sums never exceeding the total.
+/// `Total` is recorded *first* so a concurrent metrics snapshot can
+/// observe a total without its sub-stages but never the reverse — the
+/// stage-sum ≤ total-sum invariant holds even mid-completion.
+fn complete_span(span: Span, slow_ms: u64) {
+    let m = obs::metrics();
+    m.record(Stage::Total, span.total_us);
+    m.record(Stage::Decode, span.decode_us);
+    m.record(Stage::QueueWait, span.queue_us);
+    m.record(Stage::Service, span.service_us);
+    m.record(Stage::Dispatch, span.dispatch_us);
+    m.record(Stage::ReplyWrite, span.reply_us);
+    m.traces.complete(span, slow_ms);
 }
 
 /// Background durability pass (DESIGN.md §9): under
@@ -854,12 +965,16 @@ fn durability_loop(
         if store.config().fsync == FsyncPolicy::Interval && last_flush.elapsed() >= interval {
             last_flush = Instant::now();
             if let Err(e) = store.sync() {
-                eprintln!("[hub] WAL fsync failed: {e:#}");
+                log::error("hub.durability", "WAL fsync failed", &[("error", format!("{e:#}"))]);
             }
         }
         if store.should_snapshot() {
             if let Err(e) = state.snapshot_to(store) {
-                eprintln!("[hub] automatic snapshot failed: {e:#}");
+                log::error(
+                    "hub.durability",
+                    "automatic snapshot failed",
+                    &[("error", format!("{e:#}"))],
+                );
             }
         }
     }
@@ -893,12 +1008,33 @@ fn worker_loop(
             }
         };
         let guard = InFlightGuard(&queue.in_flight);
-        let reply = service.handle_line(&job.line, stop);
+        let metrics = obs::metrics();
+        let picked_us = obs::now_us();
+        metrics.busy_workers.fetch_add(1, Ordering::Relaxed);
+        let (reply, op) = service.handle_line_traced(&job.line, stop);
+        metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);
+        let span = Span {
+            id: reply.id,
+            op: op.to_string(),
+            recv_us: job.recv_us,
+            decode_us: job.decode_us,
+            queue_us: picked_us.saturating_sub(job.enqueued_us),
+            service_us: obs::now_us().saturating_sub(picked_us),
+            ok: reply.result.is_ok(),
+            ..Span::default()
+        };
         let mut bytes = reply.to_line().into_bytes();
         bytes.push(b'\n');
+        let pushed_us = obs::now_us();
         // Push before the guard decrements (see JobQueue::in_flight).
         // lint: allow(panics, reason = "mutex poisoning is fatal by design: losing a reply silently would hang the client; crashing the worker is the honest failure")
-        outbox.replies.lock().unwrap().push(Reply { token: job.token, gen: job.gen, bytes });
+        outbox.replies.lock().unwrap().push(Reply {
+            token: job.token,
+            gen: job.gen,
+            bytes,
+            span,
+            pushed_us,
+        });
         drop(guard);
         waker.wake();
     }

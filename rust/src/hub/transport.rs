@@ -69,6 +69,9 @@ pub struct TransportStats {
     /// Connections dropped because their bounded write queue overflowed
     /// (a peer that stopped reading while replies kept accumulating).
     pub slow_reader_disconnects: AtomicU64,
+    /// Idle connections reaped by the sweep after `idle_timeout` with
+    /// nothing in flight and nothing buffered.
+    pub idle_reaped_connections: AtomicU64,
 }
 
 // ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ pub mod eval;
 pub mod hub;
 pub mod linalg;
 pub mod models;
+pub mod obs;
 pub mod replication;
 pub mod runtime;
 pub mod sim;

@@ -26,7 +26,14 @@
 //!                (and local --data-dir, making the follower itself
 //!                durable), serves all read ops from the replicated
 //!                corpus, and refuses submit_runs with a typed
-//!                `not_leader` error naming the leader
+//!                `not_leader` error naming the leader.
+//!                Telemetry (DESIGN.md §13): --slow-ms N promotes requests
+//!                slower than N ms end-to-end to a structured warn-level
+//!                slow-request log line
+//!   metrics    — fetch one telemetry snapshot from a running hub (the v1
+//!                `metrics` op) and print it as Prometheus-style text:
+//!                per-stage latency histograms (p50/p95/p99/max), cache and
+//!                coalescing counters, transport gauges, replication lag
 //!   configure  — pick a cluster configuration for a job (Fig. 4 workflow);
 //!                fits locally from --data (same --fit-threads /
 //!                --fit-budget / --fit-points knobs), or delegates to a
@@ -41,9 +48,12 @@
 //!                §12) over a source tree: lock-order (L1), hot-path
 //!                panic-freedom (L2), unsafe audit (L3), storage
 //!                durability discipline (L4), protocol exhaustiveness
-//!                (L5). --fix-report appends per-rule remediation notes
-//!                and the observed lock DAG. Exit 0 = clean; CI runs
-//!                this blocking on rust/src
+//!                (L5), logging discipline (L6). --fix-report appends
+//!                per-rule remediation notes and the observed lock DAG.
+//!                Exit 0 = clean; CI runs this blocking on rust/src
+//!
+//! Global flags: --log-level error|warn|info|debug sets the structured
+//! logger's threshold (default info).
 //!
 //! Examples:
 //!   c3o generate --out data/
@@ -59,6 +69,8 @@
 //!       --deadline 900 --hub 127.0.0.1:7033
 //!   c3o configure --job sort --size 15 --deadline 900 \
 //!       --search-catalog --data data/
+//!   c3o serve --addr 127.0.0.1:7033 --slow-ms 250 --log-level debug
+//!   c3o metrics 127.0.0.1:7033
 //!   c3o lint rust/src
 //!   c3o lint --fix-report rust/src
 
@@ -276,6 +288,9 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         config.coalesce_window =
             std::time::Duration::from_millis(ms.parse().context("--coalesce-window")?);
     }
+    if let Some(ms) = flags.get("slow-ms") {
+        config.slow_ms = ms.parse().context("--slow-ms")?;
+    }
     let engine = fit_engine(flags)?;
     config.fit_threads = engine.threads;
     config.fit_budget = engine.budget;
@@ -346,8 +361,16 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         None => println!("replication: leader-capable (repl ops require --data-dir)"),
     }
     println!(
+        "telemetry: stage histograms + request traces on (`c3o metrics {addr}`), \
+         slow-request log {}",
+        match config.slow_ms {
+            0 => "off (pass --slow-ms N to enable)".to_string(),
+            ms => format!("at {ms} ms"),
+        },
+    );
+    println!(
         "ops (v1): list_repos | get_repo | submit_runs | catalog | stats | \
-         predict | predict_batch | configure | configure_search | \
+         metrics | predict | predict_batch | configure | configure_search | \
          repl_subscribe | repl_fetch | repl_snapshot | shutdown"
     );
     // Serve until stdin closes (or forever under a service manager).
@@ -518,6 +541,36 @@ fn print_choice(job: JobKind, size: f64, choice: &ConfigChoice) {
     }
 }
 
+/// `c3o metrics [ADDR]` — fetch one telemetry snapshot from a running
+/// hub (the v1 `metrics` op) and print it as Prometheus-style text.
+fn cmd_metrics(rest: &[String], flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    // First positional arg, skipping `--flag value` pairs the same way
+    // `parse_flags` consumes them.
+    let positional = || {
+        let mut i = 0;
+        while i < rest.len() {
+            let arg = &rest[i];
+            if arg.starts_with("--") {
+                let has_value = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+                i += if has_value { 2 } else { 1 };
+            } else {
+                return Some(arg.clone());
+            }
+        }
+        None
+    };
+    let addr = flags
+        .get("addr")
+        .cloned()
+        .or_else(positional)
+        .unwrap_or_else(|| "127.0.0.1:7033".into());
+    let mut client = HubClient::connect(&addr)
+        .with_context(|| format!("connecting to hub at {addr}"))?;
+    let payload = client.metrics()?;
+    print!("{}", payload.render_prometheus());
+    Ok(())
+}
+
 /// `c3o lint [--fix-report] <src-dir>` — run the project-invariant
 /// static analyzer (DESIGN.md §12) over a source tree. Exits 0 when the
 /// tree is clean, 1 with `file:line: [rule] message` findings otherwise.
@@ -546,15 +599,25 @@ fn main() {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     let rest: Vec<String> = args.iter().skip(1).cloned().collect();
     let flags = parse_flags(&rest);
+    if let Some(lv) = flags.get("log-level") {
+        match c3o::obs::log::Level::parse(lv) {
+            Some(level) => c3o::obs::log::set_level(level),
+            None => {
+                eprintln!("error: --log-level must be error|warn|info|debug (got {lv})");
+                std::process::exit(2);
+            }
+        }
+    }
     let result = match cmd {
         "generate" => cmd_generate(&flags),
         "eval" => cmd_eval(&rest),
         "serve" | "hub" => cmd_serve(&flags),
         "configure" => cmd_configure(&flags),
+        "metrics" => cmd_metrics(&rest, &flags),
         "lint" => cmd_lint(&rest),
         _ => {
             eprintln!(
-                "usage: c3o <generate|eval|serve|configure|lint> [flags]\n\
+                "usage: c3o <generate|eval|serve|configure|metrics|lint> [flags]\n\
                  see rust/src/main.rs header for examples"
             );
             std::process::exit(2);

@@ -1,0 +1,291 @@
+//! Lock-free log-linear latency histograms (DESIGN.md §13).
+//!
+//! Values are microseconds. The bucket scheme is HDR-style log-linear:
+//! values below 16 get one exact bucket each; every higher power-of-two
+//! octave is split into 16 linear sub-buckets, so the relative error of
+//! any bucket is at most 1/16 (6.25%). With 64-bit values that is
+//! `16 * 61 = 976` buckets total — small enough to keep one atomic
+//! counter array per shard and merge shards on read.
+//!
+//! Recording is wait-free: pick a shard by thread, `fetch_add` one
+//! bucket, `fetch_add` the sum, `fetch_max` the max. Reads aggregate
+//! all shards into an owned [`Snapshot`] whose `count` is derived from
+//! the bucket counters themselves, so a snapshot is always internally
+//! consistent even while writers race.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Linear sub-buckets per octave as a power of two.
+const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per octave (16).
+const SUBS: usize = 1 << SUB_BITS;
+/// Total bucket count: one exact bucket per value below `SUBS`, plus
+/// `SUBS` sub-buckets for each octave with msb in `SUB_BITS..=63`.
+pub const BUCKETS: usize = SUBS * (64 - SUB_BITS as usize + 1);
+
+/// Per-histogram shard count. Shards only reduce write contention;
+/// any thread may record into any shard and reads merge them all.
+const SHARDS: usize = 8;
+
+/// Map a value to its bucket index (0..`BUCKETS`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS + 1) as usize;
+        octave * SUBS + ((v >> (msb - SUB_BITS)) as usize & (SUBS - 1))
+    }
+}
+
+/// Smallest value that lands in bucket `idx`.
+pub fn bucket_lower(idx: usize) -> u64 {
+    if idx < SUBS {
+        idx as u64
+    } else if idx >= BUCKETS {
+        u64::MAX
+    } else {
+        let msb = (idx / SUBS) as u32 + SUB_BITS - 1;
+        let sub = (idx % SUBS) as u64;
+        (1u64 << msb) + (sub << (msb - SUB_BITS))
+    }
+}
+
+/// Largest value that lands in bucket `idx`.
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(idx + 1) - 1
+    }
+}
+
+struct Shard {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A sharded, mergeable latency histogram. All methods take `&self`;
+/// the struct is safe to share behind an `Arc` or a `static`.
+pub struct Histogram {
+    shards: Vec<Shard>,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            shards: (0..SHARDS).map(|_| Shard::new()).collect(),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (microseconds). Wait-free.
+    pub fn record(&self, value_us: u64) {
+        let idx = bucket_index(value_us);
+        if let Some(shard) = self.shards.get(shard_of(self.shards.len())) {
+            if let Some(bucket) = shard.buckets.get(idx) {
+                bucket.fetch_add(1, Ordering::Relaxed);
+                shard.sum.fetch_add(value_us, Ordering::Relaxed);
+                self.max.fetch_max(value_us, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record the elapsed time since `start_us` (a [`super::now_us`]
+    /// reading), saturating at zero if the clock reads backwards.
+    pub fn record_since(&self, start_us: u64) {
+        self.record(super::now_us().saturating_sub(start_us));
+    }
+
+    /// Aggregate every shard into an owned, internally consistent view.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut buckets = vec![0u64; BUCKETS];
+        let mut sum = 0u64;
+        for shard in &self.shards {
+            for (acc, bucket) in buckets.iter_mut().zip(&shard.buckets) {
+                *acc += bucket.load(Ordering::Relaxed);
+            }
+            sum = sum.saturating_add(shard.sum.load(Ordering::Relaxed));
+        }
+        let count = buckets.iter().sum();
+        Snapshot {
+            buckets,
+            count,
+            sum,
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned point-in-time view of a [`Histogram`]. Mergeable: merging
+/// two snapshots is equivalent to having recorded both value streams
+/// into one histogram.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Snapshot {
+    /// Fold `other` into `self` (bucket-wise addition).
+    pub fn merge(&mut self, other: &Snapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (acc, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *acc += c;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the first
+    /// bucket whose cumulative count reaches `ceil(q * count)`, clamped
+    /// to the exact observed max. Guaranteed `>=` the true quantile of
+    /// the recorded stream and `<=` it plus one bucket width (6.25%
+    /// relative error). Returns 0 for an empty snapshot.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// Mean of the recorded values, rounded down. 0 when empty.
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+}
+
+/// Stable per-thread shard assignment: threads get incrementing ids on
+/// first use; the id mod the shard count picks the shard.
+fn shard_of(n: usize) -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static ID: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id % n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_contiguous_and_exhaustive() {
+        // Every boundary value lands in the bucket whose [lower, upper]
+        // range contains it, and consecutive buckets tile the u64 line.
+        for idx in 0..BUCKETS {
+            let lo = bucket_lower(idx);
+            let hi = bucket_upper(idx);
+            assert!(lo <= hi, "bucket {idx}: lower {lo} > upper {hi}");
+            assert_eq!(bucket_index(lo), idx, "lower bound of {idx}");
+            assert_eq!(bucket_index(hi), idx, "upper bound of {idx}");
+            if idx + 1 < BUCKETS {
+                assert_eq!(hi + 1, bucket_lower(idx + 1), "gap after bucket {idx}");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for idx in 16..BUCKETS - 1 {
+            let lo = bucket_lower(idx) as f64;
+            let width = (bucket_upper(idx) - bucket_lower(idx) + 1) as f64;
+            assert!(
+                width / lo <= 1.0 / 16.0 + 1e-12,
+                "bucket {idx}: width {width} lower {lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn records_and_reports_exact_small_values() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 3, 7, 15] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 26);
+        assert_eq!(s.max, 15);
+        // Below 16 every bucket is exact, so percentiles are exact too.
+        assert_eq!(s.percentile(1.0), 15);
+        assert_eq!(s.p50(), 3);
+    }
+
+    #[test]
+    fn merge_equals_record_all() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        let mut v = 0x2545_f491_4f6c_dd1du64;
+        for i in 0..4000u64 {
+            v ^= v << 13;
+            v ^= v >> 7;
+            v ^= v << 17;
+            let sample = v % 1_000_000;
+            if i % 2 == 0 {
+                a.record(sample);
+            } else {
+                b.record(sample);
+            }
+            all.record(sample);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile(0.99), 0);
+        assert_eq!(s.mean(), 0);
+    }
+}

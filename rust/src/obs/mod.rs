@@ -1,0 +1,159 @@
+//! Dependency-free telemetry for the hub (DESIGN.md §13).
+//!
+//! Three pieces:
+//!
+//! - [`hist`] — lock-free log-linear latency histograms, recorded per
+//!   request stage via per-thread shards and aggregated on read;
+//! - [`trace`] — per-request spans carrying the correlation id through
+//!   the reactor, worker pool and write path, retained in a ring and
+//!   promoted to a slow-request log past `--slow-ms`;
+//! - [`log`] — the structured leveled logger that replaced the ad-hoc
+//!   `eprintln!` sites (lint rule L6 forbids new ones).
+//!
+//! The registry ([`metrics`]) is process-wide, like a default
+//! Prometheus registry: deep layers (`storage/wal.rs`,
+//! `cv/parallel.rs`) record stages without constructor plumbing, and
+//! the `metrics` op snapshots it. The trade-off is that two hubs in one
+//! process (as in tests) share histograms; the e2e assertions therefore
+//! check nonzero counts and internal consistency, never exact totals.
+
+pub mod hist;
+pub mod log;
+pub mod trace;
+
+use std::sync::atomic::AtomicU64;
+use std::sync::OnceLock;
+
+pub use hist::{Histogram, Snapshot};
+pub use trace::{now_us, Span, TraceRing};
+
+/// Completed traces retained by the global ring.
+const TRACE_RING_CAP: usize = 128;
+
+/// A request-path stage with its own latency histogram. `name()` is the
+/// wire/metric identifier (`c3o_stage_<name>_us` in Prometheus text).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Frame extraction in the reactor.
+    Decode,
+    /// Job queue residency before a worker picks it up.
+    QueueWait,
+    /// Full service dispatch in the worker.
+    Service,
+    /// Model fit inside the service (cold cache path).
+    Fit,
+    /// Candidate scoring in the fit engine (`cv/parallel.rs`).
+    CvScore,
+    /// Row prediction against a fitted model.
+    Predict,
+    /// WAL record append (write syscall path).
+    WalAppend,
+    /// WAL fsync.
+    WalFsync,
+    /// Reply residency in the outbox (worker -> reactor handoff).
+    Dispatch,
+    /// Reply bytes sitting in the write buffer until flushed.
+    ReplyWrite,
+    /// End-to-end: frame decode start to reply flush.
+    Total,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 11] = [
+        Stage::Decode,
+        Stage::QueueWait,
+        Stage::Service,
+        Stage::Fit,
+        Stage::CvScore,
+        Stage::Predict,
+        Stage::WalAppend,
+        Stage::WalFsync,
+        Stage::Dispatch,
+        Stage::ReplyWrite,
+        Stage::Total,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Decode => "decode",
+            Stage::QueueWait => "queue_wait",
+            Stage::Service => "service",
+            Stage::Fit => "fit",
+            Stage::CvScore => "cv_score",
+            Stage::Predict => "predict",
+            Stage::WalAppend => "wal_append",
+            Stage::WalFsync => "wal_fsync",
+            Stage::Dispatch => "dispatch",
+            Stage::ReplyWrite => "reply_write",
+            Stage::Total => "request_total",
+        }
+    }
+}
+
+/// The process-wide telemetry registry: one histogram per [`Stage`],
+/// the completed-trace ring, and gauges owned by the serving path.
+pub struct Metrics {
+    stages: [Histogram; Stage::ALL.len()],
+    pub traces: TraceRing,
+    /// Workers currently inside a service dispatch.
+    pub busy_workers: AtomicU64,
+    /// Worker pool size of the most recently started hub.
+    pub workers_total: AtomicU64,
+}
+
+impl Metrics {
+    fn new() -> Self {
+        Metrics {
+            stages: std::array::from_fn(|_| Histogram::new()),
+            traces: TraceRing::new(TRACE_RING_CAP),
+            busy_workers: AtomicU64::new(0),
+            workers_total: AtomicU64::new(0),
+        }
+    }
+
+    /// The histogram for one stage.
+    pub fn stage(&self, stage: Stage) -> &Histogram {
+        // `position` over Stage::ALL is always < stages.len() because
+        // both arrays share the same length by construction.
+        let idx = Stage::ALL.iter().position(|s| *s == stage).unwrap_or(0);
+        &self.stages[idx]
+    }
+
+    /// Record one value (microseconds) into a stage histogram.
+    pub fn record(&self, stage: Stage, value_us: u64) {
+        self.stage(stage).record(value_us);
+    }
+
+    /// Record elapsed time since a [`now_us`] reading into a stage.
+    pub fn record_since(&self, stage: Stage, start_us: u64) {
+        self.stage(stage).record_since(start_us);
+    }
+}
+
+/// The global registry (created on first use).
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_unique() {
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len());
+    }
+
+    #[test]
+    fn registry_records_into_the_right_stage() {
+        let m = metrics();
+        let before = m.stage(Stage::CvScore).snapshot().count;
+        m.record(Stage::CvScore, 250);
+        let after = m.stage(Stage::CvScore).snapshot();
+        assert_eq!(after.count, before + 1);
+    }
+}

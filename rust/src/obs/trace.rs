@@ -1,0 +1,175 @@
+//! Request tracing: per-request spans with a stage breakdown
+//! (DESIGN.md §13).
+//!
+//! A span is opened by the reactor when it decodes a frame and travels
+//! with the job through the worker pool and back out through the write
+//! buffer; the reactor completes it when the last byte of the reply has
+//! been flushed to the socket. Stages are disjoint sub-intervals of the
+//! request's wall-clock lifetime, so
+//! `decode + queue + service + dispatch + reply <= total` holds by
+//! construction.
+//!
+//! Completed spans land in a fixed-capacity ring ([`TraceRing`]) for
+//! inspection, and requests slower than the configured `--slow-ms`
+//! threshold are additionally promoted to a structured warn-level
+//! slow-request log line.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::log;
+
+/// Microseconds since an arbitrary process-wide monotonic epoch (the
+/// first call). All span timestamps use this clock.
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// One completed request trace: correlation id, op, and the per-stage
+/// breakdown in microseconds.
+#[derive(Clone, Debug, Default)]
+pub struct Span {
+    /// Correlation id from the request frame (0 if the frame carried
+    /// none or failed to parse).
+    pub id: u64,
+    /// Op name ("predict", "submit", ...; empty if undecodable).
+    pub op: String,
+    /// [`now_us`] timestamp when the reactor pulled the frame out of
+    /// the read buffer.
+    pub recv_us: u64,
+    /// Frame extraction time in the reactor.
+    pub decode_us: u64,
+    /// Time spent queued before a worker picked the job up.
+    pub queue_us: u64,
+    /// Service dispatch time in the worker (includes fit/predict/WAL).
+    pub service_us: u64,
+    /// Outbox residency: reply handoff back to the reactor.
+    pub dispatch_us: u64,
+    /// Time from entering the connection's write buffer to the last
+    /// byte being flushed to the socket.
+    pub reply_us: u64,
+    /// End-to-end: frame decode start to reply flush.
+    pub total_us: u64,
+    /// Whether the response carried `ok: true`.
+    pub ok: bool,
+}
+
+/// Fixed-capacity ring of recently completed spans plus slow-request
+/// accounting. Shared by reference from the global metrics registry.
+pub struct TraceRing {
+    cap: usize,
+    recent: Mutex<VecDeque<Span>>,
+    completed: AtomicU64,
+    slow: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing {
+            cap: cap.max(1),
+            recent: Mutex::new(VecDeque::new()),
+            completed: AtomicU64::new(0),
+            slow: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a completed span. If `slow_ms` is nonzero and the span's
+    /// end-to-end time reaches it, the span is also promoted to a
+    /// structured slow-request log line.
+    pub fn complete(&self, span: Span, slow_ms: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if slow_ms > 0 && span.total_us >= slow_ms.saturating_mul(1000) {
+            self.slow.fetch_add(1, Ordering::Relaxed);
+            log::warn(
+                "hub.trace",
+                "slow request",
+                &[
+                    ("id", span.id.to_string()),
+                    ("op", span.op.clone()),
+                    ("total_us", span.total_us.to_string()),
+                    ("queue_us", span.queue_us.to_string()),
+                    ("service_us", span.service_us.to_string()),
+                    ("reply_us", span.reply_us.to_string()),
+                ],
+            );
+        }
+        let mut ring = self.recent.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    /// The retained spans, oldest first.
+    pub fn recent(&self) -> Vec<Span> {
+        self.recent
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Total spans completed over the process lifetime.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Spans promoted to the slow-request log.
+    pub fn slow(&self) -> u64 {
+        self.slow.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, total_us: u64) -> Span {
+        Span {
+            id,
+            op: "predict".into(),
+            total_us,
+            ok: true,
+            ..Span::default()
+        }
+    }
+
+    #[test]
+    fn ring_retains_last_n_in_completion_order() {
+        let ring = TraceRing::new(3);
+        for id in 1..=5u64 {
+            ring.complete(span(id, 10), 0);
+        }
+        let ids: Vec<u64> = ring.recent().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![3, 4, 5]);
+        assert_eq!(ring.completed(), 5);
+        assert_eq!(ring.slow(), 0);
+    }
+
+    #[test]
+    fn slow_threshold_promotes_to_log() {
+        let cap = log::capture();
+        let ring = TraceRing::new(8);
+        ring.complete(span(1, 900), 1); // 0.9 ms < 1 ms
+        ring.complete(span(2, 2_500), 1); // 2.5 ms >= 1 ms
+        assert_eq!(ring.slow(), 1);
+        let slow: Vec<_> = cap
+            .take()
+            .into_iter()
+            .filter(|r| r.target == "hub.trace")
+            .collect();
+        assert_eq!(slow.len(), 1);
+        assert!(slow[0].fields.iter().any(|(k, v)| k == "id" && v == "2"));
+    }
+
+    #[test]
+    fn zero_threshold_disables_slow_log() {
+        let ring = TraceRing::new(2);
+        ring.complete(span(1, u64::MAX), 0);
+        assert_eq!(ring.slow(), 0);
+    }
+}

@@ -97,6 +97,10 @@ pub fn sync_once(
         loop {
             let local = state.revision(job).unwrap_or(0);
             let page = client.repl_fetch(job, local, max_batch)?;
+            // Every page carries the leader's current revision: remember
+            // it so the follower's `stats`/`metrics` ops can report
+            // replication lag (leader watermark minus applied revision).
+            service.note_repl_progress(job, page.leader_revision);
             if page.compacted {
                 // Records right above our watermark are gone from the
                 // leader's WAL; a snapshot carries us past the horizon.
@@ -120,6 +124,7 @@ pub fn sync_once(
             }
         }
     }
+    service.note_tail_success();
     Ok(applied)
 }
 
@@ -239,7 +244,11 @@ fn run_loop(
                 // Leader unreachable or mid-restart: drop the session and
                 // retry with capped exponential backoff. The follower
                 // keeps serving reads from its last-applied state.
-                eprintln!("[c3o follower] sync with {} failed: {e:#}", config.leader);
+                crate::obs::log::warn(
+                    "replication",
+                    "sync with leader failed",
+                    &[("leader", config.leader.clone()), ("error", format!("{e:#}"))],
+                );
                 client = None;
                 sleep_checked(stop, backoff);
                 backoff = (backoff * 2).min(config.max_backoff);

@@ -256,7 +256,9 @@ impl Wal {
     ) -> crate::Result<()> {
         let before = self.len;
         let was_dirty = self.dirty;
+        let append_start = crate::obs::now_us();
         self.append(revision, data_tsv)?;
+        crate::obs::metrics().record_since(crate::obs::Stage::WalAppend, append_start);
         if sync {
             if let Err(e) = self.sync() {
                 if self.file.set_len(before).is_ok() {
@@ -276,9 +278,11 @@ impl Wal {
     /// fsync appended bytes, if any.
     pub fn sync(&mut self) -> crate::Result<()> {
         if self.dirty {
+            let fsync_start = crate::obs::now_us();
             self.file
                 .sync_data()
                 .with_context(|| format!("fsync WAL {}", self.path.display()))?;
+            crate::obs::metrics().record_since(crate::obs::Stage::WalFsync, fsync_start);
             self.dirty = false;
         }
         Ok(())

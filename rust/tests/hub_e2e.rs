@@ -600,3 +600,168 @@ fn shutdown_quiesces_in_flight_connections() {
     );
     server.shutdown();
 }
+
+/// The `metrics` op round-trips the full telemetry snapshot over live
+/// TCP (DESIGN.md §13): nonzero stage histograms for every stage the
+/// traffic exercised, the stage-sum ≤ end-to-end consistency invariant,
+/// and the counter/gauge catalog. The registry is process-wide (shared
+/// by every test in this binary), so assertions stay on nonzero counts
+/// and internal consistency, never exact totals.
+#[test]
+fn metrics_op_roundtrips_consistent_stage_histograms() {
+    use c3o::hub::PipelinedClient;
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+    let mut client = HubClient::connect(&addr).unwrap();
+
+    // Exercise the stages: a cold fit (fit + cv_score), predicts, an
+    // accepted submit, and a stats roundtrip.
+    let rows: Vec<Vec<f64>> = (2..=6u32).map(|s| vec![s as f64, 15.0]).collect();
+    client.predict_batch(JobKind::Sort, None, &rows).unwrap();
+    assert!(client.submit_runs(&honest_runs(JobKind::Sort, 6, 77)).unwrap().accepted);
+    client.stats().unwrap();
+
+    let m = client.metrics().unwrap();
+
+    // Every reactor-measured stage plus the service-layer stages the
+    // traffic above drove must have recorded samples, with sane
+    // percentile ordering.
+    let sum_of = |name: &str| {
+        let h = m.histogram(name).unwrap_or_else(|| panic!("missing histogram `{name}`"));
+        assert!(h.count > 0, "{name}: zero count");
+        assert!(h.p50_us <= h.p95_us, "{name}: p50 {} > p95 {}", h.p50_us, h.p95_us);
+        assert!(h.p95_us <= h.p99_us, "{name}: p95 {} > p99 {}", h.p95_us, h.p99_us);
+        assert!(h.p99_us <= h.max_us, "{name}: p99 {} > max {}", h.p99_us, h.max_us);
+        h.sum_us
+    };
+    let parts = sum_of("stage_decode")
+        + sum_of("stage_queue_wait")
+        + sum_of("stage_service")
+        + sum_of("stage_dispatch")
+        + sum_of("stage_reply_write");
+    let total = sum_of("stage_request_total");
+    assert!(
+        parts <= total,
+        "stage sums must not exceed end-to-end time: {parts} > {total}"
+    );
+    for name in ["stage_fit", "stage_cv_score", "stage_predict"] {
+        sum_of(name);
+    }
+
+    // The counter/gauge catalog is present and reflects the traffic.
+    for counter in ["accepted_submits", "fits", "cache_misses", "traces_completed"] {
+        let v = m.counter(counter).unwrap_or_else(|| panic!("missing counter `{counter}`"));
+        assert!(v > 0, "{counter} is zero");
+    }
+    assert!(m.counter("idle_reaped_connections").is_some());
+    assert!(m.gauge("workers_total").unwrap_or(0) >= 1);
+    assert!(m.gauge("open_connections").unwrap_or(0) >= 1, "our own connection is open");
+
+    // Rendering keeps the Prometheus naming contract.
+    let text = m.render_prometheus();
+    assert!(text.contains("c3o_stage_request_total_us_count"), "{text}");
+    assert!(text.contains("# TYPE c3o_fits counter"), "{text}");
+
+    // The pipelined client speaks the same op; counts are monotone.
+    let mut p = PipelinedClient::connect(&addr).unwrap();
+    let id = p.send_metrics().unwrap();
+    let m2 = p.wait_metrics(id).unwrap();
+    let before = m.histogram("stage_request_total").unwrap().count;
+    let after = m2.histogram("stage_request_total").unwrap().count;
+    assert!(after >= before, "stage counts went backwards: {after} < {before}");
+    server.shutdown();
+}
+
+/// Trace-span lifecycle under pipelined out-of-order completion: a cold
+/// Grep fit queued ahead of warm Sort hits on one connection is
+/// overtaken on the wire, and every span still completes exactly once
+/// with its own correlation id, `ok` verdict, and disjoint stage
+/// breakdown — in reply-flush order, not submission order.
+#[test]
+fn trace_spans_complete_under_pipelined_out_of_order_replies() {
+    use c3o::hub::PipelinedClient;
+    let server = start_hub_with_data();
+    let addr = server.addr.to_string();
+
+    // Warm the Sort model so the pipelined Sort hits are cache reads.
+    let rows: Vec<Vec<f64>> = (2..=6u32).map(|s| vec![s as f64, 15.0]).collect();
+    let mut warmup = HubClient::connect(&addr).unwrap();
+    warmup.predict_batch(JobKind::Sort, None, &rows).unwrap();
+
+    let traces = &c3o::obs::metrics().traces;
+    let completed_before = traces.completed();
+
+    let mut p = PipelinedClient::connect(&addr).unwrap();
+    // Sequential roundtrips first: they advance this connection's id
+    // counter past every id other tests in this binary use, so our
+    // spans are identifiable in the shared process-wide trace ring.
+    for _ in 0..20 {
+        let id = p.send_predict(JobKind::Sort, None, &[4.0, 15.0]).unwrap();
+        p.wait_predict(id).unwrap();
+    }
+    let cold = p.send_predict(JobKind::Grep, None, &[4.0, 15.0, 0.01]).unwrap();
+    let warm: Vec<u64> =
+        rows.iter().map(|r| p.send_predict(JobKind::Sort, None, r).unwrap()).collect();
+    for id in &warm {
+        p.wait_predict(*id).unwrap();
+    }
+    // Observed server-side reordering (same mechanism the pipelining
+    // test proves); the ring-order assertion below is gated on it.
+    let overtaken = !p.has_reply(cold);
+    p.wait_predict(cold).unwrap();
+
+    // Spans complete moments after the reply bytes flush (the reactor
+    // finishes its write pass before we can observe the reply), so poll
+    // briefly for all of ours to land in the ring.
+    let want: Vec<u64> = std::iter::once(cold).chain(warm.iter().copied()).collect();
+    let mut ours: Vec<c3o::obs::Span> = Vec::new();
+    for _ in 0..400 {
+        ours = traces
+            .recent()
+            .into_iter()
+            .filter(|s| s.op == "predict" && s.id >= cold)
+            .collect();
+        let mut ids: Vec<u64> = ours.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if want.iter().all(|w| ids.binary_search(w).is_ok()) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let found: Vec<u64> = ours.iter().map(|s| s.id).collect();
+    for w in &want {
+        assert!(found.contains(w), "span for request id {w} never completed: {found:?}");
+    }
+    assert!(
+        traces.completed() >= completed_before + want.len() as u64,
+        "completed-span counter did not advance"
+    );
+
+    // Each span carries a correct verdict and a disjoint stage
+    // breakdown: the sub-intervals never sum past the end-to-end time.
+    for s in &ours {
+        assert!(s.ok, "span {} ({}) reported !ok", s.id, s.op);
+        let parts = s.decode_us + s.queue_us + s.service_us + s.dispatch_us + s.reply_us;
+        assert!(
+            parts <= s.total_us,
+            "span {}: stage sum {parts} exceeds total {}",
+            s.id,
+            s.total_us
+        );
+    }
+
+    // Completion order is reply-flush order: every overtaking warm span
+    // sits before the cold fit's span in the ring.
+    if overtaken {
+        let pos = |id: u64| ours.iter().position(|s| s.id == id);
+        let cold_pos = pos(cold).unwrap_or(usize::MAX);
+        for w in &warm {
+            assert!(
+                pos(*w).unwrap_or(usize::MAX) < cold_pos,
+                "warm span {w} completed after the cold fit despite wire reordering"
+            );
+        }
+    }
+    server.shutdown();
+}

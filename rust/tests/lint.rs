@@ -365,6 +365,72 @@ pub fn submit() -> Op {
 }
 
 // ---------------------------------------------------------------------------
+// L6 — logging discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bare_eprintln_in_library_code_fires() {
+    let fx = Fixture::new("l6_bad");
+    fx.file(
+        "hub/server.rs",
+        r#"
+pub fn report(e: &str) {
+    eprintln!("[hub] something failed: {e}");
+}
+"#,
+    );
+    let report = fx.lint();
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == "logging")
+        .unwrap_or_else(|| panic!("expected a logging finding, got: {:?}", report.findings));
+    assert_eq!(f.file, "hub/server.rs");
+    assert!(f.message.contains("eprintln"), "message: {}", f.message);
+}
+
+#[test]
+fn eprintln_is_exempt_in_main_tests_and_marked_sites() {
+    let fx = Fixture::new("l6_good");
+    // The CLI's terminal output is its interface.
+    fx.file(
+        "main.rs",
+        r#"
+fn main() {
+    eprintln!("usage: c3o <cmd>");
+}
+"#,
+    );
+    // Test modules may print freely.
+    fx.file(
+        "eval/report.rs",
+        r#"
+pub fn quiet() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prints() {
+        eprintln!("debugging a test");
+    }
+}
+"#,
+    );
+    // A justified terminal sink (like the logger's own) is allowed.
+    fx.file(
+        "obs/log.rs",
+        r#"
+pub fn emit(line: &str) {
+    // lint: allow(logging, reason = "fixture: the logger's own terminal sink")
+    eprintln!("{line}");
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
 // Test-code exemption
 // ---------------------------------------------------------------------------
 

@@ -513,3 +513,78 @@ fn prop_wal_scan_survives_flips_and_truncations() {
         },
     );
 }
+
+#[test]
+fn prop_histogram_percentiles_within_bucket_error() {
+    // The log-linear buckets guarantee: reported quantile >= the exact
+    // order statistic, and overshoots it by at most one bucket width
+    // (relative error 1/16, plus 1 for integer rounding).
+    use c3o::obs::Histogram;
+    forall_res(
+        "histogram percentile error is bucket-bounded",
+        40,
+        |rng| {
+            let n = rng.range(1, 500);
+            (0..n)
+                .map(|_| rng.next_u64() >> (4 + rng.below(56) as u32))
+                .collect::<Vec<u64>>()
+        },
+        |values| {
+            let h = Histogram::new();
+            for &v in values {
+                h.record(v);
+            }
+            let snap = h.snapshot();
+            anyhow::ensure!(snap.count == values.len() as u64);
+            let mut sorted = values.clone();
+            sorted.sort_unstable();
+            for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                let exact = sorted[rank - 1];
+                let reported = snap.percentile(q);
+                anyhow::ensure!(
+                    reported >= exact,
+                    "q={q}: reported {reported} < exact {exact}"
+                );
+                let bound = exact + exact / 16 + 1;
+                anyhow::ensure!(
+                    reported <= bound,
+                    "q={q}: reported {reported} > bound {bound} (exact {exact})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_merge_equals_record_all() {
+    // Merging shard snapshots is lossless: any partition of a sample
+    // into two histograms merges to exactly the record-all snapshot.
+    use c3o::obs::Histogram;
+    forall_res(
+        "histogram merge is partition-invariant",
+        30,
+        |rng| {
+            let n = rng.range(0, 300);
+            (0..n)
+                .map(|_| {
+                    let v = rng.next_u64() >> (4 + rng.below(56) as u32);
+                    (v, rng.below(2) == 0)
+                })
+                .collect::<Vec<(u64, bool)>>()
+        },
+        |values| {
+            let (a, b, all) = (Histogram::new(), Histogram::new(), Histogram::new());
+            for &(v, left) in values {
+                all.record(v);
+                let target = if left { &a } else { &b };
+                target.record(v);
+            }
+            let mut merged = a.snapshot();
+            merged.merge(&b.snapshot());
+            anyhow::ensure!(merged == all.snapshot(), "merged snapshot diverged");
+            Ok(())
+        },
+    );
+}
