@@ -1,0 +1,101 @@
+//! E14 — `c3o lint` full-tree wall time.
+//!
+//! The linter is a blocking CI step; it stays in the build only as long
+//! as it stays cheap. This bench runs the whole v2 pipeline against the
+//! real tree (`rust/src`) — lexing, function scanning, CFG + call-graph
+//! construction, the interprocedural lock-set fixpoint, taint and
+//! ordering passes, allow-marker filtering — and asserts the wall time
+//! stays under 2 s per run (benches build with the release profile).
+//!
+//! The machine-readable section (`BENCH_lint.json`) records the tree
+//! size the time was measured against: token / file / fn counts plus
+//! finding, lock-edge and taint-flow totals, so a perf regression can
+//! be told apart from the tree simply growing.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use c3o::analysis::{self, lexer};
+use c3o::bench::bench;
+use c3o::util::json::Json;
+
+/// Sum of lexed token and comment counts over every `.rs` file under
+/// `root` — the input-size denominator for the timing numbers.
+fn tree_tokens(root: &Path) -> (usize, usize) {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    let mut paths = Vec::new();
+    walk(root, &mut paths);
+    let (mut toks, mut comments) = (0, 0);
+    for p in paths {
+        let src = std::fs::read_to_string(&p).expect("read source");
+        let (t, c) = lexer::lex(&src);
+        toks += t.len();
+        comments += c.len();
+    }
+    (toks, comments)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let (warmup, iters) = if common::smoke() { (0, 1) } else { (2, 10) };
+
+    println!("== E14: full-tree lint wall time ==\n");
+
+    let report = analysis::lint_dir(&root).expect("lint rust/src");
+    let (tokens, comments) = tree_tokens(&root);
+    println!(
+        "tree: {} files, {} fns, {} tokens, {} comments",
+        report.files_scanned, report.fns_scanned, tokens, comments
+    );
+    println!(
+        "report: {} findings, {} lock edges, {} taint flows",
+        report.findings.len(),
+        report.lock_edges.len(),
+        report.taint_flows.len()
+    );
+    assert!(
+        report.findings.is_empty(),
+        "tree must lint clean before timing it: {:?}",
+        report.findings
+    );
+
+    let r = bench("lint_full_tree", warmup, iters, || {
+        analysis::lint_dir(&root).expect("lint rust/src")
+    });
+    println!("  {}", r.per_iter_display());
+
+    // The CI contract: a blocking lint step slower than ~2 s per run is
+    // the point where people start skipping it locally.
+    assert!(
+        r.mean_s < 2.0,
+        "full-tree lint took {:.3} s — the 2 s budget for a blocking CI step is blown",
+        r.mean_s
+    );
+
+    common::write_bench_json_named(
+        "BENCH_lint.json",
+        "lint_full_tree",
+        Json::obj(vec![
+            ("files", Json::Num(report.files_scanned as f64)),
+            ("fns", Json::Num(report.fns_scanned as f64)),
+            ("tokens", Json::Num(tokens as f64)),
+            ("comments", Json::Num(comments as f64)),
+            ("findings", Json::Num(report.findings.len() as f64)),
+            ("lock_edges", Json::Num(report.lock_edges.len() as f64)),
+            ("taint_flows", Json::Num(report.taint_flows.len() as f64)),
+            ("mean_s", Json::Num(r.mean_s)),
+            ("budget_s", Json::Num(2.0)),
+        ]),
+    );
+}

@@ -1,0 +1,588 @@
+//! Per-function control-flow graph for the `c3o lint` dataflow rules.
+//!
+//! A deliberately small statement-level parser over the token stream:
+//! it does not understand Rust expressions, only enough structure to
+//! split a function body into statements and wire the branch/loop/match
+//! edges the dataflow engine needs. Statements are token ranges; the
+//! rules re-scan those ranges with their own pattern matchers.
+//!
+//! Design constraints, in order:
+//! 1. **Never panic, never loop forever** — the property tests feed
+//!    this parser random byte mutations of real source files. Every
+//!    loop strictly advances its cursor and every slice index is
+//!    clamped to the range being parsed.
+//! 2. **Conservative edges** — when structure is ambiguous (a `loop`
+//!    whose `break` we did not see, a macro body), we add the edge that
+//!    makes the analysis weaker (more paths), never fewer. Dataflow
+//!    verdicts stay sound for the rules built on top (which report
+//!    must-not-happen orderings over may-reach paths).
+//! 3. **Expression-level control flow stays inside one statement** —
+//!    `let x = if c { a } else { b };` is a single `Normal` statement.
+//!    The taint rule treats it textually, which is exactly as precise
+//!    as the line scanner it replaces, while statement-level `if` /
+//!    `while` / `match` get real branch structure.
+
+use super::lexer::{TokKind, Token};
+
+/// What a statement is, for the transfer functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StmtKind {
+    /// Plain statement (possibly a `let`, call, assignment, ...).
+    Normal,
+    /// Branch condition (`if c`, `while c`, `match scrutinee`). The
+    /// token range covers only the condition/scrutinee expression.
+    Cond,
+    /// Match-arm pattern (plus guard, if any). Identifiers bound here
+    /// are definitions from the automaton's point of view.
+    Pattern,
+}
+
+/// One statement: a half-open token range `[lo, hi)` plus the 1-based
+/// line of its first token.
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    pub lo: usize,
+    pub hi: usize,
+    pub line: u32,
+    pub kind: StmtKind,
+}
+
+/// One basic block: statements executed in order, then a jump to any of
+/// `succs`.
+#[derive(Debug, Clone, Default)]
+pub struct Block {
+    pub stmts: Vec<Stmt>,
+    pub succs: Vec<usize>,
+}
+
+/// A function body CFG. `entry` is always block 0; `exit` is a single
+/// empty block every fall-off-the-end path reaches. Early returns and
+/// `?` are *not* modeled as edges to exit — the rules that care about
+/// "reaches the end" semantics (ordering) treat any path as suspect,
+/// which is the conservative direction.
+#[derive(Debug, Clone)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    pub entry: usize,
+    pub exit: usize,
+}
+
+impl Cfg {
+    /// Build the CFG for the token range `(lo, hi)` — exclusive of the
+    /// outer braces — of a function body in `tokens`.
+    pub fn build(tokens: &[Token], lo: usize, hi: usize) -> Cfg {
+        let hi = hi.min(tokens.len());
+        let lo = lo.min(hi);
+        let mut b = Builder { tokens, blocks: vec![Block::default()], loops: Vec::new() };
+        let last = b.seq(lo, hi, 0);
+        let exit = b.new_block();
+        b.blocks[last].succs.push(exit);
+        // Wire every dead-end block (no successors, not the exit) to
+        // exit so dataflow fixpoints converge over total graphs.
+        for idx in 0..b.blocks.len() {
+            if idx != exit && b.blocks[idx].succs.is_empty() {
+                b.blocks[idx].succs.push(exit);
+            }
+        }
+        Cfg { blocks: b.blocks, entry: 0, exit }
+    }
+
+    /// Blocks reachable from `from` (exclusive of `from` unless it is
+    /// on a cycle back to itself), for forward may-reach queries.
+    pub fn reachable_from(&self, from: usize) -> Vec<usize> {
+        let mut seen = vec![false; self.blocks.len()];
+        let mut stack: Vec<usize> = self.blocks.get(from).map(|b| b.succs.clone()).unwrap_or_default();
+        let mut out = Vec::new();
+        while let Some(n) = stack.pop() {
+            if n >= seen.len() || seen[n] {
+                continue;
+            }
+            seen[n] = true;
+            out.push(n);
+            stack.extend(self.blocks[n].succs.iter().copied());
+        }
+        out
+    }
+}
+
+struct Builder<'a> {
+    tokens: &'a [Token],
+    blocks: Vec<Block>,
+    /// Stack of (header_block, after_block) for `break`/`continue`.
+    loops: Vec<(usize, usize)>,
+}
+
+impl<'a> Builder<'a> {
+    fn new_block(&mut self) -> usize {
+        self.blocks.push(Block::default());
+        self.blocks.len() - 1
+    }
+
+    fn edge(&mut self, from: usize, to: usize) {
+        if !self.blocks[from].succs.contains(&to) {
+            self.blocks[from].succs.push(to);
+        }
+    }
+
+    fn line_at(&self, i: usize) -> u32 {
+        self.tokens.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    /// Push a statement onto `cur`, wiring `break`/`continue` edges if
+    /// the statement contains them at top level.
+    fn push_stmt(&mut self, cur: usize, stmt: Stmt) {
+        let (lo, hi) = (stmt.lo, stmt.hi);
+        self.blocks[cur].stmts.push(stmt);
+        if let Some(&(header, after)) = self.loops.last() {
+            for i in lo..hi.min(self.tokens.len()) {
+                let t = &self.tokens[i];
+                if t.kind == TokKind::Ident {
+                    if t.is("break") {
+                        self.edge(cur, after);
+                    } else if t.is("continue") {
+                        self.edge(cur, header);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Skip a balanced bracket group starting at the opener `tokens[i]`;
+    /// returns the index just past the matching closer (or `hi`).
+    fn skip_balanced(&self, i: usize, hi: usize) -> usize {
+        let open = match self.tokens.get(i).map(|t| t.text.as_str()) {
+            Some("(") => "(",
+            Some("[") => "[",
+            Some("{") => "{",
+            _ => return i + 1,
+        };
+        let close = match open {
+            "(" => ")",
+            "[" => "]",
+            _ => "}",
+        };
+        let mut depth = 0usize;
+        let mut j = i;
+        while j < hi.min(self.tokens.len()) {
+            let t = &self.tokens[j];
+            if t.kind == TokKind::Punct {
+                if t.is(open) {
+                    depth += 1;
+                } else if t.is(close) {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j + 1;
+                    }
+                }
+            }
+            j += 1;
+        }
+        hi
+    }
+
+    /// Parse the statement sequence `[lo, hi)` appending to block
+    /// `cur`; returns the block that control falls out of.
+    fn seq(&mut self, lo: usize, hi: usize, mut cur: usize) -> usize {
+        let hi = hi.min(self.tokens.len());
+        let mut i = lo;
+        while i < hi {
+            let t = &self.tokens[i];
+            if t.kind == TokKind::Punct && t.is(";") {
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "if" => {
+                        i = self.parse_if(i, hi, &mut cur);
+                        continue;
+                    }
+                    "while" | "for" => {
+                        i = self.parse_while_for(i, hi, &mut cur);
+                        continue;
+                    }
+                    "loop" => {
+                        i = self.parse_loop(i, hi, &mut cur);
+                        continue;
+                    }
+                    "match" => {
+                        i = self.parse_match(i, hi, &mut cur);
+                        continue;
+                    }
+                    "unsafe" if self.tokens.get(i + 1).is_some_and(|n| n.is("{")) => {
+                        // `unsafe { ... }` block statement: treat the
+                        // braces as a plain nested block.
+                        i += 1;
+                        continue;
+                    }
+                    "fn" => {
+                        // Nested fn item: skip its body entirely; it is
+                        // analyzed as its own function by the scanner.
+                        let mut j = i + 1;
+                        while j < hi && !self.tokens[j].is("{") {
+                            j += 1;
+                        }
+                        i = self.skip_balanced(j, hi);
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            if t.kind == TokKind::Punct && t.is("{") {
+                // Bare nested block at statement position.
+                let end = self.skip_balanced(i, hi);
+                cur = self.seq(i + 1, end.saturating_sub(1).max(i + 1), cur);
+                i = end;
+                continue;
+            }
+            // Plain statement: consume to the `;` at depth 0, treating
+            // any bracket group (closures, struct literals, trailing
+            // blocks of expression-level if/match) as opaque.
+            let start = i;
+            let mut j = i;
+            let mut ended_with_block = false;
+            while j < hi {
+                let tk = &self.tokens[j];
+                if tk.kind == TokKind::Punct {
+                    if tk.is(";") {
+                        break;
+                    }
+                    if tk.is("(") || tk.is("[") || tk.is("{") {
+                        let after = self.skip_balanced(j, hi);
+                        // A `{...}` group that closes the statement
+                        // without a `;` (e.g. an expression-position
+                        // block at the end of the body).
+                        ended_with_block = tk.is("{")
+                            && self
+                                .tokens
+                                .get(after)
+                                .map(|n| !n.is(".") && !n.is("?") && !n.is("else"))
+                                .unwrap_or(true);
+                        if ended_with_block {
+                            j = after;
+                            break;
+                        }
+                        j = after;
+                        continue;
+                    }
+                    if tk.is("}") {
+                        // Unbalanced close: end of this range.
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            let end = if j < hi && !ended_with_block { j + 1 } else { j };
+            if end > start {
+                self.push_stmt(
+                    cur,
+                    Stmt { lo: start, hi: end.min(hi), line: self.line_at(start), kind: StmtKind::Normal },
+                );
+            }
+            i = end.max(start + 1);
+        }
+        cur
+    }
+
+    /// Find the `{` that opens the branch body after a condition
+    /// starting at `i`, skipping balanced groups inside the condition.
+    fn find_body_brace(&self, mut i: usize, hi: usize) -> usize {
+        while i < hi.min(self.tokens.len()) {
+            let t = &self.tokens[i];
+            if t.kind == TokKind::Punct {
+                if t.is("{") {
+                    return i;
+                }
+                if t.is("(") || t.is("[") {
+                    i = self.skip_balanced(i, hi);
+                    continue;
+                }
+                if t.is(";") || t.is("}") {
+                    return i; // malformed; stop here
+                }
+            }
+            i += 1;
+        }
+        hi.min(self.tokens.len())
+    }
+
+    fn parse_if(&mut self, if_at: usize, hi: usize, cur: &mut usize) -> usize {
+        let brace = self.find_body_brace(if_at + 1, hi);
+        if self.tokens.get(brace).map(|t| !t.is("{")).unwrap_or(true) {
+            // Malformed `if`: swallow one token and move on.
+            self.push_stmt(
+                *cur,
+                Stmt { lo: if_at, hi: brace.min(hi), line: self.line_at(if_at), kind: StmtKind::Normal },
+            );
+            return brace.max(if_at + 1);
+        }
+        self.push_stmt(
+            *cur,
+            Stmt { lo: if_at + 1, hi: brace, line: self.line_at(if_at), kind: StmtKind::Cond },
+        );
+        let body_end = self.skip_balanced(brace, hi);
+        let then_blk = self.new_block();
+        self.edge(*cur, then_blk);
+        let then_out = self.seq(brace + 1, body_end.saturating_sub(1).max(brace + 1), then_blk);
+        let join = self.new_block();
+        self.edge(then_out, join);
+        let mut i = body_end;
+        let mut had_else = false;
+        if self.tokens.get(i).is_some_and(|t| t.is("else")) {
+            had_else = true;
+            if self.tokens.get(i + 1).is_some_and(|t| t.is("if")) {
+                // `else if`: recurse with the current block as the
+                // alternative path's origin.
+                let mut alt = *cur;
+                i = self.parse_if(i + 1, hi, &mut alt);
+                self.edge(alt, join);
+            } else {
+                let eb = self.find_body_brace(i + 1, hi);
+                if self.tokens.get(eb).is_some_and(|t| t.is("{")) {
+                    let else_end = self.skip_balanced(eb, hi);
+                    let else_blk = self.new_block();
+                    self.edge(*cur, else_blk);
+                    let else_out = self.seq(eb + 1, else_end.saturating_sub(1).max(eb + 1), else_blk);
+                    self.edge(else_out, join);
+                    i = else_end;
+                } else {
+                    had_else = false;
+                    i += 1;
+                }
+            }
+        }
+        if !had_else {
+            self.edge(*cur, join);
+        }
+        *cur = join;
+        i.max(if_at + 1)
+    }
+
+    fn parse_while_for(&mut self, kw_at: usize, hi: usize, cur: &mut usize) -> usize {
+        let brace = self.find_body_brace(kw_at + 1, hi);
+        if self.tokens.get(brace).map(|t| !t.is("{")).unwrap_or(true) {
+            self.push_stmt(
+                *cur,
+                Stmt { lo: kw_at, hi: brace.min(hi), line: self.line_at(kw_at), kind: StmtKind::Normal },
+            );
+            return brace.max(kw_at + 1);
+        }
+        let header = self.new_block();
+        self.edge(*cur, header);
+        self.push_stmt(
+            header,
+            Stmt { lo: kw_at + 1, hi: brace, line: self.line_at(kw_at), kind: StmtKind::Cond },
+        );
+        let body_end = self.skip_balanced(brace, hi);
+        let after = self.new_block();
+        let body = self.new_block();
+        self.edge(header, body);
+        self.edge(header, after);
+        self.loops.push((header, after));
+        let body_out = self.seq(brace + 1, body_end.saturating_sub(1).max(brace + 1), body);
+        self.loops.pop();
+        self.edge(body_out, header);
+        *cur = after;
+        body_end.max(kw_at + 1)
+    }
+
+    fn parse_loop(&mut self, kw_at: usize, hi: usize, cur: &mut usize) -> usize {
+        let brace = self.find_body_brace(kw_at + 1, hi);
+        if self.tokens.get(brace).map(|t| !t.is("{")).unwrap_or(true) {
+            self.push_stmt(
+                *cur,
+                Stmt { lo: kw_at, hi: brace.min(hi), line: self.line_at(kw_at), kind: StmtKind::Normal },
+            );
+            return brace.max(kw_at + 1);
+        }
+        let header = self.new_block();
+        self.edge(*cur, header);
+        let body_end = self.skip_balanced(brace, hi);
+        let after = self.new_block();
+        self.loops.push((header, after));
+        let body_out = self.seq(brace + 1, body_end.saturating_sub(1).max(brace + 1), header);
+        self.loops.pop();
+        self.edge(body_out, header);
+        // Conservative: even a `loop` we saw no `break` in gets an edge
+        // to `after` (a macro or nested closure may break out).
+        self.edge(header, after);
+        *cur = after;
+        body_end.max(kw_at + 1)
+    }
+
+    fn parse_match(&mut self, kw_at: usize, hi: usize, cur: &mut usize) -> usize {
+        let brace = self.find_body_brace(kw_at + 1, hi);
+        if self.tokens.get(brace).map(|t| !t.is("{")).unwrap_or(true) {
+            self.push_stmt(
+                *cur,
+                Stmt { lo: kw_at, hi: brace.min(hi), line: self.line_at(kw_at), kind: StmtKind::Normal },
+            );
+            return brace.max(kw_at + 1);
+        }
+        self.push_stmt(
+            *cur,
+            Stmt { lo: kw_at + 1, hi: brace, line: self.line_at(kw_at), kind: StmtKind::Cond },
+        );
+        let body_end = self.skip_balanced(brace, hi);
+        let arms_hi = body_end.saturating_sub(1).max(brace + 1);
+        let join = self.new_block();
+        let mut i = brace + 1;
+        let mut any_arm = false;
+        while i < arms_hi {
+            // Pattern (+ guard): tokens up to the `=>` at depth 0.
+            let pat_start = i;
+            let mut j = i;
+            let mut found_arrow = false;
+            while j < arms_hi {
+                let t = &self.tokens[j];
+                if t.kind == TokKind::Punct {
+                    if t.is("(") || t.is("[") || t.is("{") {
+                        j = self.skip_balanced(j, arms_hi);
+                        continue;
+                    }
+                    if t.is("=")
+                        && self.tokens.get(j + 1).is_some_and(|n| n.is(">"))
+                        && !(j > 0 && self.tokens[j - 1].is("."))
+                    {
+                        found_arrow = true;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            if !found_arrow {
+                break;
+            }
+            let arm = self.new_block();
+            self.edge(*cur, arm);
+            any_arm = true;
+            if j > pat_start {
+                self.push_stmt(
+                    arm,
+                    Stmt { lo: pat_start, hi: j, line: self.line_at(pat_start), kind: StmtKind::Pattern },
+                );
+            }
+            let body_at = j + 2; // past `=` `>`
+            let arm_out;
+            if self.tokens.get(body_at).is_some_and(|t| t.is("{")) {
+                let arm_end = self.skip_balanced(body_at, arms_hi);
+                arm_out = self.seq(body_at + 1, arm_end.saturating_sub(1).max(body_at + 1), arm);
+                i = arm_end;
+                if self.tokens.get(i).is_some_and(|t| t.is(",")) {
+                    i += 1;
+                }
+            } else {
+                // Expression arm: tokens to the `,` at depth 0.
+                let mut k = body_at;
+                while k < arms_hi {
+                    let t = &self.tokens[k];
+                    if t.kind == TokKind::Punct {
+                        if t.is("(") || t.is("[") || t.is("{") {
+                            k = self.skip_balanced(k, arms_hi);
+                            continue;
+                        }
+                        if t.is(",") {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                if k > body_at {
+                    self.push_stmt(
+                        arm,
+                        Stmt {
+                            lo: body_at,
+                            hi: k.min(arms_hi),
+                            line: self.line_at(body_at),
+                            kind: StmtKind::Normal,
+                        },
+                    );
+                }
+                arm_out = arm;
+                i = (k + 1).max(body_at + 1);
+            }
+            self.edge(arm_out, join);
+        }
+        if !any_arm {
+            self.edge(*cur, join);
+        }
+        *cur = join;
+        body_end.max(kw_at + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn cfg_of(body: &str) -> (Vec<Token>, Cfg) {
+        let src = format!("fn f() {{ {body} }}");
+        let (toks, _) = lex(&src);
+        // Body tokens are between the outer braces: find them.
+        let open = toks.iter().position(|t| t.is("{")).unwrap();
+        let close = toks.len() - 1;
+        let cfg = Cfg::build(&toks, open + 1, close);
+        (toks, cfg)
+    }
+
+    fn all_stmt_count(cfg: &Cfg) -> usize {
+        cfg.blocks.iter().map(|b| b.stmts.len()).sum()
+    }
+
+    #[test]
+    fn straight_line_is_one_block_per_stmt_list() {
+        let (_, cfg) = cfg_of("let a = 1; let b = a + 2; use_it(b);");
+        assert_eq!(all_stmt_count(&cfg), 3);
+        assert_eq!(cfg.blocks[cfg.entry].stmts.len(), 3);
+    }
+
+    #[test]
+    fn if_else_branches_and_joins() {
+        let (_, cfg) = cfg_of("let a = 1; if a > 0 { f(a); } else { g(a); } tail();");
+        // entry has the let + cond; two branch blocks; a join with tail().
+        let entry = &cfg.blocks[cfg.entry];
+        assert_eq!(entry.stmts.len(), 2);
+        assert_eq!(entry.stmts[1].kind, StmtKind::Cond);
+        assert_eq!(entry.succs.len(), 2);
+        assert_eq!(all_stmt_count(&cfg), 5);
+    }
+
+    #[test]
+    fn while_has_back_edge() {
+        let (_, cfg) = cfg_of("while x < 3 { x += 1; } done();");
+        // Find the header (block holding the Cond stmt).
+        let header = cfg
+            .blocks
+            .iter()
+            .position(|b| b.stmts.iter().any(|s| s.kind == StmtKind::Cond))
+            .unwrap();
+        // Some block must loop back to the header.
+        assert!(
+            cfg.blocks.iter().enumerate().any(|(i, b)| i != cfg.entry && b.succs.contains(&header)),
+            "no back edge: {cfg:?}"
+        );
+    }
+
+    #[test]
+    fn match_arms_are_separate_blocks() {
+        let (_, cfg) = cfg_of("match v { Some(x) => use_it(x), None => {} } tail();");
+        let patterns =
+            cfg.blocks.iter().flat_map(|b| &b.stmts).filter(|s| s.kind == StmtKind::Pattern).count();
+        assert_eq!(patterns, 2);
+    }
+
+    #[test]
+    fn expression_if_stays_in_one_stmt() {
+        let (_, cfg) = cfg_of("let x = if c { 1 } else { 2 }; after(x);");
+        assert_eq!(cfg.blocks[cfg.entry].stmts.len(), 2);
+    }
+
+    #[test]
+    fn never_panics_on_garbage() {
+        for src in ["} } {", "if { { {", "match", "loop {", "fn fn fn", "=> , => ;"] {
+            let (toks, _) = lex(src);
+            let _ = Cfg::build(&toks, 0, toks.len());
+        }
+    }
+}

@@ -1,0 +1,523 @@
+//! Dataflow scaffolding shared by the flow-sensitive lint rules.
+//!
+//! Three pieces, all deliberately small:
+//!
+//! 1. **Def/use extraction** over [`Stmt`] token ranges — which
+//!    variable names a statement (re)binds and which it reads. This is
+//!    name-based, not place-based: `x.field` and `x` are the same name,
+//!    shadowing re-binds the name. For the taint and ordering rules
+//!    that is the right precision/complexity trade.
+//! 2. **A forward may-fixpoint** over a [`Cfg`]: union join, iterate to
+//!    a fixed point (bounded — all transfer lattices here are finite
+//!    sets of variable names), returning each block's entry state.
+//! 3. **The project call graph**: every call site that resolves to a
+//!    function that actually exists in the scanned tree, keyed by
+//!    `(file rel, fn name)`. Resolution is receiver-gated exactly like
+//!    the original lock-order rule: `self.f()`, registered component
+//!    handles (`store.append()`), and lowercase `module::f()` paths
+//!    resolve; arbitrary method names on arbitrary receivers do not.
+//!    The lock, ordering, and taint rules all walk this one graph.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::cfg::{Cfg, Stmt, StmtKind};
+use super::lexer::{TokKind, Token};
+use super::scanner::{FnSpan, SourceFile};
+
+// ---------------------------------------------------------------------------
+// Call resolution (shared with lock_order / ordering).
+// ---------------------------------------------------------------------------
+
+/// Method-call receivers resolved across files: the named component
+/// handles that hop between hub / storage layers.
+pub(crate) fn component_file(receiver: &str) -> Option<&'static str> {
+    Some(match receiver {
+        "state" => "hub/repo.rs",
+        "store" | "storage" => "storage/mod.rs",
+        "service" | "svc" => "api/service.rs",
+        "wal" => "storage/wal.rs",
+        _ => return None,
+    })
+}
+
+/// Method names never treated as cross-component calls.
+pub(crate) fn never_a_call(name: &str) -> bool {
+    matches!(name, "lock" | "read" | "write" | "unwrap" | "expect" | "clone" | "drop")
+}
+
+/// Walk back from token `j` (the token just before the `.` of a method
+/// chain) to the receiver's base name, skipping one balanced `(...)` or
+/// `[...]` group: `self.stripe(&key).write()` → `stripe`.
+pub(crate) fn receiver_name(sf: &SourceFile, j: usize) -> Option<String> {
+    let t = &sf.tokens;
+    let tok = t.get(j)?;
+    if tok.kind == TokKind::Ident {
+        return Some(tok.text.clone());
+    }
+    let (close, open) = match tok.text.as_str() {
+        ")" => (")", "("),
+        "]" => ("]", "["),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    let mut k = j;
+    loop {
+        let tk = t.get(k)?;
+        if tk.is(close) {
+            depth += 1;
+        } else if tk.is(open) {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                break;
+            }
+        }
+        k = k.checked_sub(1)?;
+    }
+    let prev = t.get(k.checked_sub(1)?)?;
+    if prev.kind == TokKind::Ident {
+        Some(prev.text.clone())
+    } else {
+        None
+    }
+}
+
+/// Resolve a call at token `i` (a method or path-fn name ident) to
+/// (callee file rel-suffix, callee fn name). Receiver-gated: only
+/// `self.`, registered component handles, and `module::` paths resolve
+/// — generic method names on arbitrary receivers do not.
+pub(crate) fn resolve_call(sf: &SourceFile, i: usize) -> Option<(String, String)> {
+    let t = &sf.tokens;
+    let name = t.get(i)?;
+    if name.kind != TokKind::Ident || !t.get(i + 1)?.is("(") {
+        return None;
+    }
+    if never_a_call(&name.text) {
+        return None;
+    }
+    // `receiver.name(...)`.
+    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(".")) {
+        let recv = t.get(i.checked_sub(2)?)?;
+        if recv.kind != TokKind::Ident {
+            return None;
+        }
+        if recv.is("self") {
+            return Some((sf.rel.clone(), name.text.clone()));
+        }
+        if let Some(file) = component_file(&recv.text) {
+            return Some((file.to_string(), name.text.clone()));
+        }
+        return None;
+    }
+    // `module::name(...)`.
+    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(":"))
+        && t.get(i.wrapping_sub(2)).is_some_and(|x| x.is(":"))
+    {
+        let m = t.get(i.checked_sub(3)?)?;
+        if m.kind == TokKind::Ident && m.text.chars().next().is_some_and(char::is_lowercase) {
+            return Some((format!("{}.rs", m.text), name.text.clone()));
+        }
+    }
+    None
+}
+
+/// Find the scanned file a rel-suffix refers to (`module.rs` from a
+/// path call matches by suffix, with `module/mod.rs` as the fallback
+/// spelling).
+pub(crate) fn find_file<'a>(files: &'a [SourceFile], callee_file: &str) -> Option<&'a SourceFile> {
+    let stem = callee_file.trim_end_matches(".rs");
+    files.iter().find(|f| {
+        f.rel == callee_file
+            || f.rel.ends_with(&format!("/{callee_file}"))
+            || f.rel == format!("{stem}/mod.rs")
+            || f.rel.ends_with(&format!("/{stem}/mod.rs"))
+    })
+}
+
+/// Resolve the call at token `i` all the way to a *concrete* scanned
+/// function: the target file must be in `files` and must define a
+/// non-test `fn` of that name. Returns `(callee rel, callee fn)`.
+pub(crate) fn resolve_at(
+    files: &[SourceFile],
+    sf: &SourceFile,
+    i: usize,
+) -> Option<(String, String)> {
+    let (suffix, name) = resolve_call(sf, i)?;
+    let target = find_file(files, &suffix)?;
+    if target.fns.iter().any(|f| !f.is_test && f.name == name) {
+        Some((target.rel.clone(), name))
+    } else {
+        None
+    }
+}
+
+/// Body token ranges of fns nested inside `span` (closures are *not*
+/// masked — a closure runs in its caller's context; a nested `fn` is a
+/// separate function analyzed on its own).
+pub(crate) fn nested_fn_spans(sf: &SourceFile, span: &FnSpan) -> Vec<(usize, usize)> {
+    sf.fns
+        .iter()
+        .filter(|f| f.body_start > span.body_start && f.body_end < span.body_end)
+        .map(|f| (f.body_start, f.body_end))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Def / use extraction.
+// ---------------------------------------------------------------------------
+
+/// Index of the statement-level assignment `=` in `[lo, hi)`, at
+/// bracket depth 0, excluding `==`, `!=`, `<=`, `>=`, and `=>`.
+fn top_level_eq(tokens: &[Token], lo: usize, hi: usize) -> Option<usize> {
+    let hi = hi.min(tokens.len());
+    let mut depth = 0usize;
+    let mut i = lo;
+    while i < hi {
+        let t = &tokens[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                "=" if depth == 0 => {
+                    let next_bad =
+                        tokens.get(i + 1).is_some_and(|n| n.is("=") || n.is(">"));
+                    let prev_bad = i > lo
+                        && matches!(tokens[i - 1].text.as_str(), "=" | "!" | "<" | ">");
+                    if !next_bad && !prev_bad {
+                        return Some(i);
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Is the `=` at `eq` a compound assignment (`+=`, `|=`, ...)?
+fn is_compound(tokens: &[Token], lo: usize, eq: usize) -> bool {
+    eq > lo
+        && matches!(
+            tokens[eq - 1].text.as_str(),
+            "+" | "-" | "*" | "/" | "%" | "&" | "|" | "^"
+        )
+}
+
+/// Variable names a statement (re)binds. Name-based: lowercase idents
+/// in binding position; uppercase idents (enum/struct paths) and `mut`
+/// are skipped.
+pub fn defs(tokens: &[Token], stmt: &Stmt) -> Vec<String> {
+    let (lo, hi) = (stmt.lo, stmt.hi.min(tokens.len()));
+    if lo >= hi {
+        return Vec::new();
+    }
+    let lower = |t: &Token| {
+        t.kind == TokKind::Ident
+            && t.text.chars().next().is_some_and(|c| c == '_' || c.is_lowercase())
+            && !matches!(t.text.as_str(), "mut" | "ref" | "if" | "let" | "in" | "box")
+    };
+    let mut out = Vec::new();
+    match stmt.kind {
+        StmtKind::Pattern => {
+            // Match-arm pattern: every lowercase ident is a fresh
+            // binding (guard reads are conservatively treated the same
+            // way — the scrutinee-to-binding taint link is deliberately
+            // not modeled; see the taint rule's module docs).
+            for t in &tokens[lo..hi] {
+                if lower(t) {
+                    out.push(t.text.clone());
+                }
+            }
+        }
+        StmtKind::Normal | StmtKind::Cond => {
+            let has_let = tokens[lo..hi].iter().any(|t| t.kind == TokKind::Ident && t.is("let"));
+            let eq = top_level_eq(tokens, lo, hi);
+            if has_let {
+                // `let <pat> = ...` (or `let <pat>;`): bindings are the
+                // lowercase idents between `let` and the `=`.
+                let let_at = lo
+                    + tokens[lo..hi]
+                        .iter()
+                        .position(|t| t.kind == TokKind::Ident && t.is("let"))
+                        .unwrap_or(0);
+                let end = eq.unwrap_or(hi).min(hi);
+                let mut depth = 0usize;
+                let mut k = let_at;
+                while k < end {
+                    let t = &tokens[k];
+                    if t.kind == TokKind::Punct {
+                        match t.text.as_str() {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth = depth.saturating_sub(1),
+                            // A `:` at depth 0 that is not `::` starts
+                            // a type annotation — nothing after it (up
+                            // to the `=`) binds a name.
+                            ":" if depth == 0
+                                && !tokens.get(k + 1).is_some_and(|n| n.is(":"))
+                                && !(k > let_at && tokens[k - 1].is(":")) =>
+                            {
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    // Skip field names in struct patterns (`a:` in
+                    // `Foo { a: b }` — the label, not a binding).
+                    let is_field_label = depth > 0
+                        && tokens.get(k + 1).is_some_and(|n| n.is(":"))
+                        && tokens.get(k + 2).map(|n| !n.is(":")).unwrap_or(true);
+                    if lower(t) && !is_field_label {
+                        out.push(t.text.clone());
+                    }
+                    k += 1;
+                }
+            } else if let Some(e) = eq {
+                // Plain assignment: the place left of `=`. Walk back
+                // over compound-op puncts and one balanced index/call
+                // group to the base ident (`self.field`, `arr[i]`).
+                let mut k = e;
+                while k > lo && is_compound(tokens, lo, k) {
+                    k -= 1;
+                }
+                if k > lo {
+                    if let Some(name) = place_base(tokens, lo, k - 1) {
+                        out.push(name);
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Base name of the assignable place ending at token `j` (inclusive):
+/// `field` for `self.field`, `arr` for `arr[i]`, `x` for `x`.
+fn place_base(tokens: &[Token], lo: usize, j: usize) -> Option<String> {
+    let t = tokens.get(j)?;
+    if t.kind == TokKind::Ident {
+        return Some(t.text.clone());
+    }
+    if t.is("]") {
+        // Skip the balanced `[...]` backwards, then name the base.
+        let mut depth = 0usize;
+        let mut k = j;
+        loop {
+            let tk = tokens.get(k)?;
+            if tk.is("]") {
+                depth += 1;
+            } else if tk.is("[") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            if k == lo {
+                return None;
+            }
+            k -= 1;
+        }
+        if k > lo {
+            return place_base(tokens, lo, k - 1);
+        }
+    }
+    None
+}
+
+/// Variable names a statement reads: the right-hand side of a `let` /
+/// assignment, or the whole statement otherwise. Compound assignments
+/// (`x += e`) read their target too.
+pub fn uses(tokens: &[Token], stmt: &Stmt) -> Vec<String> {
+    let (lo, hi) = (stmt.lo, stmt.hi.min(tokens.len()));
+    if lo >= hi {
+        return Vec::new();
+    }
+    let eq = match stmt.kind {
+        StmtKind::Pattern => None,
+        _ => top_level_eq(tokens, lo, hi),
+    };
+    let start = match eq {
+        Some(e) => e + 1,
+        None => lo,
+    };
+    let mut out = Vec::new();
+    if let Some(e) = eq {
+        if is_compound(tokens, lo, e) {
+            for t in &tokens[lo..e] {
+                if t.kind == TokKind::Ident {
+                    out.push(t.text.clone());
+                }
+            }
+        }
+    }
+    for t in &tokens[start.min(hi)..hi] {
+        if t.kind == TokKind::Ident {
+            out.push(t.text.clone());
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Forward may-fixpoint.
+// ---------------------------------------------------------------------------
+
+/// Iterate `transfer` over the CFG to a forward fixed point with union
+/// join; returns each block's *entry* state. `transfer(block, entry)`
+/// must be monotone in `entry` for termination; the iteration is also
+/// hard-capped, which keeps the linter total even on a buggy transfer.
+pub fn forward<F>(cfg: &Cfg, transfer: F) -> Vec<BTreeSet<String>>
+where
+    F: Fn(usize, &BTreeSet<String>) -> BTreeSet<String>,
+{
+    let n = cfg.blocks.len();
+    let mut entry: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+    for _ in 0..64 {
+        let mut changed = false;
+        for b in 0..n {
+            let out = transfer(b, &entry[b]);
+            for &s in &cfg.blocks[b].succs {
+                if s >= n {
+                    continue;
+                }
+                for v in &out {
+                    if !entry[s].contains(v) {
+                        entry[s].insert(v.clone());
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    entry
+}
+
+// ---------------------------------------------------------------------------
+// Project call graph.
+// ---------------------------------------------------------------------------
+
+/// The project-wide call graph over concretely-resolved call sites.
+pub struct CallGraph {
+    /// `(caller rel, caller fn)` → list of `((callee rel, callee fn),
+    /// call-site line)`, in body order, duplicates kept.
+    pub calls: BTreeMap<(String, String), Vec<((String, String), u32)>>,
+}
+
+impl CallGraph {
+    /// Scan every non-test function in `files` and record each call
+    /// site that resolves to a function defined in the scanned tree.
+    pub fn build(files: &[SourceFile]) -> CallGraph {
+        let mut calls: BTreeMap<(String, String), Vec<((String, String), u32)>> = BTreeMap::new();
+        for sf in files {
+            for span in &sf.fns {
+                if span.is_test {
+                    continue;
+                }
+                let nested = nested_fn_spans(sf, span);
+                let mut i = span.body_start + 1;
+                while i < span.body_end.min(sf.tokens.len()) {
+                    if let Some(end) = nested.iter().find_map(|&(s, e)| (s == i).then_some(e)) {
+                        i = end + 1;
+                        continue;
+                    }
+                    if sf.tokens[i].kind == TokKind::Ident {
+                        if let Some(target) = resolve_at(files, sf, i) {
+                            calls
+                                .entry((sf.rel.clone(), span.name.clone()))
+                                .or_default()
+                                .push((target, sf.tokens[i].line));
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+        CallGraph { calls }
+    }
+
+    /// Call sites of one function (empty slice when it calls nothing
+    /// resolvable).
+    pub fn callees(&self, rel: &str, name: &str) -> &[((String, String), u32)] {
+        self.calls
+            .get(&(rel.to_string(), name.to_string()))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::cfg::Cfg;
+    use crate::analysis::lexer::lex;
+
+    fn first_stmts(body: &str) -> (Vec<Token>, Vec<Stmt>) {
+        let src = format!("fn f() {{ {body} }}");
+        let (toks, _) = lex(&src);
+        let open = toks.iter().position(|t| t.is("{")).unwrap();
+        let cfg = Cfg::build(&toks, open + 1, toks.len() - 1);
+        let stmts = cfg.blocks.iter().flat_map(|b| b.stmts.clone()).collect();
+        (toks, stmts)
+    }
+
+    #[test]
+    fn let_defs_and_uses() {
+        let (toks, stmts) = first_stmts("let mut n = le_u32_at(buf, 0);");
+        assert_eq!(defs(&toks, &stmts[0]), vec!["n"]);
+        let u = uses(&toks, &stmts[0]);
+        assert!(u.contains(&"buf".to_string()) && u.contains(&"le_u32_at".to_string()));
+        assert!(!u.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn assignment_defs() {
+        let (toks, stmts) = first_stmts("self.len = end;");
+        assert_eq!(defs(&toks, &stmts[0]), vec!["len"]);
+        let (toks, stmts) = first_stmts("total += chunk;");
+        assert_eq!(defs(&toks, &stmts[0]), vec!["total"]);
+        // Compound assignment reads its target too.
+        assert!(uses(&toks, &stmts[0]).contains(&"total".to_string()));
+    }
+
+    #[test]
+    fn tuple_let_defs_both() {
+        let (toks, stmts) = first_stmts("let (a, b) = pair;");
+        assert_eq!(defs(&toks, &stmts[0]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn comparison_is_not_assignment() {
+        let (toks, stmts) = first_stmts("check(a == b);");
+        assert!(defs(&toks, &stmts[0]).is_empty());
+    }
+
+    #[test]
+    fn forward_reaches_fixpoint_through_loop() {
+        let src = "fn f() { let t = src(); while go { sink(t); } }";
+        let (toks, _) = lex(src);
+        let open = toks.iter().position(|t| t.is("{")).unwrap();
+        let cfg = Cfg::build(&toks, open + 1, toks.len() - 1);
+        // Transfer: a block that defines `t` gens it; otherwise pass.
+        let entries = forward(&cfg, |b, inp| {
+            let mut out = inp.clone();
+            for s in &cfg.blocks[b].stmts {
+                if defs(&toks, s).contains(&"t".to_string()) {
+                    out.insert("t".to_string());
+                }
+            }
+            out
+        });
+        // Every non-entry block (incl. the loop body) sees `t`.
+        for (i, e) in entries.iter().enumerate() {
+            if i != cfg.entry {
+                assert!(e.contains("t"), "block {i} missing t: {entries:?}");
+            }
+        }
+    }
+}

@@ -5,9 +5,15 @@
 //! justifications (L3) and `// lint: allow(...)` markers. This is not a
 //! full Rust lexer; it understands exactly enough to keep the
 //! structural scanner honest about braces and identifiers: line and
-//! nested block comments, plain / raw / byte string literals, char
-//! literals vs lifetimes after `'`, and numeric literals (so `0..n`
-//! does not read as a float).
+//! nested block comments, plain / raw / byte string literals, raw
+//! identifiers (`r#fn`), char literals vs lifetimes after `'`, and
+//! numeric literals (so `0..n` does not read as a float).
+//!
+//! Every token and comment carries its `span` — the half-open char
+//! index range `[lo, hi)` of the *full* lexeme in the source, including
+//! quotes, prefixes, and raw-string hashes. The property tests assert
+//! that spans tile the input exactly: sorted spans are disjoint and the
+//! gaps between them contain only whitespace.
 //!
 //! Everything the rules never look at (operator composition, keyword
 //! classification) is left as single-character `Punct` tokens; patterns
@@ -16,7 +22,9 @@
 /// Lexical class of a [`Token`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TokKind {
-    /// Identifier or keyword (`fn`, `unsafe`, `unwrap`, ...).
+    /// Identifier or keyword (`fn`, `unsafe`, `unwrap`, ...). A raw
+    /// identifier keeps its `r#` prefix in `text`, so `r#fn` never
+    /// compares equal to the keyword `fn`.
     Ident,
     /// Numeric literal (integers, floats; suffix glued on).
     Num,
@@ -30,12 +38,14 @@ pub enum TokKind {
     Punct,
 }
 
-/// One token with the 1-based source line it starts on.
+/// One token with the 1-based source line it starts on and the
+/// half-open char-index range of its full lexeme.
 #[derive(Debug, Clone)]
 pub struct Token {
     pub kind: TokKind,
     pub text: String,
     pub line: u32,
+    pub span: (usize, usize),
 }
 
 impl Token {
@@ -46,11 +56,13 @@ impl Token {
 }
 
 /// One comment with the 1-based line it starts on; `text` is the
-/// interior (after `//`, or between `/*` and `*/`).
+/// interior (after `//`, or between `/*` and `*/`). `span` covers the
+/// delimiters too.
 #[derive(Debug, Clone)]
 pub struct Comment {
     pub line: u32,
     pub text: String,
+    pub span: (usize, usize),
 }
 
 /// Tokenize `src`. Infallible by construction: unterminated constructs
@@ -86,7 +98,11 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             while j < chars.len() && chars[j] != '\n' {
                 j += 1;
             }
-            comments.push(Comment { line, text: chars[start..j].iter().collect() });
+            comments.push(Comment {
+                line,
+                text: chars[start..j].iter().collect(),
+                span: (i, j),
+            });
             i = j;
             continue;
         }
@@ -109,13 +125,18 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                 }
             }
             let end = j.saturating_sub(2).max(start);
-            line += count_lines(&chars[i..j]);
-            comments.push(Comment { line: start_line, text: chars[start..end].iter().collect() });
+            line += count_lines(&chars[i..j.min(chars.len())]);
+            comments.push(Comment {
+                line: start_line,
+                text: chars[start..end.min(chars.len())].iter().collect(),
+                span: (i, j.min(chars.len())),
+            });
             i = j;
             continue;
         }
 
-        // Raw / byte string prefixes: r"...", r#"..."#, b"...", br#"..."#.
+        // Raw / byte prefixes: r"...", r#"..."#, b"...", br#"..."#,
+        // b'x', and raw identifiers r#ident.
         if (c == 'r' || c == 'b') && matches!(next, Some('"') | Some('#') | Some('\'')) {
             let mut j = i + 1;
             let mut raw = c == 'r';
@@ -126,16 +147,39 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             if c == 'b' && chars.get(j) == Some(&'\'') {
                 // Byte char literal b'x'.
                 let (tok, adv, nl) = lex_char(&chars, j, line);
-                toks.push(Token { kind: tok.0, text: tok.1, line });
+                toks.push(Token { kind: tok.0, text: tok.1, line, span: (i, j + adv) });
                 line += nl;
                 i = j + adv;
                 continue;
             }
             if raw {
+                let hash_start = j;
                 let mut hashes = 0usize;
                 while chars.get(j) == Some(&'#') {
                     hashes += 1;
                     j += 1;
+                }
+                // Raw identifier: `r#ident` — exactly one hash followed
+                // by an identifier start, no quote. Emit a single Ident
+                // token with the prefix kept verbatim, so `r#fn` never
+                // reads as the keyword `fn` (and never as a raw-string
+                // opening that would swallow the rest of the file).
+                if c == 'r'
+                    && hashes == 1
+                    && chars.get(j).is_some_and(|&n| n == '_' || n.is_alphabetic())
+                {
+                    let mut k = j;
+                    while k < chars.len() && (chars[k] == '_' || chars[k].is_alphanumeric()) {
+                        k += 1;
+                    }
+                    toks.push(Token {
+                        kind: TokKind::Ident,
+                        text: chars[i..k].iter().collect(),
+                        line,
+                        span: (i, k),
+                    });
+                    i = k;
+                    continue;
                 }
                 if chars.get(j) == Some(&'"') {
                     let start_line = line;
@@ -153,6 +197,7 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                                     kind: TokKind::Str,
                                     text: chars[body_start..k].iter().collect(),
                                     line: start_line,
+                                    span: (i, k + 1 + hashes),
                                 });
                                 i = k + 1 + hashes;
                                 continue 'outer;
@@ -165,18 +210,22 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                         kind: TokKind::Str,
                         text: chars[body_start..].iter().collect(),
                         line: start_line,
+                        span: (i, chars.len()),
                     });
                     i = chars.len();
                     continue;
                 }
-                // `r` / `br` not followed by a string: plain ident path.
+                // `r#` / `br#` followed by neither ident nor quote:
+                // rewind past the hashes and fall through so the ident
+                // branch below lexes the `r`/`br` alone.
+                j = hash_start;
             }
             // `b"..."`: fall through to the string case below from j.
             if chars.get(j) == Some(&'"') {
                 let start_line = line;
                 let (text, adv, nl) = lex_quoted(&chars, j);
                 line += nl;
-                toks.push(Token { kind: TokKind::Str, text, line: start_line });
+                toks.push(Token { kind: TokKind::Str, text, line: start_line, span: (i, j + adv) });
                 i = j + adv;
                 continue;
             }
@@ -189,7 +238,12 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
                 j += 1;
             }
-            toks.push(Token { kind: TokKind::Ident, text: chars[start..j].iter().collect(), line });
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: chars[start..j].iter().collect(),
+                line,
+                span: (start, j),
+            });
             i = j;
             continue;
         }
@@ -209,7 +263,12 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                     j += 1;
                 }
             }
-            toks.push(Token { kind: TokKind::Num, text: chars[start..j].iter().collect(), line });
+            toks.push(Token {
+                kind: TokKind::Num,
+                text: chars[start..j].iter().collect(),
+                line,
+                span: (start, j),
+            });
             i = j;
             continue;
         }
@@ -219,7 +278,7 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             let start_line = line;
             let (text, adv, nl) = lex_quoted(&chars, i);
             line += nl;
-            toks.push(Token { kind: TokKind::Str, text, line: start_line });
+            toks.push(Token { kind: TokKind::Str, text, line: start_line, span: (i, i + adv) });
             i += adv;
             continue;
         }
@@ -227,13 +286,13 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
         // Char literal vs lifetime.
         if c == '\'' {
             let (tok, adv, nl) = lex_char(&chars, i, line);
-            toks.push(Token { kind: tok.0, text: tok.1, line });
+            toks.push(Token { kind: tok.0, text: tok.1, line, span: (i, i + adv) });
             line += nl;
             i += adv;
             continue;
         }
 
-        toks.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        toks.push(Token { kind: TokKind::Punct, text: c.to_string(), line, span: (i, i + 1) });
         i += 1;
     }
 
@@ -311,4 +370,87 @@ fn lex_char(chars: &[char], at: usize, _line: u32) -> ((TokKind, String), usize,
         }
     }
     ((TokKind::Char, text), chars.len() - at, nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn raw_identifier_is_one_token() {
+        // Regression: `r#fn` used to lex as Ident("r") + Punct("#") +
+        // Ident("fn"), injecting a phantom `fn` keyword into the
+        // scanner's view of the file.
+        let toks = lex("let r#fn = 1;").0;
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "r#fn"]);
+        assert!(!toks.iter().any(|t| t.is("fn")), "phantom fn keyword: {toks:?}");
+    }
+
+    #[test]
+    fn raw_identifier_keywords() {
+        for kw in ["fn", "match", "type", "impl", "struct"] {
+            let src = format!("let r#{kw} = 0;");
+            let toks = lex(&src).0;
+            assert!(
+                toks.iter().any(|t| t.kind == TokKind::Ident && t.text == format!("r#{kw}")),
+                "r#{kw} not lexed as one ident: {toks:?}"
+            );
+            assert!(!toks.iter().any(|t| t.is(kw)), "bare {kw} leaked: {toks:?}");
+        }
+    }
+
+    #[test]
+    fn raw_strings_still_lex() {
+        assert_eq!(texts(r##"r#"body"#"##), vec!["body"]);
+        assert_eq!(texts(r#"r"plain""#), vec!["plain"]);
+        assert_eq!(texts(r##"br#"bytes"#"##), vec!["bytes"]);
+        assert_eq!(texts(r#"b"bytes""#), vec!["bytes"]);
+    }
+
+    #[test]
+    fn raw_ident_does_not_swallow_following_fn() {
+        let src = "let a = r#type;\nfn real() {}\n";
+        let (toks, _) = lex(src);
+        let fns: Vec<u32> =
+            toks.iter().filter(|t| t.kind == TokKind::Ident && t.is("fn")).map(|t| t.line).collect();
+        assert_eq!(fns, vec![2], "exactly one real fn expected: {toks:?}");
+    }
+
+    #[test]
+    fn spans_tile_the_input() {
+        let src = "fn f(x: u32) -> u32 { // add\n    x + r#match + 0x2_u32\n}\n";
+        let chars: Vec<char> = src.chars().collect();
+        let (toks, comments) = lex(src);
+        let mut spans: Vec<(usize, usize)> = toks.iter().map(|t| t.span).collect();
+        spans.extend(comments.iter().map(|c| c.span));
+        spans.sort();
+        let mut prev = 0usize;
+        for (lo, hi) in spans {
+            assert!(lo >= prev, "overlapping spans at {lo}");
+            assert!(lo < hi && hi <= chars.len(), "bad span ({lo},{hi})");
+            assert!(
+                chars[prev..lo].iter().all(|c| c.is_whitespace()),
+                "non-whitespace gap before {lo}"
+            );
+            prev = hi;
+        }
+        assert!(chars[prev..].iter().all(|c| c.is_whitespace()));
+    }
+
+    #[test]
+    fn string_span_includes_quotes() {
+        let (toks, _) = lex(r#"x = "ab";"#);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "ab");
+        assert_eq!(s.span, (4, 8)); // `"ab"` at char indices 4..8
+    }
 }

@@ -3,10 +3,19 @@
 //! Extracts `lock()/read()/write()` acquisition sites per function,
 //! tracks which guards are *held* (a `let`-bound guard lives to the end
 //! of its block or an explicit `drop(guard)`; a chained temporary lives
-//! to the end of its statement), propagates one call-graph level
-//! through receiver-gated calls, and checks every "acquired B while
+//! to the end of its statement), and checks every "acquired B while
 //! holding A" edge against the project's total lock order. Any
 //! inversion or cycle is a finding.
+//!
+//! Propagation is **full-depth interprocedural**: the project call
+//! graph ([`dataflow::CallGraph`]) feeds a transitive-lock-set fixpoint
+//! — each function's set is its direct acquisitions plus everything its
+//! resolvable callees may acquire, to any depth. A call made while a
+//! guard is held therefore contributes an edge for every lock anywhere
+//! below it, with the sample call chain recorded on the edge (`via:
+//! "append -> append_durable"`). PR 8's lint propagated a single
+//! receiver-gated level; the chain annotation is what makes the deeper
+//! reports actionable.
 //!
 //! The order is the one DESIGN.md §7–§11 prescribe in prose, now
 //! codified (lower rank = acquired first):
@@ -36,6 +45,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use super::dataflow;
 use super::lexer::TokKind;
 use super::scanner::{FnSpan, SourceFile};
 use super::Finding;
@@ -64,26 +74,6 @@ pub fn classify(receiver: &str) -> Option<(&'static str, u32)> {
     })
 }
 
-/// Method-call receivers resolved across files (one call-graph level):
-/// the named component handles that hop between hub / storage layers.
-fn component_file(receiver: &str) -> Option<&'static str> {
-    Some(match receiver {
-        "state" => "hub/repo.rs",
-        "store" | "storage" => "storage/mod.rs",
-        "service" | "svc" => "api/service.rs",
-        "wal" => "storage/wal.rs",
-        _ => return None,
-    })
-}
-
-/// Method names never treated as cross-component calls.
-fn never_a_call(name: &str) -> bool {
-    matches!(
-        name,
-        "lock" | "read" | "write" | "unwrap" | "expect" | "clone" | "drop"
-    )
-}
-
 /// A currently-held guard during the interval walk.
 #[derive(Debug, Clone)]
 struct Hold {
@@ -102,7 +92,8 @@ pub struct Edge {
     pub to_rank: u32,
     pub file: String,
     pub line: u32,
-    /// Set when the inner acquisition came from a called function.
+    /// Set when the inner acquisition came from a called function: the
+    /// call chain down to the acquiring fn (`"append -> append_durable"`).
     pub via: Option<String>,
 }
 
@@ -161,39 +152,79 @@ pub fn check(files: &[SourceFile]) -> Vec<Finding> {
     findings
 }
 
+type FnKey = (String, String);
+type LockSet = BTreeSet<(&'static str, u32)>;
+
 /// All observed inter-lock edges (also drives the `--fix-report` DAG
 /// dump).
 pub fn edges(files: &[SourceFile]) -> Vec<Edge> {
     // Pass 1: direct acquisition classes per (file rel, fn name).
-    let mut direct: BTreeMap<(String, String), Vec<(&'static str, u32)>> = BTreeMap::new();
+    let mut trans: BTreeMap<FnKey, LockSet> = BTreeMap::new();
     for sf in files {
         for span in &sf.fns {
             if span.is_test {
                 continue;
             }
-            direct
+            trans
                 .entry((sf.rel.clone(), span.name.clone()))
                 .or_default()
                 .extend(direct_classes(sf, span));
         }
     }
-    // Pass 2: interval walk per fn.
+
+    // Pass 2: transitive closure over the call graph — each fn's set
+    // absorbs its callees' sets until fixpoint. `via` keeps one sample
+    // call chain per (fn, class) for the report.
+    let cg = dataflow::CallGraph::build(files);
+    let mut via: BTreeMap<(FnKey, &'static str), Vec<String>> = BTreeMap::new();
+    for _ in 0..64 {
+        let mut updates: Vec<(FnKey, (&'static str, u32), Vec<String>)> = Vec::new();
+        for (key, callees) in &cg.calls {
+            for (ck, _line) in callees {
+                if ck == key {
+                    continue;
+                }
+                let Some(cset) = trans.get(ck) else { continue };
+                for &(c, r) in cset {
+                    if trans.get(key).is_none_or(|h| !h.contains(&(c, r))) {
+                        let mut chain = vec![ck.1.clone()];
+                        if let Some(rest) = via.get(&(ck.clone(), c)) {
+                            chain.extend(rest.iter().cloned());
+                        }
+                        updates.push((key.clone(), (c, r), chain));
+                    }
+                }
+            }
+        }
+        if updates.is_empty() {
+            break;
+        }
+        for (key, cr, chain) in updates {
+            if trans.entry(key.clone()).or_default().insert(cr) {
+                via.entry((key, cr.0)).or_insert(chain);
+            }
+        }
+    }
+
+    // Pass 3: interval walk per fn, emitting edges to each acquisition
+    // and to every lock transitively reachable through a call made
+    // while something is held.
     let mut out = Vec::new();
     for sf in files {
         for span in &sf.fns {
             if span.is_test {
                 continue;
             }
-            walk_fn(sf, span, files, &direct, &mut out);
+            walk_fn(sf, span, files, &trans, &via, &mut out);
         }
     }
     out
 }
 
 /// Lightweight scan: every registered acquisition class in a fn body,
-/// ignoring hold intervals (the pass-1 callee summaries).
+/// ignoring hold intervals (the pass-1 seeds).
 fn direct_classes(sf: &SourceFile, span: &FnSpan) -> Vec<(&'static str, u32)> {
-    let nested = nested_spans(sf, span);
+    let nested = dataflow::nested_fn_spans(sf, span);
     let mut out = Vec::new();
     let mut i = span.body_start + 1;
     while i < span.body_end {
@@ -207,17 +238,6 @@ fn direct_classes(sf: &SourceFile, span: &FnSpan) -> Vec<(&'static str, u32)> {
         i += 1;
     }
     out
-}
-
-/// Body token ranges of fns nested inside `span` (closures are *not*
-/// masked — a closure runs under whatever its caller holds; a nested
-/// `fn` does not).
-fn nested_spans(sf: &SourceFile, span: &FnSpan) -> Vec<(usize, usize)> {
-    sf.fns
-        .iter()
-        .filter(|f| f.body_start > span.body_start && f.body_end < span.body_end)
-        .map(|f| (f.body_start, f.body_end))
-        .collect()
 }
 
 /// Is token `i` the `lock/read/write` ident of a registered
@@ -238,58 +258,23 @@ fn acquisition_at(sf: &SourceFile, i: usize) -> Option<(&'static str, u32)> {
     if !(u.kind == TokKind::Ident && matches!(u.text.as_str(), "unwrap" | "expect")) {
         return None;
     }
-    let recv = receiver_name(sf, i.checked_sub(2)?)?;
+    let recv = dataflow::receiver_name(sf, i.checked_sub(2)?)?;
     classify(&recv)
 }
 
-/// Walk back from token `j` (the token just before the `.` of a method
-/// chain) to the receiver's base name, skipping one balanced `(...)` or
-/// `[...]` group: `self.stripe(&key).write()` → `stripe`.
-fn receiver_name(sf: &SourceFile, j: usize) -> Option<String> {
-    let t = &sf.tokens;
-    let tok = t.get(j)?;
-    if tok.kind == TokKind::Ident {
-        return Some(tok.text.clone());
-    }
-    let (close, open) = match tok.text.as_str() {
-        ")" => (")", "("),
-        "]" => ("]", "["),
-        _ => return None,
-    };
-    let mut depth = 0usize;
-    let mut k = j;
-    loop {
-        let tk = t.get(k)?;
-        if tk.is(close) {
-            depth += 1;
-        } else if tk.is(open) {
-            depth = depth.saturating_sub(1);
-            if depth == 0 {
-                break;
-            }
-        }
-        k = k.checked_sub(1)?;
-    }
-    let prev = t.get(k.checked_sub(1)?)?;
-    if prev.kind == TokKind::Ident {
-        Some(prev.text.clone())
-    } else {
-        None
-    }
-}
-
 /// Full interval walk of one fn: tracks held guards and statement
-/// temporaries, emits an edge for every acquisition (or registered
-/// cross-component call) that happens under a hold.
+/// temporaries, emits an edge for every acquisition (or resolvable call
+/// with a non-empty transitive lock set) that happens under a hold.
 fn walk_fn(
     sf: &SourceFile,
     span: &FnSpan,
     files: &[SourceFile],
-    direct: &BTreeMap<(String, String), Vec<(&'static str, u32)>>,
+    trans: &BTreeMap<FnKey, LockSet>,
+    via: &BTreeMap<(FnKey, &'static str), Vec<String>>,
     edges: &mut Vec<Edge>,
 ) {
     let t = &sf.tokens;
-    let nested = nested_spans(sf, span);
+    let nested = dataflow::nested_fn_spans(sf, span);
     let mut holds: Vec<Hold> = Vec::new();
     let mut temps: Vec<Hold> = Vec::new();
     let mut depth = 0usize;
@@ -370,21 +355,27 @@ fn walk_fn(
             continue;
         }
 
-        // One-level call propagation, only while something is held.
+        // Transitive call propagation, only while something is held.
         if (!holds.is_empty() || !temps.is_empty()) && tok.kind == TokKind::Ident {
-            if let Some((callee_file, callee)) = resolve_call(sf, i) {
-                let classes = lookup_direct(files, direct, &callee_file, &callee);
-                for (c, r) in classes {
-                    for h in holds.iter().chain(temps.iter()) {
-                        edges.push(Edge {
-                            from: h.class,
-                            from_rank: h.rank,
-                            to: c,
-                            to_rank: r,
-                            file: sf.rel.clone(),
-                            line: tok.line,
-                            via: Some(callee.clone()),
-                        });
+            if let Some((callee_rel, callee)) = dataflow::resolve_at(files, sf, i) {
+                let key = (callee_rel, callee.clone());
+                if let Some(classes) = trans.get(&key) {
+                    for &(c, r) in classes {
+                        let mut chain = vec![callee.clone()];
+                        if let Some(rest) = via.get(&(key.clone(), c)) {
+                            chain.extend(rest.iter().cloned());
+                        }
+                        for h in holds.iter().chain(temps.iter()) {
+                            edges.push(Edge {
+                                from: h.class,
+                                from_rank: h.rank,
+                                to: c,
+                                to_rank: r,
+                                file: sf.rel.clone(),
+                                line: tok.line,
+                                via: Some(chain.join(" -> ")),
+                            });
+                        }
                     }
                 }
             }
@@ -454,70 +445,6 @@ fn held_binding(
         b += 1;
     };
     Some(binding)
-}
-
-/// Resolve a call at token `i` (a method or path-fn name ident) to
-/// (callee file rel-suffix, callee fn name). Receiver-gated: only
-/// `self.`, registered component handles, and `module::` paths resolve
-/// — generic method names on arbitrary receivers do not.
-fn resolve_call(sf: &SourceFile, i: usize) -> Option<(String, String)> {
-    let t = &sf.tokens;
-    let name = t.get(i)?;
-    if name.kind != TokKind::Ident || !t.get(i + 1)?.is("(") {
-        return None;
-    }
-    if never_a_call(&name.text) {
-        return None;
-    }
-    // `receiver.name(...)`.
-    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(".")) {
-        let recv = t.get(i.checked_sub(2)?)?;
-        if recv.kind != TokKind::Ident {
-            return None;
-        }
-        if recv.is("self") {
-            return Some((sf.rel.clone(), name.text.clone()));
-        }
-        if let Some(file) = component_file(&recv.text) {
-            return Some((file.to_string(), name.text.clone()));
-        }
-        return None;
-    }
-    // `module::name(...)`.
-    if t.get(i.wrapping_sub(1)).is_some_and(|x| x.is(":"))
-        && t.get(i.wrapping_sub(2)).is_some_and(|x| x.is(":"))
-    {
-        let m = t.get(i.checked_sub(3)?)?;
-        if m.kind == TokKind::Ident && m.text.chars().next().is_some_and(char::is_lowercase) {
-            return Some((format!("{}.rs", m.text), name.text.clone()));
-        }
-    }
-    None
-}
-
-/// Direct classes of a callee referenced by rel-suffix (`callee_file`
-/// may be a bare `module.rs` from a path call; match by suffix, with
-/// `module/mod.rs` as the fallback spelling).
-fn lookup_direct(
-    files: &[SourceFile],
-    direct: &BTreeMap<(String, String), Vec<(&'static str, u32)>>,
-    callee_file: &str,
-    callee: &str,
-) -> Vec<(&'static str, u32)> {
-    let stem = callee_file.trim_end_matches(".rs");
-    let sf = files.iter().find(|f| {
-        f.rel == callee_file
-            || f.rel.ends_with(&format!("/{callee_file}"))
-            || f.rel == format!("{stem}/mod.rs")
-            || f.rel.ends_with(&format!("/{stem}/mod.rs"))
-    });
-    match sf {
-        Some(sf) => direct
-            .get(&(sf.rel.clone(), callee.to_string()))
-            .cloned()
-            .unwrap_or_default(),
-        None => Vec::new(),
-    }
 }
 
 /// DFS cycle detection over the deduped class digraph.

@@ -11,11 +11,18 @@
 //! The analyzer is deliberately self-contained: a hand-rolled lexer
 //! ([`lexer`]) and a brace/function-aware scanner ([`scanner`]) over
 //! the project's own sources — no syn, no rustc internals, no external
-//! crates — because the crate builds against an offline cache. It is a
-//! *project* linter, not a general one: the lock registry in
-//! [`lock_order`] names this codebase's locks, and the hot-path list in
-//! [`rules`] names this codebase's reactor files. See DESIGN.md §12 for
-//! the rule catalog and the allow-marker grammar.
+//! crates — because the crate builds against an offline cache. v2 adds
+//! a real dataflow layer: a statement-level CFG per function ([`cfg`]),
+//! def/use chains and a project call graph ([`dataflow`]), and three
+//! analyses built on them — full-depth interprocedural lock-set
+//! propagation ([`lock_order`]), taint tracking for wire-derived bytes
+//! ([`taint`], L7), and a durability-ordering state machine
+//! ([`ordering`], L8, which subsumes the old same-function
+//! rename/sync_dir check as one instance). It is a *project* linter,
+//! not a general one: the lock registry in [`lock_order`] names this
+//! codebase's locks, and the hot-path lists in [`rules`] name this
+//! codebase's reactor files. See DESIGN.md §12 for the rule catalog
+//! and the allow-marker grammar.
 //!
 //! Escape hatch: a deliberate violation carries, on its line or the
 //! comment block right above it,
@@ -25,14 +32,18 @@
 //! ```
 //!
 //! where `<rule>` is one of `lock_order`, `panics`, `safety`,
-//! `durability`, `protocol`, `logging`. A marker with a missing or
-//! empty reason is itself a finding — the escape hatch documents, it
-//! does not silence.
+//! `durability`, `protocol`, `logging`, `taint`, `ordering`,
+//! `alloc_hot`. A marker with a missing or empty reason is itself a
+//! finding — the escape hatch documents, it does not silence.
 
+pub mod cfg;
+pub mod dataflow;
 pub mod lexer;
 pub mod lock_order;
+pub mod ordering;
 pub mod rules;
 pub mod scanner;
+pub mod taint;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -55,8 +66,13 @@ pub struct LintReport {
     pub findings: Vec<Finding>,
     pub files_scanned: usize,
     pub fns_scanned: usize,
-    /// Observed inter-lock edges (for the `--fix-report` DAG dump).
+    /// Observed inter-lock edges (for the `--fix-report` DAG dump and
+    /// `--format dot`).
     pub lock_edges: Vec<lock_order::Edge>,
+    /// Every taint flow L7 traced, including the validated and dormant
+    /// ones — evidence that the analysis saw the wire values, not just
+    /// that nothing fired.
+    pub taint_flows: Vec<taint::TaintFlow>,
 }
 
 /// Lint every `.rs` file under `root`. Findings already filtered
@@ -78,10 +94,13 @@ pub fn lint_dir(root: &Path) -> crate::Result<LintReport> {
     for sf in &files {
         findings.extend(rules::panic_freedom(sf));
         findings.extend(rules::unsafe_audit(sf));
-        findings.extend(rules::durability(sf));
         findings.extend(rules::logging(sf));
+        findings.extend(rules::alloc_hot(sf));
     }
     findings.extend(rules::protocol(&files));
+    findings.extend(ordering::check(&files));
+    let (taint_findings, taint_flows) = taint::check(&files);
+    findings.extend(taint_findings);
 
     // Apply allow markers; malformed / reasonless markers are findings.
     let markers: BTreeMap<&str, FileMarkers> =
@@ -112,6 +131,7 @@ pub fn lint_dir(root: &Path) -> crate::Result<LintReport> {
         files_scanned: files.len(),
         fns_scanned: files.iter().map(|f| f.fns.len()).sum(),
         lock_edges: lock_order::edges(&files),
+        taint_flows,
     })
 }
 
@@ -187,6 +207,24 @@ fn fix_notes(report: &LintReport) -> String {
                  respects --log-level and test capture, or justify with \
                  `// lint: allow(logging, ...)`"
             }
+            "taint" => {
+                "bound the wire-derived value before it sizes memory: \
+                 compare it against a cap / remaining-bytes, verify the \
+                 frame CRC, or route the bytes through `scan` — the \
+                 validator registry is in analysis/taint.rs"
+            }
+            "ordering" => {
+                "make the WAL append durable (fsync / append_durable) \
+                 on every path that reaches the publish or ack — the \
+                 automaton traced a path where the data is not yet on \
+                 disk when it becomes visible"
+            }
+            "alloc_hot" => {
+                "hoist the allocation out of the per-call path into a \
+                 reusable scratch buffer (std::mem::take / clear-and-\
+                 refill), or justify once-per-call-boundary copies with \
+                 `// lint: allow(alloc_hot, reason = \"...\")`"
+            }
             _ => "write the marker as // lint: allow(rule, reason = \"...\")",
         }
     };
@@ -206,6 +244,97 @@ fn fix_notes(report: &LintReport) -> String {
     if seen.is_empty() {
         out.push_str("  (none observed)\n");
     }
+    out
+}
+
+/// Render the report as one JSON document (`--format json`; CI uploads
+/// it as an artifact). Deterministic: objects are BTreeMaps and the
+/// vectors were sorted by the linter.
+pub fn render_json(report: &LintReport, root: &Path) -> String {
+    use crate::util::json::Json;
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        })
+        .collect();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut edges: Vec<Json> = Vec::new();
+    for e in &report.lock_edges {
+        if seen.insert((e.from, e.to)) {
+            edges.push(Json::obj(vec![
+                ("from", Json::Str(e.from.to_string())),
+                ("from_rank", Json::Num(e.from_rank as f64)),
+                ("to", Json::Str(e.to.to_string())),
+                ("to_rank", Json::Num(e.to_rank as f64)),
+            ]));
+        }
+    }
+    let flows: Vec<Json> = report
+        .taint_flows
+        .iter()
+        .map(|fl| {
+            Json::obj(vec![
+                ("file", Json::Str(fl.file.clone())),
+                ("function", Json::Str(fl.function.clone())),
+                ("var", Json::Str(fl.var.clone())),
+                ("source", Json::Str(fl.source.clone())),
+                ("source_line", Json::Num(fl.source_line as f64)),
+                (
+                    "validated_line",
+                    fl.validated_line.map_or(Json::Null, |l| Json::Num(l as f64)),
+                ),
+                (
+                    "sink_line",
+                    fl.sink_line.map_or(Json::Null, |l| Json::Num(l as f64)),
+                ),
+                ("status", Json::Str(fl.status.to_string())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("root", Json::Str(root.display().to_string())),
+        ("files_scanned", Json::Num(report.files_scanned as f64)),
+        ("fns_scanned", Json::Num(report.fns_scanned as f64)),
+        ("clean", Json::Bool(report.findings.is_empty())),
+        ("findings", Json::Arr(findings)),
+        ("lock_edges", Json::Arr(edges)),
+        ("taint_flows", Json::Arr(flows)),
+    ]);
+    format!("{doc}\n")
+}
+
+/// Render the observed lock DAG as Graphviz (`--format dot`). Edges
+/// are deduped by (from, to); an edge against the rank order is drawn
+/// red and bold so the inversion is visible in the rendered graph.
+pub fn render_dot(report: &LintReport) -> String {
+    let mut out = String::from("digraph lock_order {\n");
+    out.push_str("  rankdir=LR;\n");
+    out.push_str("  node [shape=box, fontname=\"monospace\"];\n");
+    let mut nodes = std::collections::BTreeSet::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for e in &report.lock_edges {
+        nodes.insert((e.from, e.from_rank));
+        nodes.insert((e.to, e.to_rank));
+        seen.insert((e.from, e.to, e.from_rank >= e.to_rank));
+    }
+    for (name, rank) in &nodes {
+        out.push_str(&format!("  {name} [label=\"{name}\\nrank {rank}\"];\n"));
+    }
+    for (from, to, inverted) in &seen {
+        if *inverted {
+            out.push_str(&format!("  {from} -> {to} [color=red, penwidth=2.0];\n"));
+        } else {
+            out.push_str(&format!("  {from} -> {to};\n"));
+        }
+    }
+    out.push_str("}\n");
     out
 }
 
@@ -302,8 +431,17 @@ fn parse_marker(text: &str) -> Result<(String, String), String> {
         }
         None => (inner.trim().to_string(), String::new()),
     };
-    const RULES: &[&str] =
-        &["lock_order", "panics", "safety", "durability", "protocol", "logging"];
+    const RULES: &[&str] = &[
+        "lock_order",
+        "panics",
+        "safety",
+        "durability",
+        "protocol",
+        "logging",
+        "taint",
+        "ordering",
+        "alloc_hot",
+    ];
     if !RULES.contains(&rule.as_str()) {
         return Err(format!(
             "unknown rule `{rule}` in lint marker (known: {})",

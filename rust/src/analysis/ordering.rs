@@ -1,0 +1,421 @@
+//! L8 — durability ordering (`ordering`, plus the L4 `durability`
+//! rename check it generalizes).
+//!
+//! DESIGN.md §7's crash-safety argument is an *ordering*: an accepted
+//! contribution is WAL-appended, the append is made durable (fsync,
+//! under the configured policy), and only then does the copy-on-write
+//! publish make it visible / the submit get acknowledged. This rule
+//! runs a small automaton over each function's CFG in `storage/` and
+//! the submit path (`hub/repo.rs`):
+//!
+//! - state per path: `(appended, synced-since-append)`, tracked as a
+//!   *may*-set of configurations (both branches of an `if` survive);
+//! - events: `append`, `append_durable` (append whose durability is
+//!   policy-resolved internally — including the `Always` rollback on a
+//!   failed fsync — so it counts as append+fsync), `sync`/`sync_all`/
+//!   `sync_data` (fsync), `sync_dir`, `fs::rename`, `publish`/
+//!   `commit_data`, `ack`/`acknowledge`;
+//! - findings: a publish reachable while some path has an unsynced
+//!   append (**publish-before-fsync**), an ack reachable before any
+//!   append in a function that appends (**ack-before-append**), and —
+//!   the old L4, now path-sensitive — an `fs::rename` from which no
+//!   `sync_dir` is forward-reachable (rule id stays `durability`).
+//!
+//! Events are **interprocedural**: a call that resolves (via
+//! [`dataflow::resolve_at`]) to a scanned function splices in that
+//! function's event summary, so `store.append(..)` in `hub/repo.rs`
+//! expands to the `append_durable` it performs and the submit path
+//! checks end-to-end. Summaries are memoized, recursion-guarded, and
+//! capped (depth 4, 32 events) — past the caps a call degrades to its
+//! direct event name, which is the conservative direction.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::cfg::Cfg;
+use super::dataflow;
+use super::lexer::TokKind;
+use super::scanner::SourceFile;
+use super::Finding;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    Append,
+    AppendDurable,
+    Fsync,
+    DirSync,
+    Rename,
+    Publish,
+    Ack,
+}
+
+fn in_scope(rel: &str) -> bool {
+    rel.starts_with("storage/")
+        || rel.contains("/storage/")
+        || rel == "hub/repo.rs"
+        || rel.ends_with("/hub/repo.rs")
+}
+
+/// The event named directly by the call at token `i` (an ident followed
+/// by `(`), if any. `rename` only counts with an `fs::` path — plain
+/// `rename` idents are too common to claim.
+fn direct_event(sf: &SourceFile, i: usize) -> Option<Ev> {
+    let t = &sf.tokens;
+    match t[i].text.as_str() {
+        "append" => Some(Ev::Append),
+        "append_durable" => Some(Ev::AppendDurable),
+        "sync" | "sync_all" | "sync_data" => Some(Ev::Fsync),
+        "sync_dir" => Some(Ev::DirSync),
+        "publish" | "commit_data" => Some(Ev::Publish),
+        "ack" | "acknowledge" => Some(Ev::Ack),
+        "rename"
+            if i >= 3 && t[i - 1].is(":") && t[i - 2].is(":") && t[i - 3].is("fs") =>
+        {
+            Some(Ev::Rename)
+        }
+        _ => None,
+    }
+}
+
+/// Memoized per-function event summaries for call-site splicing.
+struct Summaries<'a> {
+    files: &'a [SourceFile],
+    memo: BTreeMap<(String, String), Vec<Ev>>,
+    stack: BTreeSet<(String, String)>,
+}
+
+const MAX_DEPTH: usize = 4;
+const MAX_EVENTS: usize = 32;
+
+impl<'a> Summaries<'a> {
+    fn new(files: &'a [SourceFile]) -> Summaries<'a> {
+        Summaries { files, memo: BTreeMap::new(), stack: BTreeSet::new() }
+    }
+
+    /// Effective event summary of `(rel, name)`. `append_durable` is
+    /// overridden to a single `AppendDurable`: its body's fsync is
+    /// conditional on the fsync *policy* and it rolls back the frame
+    /// when an `Always`-mode fsync fails, so from the caller's view the
+    /// append and its durability are one atomic step.
+    fn of(&mut self, rel: &str, name: &str, depth: usize) -> Vec<Ev> {
+        if name == "append_durable" {
+            return vec![Ev::AppendDurable];
+        }
+        let key = (rel.to_string(), name.to_string());
+        if let Some(v) = self.memo.get(&key) {
+            return v.clone();
+        }
+        if depth >= MAX_DEPTH || !self.stack.insert(key.clone()) {
+            return Vec::new();
+        }
+        let mut evs = Vec::new();
+        if let Some(sf) = self.files.iter().find(|f| f.rel == key.0) {
+            if let Some(span) = sf.fns.iter().find(|f| !f.is_test && f.name == name) {
+                let nested = dataflow::nested_fn_spans(sf, span);
+                let mut i = span.body_start + 1;
+                while i < span.body_end.min(sf.tokens.len()) {
+                    if let Some(&(_, e)) = nested.iter().find(|&&(s, e)| i >= s && i <= e) {
+                        i = e + 1;
+                        continue;
+                    }
+                    for ev in self.call_events(sf, i, depth) {
+                        if evs.len() < MAX_EVENTS {
+                            evs.push(ev);
+                        }
+                    }
+                    i += 1;
+                }
+            }
+        }
+        self.stack.remove(&key);
+        self.memo.insert(key, evs.clone());
+        evs
+    }
+
+    /// Events contributed by token `i` of `sf`: the callee's spliced
+    /// summary when the call resolves to a scanned fn with a non-empty
+    /// summary, else the direct event name.
+    fn call_events(&mut self, sf: &SourceFile, i: usize, depth: usize) -> Vec<Ev> {
+        let t = &sf.tokens;
+        if t[i].kind != TokKind::Ident
+            || !t.get(i + 1).is_some_and(|n| n.is("("))
+            || (i > 0 && t[i - 1].is("fn"))
+        {
+            return Vec::new();
+        }
+        if let Some((rel, name)) = dataflow::resolve_at(self.files, sf, i) {
+            let evs = self.of(&rel, &name, depth + 1);
+            if !evs.is_empty() {
+                return evs;
+            }
+        }
+        direct_event(sf, i).into_iter().collect()
+    }
+}
+
+/// Path configuration bits: index = `appended * 2 + synced_since`.
+const A0S0: u8 = 1 << 0;
+const A0S1: u8 = 1 << 1;
+const A1S0: u8 = 1 << 2;
+const A1S1: u8 = 1 << 3;
+
+fn step(mask: u8, ev: Ev) -> u8 {
+    match ev {
+        Ev::Append => {
+            if mask != 0 {
+                A1S0
+            } else {
+                0
+            }
+        }
+        Ev::AppendDurable => {
+            if mask != 0 {
+                A1S1
+            } else {
+                0
+            }
+        }
+        Ev::Fsync => {
+            let mut m = 0;
+            if mask & (A0S0 | A0S1) != 0 {
+                m |= A0S1;
+            }
+            if mask & (A1S0 | A1S1) != 0 {
+                m |= A1S1;
+            }
+            m
+        }
+        _ => mask,
+    }
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut sums = Summaries::new(files);
+    for sf in files {
+        if !in_scope(&sf.rel) {
+            continue;
+        }
+        for span in &sf.fns {
+            if span.is_test {
+                continue;
+            }
+            check_fn(sf, span.body_start + 1, span.body_end, &span.name, &mut sums, &mut out);
+        }
+    }
+    out
+}
+
+fn check_fn(
+    sf: &SourceFile,
+    lo: usize,
+    hi: usize,
+    fn_name: &str,
+    sums: &mut Summaries<'_>,
+    out: &mut Vec<Finding>,
+) {
+    let cfg = Cfg::build(&sf.tokens, lo, hi);
+
+    // Per-statement event lists (with the line of each event's call
+    // site; spliced events inherit the call site's line).
+    let mut events: Vec<Vec<Vec<(Ev, u32)>>> = Vec::with_capacity(cfg.blocks.len());
+    let mut has_append = false;
+    for block in &cfg.blocks {
+        let mut per_block = Vec::with_capacity(block.stmts.len());
+        for stmt in &block.stmts {
+            let mut evs = Vec::new();
+            for i in stmt.lo..stmt.hi.min(sf.tokens.len()) {
+                for ev in sums.call_events(sf, i, 0) {
+                    has_append |= matches!(ev, Ev::Append | Ev::AppendDurable);
+                    evs.push((ev, sf.tokens[i].line));
+                }
+            }
+            per_block.push(evs);
+        }
+        events.push(per_block);
+    }
+
+    // May-set fixpoint of path configurations per block entry.
+    let mut inm = vec![0u8; cfg.blocks.len()];
+    inm[cfg.entry] = A0S0;
+    for _ in 0..(4 * cfg.blocks.len() + 8) {
+        let mut changed = false;
+        for b in 0..cfg.blocks.len() {
+            let mut m = inm[b];
+            for evs in &events[b] {
+                for &(ev, _) in evs {
+                    m = step(m, ev);
+                }
+            }
+            for &s in &cfg.blocks[b].succs {
+                if inm[s] | m != inm[s] {
+                    inm[s] |= m;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Evidence pass.
+    let mut renames: Vec<(usize, usize, usize, u32)> = Vec::new();
+    let mut dirsyncs: Vec<(usize, usize, usize)> = Vec::new();
+    for b in 0..cfg.blocks.len() {
+        let mut m = inm[b];
+        for (si, evs) in events[b].iter().enumerate() {
+            for (ei, &(ev, line)) in evs.iter().enumerate() {
+                match ev {
+                    Ev::Publish | Ev::Ack if m & A1S0 != 0 => {
+                        let what = if ev == Ev::Publish { "copy-on-write publish" } else { "acknowledgment" };
+                        out.push(Finding {
+                            file: sf.rel.clone(),
+                            line,
+                            rule: "ordering",
+                            message: format!(
+                                "{what} in `{fn_name}` while a WAL append may not yet be \
+                                 fsynced — make the append durable (fsync / append_durable) \
+                                 before publishing"
+                            ),
+                        });
+                    }
+                    Ev::Ack if m & (A0S0 | A0S1) != 0 && has_append => {
+                        out.push(Finding {
+                            file: sf.rel.clone(),
+                            line,
+                            rule: "ordering",
+                            message: format!(
+                                "acknowledgment in `{fn_name}` may precede the WAL append — \
+                                 an acked submit must already be in the log"
+                            ),
+                        });
+                    }
+                    Ev::Rename => renames.push((b, si, ei, line)),
+                    Ev::DirSync => dirsyncs.push((b, si, ei)),
+                    _ => {}
+                }
+                m = step(m, ev);
+            }
+        }
+    }
+
+    // Rename → sync_dir forward reachability (same statement later,
+    // later in the same block, or any CFG-reachable block — back edges
+    // included, so a loop retry that syncs on the next pass counts).
+    for (b, si, ei, line) in renames {
+        let reach = cfg.reachable_from(b);
+        let ok = dirsyncs.iter().any(|&(db, dsi, dei)| {
+            (db == b && (dsi, dei) > (si, ei)) || reach.contains(&db)
+        });
+        if !ok {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line,
+                rule: "durability",
+                message: format!(
+                    "`fs::rename` in `{fn_name}` with no reachable `sync_dir` — the \
+                     rename is not durable until the parent directory entry is fsynced"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn run(src: &str) -> Vec<Finding> {
+        let sf =
+            SourceFile::parse(PathBuf::from("x/storage/mod.rs"), "storage/mod.rs".into(), src);
+        check(std::slice::from_ref(&sf))
+    }
+
+    #[test]
+    fn publish_before_fsync_fires() {
+        let f = run(
+            "fn bad(&self) { self.wal.append(rev, tsv); self.cell.publish(data); }",
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "ordering");
+        assert!(f[0].message.contains("publish"), "{f:?}");
+    }
+
+    #[test]
+    fn append_sync_publish_is_clean() {
+        let f = run(
+            "fn good(&self) { self.wal.append(rev, tsv); self.wal.sync(); \
+             self.cell.publish(data); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn append_durable_counts_as_synced() {
+        let f = run(
+            "fn good(&self) { self.wal.append_durable(rev, tsv, true); \
+             self.cell.publish(data); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn branch_that_skips_the_fsync_still_fires() {
+        let f = run(
+            "fn bad(&self) { self.wal.append(rev, tsv); \
+             if fast { self.wal.sync(); } self.cell.publish(data); }",
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "ordering");
+    }
+
+    #[test]
+    fn ack_before_append_fires() {
+        let f = run("fn bad(&self) { self.conn.ack(id); self.wal.append(rev, tsv); }");
+        assert!(
+            f.iter().any(|x| x.rule == "ordering" && x.message.contains("precede")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn rename_without_reachable_sync_dir_fires() {
+        let f = run("fn bad(&self) { fs::rename(&a, &b).ok(); }");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "durability");
+    }
+
+    #[test]
+    fn rename_reaches_sync_dir_through_a_loop_back_edge() {
+        // The sync_dir is *earlier* in the loop body: only the back edge
+        // makes it reachable from the rename — the old line scanner's
+        // same-function heuristic is now a real path query.
+        let f = run(
+            "fn good(&self) { for _ in 0..2 { if ok { sync_dir(d); return; } \
+             if fs::rename(&a, &b).is_err() { continue; } } }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let sf = SourceFile::parse(
+            PathBuf::from("x/models/fit.rs"),
+            "models/fit.rs".into(),
+            "fn f(&self) { self.wal.append(r, t); self.cell.publish(d); }",
+        );
+        assert!(check(std::slice::from_ref(&sf)).is_empty());
+    }
+
+    #[test]
+    fn interprocedural_summary_expands_the_callee() {
+        // `do_append` performs append+sync; the caller publishes after
+        // calling it — clean only because the summary is spliced in.
+        let f = run(
+            "impl S { fn do_append(&self) { self.wal.append(r, t); self.wal.sync(); } \
+             fn submit(&self) { self.do_append(); self.cell.publish(d); } }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,10 +1,11 @@
-//! L2–L6: panic-freedom, unsafe audit, durability discipline, protocol
-//! exhaustiveness, logging discipline. (L1 lock-order lives in
-//! [`super::lock_order`].)
+//! L2, L3, L5, L6, L9: panic-freedom, unsafe audit, protocol
+//! exhaustiveness, logging discipline, allocation-free hot paths.
+//! (L1 lock-order lives in [`super::lock_order`]; L4/L8 durability
+//! ordering in [`super::ordering`]; L7 taint in [`super::taint`].)
 
 use std::collections::BTreeSet;
 
-use super::lexer::TokKind;
+use super::lexer::{TokKind, Token};
 use super::scanner::SourceFile;
 use super::Finding;
 
@@ -142,59 +143,116 @@ fn has_safety_comment(sf: &SourceFile, line: u32) -> bool {
     false
 }
 
-/// L4 — durability discipline: inside `storage/`, a `fs::rename` must
-/// be paired with a `sync_dir` call in the same function (the rename is
-/// not durable until the directory entry is fsynced), or carry
-/// `// lint: allow(durability, ...)`.
-pub fn durability(sf: &SourceFile) -> Vec<Finding> {
+// L4 (durability) moved to `super::ordering` — the rename/sync_dir pairing
+// is now one instance of the CFG-driven durability-ordering automaton, which
+// checks reachability instead of same-function co-occurrence.
+
+/// L9 — allocation-free hot paths: the reactor dispatch loop
+/// (`hub/server.rs`) and the per-row predict paths (`api/service.rs`)
+/// must not allocate per call. Banned shapes: `Vec::new(`,
+/// `Box::new(`, `.to_vec(`, `.clone(`, `format!`. Registered hot
+/// functions only — cold paths (startup, shutdown, error formatting)
+/// allocate freely. Deliberate sites carry
+/// `// lint: allow(alloc_hot, reason = "...")`.
+pub fn alloc_hot(sf: &SourceFile) -> Vec<Finding> {
+    const HOT_FNS: &[(&str, &[&str])] = &[
+        (
+            "hub/server.rs",
+            &[
+                "run",
+                "tick",
+                "accept_ready",
+                "conn_event",
+                "handle_readable",
+                "pump_frames",
+                "drain_outbox",
+                "flush_and_update",
+                "update_interest",
+                "sweep",
+                "close_conn",
+                "worker_loop",
+                "complete_span",
+            ],
+        ),
+        ("api/service.rs", &["predict_rows", "predict_batch"]),
+    ];
     let mut out = Vec::new();
-    let in_storage = sf.rel.starts_with("storage/") || sf.rel.contains("/storage/");
-    if !in_storage {
+    let Some((_, hot)) = HOT_FNS
+        .iter()
+        .find(|(f, _)| sf.rel == *f || sf.rel.ends_with(&format!("/{f}")))
+    else {
         return out;
-    }
+    };
     let t = &sf.tokens;
     for span in &sf.fns {
-        if span.is_test {
+        if span.is_test || !hot.contains(&span.name.as_str()) {
             continue;
         }
-        let body = span.body_start..=span.body_end;
-        let mut rename_lines = Vec::new();
-        let mut has_sync = false;
-        for i in body {
-            let tok = &t[i];
-            if tok.kind != TokKind::Ident {
+        let nested = super::dataflow::nested_fn_spans(sf, span);
+        let mut i = span.body_start + 1;
+        while i < span.body_end {
+            if let Some(end) = nested.iter().find_map(|&(s, e)| (s == i).then_some(e)) {
+                i = end + 1;
                 continue;
             }
-            if tok.is("sync_dir") {
-                has_sync = true;
+            if sf.in_test(i) {
+                i += 1;
+                continue;
             }
-            if tok.is("rename")
-                && t.get(i + 1).is_some_and(|x| x.is("("))
-                && i >= 3
-                && t[i - 1].is(":")
-                && t[i - 2].is(":")
-                && t[i - 3].is("fs")
-            {
-                rename_lines.push(tok.line);
-            }
-        }
-        if !has_sync {
-            for line in rename_lines {
+            if let Some(what) = banned_alloc_at(t, i) {
                 out.push(Finding {
                     file: sf.rel.clone(),
-                    line,
-                    rule: "durability",
+                    line: t[i].line,
+                    rule: "alloc_hot",
                     message: format!(
-                        "`fs::rename` in `{}` without a `sync_dir` in the same \
-                         function — the rename is not durable until the parent \
-                         directory entry is fsynced",
+                        "`{what}` in hot-path fn `{}` — allocation per call; reuse a \
+                         scratch buffer or annotate with \
+                         `// lint: allow(alloc_hot, reason = \"...\")`",
                         span.name
                     ),
                 });
             }
+            i += 1;
         }
     }
     out
+}
+
+/// Match one of the banned allocation shapes starting at token `i`.
+fn banned_alloc_at(t: &[Token], i: usize) -> Option<&'static str> {
+    let tok = t.get(i)?;
+    if tok.kind != TokKind::Ident {
+        return None;
+    }
+    let path_new = |head: &str| {
+        tok.is(head)
+            && t.get(i + 1).is_some_and(|x| x.is(":"))
+            && t.get(i + 2).is_some_and(|x| x.is(":"))
+            && t.get(i + 3).is_some_and(|x| x.is("new"))
+            && t.get(i + 4).is_some_and(|x| x.is("("))
+    };
+    if path_new("Vec") {
+        return Some("Vec::new()");
+    }
+    if path_new("Box") {
+        return Some("Box::new()");
+    }
+    let method = |name: &str| {
+        tok.is(name)
+            && i >= 1
+            && t[i - 1].is(".")
+            && t.get(i + 1).is_some_and(|x| x.is("("))
+    };
+    if method("to_vec") {
+        return Some(".to_vec()");
+    }
+    if method("clone") {
+        return Some(".clone()");
+    }
+    if tok.is("format") && t.get(i + 1).is_some_and(|x| x.is("!")) {
+        return Some("format!");
+    }
+    None
 }
 
 /// L6 — logging discipline: library code reports diagnostics through

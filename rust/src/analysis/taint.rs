@@ -1,0 +1,561 @@
+//! L7 — taint tracking for wire bytes (`taint`).
+//!
+//! Bytes that arrive from a socket or a WAL file are attacker-shaped
+//! until proven otherwise: a decoded length prefix must be bounds-
+//! checked before it sizes an allocation, a payload must be CRC-
+//! verified before it is trusted. This rule tracks such values through
+//! each function in the wire-facing files (`api/proto.rs`,
+//! `storage/wal.rs`, `hub/transport.rs`) over the per-function CFG and
+//! flags any tainted value that reaches an allocation/indexing sink
+//! without passing a registered validator first.
+//!
+//! **Sources** (introduce taint):
+//! - the buffer argument of `.read(..)` / `.read_exact(..)` /
+//!   `.read_to_end(..)` — raw bytes off a socket or file;
+//! - bindings produced by the frame decoders `le_u32_at`,
+//!   `split_payload`, `from_le_bytes`, and whole-file reads
+//!   (`fs::read`, `read_to_string`) — decoded integers are exactly the
+//!   length/revision prefixes the WAL format warns about.
+//!
+//! **Validators** (kill taint):
+//! - a comparison (`<`, `>`, `<=`, `>=`, `==`, `!=`) *adjacent* to the
+//!   tainted name — adjacency keeps `=>`, `->` and generic argument
+//!   lists from laundering anything;
+//! - `.contains(..)` on a bounds range, `.min(..)` / `.clamp(..)`;
+//! - a CRC check (`crc32(..)` in the statement);
+//! - `ensure!` / `assert!`-family statements mentioning the name;
+//! - [`crate::storage::wal::scan`] — it CRC-verifies every frame it
+//!   accepts, so both its inputs and its outputs are trusted.
+//!
+//! **Sinks** (findings when reached tainted): `with_capacity(n)`,
+//! `vec![_; n]`, `.take(n)`, `.set_len(n)`, and slice indexing
+//! `buf[..n]`.
+//!
+//! Known limitation, on purpose: match-arm bindings are fresh
+//! (untainted) — the scrutinee-to-binding link is not modeled. Wire
+//! decoding in this tree binds through `let`-with-`match` statements,
+//! which *are* tracked; modeling arm patterns would double the engine
+//! for no additional real coverage.
+
+use std::collections::BTreeSet;
+
+use super::cfg::{Cfg, Stmt, StmtKind};
+use super::dataflow;
+use super::lexer::{TokKind, Token};
+use super::scanner::{FnSpan, SourceFile};
+use super::Finding;
+
+/// Files whose functions are taint-checked (suffix match on `rel`).
+const SCOPE: &[&str] = &["api/proto.rs", "storage/wal.rs", "hub/transport.rs"];
+
+/// One tracked source-to-outcome flow, reported as machine-readable
+/// evidence in the JSON lint report (and asserted non-empty by the
+/// self-check test).
+#[derive(Debug, Clone)]
+pub struct TaintFlow {
+    pub file: String,
+    pub function: String,
+    /// The tainted variable name.
+    pub var: String,
+    /// What made it tainted (`read_exact buffer`, `le_u32_at`, ...).
+    pub source: String,
+    pub source_line: u32,
+    /// First validation that killed the taint, if any.
+    pub validated_line: Option<u32>,
+    /// First sink it reached while still tainted, if any.
+    pub sink_line: Option<u32>,
+    /// `"validated"`, `"dormant"` (never validated, never sunk), or
+    /// `"flagged"` (reached a sink tainted — there is a finding).
+    pub status: &'static str,
+}
+
+/// Run L7. Returns raw findings (marker filtering is the caller's job)
+/// plus the flow evidence for every source observed.
+pub fn check(files: &[SourceFile]) -> (Vec<Finding>, Vec<TaintFlow>) {
+    let mut findings = Vec::new();
+    let mut flows = Vec::new();
+    for sf in files {
+        if !SCOPE.iter().any(|s| sf.rel.ends_with(s)) {
+            continue;
+        }
+        for span in &sf.fns {
+            if span.is_test {
+                continue;
+            }
+            check_fn(sf, span, &mut findings, &mut flows);
+        }
+    }
+    (findings, flows)
+}
+
+fn check_fn(
+    sf: &SourceFile,
+    span: &FnSpan,
+    findings: &mut Vec<Finding>,
+    flows: &mut Vec<TaintFlow>,
+) {
+    // Nested fns are separate functions; the CFG builder skips their
+    // token ranges structurally, so no extra masking is needed here.
+    let cfg = Cfg::build(&sf.tokens, span.body_start + 1, span.body_end);
+    let toks = &sf.tokens;
+
+    // Fixpoint: the set of tainted names at each block entry.
+    let entries = dataflow::forward(&cfg, |b, inp| {
+        let mut st = inp.clone();
+        for stmt in &cfg.blocks[b].stmts {
+            transfer(toks, stmt, &mut st, None);
+        }
+        st
+    });
+
+    // Evidence pass: one deterministic walk per block with the final
+    // entry states, recording sources, validations, and sink hits.
+    let mut ev = Events::default();
+    for (b, block) in cfg.blocks.iter().enumerate() {
+        let mut st = entries[b].clone();
+        for stmt in &block.stmts {
+            transfer(toks, stmt, &mut st, Some(&mut ev));
+        }
+    }
+
+    for (var, source, line) in ev.sources {
+        let validated_line = ev
+            .validated
+            .iter()
+            .filter(|(v, l)| *v == var && *l >= line)
+            .map(|(_, l)| *l)
+            .min();
+        let sink_line = ev
+            .sinks
+            .iter()
+            .filter(|(v, _, l)| *v == var && *l >= line)
+            .map(|(_, _, l)| *l)
+            .min();
+        let status = if sink_line.is_some() {
+            "flagged"
+        } else if validated_line.is_some() {
+            "validated"
+        } else {
+            "dormant"
+        };
+        flows.push(TaintFlow {
+            file: sf.rel.clone(),
+            function: span.name.clone(),
+            var,
+            source,
+            source_line: line,
+            validated_line,
+            sink_line,
+            status,
+        });
+    }
+    for (var, sink, line) in ev.sinks {
+        findings.push(Finding {
+            file: sf.rel.clone(),
+            line,
+            rule: "taint",
+            message: format!(
+                "unvalidated wire value `{var}` reaches `{sink}` in `{}` — bound it \
+                 (length cap / CRC / range check) before it sizes memory",
+                span.name
+            ),
+        });
+    }
+}
+
+/// Evidence captured during the reporting walk.
+#[derive(Default)]
+struct Events {
+    /// (var, source description, line)
+    sources: Vec<(String, String, u32)>,
+    /// (var, line)
+    validated: Vec<(String, u32)>,
+    /// (var, sink name, line)
+    sinks: Vec<(String, &'static str, u32)>,
+}
+
+/// Apply one statement to the taint state, optionally recording
+/// evidence. Order: validation kills, then sink checks against the
+/// surviving taint, then re-bindings and new sources.
+fn transfer(toks: &[Token], stmt: &Stmt, st: &mut BTreeSet<String>, mut ev: Option<&mut Events>) {
+    let (lo, hi) = (stmt.lo, stmt.hi.min(toks.len()));
+    if lo >= hi {
+        return;
+    }
+    let t = &toks[lo..hi];
+    let line = stmt.line;
+
+    // `scan(..)` launders everything it touches: kill mentioned taint
+    // and bind its results clean.
+    if calls_bare(t, "scan") {
+        kill_mentioned(t, st, line, ev.as_deref_mut());
+        for d in dataflow::defs(toks, stmt) {
+            st.remove(&d);
+        }
+        return;
+    }
+
+    // Validators.
+    if has_whole_stmt_validator(t) {
+        kill_mentioned(t, st, line, ev.as_deref_mut());
+    } else {
+        for v in comparison_adjacent_vars(t) {
+            if st.remove(&v) {
+                if let Some(e) = ev.as_deref_mut() {
+                    e.validated.push((v, line));
+                }
+            }
+        }
+    }
+
+    // Sinks, against the post-validation state.
+    if let Some(e) = ev.as_deref_mut() {
+        for (var, sink) in sink_hits(t, st) {
+            e.sinks.push((var, sink, line));
+        }
+    }
+
+    // Sources and propagation.
+    let defs = dataflow::defs(toks, stmt);
+    let mut gen: Vec<String> = Vec::new();
+    for (var, desc) in read_buffer_sources(t) {
+        if let Some(e) = ev.as_deref_mut() {
+            e.sources.push((var.clone(), desc.to_string(), line));
+        }
+        gen.push(var);
+    }
+    if let Some(decoder) = decoder_call(t) {
+        for d in &defs {
+            if let Some(e) = ev.as_deref_mut() {
+                e.sources.push((d.clone(), decoder.to_string(), line));
+            }
+            gen.push(d.clone());
+        }
+    } else if stmt.kind != StmtKind::Pattern
+        && dataflow::uses(toks, stmt).iter().any(|u| st.contains(u))
+    {
+        // Tainted right-hand side: the bindings inherit the taint.
+        gen.extend(defs.iter().cloned());
+    }
+    // Re-binding kills stale taint; pattern bindings are fresh.
+    for d in &defs {
+        st.remove(d);
+    }
+    for v in gen {
+        st.insert(v);
+    }
+}
+
+/// Does the statement call the bare function `name(` (no `.`/`::` path
+/// prefix required — `scan(&bytes)` either way)?
+fn calls_bare(t: &[Token], name: &str) -> bool {
+    t.iter().enumerate().any(|(i, tok)| {
+        tok.kind == TokKind::Ident
+            && tok.is(name)
+            && t.get(i + 1).is_some_and(|n| n.is("("))
+    })
+}
+
+/// Whole-statement validators: any mention of a tainted var in the same
+/// statement counts as validated.
+fn has_whole_stmt_validator(t: &[Token]) -> bool {
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let called = t.get(i + 1).is_some_and(|n| n.is("("));
+        match tok.text.as_str() {
+            "contains" | "min" | "clamp" if called && i > 0 && t[i - 1].is(".") => return true,
+            "crc32" if called => return true,
+            "ensure" | "assert" | "assert_eq" | "assert_ne" | "debug_assert" => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Variable names adjacent (within two tokens) to a real comparison
+/// operator. `=>`, `->`, `..=` and generic brackets are excluded by the
+/// operator tests, and adjacency keeps a type annotation's `<`/`>` from
+/// validating names elsewhere in the statement.
+fn comparison_adjacent_vars(t: &[Token]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Punct {
+            continue;
+        }
+        let type_ish = |j: usize| {
+            t.get(j).is_some_and(|x| {
+                x.kind == TokKind::Ident
+                    && (x.text.chars().next().is_some_and(char::is_uppercase)
+                        || matches!(
+                            x.text.as_str(),
+                            "u8" | "u16" | "u32" | "u64" | "usize" | "i8" | "i16" | "i32"
+                                | "i64" | "isize" | "f32" | "f64" | "bool" | "str"
+                        ))
+            })
+        };
+        let is_cmp = match tok.text.as_str() {
+            // `::<` turbofish and `Vec<...>` generic openers are not
+            // comparisons; neither is the `>` closing a generic list
+            // (recognized by the type-like ident right before it).
+            "<" => !(i > 0 && (t[i - 1].is(":") || type_ish(i - 1))),
+            ">" => !(i > 0 && (t[i - 1].is("=") || t[i - 1].is("-") || type_ish(i - 1))),
+            "=" => {
+                // `==` (either half) or `!=`; plain assignment `=` is not
+                // a comparison, `..=` is a range.
+                let prev_eq = i > 0 && (t[i - 1].is("=") || t[i - 1].is("!"));
+                let next_eq = t.get(i + 1).is_some_and(|n| n.is("="));
+                prev_eq || next_eq
+            }
+            _ => false,
+        };
+        if !is_cmp {
+            continue;
+        }
+        for j in i.saturating_sub(2)..=(i + 2).min(t.len().saturating_sub(1)) {
+            let n = &t[j];
+            if n.kind == TokKind::Ident
+                && n.text.chars().next().is_some_and(|c| c == '_' || c.is_lowercase())
+            {
+                out.push(n.text.clone());
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Remove every tainted name mentioned in the statement, recording the
+/// validations.
+fn kill_mentioned(t: &[Token], st: &mut BTreeSet<String>, line: u32, ev: Option<&mut Events>) {
+    let mentioned: Vec<String> = t
+        .iter()
+        .filter(|tok| tok.kind == TokKind::Ident && st.contains(&tok.text))
+        .map(|tok| tok.text.clone())
+        .collect();
+    if let Some(e) = ev {
+        for v in &mentioned {
+            if !e.validated.iter().any(|(w, l)| w == v && *l == line) {
+                e.validated.push((v.clone(), line));
+            }
+        }
+    }
+    for v in mentioned {
+        st.remove(&v);
+    }
+}
+
+/// `recv.read(..)`-family calls: returns the buffer variables tainted by
+/// each (the lowercase idents inside the call's argument list).
+fn read_buffer_sources(t: &[Token]) -> Vec<(String, &'static str)> {
+    let mut out = Vec::new();
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let desc = match tok.text.as_str() {
+            "read" => "read buffer",
+            "read_exact" => "read_exact buffer",
+            "read_to_end" => "read_to_end buffer",
+            _ => continue,
+        };
+        if !(i > 0 && t[i - 1].is(".")) || !t.get(i + 1).is_some_and(|n| n.is("(")) {
+            continue;
+        }
+        // Arguments: idents inside the balanced parens.
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        while j < t.len() {
+            if t[j].is("(") {
+                depth += 1;
+            } else if t[j].is(")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t[j].kind == TokKind::Ident
+                && !t[j].is("mut")
+                && !t[j].is("self")
+                && t[j].text.chars().next().is_some_and(|c| c == '_' || c.is_lowercase())
+            {
+                out.push((t[j].text.clone(), desc));
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Does the statement call a registered wire decoder? Its bindings are
+/// tainted. (`fs::read` / `read_to_string` load whole files the WAL
+/// scan has not yet vetted.)
+fn decoder_call(t: &[Token]) -> Option<&'static str> {
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident || !t.get(i + 1).is_some_and(|n| n.is("(")) {
+            continue;
+        }
+        match tok.text.as_str() {
+            "le_u32_at" => return Some("le_u32_at"),
+            "split_payload" => return Some("split_payload"),
+            "from_le_bytes" | "from_be_bytes" | "from_ne_bytes" => return Some("from_le_bytes"),
+            "read_to_string" => return Some("read_to_string"),
+            "read" if i >= 2 && t[i - 1].is(":") && t[i - 2].is(":") => return Some("fs::read"),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Sink hits: (tainted var, sink name) for every sink shape whose size
+/// argument mentions a currently-tainted name.
+fn sink_hits(t: &[Token], st: &BTreeSet<String>) -> Vec<(String, &'static str)> {
+    let mut out = Vec::new();
+    let tainted_in = |lo: usize, hi: usize, out: &mut Vec<(String, &'static str)>, sink| {
+        for tok in &t[lo.min(t.len())..hi.min(t.len())] {
+            if tok.kind == TokKind::Ident && st.contains(&tok.text) {
+                out.push((tok.text.clone(), sink));
+            }
+        }
+    };
+    let balanced_end = |open: usize| {
+        let (o, c) = match t.get(open).map(|x| x.text.as_str()) {
+            Some("(") => ("(", ")"),
+            Some("[") => ("[", "]"),
+            _ => return open + 1,
+        };
+        let mut depth = 0usize;
+        let mut j = open;
+        while j < t.len() {
+            if t[j].is(o) {
+                depth += 1;
+            } else if t[j].is(c) {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            j += 1;
+        }
+        t.len()
+    };
+    for (i, tok) in t.iter().enumerate() {
+        // with_capacity(n) / take(n) / set_len(n)
+        if tok.kind == TokKind::Ident && t.get(i + 1).is_some_and(|n| n.is("(")) {
+            let sink = match tok.text.as_str() {
+                "with_capacity" => Some("with_capacity"),
+                "take" if i > 0 && t[i - 1].is(".") => Some("take"),
+                "set_len" if i > 0 && t[i - 1].is(".") => Some("set_len"),
+                _ => None,
+            };
+            if let Some(sink) = sink {
+                tainted_in(i + 2, balanced_end(i + 1), &mut out, sink);
+            }
+        }
+        // vec![elem; n]
+        if tok.kind == TokKind::Ident
+            && tok.is("vec")
+            && t.get(i + 1).is_some_and(|n| n.is("!"))
+            && t.get(i + 2).is_some_and(|n| n.is("["))
+        {
+            let end = balanced_end(i + 2);
+            // Only the length expression (after the `;`) sizes memory.
+            if let Some(semi) = (i + 3..end).find(|&k| t[k].is(";")) {
+                tainted_in(semi + 1, end, &mut out, "vec![_; n]");
+            }
+        }
+        // Slice indexing: `expr[ .. ]` — `[` directly after an ident,
+        // `)`, or `]` (not an array literal or vec! body).
+        if tok.is("[")
+            && i > 0
+            && (t[i - 1].kind == TokKind::Ident || t[i - 1].is(")") || t[i - 1].is("]"))
+            && !(i > 1 && t[i - 2].is("!"))
+        {
+            tainted_in(i + 1, balanced_end(i), &mut out, "slice index");
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::SourceFile;
+    use std::path::PathBuf;
+
+    fn run(src: &str) -> (Vec<Finding>, Vec<TaintFlow>) {
+        let sf =
+            SourceFile::parse(PathBuf::from("x/storage/wal.rs"), "storage/wal.rs".into(), src);
+        check(std::slice::from_ref(&sf))
+    }
+
+    #[test]
+    fn unvalidated_length_reaches_vec_macro() {
+        let (f, flows) = run(
+            "fn bad(r: &mut R) -> V {\n\
+             let mut head = [0u8; 8];\n\
+             r.read_exact(&mut head).unwrap();\n\
+             let n = le_u32_at(&head, 0).unwrap() as usize;\n\
+             let buf = vec![0u8; n];\n\
+             buf\n}\n",
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains('n'), "{f:?}");
+        assert!(flows.iter().any(|fl| fl.var == "n" && fl.status == "flagged"), "{flows:?}");
+    }
+
+    #[test]
+    fn bounds_check_validates_the_length() {
+        let (f, flows) = run(
+            "fn good(r: &mut R) -> V {\n\
+             let mut head = [0u8; 8];\n\
+             r.read_exact(&mut head).unwrap();\n\
+             let n = le_u32_at(&head, 0).unwrap() as usize;\n\
+             if n > MAX_RECORD_BYTES { return V::new(); }\n\
+             let buf = vec![0u8; n];\n\
+             buf\n}\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+        assert!(flows.iter().any(|fl| fl.var == "n" && fl.status == "validated"), "{flows:?}");
+    }
+
+    #[test]
+    fn scan_launders_file_bytes() {
+        let (f, flows) = run(
+            "fn open_log(p: &P) {\n\
+             let bytes = fs::read(p).unwrap();\n\
+             let result = scan(&bytes);\n\
+             file.set_len(result.valid_len).unwrap();\n}\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+        assert!(flows.iter().any(|fl| fl.var == "bytes" && fl.status == "validated"), "{flows:?}");
+    }
+
+    #[test]
+    fn tainted_index_is_a_sink() {
+        let (f, _) = run(
+            "fn bad(buf: &[u8], r: &mut R) -> u8 {\n\
+             let mut head = [0u8; 4];\n\
+             r.read_exact(&mut head).unwrap();\n\
+             let off = le_u32_at(&head, 0).unwrap() as usize;\n\
+             buf[off]\n}\n",
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("off"), "{f:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let sf = SourceFile::parse(
+            PathBuf::from("x/models/fit.rs"),
+            "models/fit.rs".into(),
+            "fn f(r: &mut R) { let mut b = [0u8; 4]; r.read_exact(&mut b).unwrap(); \
+             let n = le_u32_at(&b, 0).unwrap(); let v = vec![0u8; n]; drop(v); }",
+        );
+        let (f, flows) = check(std::slice::from_ref(&sf));
+        assert!(f.is_empty() && flows.is_empty());
+    }
+}

@@ -100,10 +100,13 @@ struct GroupState {
     result: Option<Result<GroupResult, WireError>>,
 }
 
-/// The leader's batched outcome, fanned back out by row index.
+/// The leader's batched outcome, fanned back out by row index. Holds
+/// the resolved model by `Arc` so the hot `predict_rows` path moves a
+/// pointer instead of cloning the name strings; the owned copies are
+/// made only at the wire boundary ([`GroupResult::prediction`] /
+/// `predict_batch`).
 struct GroupResult {
-    machine_type: String,
-    model: String,
+    model: Arc<FittedModel>,
     cached: bool,
     runtimes: Vec<f64>,
 }
@@ -111,8 +114,8 @@ struct GroupResult {
 impl GroupResult {
     fn prediction(&self, index: usize) -> Prediction {
         Prediction {
-            machine_type: self.machine_type.clone(),
-            model: self.model.clone(),
+            machine_type: self.model.machine_type.clone(),
+            model: self.model.chosen.clone(),
             cached: self.cached,
             runtime_s: self.runtimes[index],
         }
@@ -871,12 +874,7 @@ impl PredictionService {
             .collect::<crate::Result<Vec<f64>>>()
             .map_err(|e| WireError::internal(&e))?;
         obs::metrics().record_since(Stage::Predict, predict_start);
-        Ok(GroupResult {
-            machine_type: fm.machine_type.clone(),
-            model: fm.chosen.clone(),
-            cached,
-            runtimes,
-        })
+        Ok(GroupResult { model: fm, cached, runtimes })
     }
 
     pub fn predict_batch(
@@ -890,8 +888,10 @@ impl PredictionService {
         }
         let res = self.predict_rows(job, machine_type, rows)?;
         Ok(BatchPrediction {
-            machine_type: res.machine_type,
-            model: res.model,
+            // lint: allow(alloc_hot, reason = "wire-boundary copy into the owned reply struct; once per batch, not per row")
+            machine_type: res.model.machine_type.clone(),
+            // lint: allow(alloc_hot, reason = "wire-boundary copy into the owned reply struct; once per batch, not per row")
+            model: res.model.chosen.clone(),
             cached: res.cached,
             runtimes: res.runtimes,
         })

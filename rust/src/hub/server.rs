@@ -300,6 +300,9 @@ impl HubServer {
             next_gen: 0,
             read_buf: vec![0u8; READ_CHUNK],
             events: Vec::new(),
+            jobs_scratch: Vec::new(),
+            replies_scratch: Vec::new(),
+            touched_scratch: Vec::new(),
         };
         let reactor_thread = std::thread::spawn(move || reactor.run());
 
@@ -456,6 +459,12 @@ struct Reactor {
     next_gen: u64,
     read_buf: Vec<u8>,
     events: Vec<Event>,
+    /// Tick-loop scratch buffers (L9 alloc_hot): taken at the top of
+    /// their hot fn, drained, and put back so capacity is reused across
+    /// ticks instead of reallocated per call.
+    jobs_scratch: Vec<Job>,
+    replies_scratch: Vec<Reply>,
+    touched_scratch: Vec<usize>,
 }
 
 impl Reactor {
@@ -518,6 +527,7 @@ impl Reactor {
                         stream,
                         gen: self.next_gen,
                         decoder: FrameDecoder::default(),
+                        // lint: allow(alloc_hot, reason = "per-connection setup, not per-frame: Vec::new is capacity-free until the first reply buffers")
                         out: Vec::new(),
                         out_pos: 0,
                         in_flight: 0,
@@ -615,11 +625,14 @@ impl Reactor {
         if self.stop.load(Ordering::SeqCst) {
             return;
         }
-        let mut new_jobs: Vec<Job> = Vec::new();
+        let mut new_jobs: Vec<Job> = std::mem::take(&mut self.jobs_scratch);
         {
             let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
                 Some(c) => c,
-                None => return,
+                None => {
+                    self.jobs_scratch = new_jobs;
+                    return;
+                }
             };
             while conn.in_flight < self.max_pipeline {
                 let recv_us = obs::now_us();
@@ -645,6 +658,7 @@ impl Reactor {
             }
         }
         if new_jobs.is_empty() {
+            self.jobs_scratch = new_jobs;
             return;
         }
         let n = new_jobs.len();
@@ -654,7 +668,8 @@ impl Reactor {
         }
         self.queue.in_flight.fetch_add(n as u64, Ordering::SeqCst);
         // lint: allow(panics, reason = "mutex poisoning is fatal by design: a thread that panicked holding the job queue already broke the dispatch invariants")
-        self.queue.jobs.lock().unwrap().extend(new_jobs);
+        self.queue.jobs.lock().unwrap().extend(new_jobs.drain(..));
+        self.jobs_scratch = new_jobs;
         if n == 1 {
             self.queue.ready.notify_one();
         } else {
@@ -666,13 +681,19 @@ impl Reactor {
     /// write buffers, then resume those connections (paused reads may
     /// unblock, buffered frames may dispatch, replies flush).
     fn drain_outbox(&mut self) {
-        // lint: allow(panics, reason = "mutex poisoning is fatal by design: a worker that panicked mid-push left the outbox in an unknown state")
-        let replies = std::mem::take(&mut *self.outbox.replies.lock().unwrap());
+        // Swap (not take) so the vector handed to the workers keeps its
+        // capacity from previous ticks — no realloc ramp-up per drain.
+        let mut replies = std::mem::take(&mut self.replies_scratch);
+        {
+            // lint: allow(panics, reason = "mutex poisoning is fatal by design: a worker that panicked mid-push left the outbox in an unknown state")
+            std::mem::swap(&mut replies, &mut *self.outbox.replies.lock().unwrap());
+        }
         if replies.is_empty() {
+            self.replies_scratch = replies;
             return;
         }
-        let mut touched = Vec::new();
-        for r in replies {
+        let mut touched = std::mem::take(&mut self.touched_scratch);
+        for r in replies.drain(..) {
             let slot = (r.token - TOKEN_BASE) as usize;
             if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
                 // `gen` mismatch ⇒ the request's connection died and the
@@ -693,13 +714,16 @@ impl Reactor {
         let stopping = self.stop.load(Ordering::SeqCst);
         touched.sort_unstable();
         touched.dedup();
-        for slot in touched {
+        self.replies_scratch = replies;
+        for &slot in &touched {
             if stopping {
                 self.flush_and_update(slot);
             } else {
                 self.handle_readable(slot);
             }
         }
+        touched.clear();
+        self.touched_scratch = touched;
     }
 
     /// Write as much buffered reply data as the socket accepts, enforce

@@ -45,11 +45,16 @@
 //!                the ranked runtime/cost frontier (types below the data
 //!                floor are reported as insufficient data)
 //!   lint       — run the project-invariant static analyzer (DESIGN.md
-//!                §12) over a source tree: lock-order (L1), hot-path
-//!                panic-freedom (L2), unsafe audit (L3), storage
-//!                durability discipline (L4), protocol exhaustiveness
-//!                (L5), logging discipline (L6). --fix-report appends
-//!                per-rule remediation notes and the observed lock DAG.
+//!                §12) over a source tree: lock-order with full-depth
+//!                interprocedural propagation (L1), hot-path
+//!                panic-freedom (L2), unsafe audit (L3), protocol
+//!                exhaustiveness (L5), logging discipline (L6), wire
+//!                taint tracking (L7), durability ordering incl. the
+//!                old rename/sync_dir rule (L4/L8), allocation-free
+//!                hot paths (L9). --fix-report appends per-rule
+//!                remediation notes and the observed lock DAG;
+//!                --format text|json|dot picks the output (json is the
+//!                CI artifact, dot the Graphviz lock DAG).
 //!                Exit 0 = clean; CI runs this blocking on rust/src
 //!
 //! Global flags: --log-level error|warn|info|debug sets the structured
@@ -73,6 +78,8 @@
 //!   c3o metrics 127.0.0.1:7033
 //!   c3o lint rust/src
 //!   c3o lint --fix-report rust/src
+//!   c3o lint --format json rust/src > lint-report.json
+//!   c3o lint --format dot rust/src | dot -Tsvg > lock-dag.svg
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -571,15 +578,25 @@ fn cmd_metrics(rest: &[String], flags: &BTreeMap<String, String>) -> anyhow::Res
     Ok(())
 }
 
-/// `c3o lint [--fix-report] <src-dir>` — run the project-invariant
-/// static analyzer (DESIGN.md §12) over a source tree. Exits 0 when the
-/// tree is clean, 1 with `file:line: [rule] message` findings otherwise.
+/// `c3o lint [--fix-report] [--format text|json|dot] <src-dir>` — run
+/// the project-invariant static analyzer (DESIGN.md §12) over a source
+/// tree. Exits 0 when the tree is clean, 1 with findings otherwise
+/// (`--format dot` always exits 0 — it is a graph dump, not a gate).
 fn cmd_lint(rest: &[String]) -> anyhow::Result<()> {
     let mut fix_report = false;
+    let mut format = "text";
     let mut dir: Option<&str> = None;
-    for arg in rest {
+    let mut it = rest.iter();
+    while let Some(arg) = it.next() {
         match arg.as_str() {
             "--fix-report" => fix_report = true,
+            "--format" => {
+                let v = it.next().context("--format needs text|json|dot")?;
+                match v.as_str() {
+                    "text" | "json" | "dot" => format = v.as_str(),
+                    other => anyhow::bail!("unknown lint format {other} (text|json|dot)"),
+                }
+            }
             other if !other.starts_with("--") => dir = Some(other),
             other => anyhow::bail!("unknown lint flag {other}"),
         }
@@ -587,7 +604,14 @@ fn cmd_lint(rest: &[String]) -> anyhow::Result<()> {
     let root = PathBuf::from(dir.unwrap_or("rust/src"));
     let report = c3o::analysis::lint_dir(&root)
         .with_context(|| format!("linting {}", root.display()))?;
-    print!("{}", c3o::analysis::render(&report, &root, fix_report));
+    match format {
+        "json" => print!("{}", c3o::analysis::render_json(&report, &root)),
+        "dot" => {
+            print!("{}", c3o::analysis::render_dot(&report));
+            return Ok(());
+        }
+        _ => print!("{}", c3o::analysis::render(&report, &root, fix_report)),
+    }
     if !report.findings.is_empty() {
         std::process::exit(1);
     }

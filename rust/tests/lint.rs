@@ -431,6 +431,324 @@ pub fn emit(line: &str) {
 }
 
 // ---------------------------------------------------------------------------
+// L7 — taint tracking for wire-derived values
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unvalidated_wire_length_fires() {
+    let fx = Fixture::new("l7_bad");
+    fx.file(
+        "storage/wal.rs",
+        r#"
+use std::io::Read;
+
+pub fn read_frame(f: &mut std::fs::File) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    f.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut buf = Vec::with_capacity(len);
+    buf.resize(len, 0);
+    Ok(buf)
+}
+"#,
+    );
+    let report = fx.lint();
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == "taint")
+        .unwrap_or_else(|| panic!("expected a taint finding, got: {:?}", report.findings));
+    assert!(f.message.contains("`len`"), "message: {}", f.message);
+    assert!(
+        report.taint_flows.iter().any(|fl| fl.var == "len" && fl.status == "flagged"),
+        "expected a flagged flow for `len`, got: {:?}",
+        report.taint_flows
+    );
+}
+
+#[test]
+fn bounds_checked_wire_length_is_clean() {
+    let fx = Fixture::new("l7_good");
+    fx.file(
+        "storage/wal.rs",
+        r#"
+use std::io::Read;
+
+const MAX_FRAME: usize = 1 << 20;
+
+pub fn read_frame(f: &mut std::fs::File) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    f.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "oversized"));
+    }
+    let mut buf = Vec::with_capacity(len);
+    buf.resize(len, 0);
+    Ok(buf)
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+    // The flow is still traced — as validated, with both line anchors.
+    let fl = report
+        .taint_flows
+        .iter()
+        .find(|fl| fl.var == "len")
+        .unwrap_or_else(|| panic!("expected a traced flow for `len`: {:?}", report.taint_flows));
+    assert_eq!(fl.status, "validated");
+    assert!(fl.validated_line.is_some() && fl.sink_line.is_some());
+}
+
+#[test]
+fn taint_ignores_out_of_scope_modules() {
+    let fx = Fixture::new("l7_scope");
+    // Identical code outside the wire-facing modules: not L7's business.
+    fx.file(
+        "eval/loader.rs",
+        r#"
+use std::io::Read;
+
+pub fn read_frame(f: &mut std::fs::File) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    f.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut buf = Vec::with_capacity(len);
+    buf.resize(len, 0);
+    Ok(buf)
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// L8 — durability ordering automaton
+// ---------------------------------------------------------------------------
+
+#[test]
+fn publish_before_fsync_fires() {
+    let fx = Fixture::new("l8_bad");
+    fx.file(
+        "storage/commit.rs",
+        r#"
+pub fn commit(w: &mut Wal, rec: &[u8]) -> std::io::Result<()> {
+    w.append(rec)?;
+    publish(rec);
+    w.sync()?;
+    Ok(())
+}
+"#,
+    );
+    let report = fx.lint();
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == "ordering")
+        .unwrap_or_else(|| panic!("expected an ordering finding, got: {:?}", report.findings));
+    assert!(f.message.contains("not yet be fsynced"), "message: {}", f.message);
+}
+
+#[test]
+fn append_sync_publish_is_clean() {
+    let fx = Fixture::new("l8_good");
+    fx.file(
+        "storage/commit.rs",
+        r#"
+pub fn commit(w: &mut Wal, rec: &[u8]) -> std::io::Result<()> {
+    w.append(rec)?;
+    w.sync()?;
+    publish(rec);
+    Ok(())
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+#[test]
+fn ack_before_append_fires() {
+    let fx = Fixture::new("l8_ack");
+    fx.file(
+        "storage/commit.rs",
+        r#"
+pub fn submit(w: &mut Wal, rec: &[u8]) -> std::io::Result<()> {
+    ack(7);
+    w.append(rec)?;
+    w.sync()?;
+    Ok(())
+}
+"#,
+    );
+    let report = fx.lint();
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == "ordering")
+        .unwrap_or_else(|| panic!("expected an ordering finding, got: {:?}", report.findings));
+    assert!(f.message.contains("may precede the WAL append"), "message: {}", f.message);
+}
+
+// ---------------------------------------------------------------------------
+// L9 — allocation-free hot paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allocation_in_registered_hot_fn_fires() {
+    let fx = Fixture::new("l9_bad");
+    fx.file(
+        "hub/server.rs",
+        r#"
+impl Reactor {
+    fn tick(&mut self) {
+        let buf: Vec<u8> = Vec::new();
+        drop(buf);
+    }
+
+    fn setup(&mut self) {
+        let buf: Vec<u8> = Vec::new();
+        drop(buf);
+    }
+}
+"#,
+    );
+    let report = fx.lint();
+    let hits: Vec<_> = report.findings.iter().filter(|f| f.rule == "alloc_hot").collect();
+    // `tick` is registered hot; `setup` is a cold path and allocates freely.
+    assert_eq!(hits.len(), 1, "got: {:?}", report.findings);
+    assert!(hits[0].message.contains("`tick`"), "message: {}", hits[0].message);
+}
+
+#[test]
+fn alloc_hot_marker_suppresses() {
+    let fx = Fixture::new("l9_good");
+    fx.file(
+        "hub/server.rs",
+        r#"
+impl Reactor {
+    fn tick(&mut self) {
+        // lint: allow(alloc_hot, reason = "fixture: demonstrating the escape hatch")
+        let buf: Vec<u8> = Vec::new();
+        drop(buf);
+    }
+}
+"#,
+    );
+    let report = fx.lint();
+    assert!(report.findings.is_empty(), "got: {:?}", report.findings);
+}
+
+// ---------------------------------------------------------------------------
+// Output formats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_report_round_trips() {
+    let fx = Fixture::new("fmt_json");
+    fx.file(
+        "hub/repo.rs",
+        r#"
+use std::sync::{Mutex, RwLock};
+
+pub fn forward(wal: &Mutex<u32>, repos: &RwLock<u32>) {
+    let r = repos.read().unwrap();
+    let w = wal.lock().unwrap();
+    drop(w);
+    drop(r);
+}
+"#,
+    );
+    let report = fx.lint();
+    let text = c3o::analysis::render_json(&report, &fx.root);
+    let doc = c3o::util::json::Json::parse(&text).unwrap();
+    assert_eq!(doc.get("clean").and_then(|v| v.as_bool()), Some(true));
+    let edges = doc.get("lock_edges").and_then(|v| v.as_arr()).unwrap();
+    assert!(
+        edges.iter().any(|e| {
+            e.get("from").and_then(|v| v.as_str()) == Some("repos")
+                && e.get("to").and_then(|v| v.as_str()) == Some("wal")
+        }),
+        "expected a repos -> wal edge in: {text}"
+    );
+}
+
+#[test]
+fn dot_output_renders_the_lock_dag() {
+    let fx = Fixture::new("fmt_dot");
+    fx.file(
+        "hub/repo.rs",
+        r#"
+use std::sync::{Mutex, RwLock};
+
+pub fn forward(wal: &Mutex<u32>, repos: &RwLock<u32>) {
+    let r = repos.read().unwrap();
+    let w = wal.lock().unwrap();
+    drop(w);
+    drop(r);
+}
+"#,
+    );
+    let report = fx.lint();
+    let dot = c3o::analysis::render_dot(&report);
+    assert!(dot.starts_with("digraph lock_order {"), "got: {dot}");
+    assert!(dot.contains("repos -> wal;"), "got: {dot}");
+    assert!(!dot.contains("color=red"), "forward edge drawn as inverted: {dot}");
+}
+
+// ---------------------------------------------------------------------------
+// Interprocedural propagation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_inversion_through_a_call_chain_fires() {
+    let fx = Fixture::new("l1_deep");
+    // wal held -> helper() -> deeper() -> repos: a 2-deep inversion the
+    // one-level propagation of lint v1 could not see.
+    fx.file(
+        "hub/repo.rs",
+        r#"
+use std::sync::{Mutex, RwLock};
+
+pub struct HubState {
+    wal: Mutex<u32>,
+    repos: RwLock<u32>,
+}
+
+impl HubState {
+    pub fn outer(&self) {
+        let w = self.wal.lock().unwrap();
+        self.helper();
+        drop(w);
+    }
+
+    pub fn helper(&self) {
+        self.deeper();
+    }
+
+    pub fn deeper(&self) {
+        let r = self.repos.read().unwrap();
+        drop(r);
+    }
+}
+"#,
+    );
+    let report = fx.lint();
+    let f = report
+        .findings
+        .iter()
+        .find(|f| f.rule == "lock_order")
+        .unwrap_or_else(|| panic!("expected a lock_order finding, got: {:?}", report.findings));
+    assert!(
+        f.message.contains("via call to `helper -> deeper`"),
+        "expected the call chain in: {}",
+        f.message
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Test-code exemption
 // ---------------------------------------------------------------------------
 
@@ -483,5 +801,22 @@ fn project_tree_is_lint_clean() {
     assert!(
         !report.lock_edges.is_empty(),
         "expected observed lock-order edges in the project tree"
+    );
+    // Full-depth propagation is active: at least one edge was found
+    // through a call rather than at a literal acquisition site.
+    assert!(
+        report.lock_edges.iter().any(|e| e.via.is_some()),
+        "expected at least one interprocedural lock edge"
+    );
+    // And the taint engine traced the real wire values (frame lengths,
+    // revisions, payload buffers) even though none of them fire.
+    assert!(
+        !report.taint_flows.is_empty(),
+        "expected traced taint flows in wal.rs / proto.rs / transport.rs"
+    );
+    assert!(
+        report.taint_flows.iter().any(|fl| fl.status == "validated"),
+        "expected at least one validated wire flow, got: {:?}",
+        report.taint_flows
     );
 }

@@ -514,6 +514,113 @@ fn prop_wal_scan_survives_flips_and_truncations() {
     );
 }
 
+/// Real source files, as bytes — the fuzz corpus for the lint lexer
+/// and scanner. Mutations of working Rust are exactly the malformed
+/// input `c3o lint` sees mid-edit, so these files double as seeds.
+fn lint_corpus() -> Vec<Vec<u8>> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    ["analysis/lexer.rs", "api/proto.rs", "storage/wal.rs", "hub/server.rs"]
+        .iter()
+        .map(|rel| std::fs::read(root.join(rel)).unwrap())
+        .collect()
+}
+
+/// Apply 1..=8 random byte-level mutations (bit flips, truncations,
+/// deletions, insertions) and decode lossily — the lexer consumes
+/// `&str`, so invalid UTF-8 arrives as replacement chars, same as it
+/// would via `fs::read_to_string`'s lossy fallback in the scanner.
+fn mutate(rng: &mut Pcg, base: &[u8]) -> String {
+    let mut bytes = base.to_vec();
+    for _ in 0..rng.range(1, 9) {
+        if bytes.is_empty() {
+            break;
+        }
+        let pos = rng.below(bytes.len());
+        match rng.below(4) {
+            0 => bytes[pos] ^= 1u8 << rng.below(8),
+            1 => bytes.truncate(pos),
+            2 => {
+                bytes.remove(pos);
+            }
+            _ => bytes.insert(pos, rng.next_u64() as u8),
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[test]
+fn prop_lexer_and_scanner_never_panic_on_mutated_sources() {
+    use c3o::analysis::scanner::SourceFile;
+
+    // The linter runs in CI against whatever is checked in — half-typed
+    // strings, torn comments, stray quotes. Lexing and the structural
+    // scan must degrade (odd tokens, fewer fns), never panic. The
+    // property is the absence of a panic; the body only has to touch
+    // the results.
+    let corpus = lint_corpus();
+    forall(
+        "lexer + scanner survive byte mutations",
+        250,
+        |rng| {
+            let base = rng.choose(&corpus).clone();
+            mutate(rng, &base)
+        },
+        |src| {
+            let sf = SourceFile::parse(
+                std::path::PathBuf::from("fuzz.rs"),
+                "fuzz/fuzz.rs".into(),
+                src,
+            );
+            for f in &sf.fns {
+                assert!(f.body_start <= f.body_end, "inverted fn span in `{}`", f.name);
+                assert!(f.body_end < sf.tokens.len().max(1), "fn span past EOF");
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_token_and_comment_spans_tile_the_input() {
+    use c3o::analysis::lexer::lex;
+
+    // Spans are half-open char ranges. Sorted, they must be disjoint,
+    // in-bounds, and leave only whitespace in the gaps — even on
+    // mutated garbage. Every lint rule navigates by span; a hole or an
+    // overlap silently corrupts taint ranges and allow-marker anchors.
+    let corpus = lint_corpus();
+    forall_res(
+        "token + comment spans tile the input",
+        250,
+        |rng| {
+            let base = rng.choose(&corpus).clone();
+            mutate(rng, &base)
+        },
+        |src| {
+            let chars: Vec<char> = src.chars().collect();
+            let (toks, comments) = lex(src);
+            let mut spans: Vec<(usize, usize)> = toks.iter().map(|t| t.span).collect();
+            spans.extend(comments.iter().map(|c| c.span));
+            spans.sort_unstable();
+            let mut prev = 0usize;
+            for (lo, hi) in spans {
+                anyhow::ensure!(lo < hi && hi <= chars.len(), "bad span ({lo},{hi})");
+                anyhow::ensure!(lo >= prev, "overlapping spans at {lo} (prev end {prev})");
+                anyhow::ensure!(
+                    chars[prev..lo].iter().all(|c| c.is_whitespace()),
+                    "non-whitespace gap {prev}..{lo}"
+                );
+                prev = hi;
+            }
+            anyhow::ensure!(
+                chars[prev..].iter().all(|c| c.is_whitespace()),
+                "non-whitespace tail after {prev}"
+            );
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_histogram_percentiles_within_bucket_error() {
     // The log-linear buckets guarantee: reported quantile >= the exact
